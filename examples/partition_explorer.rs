@@ -1,0 +1,50 @@
+//! Partitioner explorer: multilevel k-way quality (edge cut, imbalance,
+//! community recovery) across k, vs the RandomPart baseline, on an SBM
+//! graph and a heavy-tailed R-MAT graph.
+//!
+//! ```bash
+//! cargo run --release --offline --example partition_explorer
+//! ```
+
+use poshashemb::graph::{planted_partition, rmat, PlantedPartitionConfig, RmatConfig};
+use poshashemb::partition::{edge_cut, partition, random_partition, PartitionConfig};
+use std::time::Instant;
+
+fn main() {
+    let (sbm, membership) = planted_partition(&PlantedPartitionConfig {
+        n: 20_000,
+        communities: 16,
+        intra_degree: 12.0,
+        inter_degree: 2.0,
+        seed: 3,
+        ..Default::default()
+    });
+    println!("SBM: n={} m={}", sbm.num_nodes(), sbm.num_edges());
+    println!("| {:>4} | {:>10} | {:>10} | {:>9} | {:>7} | {:>9} |",
+        "k", "cut", "rand cut", "imbalance", "purity", "time");
+    for k in [2usize, 4, 8, 16, 32, 64] {
+        let t = Instant::now();
+        let p = partition(&sbm, &PartitionConfig::with_k(k));
+        let elapsed = t.elapsed();
+        let rand_cut = edge_cut(&sbm, &random_partition(sbm.num_nodes(), k, 1));
+        // purity vs planted communities
+        let mut counts = vec![std::collections::HashMap::new(); k];
+        for (i, &fp) in p.part.iter().enumerate() {
+            *counts[fp as usize].entry(membership[i]).or_insert(0usize) += 1;
+        }
+        let pure: usize = counts.iter().map(|c| c.values().max().copied().unwrap_or(0)).sum();
+        println!("| {:>4} | {:>10.0} | {:>10.0} | {:>9.3} | {:>6.1}% | {:>8.1?} |",
+            k, p.edge_cut, rand_cut, p.imbalance,
+            100.0 * pure as f64 / sbm.num_nodes() as f64, elapsed);
+    }
+
+    let rg = rmat(&RmatConfig { scale: 14, edge_factor: 8, ..Default::default() });
+    println!("\nR-MAT: n={} m={} (heavy-tailed stress test)", rg.num_nodes(), rg.num_edges());
+    for k in [8usize, 32] {
+        let t = Instant::now();
+        let p = partition(&rg, &PartitionConfig::with_k(k));
+        let rand_cut = edge_cut(&rg, &random_partition(rg.num_nodes(), k, 1));
+        println!("k={k:<3} cut={:.0} (random {:.0}, {:.1}x better) imbalance={:.3} [{:?}]",
+            p.edge_cut, rand_cut, rand_cut / p.edge_cut.max(1.0), p.imbalance, t.elapsed());
+    }
+}

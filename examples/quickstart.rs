@@ -1,0 +1,78 @@
+//! Quickstart: the PosHashEmb pipeline in five steps, no artifacts
+//! required (uses the pure-Rust reference composition).
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use poshashemb::embedding::{
+    compose_embeddings, init_params, EmbeddingMethod, EmbeddingPlan, MemoryReport,
+};
+use poshashemb::graph::{planted_partition, GraphStats, PlantedPartitionConfig};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+
+fn main() {
+    // 1. A homophilous graph (10k nodes, 20 planted communities).
+    let (graph, communities) = planted_partition(&PlantedPartitionConfig {
+        n: 10_000,
+        communities: 20,
+        intra_degree: 12.0,
+        inter_degree: 2.0,
+        seed: 7,
+        ..Default::default()
+    });
+    let stats = GraphStats::compute(&graph, Some(&communities));
+    println!("graph: {} nodes, {} edges, homophily {:.3}",
+        stats.num_nodes, stats.num_edges, stats.edge_homophily.unwrap());
+
+    // 2. Hierarchical k-way partitioning (paper Algorithm 1, line 2).
+    //    k = ⌈n^(1/4)⌉ = 10, three levels -> m = [10, 100, 1000].
+    let cfg = HierarchyConfig::from_alpha(graph.num_nodes(), 0.25, 3);
+    let hierarchy = Hierarchy::build(&graph, &cfg);
+    println!("hierarchy: k={} m={:?} ({} partitions total)",
+        hierarchy.k, hierarchy.m, hierarchy.total_partitions());
+
+    // 3. The paper's default method: PosHashEmb Intra (h=2).
+    let (method, _) = EmbeddingMethod::paper_default_intra(graph.num_nodes());
+    let d = 64;
+    let plan = EmbeddingPlan::build(graph.num_nodes(), d, &method, Some(&hierarchy), 0);
+
+    // 4. Memory: the whole point of the paper.
+    let report = MemoryReport::from_plan(&plan);
+    println!("\n| Method                     | Params       | of full  | Savings |");
+    println!("{}", report.row());
+    let full = EmbeddingPlan::build(graph.num_nodes(), d, &EmbeddingMethod::Full, None, 0);
+    println!("{}", MemoryReport::from_plan(&full).row());
+
+    // 5. Compose node embeddings (v_i = p_i + x_i, Eq. 7).
+    let params = init_params(&plan, 42);
+    let v = compose_embeddings(&plan, &params);
+    println!("\ncomposed {} x {} embedding matrix; v[0][..4] = {:?}",
+        graph.num_nodes(), d, &v[..4]);
+
+    // Homophily check: same-partition nodes have more-similar embeddings.
+    let z0 = &plan.position.as_ref().unwrap().z[0];
+    let (mut same, mut diff, mut ns, mut nd) = (0f64, 0f64, 0usize, 0usize);
+    for i in (0..1000).step_by(7) {
+        for j in (1..1000).step_by(11) {
+            let dist: f32 = v[i * d..(i + 1) * d]
+                .iter()
+                .zip(&v[j * d..(j + 1) * d])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if z0[i] == z0[j] {
+                same += dist as f64;
+                ns += 1;
+            } else {
+                diff += dist as f64;
+                nd += 1;
+            }
+        }
+    }
+    println!(
+        "mean sq-distance: same-partition {:.4} vs cross-partition {:.4}",
+        same / ns as f64,
+        diff / nd as f64
+    );
+    println!("\nnext: `make artifacts && cargo run --release --example node_classification`");
+}

@@ -1,0 +1,98 @@
+"""Layer-2 embedding composition: every method of the paper as a JAX
+function over a parameter dict + static index arrays.
+
+The canonical parameter order and the static-input order MUST match the
+Rust side (`rust/src/embedding/plan.rs::param_shapes`,
+`rust/src/runtime/artifact.rs`); `python/tests/test_param_layout.py`
+pins the convention.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels.gather_combine import compose_embedding
+from .kernels.ref import compose_embedding_ref, dhe_ref
+
+
+def embedding_param_specs(emb_cfg, n, d):
+    """[(name, (rows, cols))] in canonical order for one embedding config.
+
+    emb_cfg keys: pos_tables ([[rows, cols], ...]), node_rows (0 = none),
+    h, learned_y (bool), dhe (None or dict).
+    """
+    specs = []
+    for j, (rows, cols) in enumerate(emb_cfg.get("pos_tables", [])):
+        specs.append((f"pos_{j}", (rows, cols)))
+    if emb_cfg.get("node_rows", 0):
+        specs.append(("node_x", (emb_cfg["node_rows"], d)))
+        if emb_cfg.get("learned_y", False):
+            specs.append(("node_y", (n, emb_cfg["h"])))
+    dhe = emb_cfg.get("dhe")
+    if dhe:
+        in_dim = dhe["encoding_dim"]
+        for l in range(dhe["layers"]):
+            specs.append((f"dhe_w{l}", (in_dim, dhe["hidden"])))
+            specs.append((f"dhe_b{l}", (1, dhe["hidden"])))
+            in_dim = dhe["hidden"]
+        specs.append(("dhe_wout", (in_dim, d)))
+        specs.append(("dhe_bout", (1, d)))
+    return specs
+
+
+def embedding_static_specs(emb_cfg, n, d):
+    """[(name, shape, dtype)] of static inputs the composition needs."""
+    statics = []
+    pos = emb_cfg.get("pos_tables", [])
+    if pos:
+        statics.append(("z", (len(pos), n), "i32"))
+    if emb_cfg.get("node_rows", 0):
+        statics.append(("node_idx", (emb_cfg["h"], n), "i32"))
+    dhe = emb_cfg.get("dhe")
+    if dhe:
+        statics.append(("dhe_enc", (n, dhe["encoding_dim"]), "f32"))
+    return statics
+
+
+def compose(emb_cfg, params, statics, n, d, use_pallas=True):
+    """Compute the [n, d] embedding matrix V (Eq. 7)."""
+    pos_tables = [params[f"pos_{j}"]
+                  for j in range(len(emb_cfg.get("pos_tables", [])))]
+    z = statics.get("z")
+    node_table = params.get("node_x")
+    node_idx = statics.get("node_idx")
+    node_y = params.get("node_y")
+    dhe = emb_cfg.get("dhe")
+
+    if pos_tables or node_table is not None:
+        if use_pallas:
+            v = compose_embedding(tuple(pos_tables), z, node_table,
+                                  node_idx, node_y)
+        else:
+            v = compose_embedding_ref(pos_tables, z, node_table, node_idx,
+                                      node_y, d)
+    else:
+        import jax.numpy as jnp
+        v = jnp.zeros((n, d), dtype=jnp.float32)
+    if dhe:
+        ws = [params[f"dhe_w{l}"] for l in range(dhe["layers"])]
+        bs = [params[f"dhe_b{l}"] for l in range(dhe["layers"])]
+        v = v + dhe_ref(statics["dhe_enc"], ws, bs,
+                        params["dhe_wout"], params["dhe_bout"])
+    return v
+
+
+def init_embedding_params(emb_cfg, n, d, seed=0):
+    """Numpy init (tests + aot example args). Mirrors the Rust policy:
+    uniform(±1/sqrt(cols)) tables, ones for node_y, zero dhe biases."""
+    rng = np.random.RandomState(seed)
+    params = {}
+    for name, (rows, cols) in embedding_param_specs(emb_cfg, n, d):
+        if name == "node_y":
+            params[name] = np.ones((rows, cols), np.float32)
+        elif name.startswith("dhe_b"):
+            params[name] = np.zeros((rows, cols), np.float32)
+        else:
+            a = 1.0 / np.sqrt(cols)
+            params[name] = rng.uniform(-a, a, (rows, cols)).astype(np.float32)
+    return params

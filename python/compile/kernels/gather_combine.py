@@ -1,0 +1,171 @@
+"""Layer-1 Pallas kernel: fused position + hashed-node embedding composition.
+
+This is the paper's compute hot-spot: for every node, gather its L
+hierarchy-level rows and its h hashed pool rows, apply importance
+weights, and sum (Eq. 7 = Eq. 11 + Eq. 12/13). The kernel tiles the node
+axis; the embedding tables — which the paper's whole point is to make
+small — stay fully resident per tile (VMEM-resident on TPU; see
+DESIGN.md §Hardware-Adaptation).
+
+MUST run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (real-TPU lowering). Interpret mode lowers to plain
+HLO ops, so the kernel embeds in the AOT artifact and runs from Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Node-axis tile. 8×128-friendly; the default suits both the small test
+# graphs and the synth datasets (n up to ~49k → ≤ 192 grid steps).
+DEFAULT_BLOCK_N = 256
+
+
+def _kernel(z_ref, idx_ref, y_ref, *refs, num_pos, num_hash, d, dims):
+    """One node-tile of the composition.
+
+    refs = (*pos_tables, node_table?, o_ref): pallas passes inputs then
+    the output ref last. ``dims[j]`` is the width of position level j.
+    """
+    o_ref = refs[-1]
+    pos_refs = refs[:num_pos]
+    node_ref = refs[num_pos] if num_hash > 0 else None
+
+    bn = o_ref.shape[0]
+    v = jnp.zeros((bn, d), dtype=jnp.float32)
+    for j in range(num_pos):
+        tbl = pos_refs[j][...]  # [m_j, d_j] — table resident per tile
+        rows = tbl[z_ref[j, :]]  # [bn, d_j]
+        if dims[j] == d:
+            v = v + rows
+        else:
+            # zero-extend level j to width d (Eq. 11 alignment)
+            v = v.at[:, : dims[j]].add(rows)
+    if node_ref is not None:
+        pool = node_ref[...]  # [rows, d]
+        for t in range(num_hash):
+            rows = pool[idx_ref[t, :]]  # [bn, d]
+            w = y_ref[:, t : t + 1]  # [bn, 1]
+            v = v + rows * w
+    o_ref[...] = v
+
+
+def compose_embedding_pallas(pos_tables, z, node_table, node_idx, node_y, d,
+                             block_n: int = DEFAULT_BLOCK_N):
+    """Pallas-fused equivalent of ``ref.compose_embedding_ref``.
+
+    Shapes as in the reference; ``node_y=None`` means unweighted (ones).
+    The node axis is padded to a multiple of ``block_n`` and the result
+    sliced back, so any n works.
+    """
+    num_pos = len(pos_tables)
+    if num_pos:
+        n = z.shape[1]
+    else:
+        n = node_idx.shape[1]
+    num_hash = 0 if node_table is None else node_idx.shape[0]
+
+    n_pad = -(-n // block_n) * block_n
+    if num_pos:
+        z_in = jnp.pad(z, ((0, 0), (0, n_pad - n)))
+    else:
+        z_in = jnp.zeros((1, n_pad), dtype=jnp.int32)
+    if num_hash:
+        idx_in = jnp.pad(node_idx, ((0, 0), (0, n_pad - n)))
+        if node_y is None:
+            y_in = jnp.ones((n_pad, num_hash), dtype=jnp.float32)
+        else:
+            y_in = jnp.pad(node_y, ((0, n_pad - n), (0, 0)))
+    else:
+        idx_in = jnp.zeros((1, n_pad), dtype=jnp.int32)
+        y_in = jnp.ones((n_pad, 1), dtype=jnp.float32)
+
+    dims = tuple(t.shape[1] for t in pos_tables)
+    kernel = functools.partial(
+        _kernel, num_pos=num_pos, num_hash=num_hash, d=d, dims=dims)
+
+    in_specs = [
+        pl.BlockSpec(z_in.shape[:1] + (block_n,), lambda i: (0, i)),   # z
+        pl.BlockSpec(idx_in.shape[:1] + (block_n,), lambda i: (0, i)),  # idx
+        pl.BlockSpec((block_n, y_in.shape[1]), lambda i: (i, 0)),       # y
+    ]
+    operands = [z_in, idx_in, y_in]
+    for t in pos_tables:
+        in_specs.append(pl.BlockSpec(t.shape, lambda i: (0, 0)))
+        operands.append(t)
+    if num_hash:
+        in_specs.append(pl.BlockSpec(node_table.shape, lambda i: (0, 0)))
+        operands.append(node_table)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // block_n,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*operands)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward + analytic backward.
+#
+# ``pl.pallas_call`` defines no VJP, so the train step (jax.grad) uses this
+# custom_vjp: primal = the kernel above; backward = the exact adjoint of
+# gather+weighted-sum (scatter-adds into the tables, row-dots for the
+# importance weights). Gradients are verified against the pure-jnp
+# reference in python/tests/test_kernel.py.
+
+import numpy as _np
+from jax import dtypes as _dtypes
+
+
+def _int_zero(x):
+    """float0 cotangent for integer primal inputs."""
+    if x is None:
+        return None
+    return _np.zeros(x.shape, dtype=_dtypes.float0)
+
+
+@jax.custom_vjp
+def compose_embedding(pos_tables, z, node_table, node_idx, node_y):
+    """Differentiable fused composition. d inferred from table shapes."""
+    d = pos_tables[0].shape[1] if pos_tables else node_table.shape[1]
+    return compose_embedding_pallas(list(pos_tables), z, node_table,
+                                    node_idx, node_y, d)
+
+
+def _compose_fwd(pos_tables, z, node_table, node_idx, node_y):
+    out = compose_embedding(pos_tables, z, node_table, node_idx, node_y)
+    return out, (pos_tables, z, node_table, node_idx, node_y)
+
+
+def _compose_bwd(res, g):
+    pos_tables, z, node_table, node_idx, node_y = res
+    # position tables: scatter-add the leading d_j slice of g per level
+    g_pos = []
+    for j, tbl in enumerate(pos_tables):
+        dj = tbl.shape[1]
+        g_pos.append(jnp.zeros_like(tbl).at[z[j]].add(g[:, :dj]))
+    g_pos = tuple(g_pos)
+    g_table = None
+    g_y = None
+    if node_table is not None:
+        h = node_idx.shape[0]
+        g_table = jnp.zeros_like(node_table)
+        for t in range(h):
+            contrib = g if node_y is None else g * node_y[:, t:t + 1]
+            g_table = g_table.at[node_idx[t]].add(contrib)
+        if node_y is not None:
+            cols = [jnp.sum(g * node_table[node_idx[t]], axis=1)
+                    for t in range(h)]
+            g_y = jnp.stack(cols, axis=1)
+    return (g_pos, _int_zero(z), g_table, _int_zero(node_idx), g_y)
+
+
+compose_embedding.defvjp(_compose_fwd, _compose_bwd)

@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth for kernel correctness (pytest compares the
+Pallas interpret-mode outputs against these) and are also what the L2
+model falls back to when ``use_pallas=False``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compose_embedding_ref(pos_tables, z, node_table, node_idx, node_y, d):
+    """Reference composition of the PosHashEmb embedding matrix (Eq. 7).
+
+    Args:
+      pos_tables: list of ``[m_j, d_j]`` arrays (may be empty). Level j
+        contributes to the first ``d_j`` output coordinates (zero-extend).
+      z: ``[L, n]`` int32 membership matrix (ignored when no pos tables).
+      node_table: ``[rows, d]`` shared pool or None.
+      node_idx: ``[h, n]`` int32 hash indices (ignored when no node table).
+      node_y: ``[n, h]`` importance weights or None (treated as ones).
+      d: output embedding dim.
+
+    Returns:
+      ``[n, d]`` float32 embedding matrix.
+    """
+    if pos_tables:
+        n = z.shape[1]
+    else:
+        n = node_idx.shape[1]
+    v = jnp.zeros((n, d), dtype=jnp.float32)
+    for j, table in enumerate(pos_tables):
+        dj = table.shape[1]
+        rows = table[z[j]]  # [n, dj]
+        v = v.at[:, :dj].add(rows)
+    if node_table is not None:
+        h = node_idx.shape[0]
+        for t in range(h):
+            rows = node_table[node_idx[t]]  # [n, d]
+            if node_y is not None:
+                rows = rows * node_y[:, t : t + 1]
+            v = v + rows
+    return v
+
+
+def spmm_padded_ref(h, adj_idx, adj_w):
+    """Reference padded-CSR SpMM: ``out[i] = sum_k adj_w[i,k] * h[adj_idx[i,k]]``.
+
+    Args:
+      h: ``[n_src, d]`` node features.
+      adj_idx: ``[n, K]`` int32 neighbor ids, padded arbitrarily.
+      adj_w: ``[n, K]`` float32 edge coefficients, 0 at padding.
+
+    Returns:
+      ``[n, d]`` aggregated features.
+    """
+    gathered = h[adj_idx]  # [n, K, d]
+    return jnp.einsum("nk,nkd->nd", adj_w, gathered)
+
+
+def dhe_ref(encoding, weights, biases, out_w, out_b):
+    """Reference DHE MLP forward: relu hidden layers + linear output."""
+    act = encoding
+    for w, b in zip(weights, biases):
+        act = jnp.maximum(act @ w + b, 0.0)
+    return act @ out_w + out_b

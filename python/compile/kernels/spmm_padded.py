@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: padded-CSR SpMM (neighbor aggregation).
+
+GNN message passing as a dense-regular kernel: the coordinator (Rust)
+pads every adjacency row to K slots (`adj_idx`, weight 0 on padding), so
+aggregation is `out[i] = Σ_k adj_w[i,k] · H[adj_idx[i,k]]` — a gather
+followed by a weighted reduction that tiles cleanly on the node axis.
+On TPU the feature matrix streams HBM→VMEM per tile and the weighted
+reduction maps onto 8×128 vector lanes; on CPU we run interpret mode.
+
+Used by the GCN forward path; SAGE/GAT use XLA segment ops instead
+(ragged softmax does not pad well) — see model.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _kernel(idx_ref, w_ref, h_ref, o_ref):
+    idx = idx_ref[...]          # [bn, K]
+    w = w_ref[...]              # [bn, K]
+    h = h_ref[...]              # [n_src, d] resident
+    gathered = h[idx]           # [bn, K, d]
+    o_ref[...] = jnp.einsum("nk,nkd->nd", w, gathered)
+
+
+def spmm_padded_pallas(h, adj_idx, adj_w, block_n: int = DEFAULT_BLOCK_N):
+    """Pallas equivalent of ``ref.spmm_padded_ref``."""
+    n, k = adj_idx.shape
+    d = h.shape[1]
+    n_pad = -(-n // block_n) * block_n
+    idx_in = jnp.pad(adj_idx, ((0, n_pad - n), (0, 0)))
+    w_in = jnp.pad(adj_w, ((0, n_pad - n), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec(h.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
+        interpret=True,
+    )(idx_in, w_in, h)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper (see gather_combine.py for the rationale).
+
+import numpy as _np
+from jax import dtypes as _dtypes
+
+
+@jax.custom_vjp
+def spmm_padded(h, adj_idx, adj_w):
+    """Differentiable padded-CSR SpMM (Pallas forward)."""
+    return spmm_padded_pallas(h, adj_idx, adj_w)
+
+
+def _spmm_fwd(h, adj_idx, adj_w):
+    return spmm_padded(h, adj_idx, adj_w), (h, adj_idx, adj_w)
+
+
+def _spmm_bwd(res, g):
+    h, adj_idx, adj_w = res
+    d = h.shape[1]
+    # dL/dh: scatter-add w[i,k] * g[i] into row adj_idx[i,k]
+    contrib = (adj_w[..., None] * g[:, None, :]).reshape(-1, d)
+    g_h = jnp.zeros_like(h).at[adj_idx.reshape(-1)].add(contrib)
+    # dL/dw[i,k] = <g[i], h[adj_idx[i,k]]>
+    g_w = jnp.einsum("nd,nkd->nk", g, h[adj_idx])
+    g_idx = _np.zeros(adj_idx.shape, dtype=_dtypes.float0)
+    return (g_h, g_idx, g_w)
+
+
+spmm_padded.defvjp(_spmm_fwd, _spmm_bwd)

@@ -1,0 +1,139 @@
+"""Layer-2 GNN models in JAX: GCN, GraphSAGE (mean), GAT.
+
+Written from scratch over static COO/padded-CSR edge arrays so the whole
+forward lowers into one AOT HLO. The embedding layer (embeddings.compose,
+backed by the Pallas gather_combine kernel) provides h^(0) = V (Eq. 3).
+
+Aggregation paths:
+* GCN — padded-CSR SpMM via the Pallas ``spmm_padded`` kernel; the Rust
+  coordinator supplies adjacency rows padded to K with symmetric-norm
+  coefficients 1/sqrt((deg_u+1)(deg_v+1)) including the self loop.
+* SAGE — mean aggregation via ``jax.ops.segment_sum`` over COO arrays.
+* GAT — single-head attention with edge softmax via segment max/sum; the
+  self edge is folded in analytically (no edge-array expansion).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .embeddings import compose
+from .kernels.ref import spmm_padded_ref
+from .kernels.spmm_padded import spmm_padded
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+
+def gnn_param_specs(cfg):
+    """[(name, (rows, cols))] for the GNN stack (after embedding params)."""
+    model = cfg["model"]
+    dims = [cfg["d"]] + [cfg["hidden"]] * (cfg["num_layers"] - 1) + [cfg["classes"]]
+    specs = []
+    for l in range(cfg["num_layers"]):
+        din, dout = dims[l], dims[l + 1]
+        if model == "gcn":
+            specs += [(f"gcn_w{l}", (din, dout)), (f"gcn_b{l}", (1, dout))]
+        elif model == "sage":
+            specs += [
+                (f"sage_self_w{l}", (din, dout)),
+                (f"sage_neigh_w{l}", (din, dout)),
+                (f"sage_b{l}", (1, dout)),
+            ]
+        elif model == "gat":
+            specs += [
+                (f"gat_w{l}", (din, dout)),
+                (f"gat_al{l}", (1, dout)),
+                (f"gat_ar{l}", (1, dout)),
+                (f"gat_b{l}", (1, dout)),
+            ]
+        else:
+            raise ValueError(f"unknown model {model}")
+    return specs
+
+
+def graph_static_specs(cfg):
+    """[(name, shape, dtype)] of the graph arrays each model consumes."""
+    n, e = cfg["n"], cfg["edges"]
+    if cfg["model"] == "gcn":
+        k = cfg["pad_k"]
+        return [("adj_idx", (n, k), "i32"), ("adj_w", (n, k), "f32")]
+    if cfg["model"] == "sage":
+        return [("src", (e,), "i32"), ("dst", (e,), "i32"),
+                ("inv_deg", (n, 1), "f32")]
+    if cfg["model"] == "gat":
+        return [("src", (e,), "i32"), ("dst", (e,), "i32")]
+    raise ValueError(cfg["model"])
+
+
+# ---------------------------------------------------------------------------
+# layers
+
+def gcn_layer(h, w, b, adj_idx, adj_w, use_pallas, last):
+    spmm = spmm_padded if use_pallas else spmm_padded_ref
+    agg = spmm(h, adj_idx, adj_w)
+    out = agg @ w + b
+    return out if last else jax.nn.relu(out)
+
+
+def sage_layer(h, w_self, w_neigh, b, src, dst, inv_deg, n, last):
+    neigh = jax.ops.segment_sum(h[src], dst, num_segments=n) * inv_deg
+    out = h @ w_self + neigh @ w_neigh + b
+    return out if last else jax.nn.relu(out)
+
+
+def gat_layer(h, w, al, ar, b, src, dst, n, last):
+    wh = h @ w  # [n, dout]
+    el = jnp.sum(wh * al, axis=1)  # [n]
+    er = jnp.sum(wh * ar, axis=1)  # [n]
+    e = jax.nn.leaky_relu(el[src] + er[dst], 0.2)  # [E]
+    e_self = jax.nn.leaky_relu(el + er, 0.2)  # [n] self edge
+    # numerically stable softmax over {neighbors(dst)} ∪ {self}
+    seg_max = jax.ops.segment_max(e, dst, num_segments=n)
+    seg_max = jnp.maximum(jnp.where(jnp.isfinite(seg_max), seg_max, -jnp.inf), e_self)
+    exp_e = jnp.exp(e - seg_max[dst])
+    exp_self = jnp.exp(e_self - seg_max)
+    denom = jax.ops.segment_sum(exp_e, dst, num_segments=n) + exp_self
+    num = (jax.ops.segment_sum(exp_e[:, None] * wh[src], dst, num_segments=n)
+           + exp_self[:, None] * wh)
+    out = num / denom[:, None] + b
+    return out if last else jax.nn.elu(out)
+
+
+# ---------------------------------------------------------------------------
+# full forward
+
+def forward(cfg, params, statics, use_pallas=True):
+    """Logits [n, classes] from embedding params + GNN params + statics."""
+    n, d = cfg["n"], cfg["d"]
+    h = compose(cfg["embedding"], params, statics, n, d, use_pallas)
+    model = cfg["model"]
+    for l in range(cfg["num_layers"]):
+        last = l == cfg["num_layers"] - 1
+        if model == "gcn":
+            h = gcn_layer(h, params[f"gcn_w{l}"], params[f"gcn_b{l}"],
+                          statics["adj_idx"], statics["adj_w"], use_pallas, last)
+        elif model == "sage":
+            h = sage_layer(h, params[f"sage_self_w{l}"],
+                           params[f"sage_neigh_w{l}"], params[f"sage_b{l}"],
+                           statics["src"], statics["dst"], statics["inv_deg"],
+                           n, last)
+        elif model == "gat":
+            h = gat_layer(h, params[f"gat_w{l}"], params[f"gat_al{l}"],
+                          params[f"gat_ar{l}"], params[f"gat_b{l}"],
+                          statics["src"], statics["dst"], n, last)
+    return h
+
+
+def loss_fn(cfg, params, statics, labels, mask, use_pallas=True):
+    """Masked mean loss: softmax-CE (multiclass) or BCE (multilabel)."""
+    logits = forward(cfg, params, statics, use_pallas)
+    if cfg["task"] == "multiclass":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+        return jnp.sum(nll * mask) / jnp.sum(mask)
+    # multilabel: labels [n, tasks] float {0,1}
+    z = logits
+    per = jnp.maximum(z, 0.0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.sum(jnp.mean(per, axis=1) * mask) / jnp.sum(mask)

@@ -1,0 +1,56 @@
+"""AOT pipeline tests: lowering produces loadable HLO text + a manifest
+consistent with the ABI."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile.aot import default_grid, input_specs, lower_config
+
+
+def test_default_grid_covers_all_models():
+    models = {c["model"] for c in default_grid()}
+    assert models == {"gcn", "sage", "gat"}
+
+
+def test_lower_writes_hlo_text_and_manifest_entries():
+    cfg = default_grid(quick=True)[0]
+    with tempfile.TemporaryDirectory() as td:
+        entries = lower_config(cfg, td)
+        assert len(entries) == 2
+        for e in entries:
+            path = os.path.join(td, e["path"])
+            assert os.path.exists(path)
+            text = open(path).read()
+            # HLO text module with the entry computation
+            assert text.startswith("HloModule"), text[:60]
+            assert "ENTRY" in text
+            # manifest inputs match the ABI spec exactly
+            specs = input_specs(cfg, e["mode"])
+            assert [(i["name"], tuple(i["shape"])) for i in e["inputs"]] == \
+                [(n, tuple(s)) for n, s, _ in specs]
+
+
+def test_train_artifact_io_counts():
+    cfg = default_grid(quick=True)[0]
+    with tempfile.TemporaryDirectory() as td:
+        train, ev = lower_config(cfg, td)
+    assert train["num_outputs"] == 1
+    assert ev["num_outputs"] == 1
+    packed = train["packed"]
+    assert packed["total"] == 3 * packed["param_scalars"] + 2
+    assert train["num_params"] == len(packed["params"])
+    # state is the first input and matches the packed total
+    assert train["inputs"][0]["name"] == "state"
+    assert train["inputs"][0]["shape"] == [packed["total"]]
+
+
+def test_manifest_json_round_trips():
+    cfg = default_grid(quick=True)[0]
+    with tempfile.TemporaryDirectory() as td:
+        entries = lower_config(cfg, td)
+        blob = json.dumps({"artifacts": entries})
+        back = json.loads(blob)
+        assert back["artifacts"][0]["config"]["name"] == cfg["name"]

@@ -1,0 +1,48 @@
+//! L3 perf microbench: embedding-plan construction and the pure-Rust
+//! reference composition (host-side baseline the HLO path is compared
+//! against in EXPERIMENTS.md §Perf).
+
+use poshashemb::embedding::{compose_embeddings, init_params, EmbeddingMethod, EmbeddingPlan};
+use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::util::bench::{bench, black_box, section};
+
+fn main() {
+    let n = 50_000;
+    let d = 64;
+    let (g, _) = planted_partition(&PlantedPartitionConfig {
+        n,
+        communities: 32,
+        intra_degree: 12.0,
+        inter_degree: 2.0,
+        seed: 5,
+            ..Default::default()
+    });
+    let hier = Hierarchy::build(&g, &HierarchyConfig::new(15, 3));
+
+    section("plan construction (n=50k, d=64)");
+    for (name, method) in [
+        ("full", EmbeddingMethod::Full),
+        ("hashemb", EmbeddingMethod::HashEmb { buckets: 2048, h: 2 }),
+        ("intra_h2", EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 58, h: 2 }),
+    ] {
+        let r = bench(&format!("plan {name}"), || {
+            black_box(EmbeddingPlan::build(n, d, &method, Some(&hier), 0))
+        });
+        println!("{}", r.report(Some((n as u64, "nodes"))));
+    }
+
+    section("reference composition (n=50k, d=64)");
+    for (name, method) in [
+        ("full", EmbeddingMethod::Full),
+        ("posemb3", EmbeddingMethod::PosEmb { levels: 3 }),
+        ("intra_h2", EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 58, h: 2 }),
+    ] {
+        let plan = EmbeddingPlan::build(n, d, &method, Some(&hier), 0);
+        let params = init_params(&plan, 1);
+        let r = bench(&format!("compose {name}"), || {
+            black_box(compose_embeddings(&plan, &params))
+        });
+        println!("{}", r.report(Some(((n * d) as u64, "elements"))));
+    }
+}

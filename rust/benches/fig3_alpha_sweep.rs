@@ -1,0 +1,42 @@
+//! Regenerates paper Figure 3: PosEmb 1-level quality as a function of
+//! alpha (number of partitions k = n^alpha), per (dataset, model).
+
+use poshashemb::bench_harness::Harness;
+use poshashemb::metrics::mean_std;
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    let harness = Harness::from_env()?;
+    let ds = std::env::var("POSHASH_DATASET").ok();
+    let exps = harness.group("f3", ds.as_deref());
+    if exps.is_empty() {
+        eprintln!("no f3 artifacts found — run `make artifacts` (GRID=full)");
+        return Ok(());
+    }
+    let outcomes = harness.run_all(&exps)?;
+    // series per (dataset, model): alpha tag -> (k, metric)
+    let mut series: BTreeMap<String, Vec<(String, usize, f64, f64)>> = BTreeMap::new();
+    for e in &exps {
+        let alpha_tag = e.name.rsplit("_a").next().unwrap_or("?").to_string();
+        if let Some(outs) = outcomes.get(&e.name) {
+            let vals: Vec<f64> = outs.iter().map(|o| o.test_metric).collect();
+            let (mean, std) = mean_std(&vals);
+            series
+                .entry(format!("{} / {}", e.dataset, e.model.as_str()))
+                .or_default()
+                .push((alpha_tag, e.k, mean, std));
+        }
+    }
+    println!("\n### Figure 3 — PosEmb 1-level vs alpha (k = n^alpha)\n");
+    for (key, mut points) in series {
+        points.sort_by_key(|(_, k, _, _)| *k);
+        println!("{key}:");
+        for (tag, k, mean, std) in points {
+            let bars = "#".repeat((mean * 60.0) as usize);
+            println!("  alpha={}/8  k={k:<6} {mean:.3} ± {std:.3}  {bars}", &tag[..1]);
+        }
+    }
+    println!("\npaper shape: quality needs k large enough to capture position, then \
+              flattens (or dips where too-fine partitions fragment the signal).");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! L3 perf microbench: the multilevel partitioner (coarsening dominates)
+//! on SBM and R-MAT graphs. Throughput target (EXPERIMENTS.md §Perf):
+//! ≥ 1M edges/s end-to-end for k-way partitioning.
+
+use poshashemb::graph::{planted_partition, rmat, PlantedPartitionConfig, RmatConfig};
+use poshashemb::partition::{heavy_edge_matching, partition, Hierarchy, HierarchyConfig, PartitionConfig};
+use poshashemb::util::bench::{bench, black_box, section};
+use poshashemb::util::rng::Rng;
+
+fn main() {
+    let (sbm, _) = planted_partition(&PlantedPartitionConfig {
+        n: 50_000,
+        communities: 32,
+        intra_degree: 12.0,
+        inter_degree: 2.0,
+        seed: 3,
+            ..Default::default()
+    });
+    let edges = sbm.num_edges() as u64;
+    section(&format!("partitioner on SBM n=50k m={edges}"));
+
+    let r = bench("heavy_edge_matching", || {
+        let mut rng = Rng::seed_from_u64(1);
+        black_box(heavy_edge_matching(&sbm, &mut rng))
+    });
+    println!("{}", r.report(Some((2 * edges, "edge-visits"))));
+
+    for k in [8usize, 32] {
+        let r = bench(&format!("partition k={k}"), || {
+            black_box(partition(&sbm, &PartitionConfig::with_k(k)))
+        });
+        println!("{}", r.report(Some((edges, "edges"))));
+    }
+
+    let r = bench("hierarchy L=3 k=16", || {
+        black_box(Hierarchy::build(&sbm, &HierarchyConfig::new(16, 3)))
+    });
+    println!("{}", r.report(Some((edges, "edges"))));
+
+    let rg = rmat(&RmatConfig { scale: 15, edge_factor: 8, ..Default::default() });
+    let redges = rg.num_edges() as u64;
+    section(&format!("partitioner on R-MAT n=32k m={redges} (heavy tail)"));
+    let r = bench("partition k=16", || {
+        black_box(partition(&rg, &PartitionConfig::with_k(16)))
+    });
+    println!("{}", r.report(Some((redges, "edges"))));
+}

@@ -1,0 +1,22 @@
+//! Regenerates paper Table IV: hierarchy depth (PosEmb 1/2/3-level vs
+//! FullEmb).
+
+use poshashemb::bench_harness::{print_table, rows_from_outcomes, Harness};
+
+fn main() -> anyhow::Result<()> {
+    let harness = Harness::from_env()?;
+    let ds = std::env::var("POSHASH_DATASET").ok();
+    // Table IV = FullEmb + PosEmb{1,2,3}: full/posemb1 live in group t3.
+    let mut exps = harness.group("t3", ds.as_deref());
+    exps.retain(|e| e.name.ends_with("_full") || e.name.ends_with("_posemb1"));
+    exps.extend(harness.group("t4", ds.as_deref()));
+    if exps.is_empty() {
+        eprintln!("no t4 artifacts found — run `make artifacts` (GRID=full)");
+        return Ok(());
+    }
+    let outcomes = harness.run_all(&exps)?;
+    let rows = rows_from_outcomes(&exps, &outcomes, |e| e.method.name());
+    print_table("Table IV — hierarchy depth (accuracy / ROC-AUC, mean ± std)", &rows);
+    println!("\npaper shape: deeper hierarchies match or improve 1-level at 90–99% savings.");
+    Ok(())
+}

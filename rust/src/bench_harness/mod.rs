@@ -1,0 +1,187 @@
+//! Shared experiment harness for the benches and the `experiment` CLI
+//! subcommand: runs groups of experiments over multiple seeds and prints
+//! paper-style tables (mean ± std per cell).
+//!
+//! Seeds default to 2 and are controlled with `POSHASH_SEEDS`; epochs can
+//! be capped with `POSHASH_EPOCHS` (useful for CI smoke runs).
+
+use crate::config::{full_grid, Experiment};
+use crate::coordinator::{run_experiment, TrainOptions, TrainOutcome};
+use crate::metrics::fmt_cell;
+use crate::runtime::{Manifest, RuntimeClient};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Reusable harness: PJRT client + manifest + options.
+pub struct Harness {
+    pub client: RuntimeClient,
+    pub manifest: Manifest,
+    pub opts: TrainOptions,
+    pub seeds: Vec<u64>,
+}
+
+impl Harness {
+    /// Build from the default `artifacts/` dir and env knobs.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("POSHASH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let client = RuntimeClient::cpu()?;
+        let manifest = Manifest::load(Path::new(&dir))?;
+        let num_seeds: usize = std::env::var("POSHASH_SEEDS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        let mut opts = TrainOptions::default();
+        if let Ok(ep) = std::env::var("POSHASH_EPOCHS") {
+            opts.epochs = ep.parse().ok();
+        }
+        if let Ok(p) = std::env::var("POSHASH_PATIENCE") {
+            if let Ok(p) = p.parse() {
+                opts.patience = p;
+            }
+        }
+        opts.verbose = std::env::var("POSHASH_VERBOSE").map_or(false, |v| v == "1");
+        Ok(Harness { client, manifest, opts, seeds: (0..num_seeds as u64).collect() })
+    }
+
+    /// All grid experiments in `group`, optionally filtered by dataset.
+    pub fn group(&self, group: &str, dataset: Option<&str>) -> Vec<Experiment> {
+        full_grid()
+            .into_iter()
+            .filter(|e| e.group == group)
+            .filter(|e| dataset.map_or(true, |d| e.dataset == d))
+            .filter(|e| self.manifest.contains(&format!("{}.train", e.name)))
+            .collect()
+    }
+
+    /// Run one experiment over all seeds.
+    pub fn run_seeds(&self, e: &Experiment) -> Result<Vec<TrainOutcome>> {
+        let mut outs = Vec::new();
+        for &seed in &self.seeds {
+            let o = run_experiment(&self.client, &self.manifest, e, seed, &self.opts)?;
+            eprintln!("    {}", o.row());
+            outs.push(o);
+        }
+        Ok(outs)
+    }
+
+    /// Run a set of experiments, returning name → outcomes.
+    pub fn run_all(&self, exps: &[Experiment]) -> Result<BTreeMap<String, Vec<TrainOutcome>>> {
+        let mut map = BTreeMap::new();
+        for e in exps {
+            eprintln!("[{}] {}", e.group, e.name);
+            map.insert(e.name.clone(), self.run_seeds(e)?);
+        }
+        Ok(map)
+    }
+}
+
+/// One row of a paper-style table.
+pub struct TableRow {
+    pub label: String,
+    /// (column label, metric samples, params) per dataset/model column.
+    pub cells: Vec<(String, Vec<f64>, usize)>,
+}
+
+/// Print a paper-style table: rows = methods, columns = (dataset, model).
+pub fn print_table(title: &str, rows: &[TableRow]) {
+    println!("\n### {title}\n");
+    if rows.is_empty() {
+        println!("(no results — did `make artifacts` include this grid?)");
+        return;
+    }
+    // header from the first row's columns
+    print!("| {:<28} |", "Method");
+    for (col, _, _) in &rows[0].cells {
+        print!(" {col:<22} |");
+    }
+    println!();
+    print!("|{}|", "-".repeat(30));
+    for _ in &rows[0].cells {
+        print!("{}|", "-".repeat(24));
+    }
+    println!();
+    for row in rows {
+        print!("| {:<28} |", row.label);
+        for (_, samples, params) in &row.cells {
+            if samples.is_empty() {
+                print!(" {:<22} |", "—");
+            } else {
+                print!(" {:<22} |", format!("{} ({}p)", fmt_cell(samples), short(*params)));
+            }
+        }
+        println!();
+    }
+}
+
+fn short(params: usize) -> String {
+    if params >= 1_000_000 {
+        format!("{:.1}M", params as f64 / 1e6)
+    } else if params >= 1_000 {
+        format!("{:.0}k", params as f64 / 1e3)
+    } else {
+        params.to_string()
+    }
+}
+
+/// Collect outcomes into table rows: one row per method tag, one column
+/// per (dataset, model) pair present.
+pub fn rows_from_outcomes(
+    exps: &[Experiment],
+    outcomes: &BTreeMap<String, Vec<TrainOutcome>>,
+    label_of: impl Fn(&Experiment) -> String,
+) -> Vec<TableRow> {
+    // columns in stable order
+    let mut columns: Vec<(String, String)> = Vec::new(); // (dataset, model)
+    for e in exps {
+        let col = (e.dataset.to_string(), e.model.as_str().to_string());
+        if !columns.contains(&col) {
+            columns.push(col);
+        }
+    }
+    let mut labels: Vec<String> = Vec::new();
+    for e in exps {
+        let l = label_of(e);
+        if !labels.contains(&l) {
+            labels.push(l);
+        }
+    }
+    labels
+        .into_iter()
+        .map(|label| {
+            let cells = columns
+                .iter()
+                .map(|(ds, model)| {
+                    let col_label = format!("{} / {}", ds.trim_start_matches("synth-"), model);
+                    let mut samples = Vec::new();
+                    let mut params = 0usize;
+                    for e in exps {
+                        if label_of(e) == label
+                            && e.dataset == ds.as_str()
+                            && e.model.as_str() == model
+                        {
+                            if let Some(outs) = outcomes.get(&e.name) {
+                                samples.extend(outs.iter().map(|o| o.test_metric));
+                                params = outs.first().map_or(0, |o| o.memory.params);
+                            }
+                        }
+                    }
+                    (col_label, samples, params)
+                })
+                .collect();
+            TableRow { label, cells }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_formatting() {
+        assert_eq!(short(42), "42");
+        assert_eq!(short(12_000), "12k");
+        assert_eq!(short(3_400_000), "3.4M");
+    }
+}

@@ -1,0 +1,431 @@
+//! Experiment configuration: the full grid of (dataset, model, method)
+//! combinations behind every table and figure, and the JSON request that
+//! tells `python/compile/aot.py` which artifacts to lower.
+//!
+//! Naming convention: `<ds>_<model>_<method-tag>` (e.g.
+//! `arxiv_gcn_posemb3`, `products_sage_f4_b34_poshash`). The same name
+//! keys the manifest artifact (`<name>.train` / `<name>.eval`), so the
+//! benches, the trainer and the AOT layer agree by construction.
+
+use crate::data::{self, Dataset, TaskKind};
+use crate::embedding::{budget_for_fraction, EmbeddingMethod, EmbeddingPlan, PosBudget};
+use crate::partition::{Hierarchy, HierarchyConfig};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// GNN architecture used by an experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Gcn,
+    Sage,
+    Gat,
+}
+
+impl ModelKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Sage => "sage",
+            ModelKind::Gat => "gat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gcn" => Ok(ModelKind::Gcn),
+            "sage" => Ok(ModelKind::Sage),
+            "gat" => Ok(ModelKind::Gat),
+            _ => Err(anyhow!("unknown model '{s}' (gcn|sage|gat)")),
+        }
+    }
+}
+
+/// One experiment: everything needed to lower, train and evaluate.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    /// Unique config name (artifact key).
+    pub name: String,
+    pub dataset: &'static str,
+    pub model: ModelKind,
+    pub method: EmbeddingMethod,
+    /// Branching factor for the hierarchy (when the method needs one).
+    pub k: usize,
+    /// Which paper artifact this belongs to (reporting group).
+    pub group: &'static str,
+    /// Training epochs (full batch).
+    pub epochs: usize,
+    pub lr: f64,
+}
+
+/// Paper defaults for the GNN stack.
+pub const HIDDEN: usize = 64;
+pub const NUM_LAYERS: usize = 2;
+/// Default epochs (full-batch Adam converges quickly on the synth sets).
+pub const EPOCHS: usize = 80;
+/// Paper default alpha (Eq. 8).
+pub const ALPHA: f64 = 0.25;
+
+/// Paper's model pairs per dataset (§IV-C): arxiv GCN+GAT, products
+/// SAGE+GAT, proteins EW-GCN(≈GCN)+GAT.
+pub fn model_pairs(dataset: &str) -> [ModelKind; 2] {
+    match dataset {
+        "synth-arxiv" => [ModelKind::Gcn, ModelKind::Gat],
+        "synth-products" => [ModelKind::Sage, ModelKind::Gat],
+        "synth-proteins" => [ModelKind::Gcn, ModelKind::Gat],
+        _ => [ModelKind::Gcn, ModelKind::Gat],
+    }
+}
+
+/// Short dataset tag for config names.
+fn ds_tag(dataset: &str) -> &'static str {
+    match dataset {
+        "synth-arxiv" => "arxiv",
+        "synth-products" => "products",
+        "synth-proteins" => "proteins",
+        _ => "ds",
+    }
+}
+
+/// Paper default k. Eq. 8 says `k = n^alpha` with alpha = 1/4 — but n
+/// there is the ORIGINAL OGB node count. Since the synthetic analogs are
+/// scaled down, we keep the paper's realized k values (arxiv 21,
+/// products 40, proteins 19) so the partitions-per-class regime matches
+/// the paper's; the alpha sweep (Fig. 3) still scales with the synth n.
+pub fn default_k(n: usize) -> usize {
+    match n {
+        6_000 => 21,     // 169,343^(1/4)
+        12_000 => 40,    // 2,449,029^(1/4)
+        4_000 => 19,     // 132,534^(1/4)
+        _ => (n as f64).powf(ALPHA).ceil() as usize,
+    }
+}
+
+/// Paper default `c = ⌈sqrt(n/k)⌉`, `b = c·k` (§IV-D).
+pub fn default_c(n: usize, k: usize) -> usize {
+    ((n as f64 / k as f64).sqrt()).ceil() as usize
+}
+
+/// Build one experiment with defaults.
+fn exp(
+    dataset: &'static str,
+    model: ModelKind,
+    tag: &str,
+    method: EmbeddingMethod,
+    k: usize,
+    group: &'static str,
+) -> Experiment {
+    Experiment {
+        name: format!("{}_{}_{}", ds_tag(dataset), model.as_str(), tag),
+        dataset,
+        model,
+        method,
+        k,
+        group,
+        epochs: EPOCHS,
+        lr: 0.01,
+    }
+}
+
+/// The full experiment grid: every config used by Tables III–V and
+/// Figures 3–4 (paper-default hyperparameters, DESIGN.md §5).
+pub fn full_grid() -> Vec<Experiment> {
+    let mut out = Vec::new();
+    for dataset in data::DATASET_NAMES {
+        let spec = data::spec(dataset).unwrap();
+        let n = spec.n;
+        let k = default_k(n);
+        let c = default_c(n, k);
+        let b = c * k;
+        for model in model_pairs(dataset) {
+            // --- Table III / IV ------------------------------------------------
+            out.push(exp(dataset, model, "full", EmbeddingMethod::Full, k, "t3"));
+            out.push(exp(dataset, model, "posemb1", EmbeddingMethod::PosEmb { levels: 1 }, k, "t3"));
+            out.push(exp(
+                dataset,
+                model,
+                "randompart",
+                EmbeddingMethod::RandomPart { parts: k },
+                k,
+                "t3",
+            ));
+            out.push(exp(
+                dataset,
+                model,
+                "posfullemb1",
+                EmbeddingMethod::PosFullEmb { levels: 1 },
+                k,
+                "t3",
+            ));
+            out.push(exp(dataset, model, "posemb2", EmbeddingMethod::PosEmb { levels: 2 }, k, "t4"));
+            out.push(exp(dataset, model, "posemb3", EmbeddingMethod::PosEmb { levels: 3 }, k, "t4"));
+            // --- Table V -------------------------------------------------------
+            out.push(exp(
+                dataset,
+                model,
+                "posfullemb3",
+                EmbeddingMethod::PosFullEmb { levels: 3 },
+                k,
+                "t5",
+            ));
+            for h in [1usize, 2] {
+                out.push(exp(
+                    dataset,
+                    model,
+                    &format!("inter_h{h}"),
+                    EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: b, h },
+                    k,
+                    "t5",
+                ));
+                out.push(exp(
+                    dataset,
+                    model,
+                    &format!("intra_h{h}"),
+                    EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h },
+                    k,
+                    "t5",
+                ));
+            }
+            // --- Figure 3: alpha sweep (PosEmb 1-level) ------------------------
+            for (num, den) in [(1u32, 8u32), (2, 8), (3, 8), (4, 8), (6, 8)] {
+                let alpha = num as f64 / den as f64;
+                let ka = (n as f64).powf(alpha).ceil() as usize;
+                let ka = ka.clamp(2, n / 2);
+                out.push(exp(
+                    dataset,
+                    model,
+                    &format!("f3_a{num}{den}"),
+                    EmbeddingMethod::PosEmb { levels: 1 },
+                    ka,
+                    "f3",
+                ));
+            }
+            // --- Figure 4: memory-budget sweep ---------------------------------
+            let fractions: [(u32, f64); 3] = if dataset == "synth-products" {
+                [(34, 1.0 / 34.0), (18, 1.0 / 18.0), (2, 0.5)]
+            } else {
+                [(12, 1.0 / 12.0), (6, 1.0 / 6.0), (2, 0.5)]
+            };
+            for (tag_den, frac) in fractions {
+                // hierarchy m-counts for the default k (3 levels)
+                let m = [k, k * k, k * k * k];
+                let bm = budget_for_fraction(n, spec.d, &m, 2, frac);
+                let mut push = |mtag: &str, method: EmbeddingMethod, kk: usize| {
+                    out.push(exp(
+                        dataset,
+                        model,
+                        &format!("f4_b{tag_den}_{mtag}"),
+                        method,
+                        kk,
+                        "f4",
+                    ));
+                };
+                push("hashtrick", bm.hash_trick.clone(), k);
+                push("bloom", bm.bloom.clone(), k);
+                push("hashemb", bm.hash_emb.clone(), k);
+                match bm.poshash {
+                    PosBudget::Intra { c, h } => push(
+                        "poshash",
+                        EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h },
+                        k,
+                    ),
+                    PosBudget::PositionOnly { k: kk } => {
+                        push("poshash", EmbeddingMethod::PosEmb { levels: 1 }, kk)
+                    }
+                }
+                // DHE: paper could not run it on the largest dataset; same here.
+                if dataset != "synth-products" {
+                    let budget = (n as f64 * spec.d as f64 * frac) as usize;
+                    let enc = 32usize;
+                    let hidden = (budget.saturating_sub(spec.d)) / (enc + 1 + spec.d);
+                    if hidden >= 8 {
+                        // DHE's MLP makes its step ~10x costlier than the
+                        // table methods; cap epochs so Fig. 4 stays
+                        // tractable (the paper hit the analogous wall on
+                        // GPU memory instead).
+                        let mut e = exp(
+                            dataset,
+                            model,
+                            &format!("f4_b{tag_den}_dhe"),
+                            EmbeddingMethod::Dhe { encoding_dim: enc, hidden, layers: 1 },
+                            k,
+                            "f4",
+                        );
+                        e.epochs = 40;
+                        out.push(e);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A much smaller grid for smoke/CI runs: one dataset, one model, the
+/// core methods.
+pub fn smoke_grid() -> Vec<Experiment> {
+    full_grid()
+        .into_iter()
+        .filter(|e| {
+            e.dataset == "synth-arxiv"
+                && e.model == ModelKind::Gcn
+                && matches!(e.group, "t3" | "t4" | "t5")
+        })
+        .collect()
+}
+
+/// Realize the dataset + hierarchy + plan for an experiment.
+/// `seed` perturbs hashing/random-partition draws (not the dataset).
+pub fn materialize(e: &Experiment, seed: u64) -> (Dataset, Option<Hierarchy>, EmbeddingPlan) {
+    let spec = data::spec(e.dataset).expect("unknown dataset");
+    let ds = Dataset::generate(&spec);
+    let hierarchy = if e.method.needs_hierarchy() {
+        let levels = e.method.levels().max(1);
+        let mut cfg = HierarchyConfig::new(e.k, levels);
+        cfg.base.seed = 1; // hierarchy fixed across seeds: shapes must match AOT
+        Some(Hierarchy::build(&ds.graph, &cfg))
+    } else {
+        None
+    };
+    let plan = EmbeddingPlan::build(spec.n, spec.d, &e.method, hierarchy.as_ref(), seed);
+    (ds, hierarchy, plan)
+}
+
+/// The JSON config entry `python/compile/aot.py` consumes for `e`.
+pub fn aot_config(e: &Experiment) -> Json {
+    let spec = data::spec(e.dataset).expect("unknown dataset");
+    let ds = Dataset::generate(&spec);
+    let (_, _, plan) = materialize(e, 0);
+    let pos_tables: Vec<Json> = plan
+        .position
+        .as_ref()
+        .map(|p| {
+            p.tables
+                .iter()
+                .map(|t| Json::arr([Json::num(t.rows as f64), Json::num(t.cols as f64)]))
+                .collect()
+        })
+        .unwrap_or_default();
+    let dhe = plan
+        .dhe
+        .as_ref()
+        .map(|d| {
+            Json::obj(vec![
+                ("encoding_dim", Json::num(d.encoding_dim as f64)),
+                ("hidden", Json::num(d.hidden as f64)),
+                ("layers", Json::num(d.layers as f64)),
+            ])
+        })
+        .unwrap_or(Json::Null);
+    let emb = Json::obj(vec![
+        ("pos_tables", Json::Arr(pos_tables)),
+        ("node_rows", Json::num(plan.node.as_ref().map_or(0, |nx| nx.table.rows) as f64)),
+        ("h", Json::num(plan.node.as_ref().map_or(0, |nx| nx.indices.len()) as f64)),
+        ("learned_y", Json::Bool(plan.node.as_ref().is_some_and(|nx| nx.learned_weights))),
+        ("dhe", dhe),
+    ]);
+    let task = match spec.task {
+        TaskKind::MultiClass => "multiclass",
+        TaskKind::MultiLabel => "multilabel",
+    };
+    // pad_k = max adjacency row length + 1 (self loop slot)
+    let max_deg = (0..ds.graph.num_nodes() as u32).map(|u| ds.graph.degree(u)).max().unwrap_or(0);
+    Json::obj(vec![
+        ("name", Json::str(e.name.clone())),
+        ("model", Json::str(e.model.as_str())),
+        ("task", Json::str(task)),
+        ("n", Json::num(spec.n as f64)),
+        ("d", Json::num(spec.d as f64)),
+        ("classes", Json::num(spec.classes as f64)),
+        ("hidden", Json::num(HIDDEN as f64)),
+        ("num_layers", Json::num(NUM_LAYERS as f64)),
+        ("edges", Json::num(ds.graph.num_adjacency_entries() as f64)),
+        ("pad_k", Json::num((max_deg + 1) as f64)),
+        ("lr", Json::Num(e.lr)),
+        ("embedding", emb),
+    ])
+}
+
+/// Write the full AOT request for `experiments` to `path`.
+pub fn write_aot_request(experiments: &[Experiment], path: &std::path::Path) -> Result<()> {
+    let configs: Vec<Json> = experiments.iter().map(aot_config).collect();
+    let root = Json::obj(vec![("configs", Json::Arr(configs))]);
+    std::fs::write(path, root.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_names_are_unique() {
+        let grid = full_grid();
+        let mut names: Vec<&str> = grid.iter().map(|e| e.name.as_str()).collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate config names");
+        assert!(total > 100, "grid unexpectedly small: {total}");
+    }
+
+    #[test]
+    fn grid_covers_all_groups_and_datasets() {
+        let grid = full_grid();
+        for g in ["t3", "t4", "t5", "f3", "f4"] {
+            assert!(grid.iter().any(|e| e.group == g), "missing group {g}");
+        }
+        for d in data::DATASET_NAMES {
+            assert!(grid.iter().any(|e| e.dataset == d));
+        }
+    }
+
+    #[test]
+    fn paper_pairs_respected() {
+        let grid = full_grid();
+        assert!(grid
+            .iter()
+            .filter(|e| e.dataset == "synth-products")
+            .all(|e| matches!(e.model, ModelKind::Sage | ModelKind::Gat)));
+    }
+
+    #[test]
+    fn smoke_grid_is_small_and_single_model() {
+        let g = smoke_grid();
+        assert!(g.len() >= 8 && g.len() <= 15, "smoke grid {}", g.len());
+        assert!(g.iter().all(|e| e.model == ModelKind::Gcn));
+    }
+
+    #[test]
+    fn aot_config_shape_sanity() {
+        let grid = smoke_grid();
+        let full = grid.iter().find(|e| e.name.ends_with("_full")).unwrap();
+        let cfg = aot_config(full);
+        assert_eq!(cfg.get("model").unwrap().as_str(), Some("gcn"));
+        assert_eq!(cfg.get("n").unwrap().as_usize(), Some(6000));
+        let emb = cfg.get("embedding").unwrap();
+        assert_eq!(emb.get("node_rows").unwrap().as_usize(), Some(6000));
+        assert_eq!(emb.get("learned_y").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn materialize_is_deterministic_for_shapes() {
+        let e = &smoke_grid()[1];
+        let (_, _, p1) = materialize(e, 0);
+        let (_, _, p2) = materialize(e, 7);
+        // different seeds may change hash indices but never table shapes
+        let s1: Vec<_> = p1.param_shapes().iter().map(|t| (t.rows, t.cols)).collect();
+        let s2: Vec<_> = p2.param_shapes().iter().map(|t| (t.rows, t.cols)).collect();
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn dhe_excluded_on_products() {
+        let grid = full_grid();
+        assert!(!grid
+            .iter()
+            .any(|e| e.dataset == "synth-products" && matches!(e.method, EmbeddingMethod::Dhe { .. })));
+        assert!(grid
+            .iter()
+            .any(|e| e.dataset == "synth-arxiv" && matches!(e.method, EmbeddingMethod::Dhe { .. })));
+    }
+}

@@ -1,0 +1,14 @@
+//! Training coordinator: owns the full training lifecycle on the Rust
+//! side — parameter/optimizer state, static tensor construction, the
+//! epoch loop over the AOT train step, periodic evaluation, early
+//! stopping and result aggregation.
+//!
+//! Python never runs here; the compiled HLO is the only compute.
+
+mod params;
+mod statics;
+mod trainer;
+
+pub use params::{init_full_params, gnn_param_shapes};
+pub use statics::build_statics;
+pub use trainer::{run_experiment, TrainOptions, TrainOutcome};

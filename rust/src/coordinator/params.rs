@@ -1,0 +1,106 @@
+//! Parameter initialization: embedding tables (via `embedding::init_params`)
+//! plus the GNN stack, in the exact canonical order of the artifact ABI
+//! (`python/compile/train_step.py::param_specs`).
+
+use crate::config::{ModelKind, HIDDEN, NUM_LAYERS};
+use crate::embedding::{init_params, EmbeddingPlan, ParamStore, TableShape};
+use crate::util::rng::Rng;
+
+/// GNN parameter shapes in ABI order (mirrors `model.py::gnn_param_specs`).
+pub fn gnn_param_shapes(model: ModelKind, d: usize, classes: usize) -> Vec<TableShape> {
+    let mut dims = vec![d];
+    dims.extend(std::iter::repeat(HIDDEN).take(NUM_LAYERS - 1));
+    dims.push(classes);
+    let mut out = Vec::new();
+    for l in 0..NUM_LAYERS {
+        let (din, dout) = (dims[l], dims[l + 1]);
+        let t = |name: String, rows: usize, cols: usize| TableShape { name, rows, cols };
+        match model {
+            ModelKind::Gcn => {
+                out.push(t(format!("gcn_w{l}"), din, dout));
+                out.push(t(format!("gcn_b{l}"), 1, dout));
+            }
+            ModelKind::Sage => {
+                out.push(t(format!("sage_self_w{l}"), din, dout));
+                out.push(t(format!("sage_neigh_w{l}"), din, dout));
+                out.push(t(format!("sage_b{l}"), 1, dout));
+            }
+            ModelKind::Gat => {
+                out.push(t(format!("gat_w{l}"), din, dout));
+                out.push(t(format!("gat_al{l}"), 1, dout));
+                out.push(t(format!("gat_ar{l}"), 1, dout));
+                out.push(t(format!("gat_b{l}"), 1, dout));
+            }
+        }
+    }
+    out
+}
+
+/// Initialize embedding + GNN parameters in ABI order.
+///
+/// Policy: embedding tables per `embedding::init_params`; GNN weights
+/// uniform ±1/sqrt(fan_in); biases zero; GAT attention vectors ±0.1.
+pub fn init_full_params(
+    plan: &EmbeddingPlan,
+    model: ModelKind,
+    classes: usize,
+    seed: u64,
+) -> ParamStore {
+    let mut store = init_params(plan, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0x6A11);
+    for t in gnn_param_shapes(model, plan.d, classes) {
+        let data: Vec<f32> = if t.name.contains("_b") && !t.name.contains("_w") {
+            vec![0.0; t.size()]
+        } else if t.name.contains("gat_al") || t.name.contains("gat_ar") {
+            (0..t.size()).map(|_| rng.gen_f32_range(-0.1, 0.1)).collect()
+        } else {
+            let a = 1.0 / (t.rows as f32).sqrt();
+            (0..t.size()).map(|_| rng.gen_f32_range(-a, a)).collect()
+        };
+        store.insert(&t.name, vec![t.rows, t.cols], data);
+    }
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::EmbeddingMethod;
+
+    #[test]
+    fn gcn_shapes_follow_dims() {
+        let shapes = gnn_param_shapes(ModelKind::Gcn, 64, 40);
+        assert_eq!(shapes.len(), 2 * NUM_LAYERS);
+        assert_eq!((shapes[0].rows, shapes[0].cols), (64, HIDDEN));
+        let last_w = &shapes[2 * (NUM_LAYERS - 1)];
+        assert_eq!((last_w.rows, last_w.cols), (HIDDEN, 40));
+    }
+
+    #[test]
+    fn gat_has_attention_vectors() {
+        let shapes = gnn_param_shapes(ModelKind::Gat, 32, 5);
+        let names: Vec<&str> = shapes.iter().map(|t| t.name.as_str()).collect();
+        assert!(names.contains(&"gat_al0"));
+        assert!(names.contains(&"gat_ar1"));
+    }
+
+    #[test]
+    fn full_params_order_embedding_first() {
+        let plan = EmbeddingPlan::build(100, 16, &EmbeddingMethod::Full, None, 0);
+        let store = init_full_params(&plan, ModelKind::Gcn, 7, 1);
+        let names = store.names();
+        assert_eq!(names[0], "node_x");
+        assert_eq!(names[1], "gcn_w0");
+        assert_eq!(names[2], "gcn_b0");
+        // biases are zero
+        assert!(store.get("gcn_b0").iter().all(|&x| x == 0.0));
+        // weights are not all zero
+        assert!(store.get("gcn_w0").iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn sage_param_count() {
+        let shapes = gnn_param_shapes(ModelKind::Sage, 16, 3);
+        assert_eq!(shapes.len(), 3 * NUM_LAYERS);
+    }
+}

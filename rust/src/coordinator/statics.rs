@@ -1,0 +1,168 @@
+//! Static tensor construction: the graph/index arrays each model's
+//! artifact consumes (named slots of the ABI).
+//!
+//! * all models + embedding: `z` (L×n), `node_idx` (h×n), `dhe_enc`
+//! * GCN: `adj_idx`/`adj_w` — adjacency rows padded to K = max_deg + 1
+//!   with GCN renormalization coefficients and the self loop in the last
+//!   occupied slot (weight-0 padding rows point at the node itself).
+//! * SAGE: `src`/`dst` COO + `inv_deg`.
+//! * GAT: `src`/`dst` COO (self edge handled analytically in the HLO).
+
+use crate::config::ModelKind;
+use crate::data::Dataset;
+use crate::embedding::EmbeddingPlan;
+use crate::runtime::HostTensor;
+
+/// Build all named static tensors for (dataset, model, plan).
+pub fn build_statics(ds: &Dataset, model: ModelKind, plan: &EmbeddingPlan) -> Vec<(String, HostTensor)> {
+    let mut out = Vec::new();
+    let n = ds.graph.num_nodes();
+    // embedding statics (ABI order: z, node_idx, dhe_enc)
+    if let Some(pos) = &plan.position {
+        let z = plan.z_indices_i32().unwrap();
+        out.push(("z".to_string(), HostTensor::I32(z, vec![pos.z.len(), n])));
+    }
+    if let Some(node) = &plan.node {
+        let idx = plan.node_indices_i32().unwrap();
+        out.push(("node_idx".to_string(), HostTensor::I32(idx, vec![node.indices.len(), n])));
+    }
+    if let Some(dhe) = &plan.dhe {
+        out.push((
+            "dhe_enc".to_string(),
+            HostTensor::F32(dhe.encoding.clone(), vec![n, dhe.encoding_dim]),
+        ));
+    }
+    // graph statics
+    match model {
+        ModelKind::Gcn => {
+            let (idx, w, k) = padded_gcn_adjacency(ds);
+            out.push(("adj_idx".to_string(), HostTensor::I32(idx, vec![n, k])));
+            out.push(("adj_w".to_string(), HostTensor::F32(w, vec![n, k])));
+        }
+        ModelKind::Sage => {
+            let (src, dst) = ds.graph.to_coo();
+            let e = src.len();
+            out.push((
+                "src".to_string(),
+                HostTensor::I32(src.iter().map(|&x| x as i32).collect(), vec![e]),
+            ));
+            out.push((
+                "dst".to_string(),
+                HostTensor::I32(dst.iter().map(|&x| x as i32).collect(), vec![e]),
+            ));
+            let inv_deg: Vec<f32> = (0..n as u32)
+                .map(|u| 1.0 / ds.graph.degree(u).max(1) as f32)
+                .collect();
+            out.push(("inv_deg".to_string(), HostTensor::F32(inv_deg, vec![n, 1])));
+        }
+        ModelKind::Gat => {
+            let (src, dst) = ds.graph.to_coo();
+            let e = src.len();
+            out.push((
+                "src".to_string(),
+                HostTensor::I32(src.iter().map(|&x| x as i32).collect(), vec![e]),
+            ));
+            out.push((
+                "dst".to_string(),
+                HostTensor::I32(dst.iter().map(|&x| x as i32).collect(), vec![e]),
+            ));
+        }
+    }
+    out
+}
+
+/// Padded adjacency with GCN renormalization: row u holds its neighbors
+/// with `1/sqrt((deg_u+1)(deg_v+1))`, then the self loop `1/(deg_u+1)`,
+/// then weight-0 self-pointing padding up to `K = max_deg + 1`.
+pub fn padded_gcn_adjacency(ds: &Dataset) -> (Vec<i32>, Vec<f32>, usize) {
+    let g = &ds.graph;
+    let n = g.num_nodes();
+    let max_deg = (0..n as u32).map(|u| g.degree(u)).max().unwrap_or(0);
+    let k = max_deg + 1;
+    let mut idx = vec![0i32; n * k];
+    let mut w = vec![0f32; n * k];
+    for u in 0..n as u32 {
+        let du = (g.degree(u) + 1) as f32;
+        let row = u as usize * k;
+        let mut slot = 0usize;
+        for &v in g.neighbors(u) {
+            let dv = (g.degree(v) + 1) as f32;
+            idx[row + slot] = v as i32;
+            w[row + slot] = 1.0 / (du * dv).sqrt();
+            slot += 1;
+        }
+        // self loop
+        idx[row + slot] = u as i32;
+        w[row + slot] = 1.0 / du;
+        slot += 1;
+        // padding: self-pointing, zero weight
+        for s in slot..k {
+            idx[row + s] = u as i32;
+        }
+    }
+    (idx, w, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{spec, Dataset};
+    use crate::embedding::EmbeddingMethod;
+
+    fn small_ds() -> Dataset {
+        let mut s = spec("synth-arxiv").unwrap();
+        s.n = 500;
+        s.communities = 10;
+        s.supers = 2;
+        Dataset::generate(&s)
+    }
+
+    #[test]
+    fn gcn_adjacency_rows_sum_reasonably() {
+        let ds = small_ds();
+        let (idx, w, k) = padded_gcn_adjacency(&ds);
+        let n = ds.graph.num_nodes();
+        assert_eq!(idx.len(), n * k);
+        for u in 0..n {
+            let deg = ds.graph.degree(u as u32);
+            // occupied slots: deg + 1 (self); rest zero weight
+            let nonzero = w[u * k..(u + 1) * k].iter().filter(|&&x| x > 0.0).count();
+            assert_eq!(nonzero, deg + 1, "node {u}");
+            // all indices valid
+            assert!(idx[u * k..(u + 1) * k].iter().all(|&v| (v as usize) < n));
+        }
+    }
+
+    #[test]
+    fn statics_names_match_model() {
+        let ds = small_ds();
+        let plan = EmbeddingPlan::build(500, 64, &EmbeddingMethod::Full, None, 0);
+        let names = |m: ModelKind| -> Vec<String> {
+            build_statics(&ds, m, &plan).into_iter().map(|(n, _)| n).collect()
+        };
+        assert_eq!(names(ModelKind::Gcn), vec!["node_idx", "adj_idx", "adj_w"]);
+        assert_eq!(names(ModelKind::Sage), vec!["node_idx", "src", "dst", "inv_deg"]);
+        assert_eq!(names(ModelKind::Gat), vec!["node_idx", "src", "dst"]);
+    }
+
+    #[test]
+    fn coo_shapes_match_graph() {
+        let ds = small_ds();
+        let plan = EmbeddingPlan::build(500, 64, &EmbeddingMethod::HashTrick { buckets: 32 }, None, 0);
+        let statics = build_statics(&ds, ModelKind::Sage, &plan);
+        let src = statics.iter().find(|(n, _)| n == "src").unwrap();
+        assert_eq!(src.1.shape(), &[ds.graph.num_adjacency_entries()]);
+    }
+
+    #[test]
+    fn inv_deg_is_positive_and_bounded() {
+        let ds = small_ds();
+        let plan = EmbeddingPlan::build(500, 64, &EmbeddingMethod::Full, None, 0);
+        let statics = build_statics(&ds, ModelKind::Sage, &plan);
+        if let HostTensor::F32(v, _) = &statics.iter().find(|(n, _)| n == "inv_deg").unwrap().1 {
+            assert!(v.iter().all(|&x| x > 0.0 && x <= 1.0));
+        } else {
+            panic!("inv_deg not f32");
+        }
+    }
+}

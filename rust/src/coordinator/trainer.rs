@@ -1,0 +1,244 @@
+//! The training loop: full-batch epochs over the AOT train step with a
+//! device-resident packed state vector, periodic evaluation and
+//! best-validation tracking.
+//!
+//! Packed-state ABI (see `python/compile/train_step.py`): the whole
+//! training state — parameters, Adam moments, step counter, last loss —
+//! is ONE flat f32 vector. The train HLO maps `state -> state'`, so the
+//! hot loop feeds each output buffer straight back as the next input:
+//! zero host traffic except the loss probe.
+
+use super::params::init_full_params;
+use super::statics::build_statics;
+use crate::config::{materialize, Experiment};
+use crate::data::{Splits, TaskKind};
+use crate::embedding::MemoryReport;
+use crate::metrics::{accuracy, mean_roc_auc};
+use crate::runtime::{HostTensor, Manifest, RuntimeClient};
+use anyhow::{bail, Context, Result};
+
+/// Knobs for a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Override the experiment's epoch count (None = use it).
+    pub epochs: Option<usize>,
+    /// Evaluate every this many epochs.
+    pub eval_every: usize,
+    /// Stop after this many evals without val improvement (0 = never).
+    pub patience: usize,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { epochs: None, eval_every: 5, patience: 6, verbose: false }
+    }
+}
+
+/// Result of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub experiment: String,
+    pub seed: u64,
+    /// Per-epoch training losses.
+    pub losses: Vec<f32>,
+    /// (epoch, val metric) curve.
+    pub val_curve: Vec<(usize, f64)>,
+    /// Best validation metric and the test metric at that point.
+    pub val_metric: f64,
+    pub test_metric: f64,
+    pub epochs_run: usize,
+    /// Embedding-layer memory report (paper's savings columns).
+    pub memory: MemoryReport,
+    pub wall: std::time::Duration,
+}
+
+impl TrainOutcome {
+    /// Paper-style summary line.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<34} seed={} test={:.3} val={:.3} params={} ({:.1}% savings) epochs={} [{:?}]",
+            self.experiment,
+            self.seed,
+            self.test_metric,
+            self.val_metric,
+            self.memory.params,
+            self.memory.savings_pct,
+            self.epochs_run,
+            self.wall
+        )
+    }
+}
+
+/// Train one experiment end to end on the PJRT runtime.
+pub fn run_experiment(
+    client: &RuntimeClient,
+    manifest: &Manifest,
+    e: &Experiment,
+    seed: u64,
+    opts: &TrainOptions,
+) -> Result<TrainOutcome> {
+    let t0 = std::time::Instant::now();
+    let (ds, _hier, plan) = materialize(e, seed);
+    let n = ds.graph.num_nodes();
+    let classes = ds.spec.classes;
+
+    let train_spec = manifest.get(&format!("{}.train", e.name))?;
+    let eval_spec = manifest.get(&format!("{}.eval", e.name))?;
+    let train_exe = client.load(manifest, train_spec)?;
+    let eval_exe = client.load(manifest, eval_spec)?;
+
+    // ---- packed initial state ----
+    let store = init_full_params(&plan, e.model, classes, seed);
+    let num_p = store.names().len();
+    if num_p != train_spec.num_params {
+        bail!(
+            "{}: built {num_p} params but artifact expects {} — grid/artifact drift, re-run `make artifacts`",
+            e.name,
+            train_spec.num_params
+        );
+    }
+    let psize: usize = store.names().iter().map(|n| store.get(n).len()).sum();
+    let total = 3 * psize + 2;
+    let state_spec = &train_spec.inputs[0];
+    if state_spec.name != "state" || state_spec.shape != [total] {
+        bail!(
+            "{}: packed-state mismatch: built [{total}], artifact wants {}{:?}",
+            e.name,
+            state_spec.name,
+            state_spec.shape
+        );
+    }
+    let mut state_host = vec![0f32; total];
+    let mut off = 0usize;
+    for name in store.names() {
+        let data = store.get(name);
+        state_host[off..off + data.len()].copy_from_slice(data);
+        off += data.len();
+    }
+    state_host[3 * psize] = 1.0; // 1-based Adam step counter
+    let mut state = client.upload(&HostTensor::F32(state_host, vec![total]))?;
+
+    // ---- statics, labels, mask ----
+    let statics = build_statics(&ds, e.model, &plan);
+    let mut static_bufs = Vec::with_capacity(statics.len());
+    for (name, tensor) in &statics {
+        let idx = train_spec.input_index(name).with_context(|| format!("static {name}"))?;
+        tensor.check(&train_spec.inputs[idx])?;
+        static_bufs.push(client.upload(tensor)?);
+    }
+    let labels_tensor = match ds.spec.task {
+        TaskKind::MultiClass => HostTensor::I32(ds.labels_i32(), vec![n]),
+        TaskKind::MultiLabel => {
+            HostTensor::F32(ds.labels.iter().map(|&x| x as f32).collect(), vec![n, classes])
+        }
+    };
+    let labels_buf = client.upload(&labels_tensor)?;
+    let mask_buf =
+        client.upload(&HostTensor::F32(Splits::mask_f32(&ds.splits.train, n), vec![n]))?;
+
+    // ---- epoch loop ----
+    let epochs = opts.epochs.unwrap_or(e.epochs);
+    let mut losses = Vec::with_capacity(epochs);
+    let mut val_curve = Vec::new();
+    let mut best_val = f64::NEG_INFINITY;
+    let mut best_test = 0.0f64;
+    let mut stale = 0usize;
+    let mut epochs_run = 0usize;
+
+    for epoch in 0..epochs {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(static_bufs.len() + 3);
+        args.push(&state);
+        args.extend(static_bufs.iter());
+        args.push(&labels_buf);
+        args.push(&mask_buf);
+        let mut outs = train_exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|err| anyhow::anyhow!("train step: {err}"))?
+            .swap_remove(0);
+        if outs.len() != 1 {
+            bail!("{}: expected 1 state output, got {}", e.name, outs.len());
+        }
+        state = outs.swap_remove(0);
+        epochs_run = epoch + 1;
+
+        let is_eval = (epoch + 1) % opts.eval_every == 0 || epoch + 1 == epochs;
+        // Loss probe. Downloading the packed state is a memcpy on the CPU
+        // client; for big states (FullEmb on products: ~9 MB) probing
+        // every epoch costs ~8% of the step (§Perf), so large states are
+        // probed only at eval cadence.
+        let probe_every_epoch = total < 400_000;
+        if probe_every_epoch || is_eval {
+            let snapshot = client.download_f32(&state)?;
+            let loss = snapshot[3 * psize + 1];
+            losses.push(loss);
+            if !loss.is_finite() {
+                bail!("{}: non-finite loss at epoch {epoch}", e.name);
+            }
+        }
+
+        if is_eval {
+            let loss = losses.last().copied().unwrap_or(f32::NAN);
+            let logits = run_eval(client, &eval_exe, &state, &static_bufs)?;
+
+            let (val, test) = score(&ds, &logits, classes);
+            val_curve.push((epoch + 1, val));
+            if opts.verbose {
+                println!("  epoch {:>4}  loss {loss:.4}  val {val:.4}  test {test:.4}", epoch + 1);
+            }
+            if val > best_val {
+                best_val = val;
+                best_test = test;
+                stale = 0;
+            } else {
+                stale += 1;
+                if opts.patience > 0 && stale >= opts.patience {
+                    break;
+                }
+            }
+        }
+    }
+
+    Ok(TrainOutcome {
+        experiment: e.name.clone(),
+        seed,
+        losses,
+        val_curve,
+        val_metric: best_val,
+        test_metric: best_test,
+        epochs_run,
+        memory: MemoryReport::from_plan(&plan),
+        wall: t0.elapsed(),
+    })
+}
+
+fn run_eval(
+    client: &RuntimeClient,
+    eval_exe: &xla::PjRtLoadedExecutable,
+    state: &xla::PjRtBuffer,
+    static_bufs: &[xla::PjRtBuffer],
+) -> Result<Vec<f32>> {
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + static_bufs.len());
+    args.push(state);
+    args.extend(static_bufs.iter());
+    let outs = eval_exe
+        .execute_b::<&xla::PjRtBuffer>(&args)
+        .map_err(|err| anyhow::anyhow!("eval step: {err}"))?
+        .swap_remove(0);
+    client.download_f32(&outs[0])
+}
+
+/// (val, test) metric from logits.
+fn score(ds: &crate::data::Dataset, logits: &[f32], classes: usize) -> (f64, f64) {
+    match ds.spec.task {
+        TaskKind::MultiClass => (
+            accuracy(logits, classes, &ds.labels, &ds.splits.val),
+            accuracy(logits, classes, &ds.labels, &ds.splits.test),
+        ),
+        TaskKind::MultiLabel => (
+            mean_roc_auc(logits, classes, &ds.labels, &ds.splits.val),
+            mean_roc_auc(logits, classes, &ds.labels, &ds.splits.test),
+        ),
+    }
+}

@@ -1,0 +1,83 @@
+//! Train/val/test splits (the paper uses OGB's provided splits; here
+//! deterministic random splits with fixed proportions).
+
+use crate::util::rng::Rng;
+
+/// Node index sets for each fold.
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+impl Splits {
+    /// Boolean mask (1.0/0.0 f32) over nodes for a fold — the HLO masks
+    /// the loss with this.
+    pub fn mask_f32(fold: &[u32], n: usize) -> Vec<f32> {
+        let mut m = vec![0f32; n];
+        for &i in fold {
+            m[i as usize] = 1.0;
+        }
+        m
+    }
+}
+
+/// Split `n` nodes into train/val/test with the given fractions
+/// (test gets the remainder).
+pub fn train_val_test_split(n: usize, train_frac: f64, val_frac: f64, seed: u64) -> Splits {
+    assert!(train_frac > 0.0 && val_frac >= 0.0 && train_frac + val_frac < 1.0);
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut ids);
+    let n_train = (n as f64 * train_frac) as usize;
+    let n_val = (n as f64 * val_frac) as usize;
+    Splits {
+        train: ids[..n_train].to_vec(),
+        val: ids[n_train..n_train + n_val].to_vec(),
+        test: ids[n_train + n_val..].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn partition_of_all_nodes() {
+        let s = train_val_test_split(1000, 0.6, 0.2, 1);
+        assert_eq!(s.train.len(), 600);
+        assert_eq!(s.val.len(), 200);
+        assert_eq!(s.test.len(), 200);
+        let all: HashSet<u32> =
+            s.train.iter().chain(&s.val).chain(&s.test).copied().collect();
+        assert_eq!(all.len(), 1000);
+    }
+
+    #[test]
+    fn masks_are_disjoint_and_cover() {
+        let s = train_val_test_split(100, 0.5, 0.25, 2);
+        let mt = Splits::mask_f32(&s.train, 100);
+        let mv = Splits::mask_f32(&s.val, 100);
+        let me = Splits::mask_f32(&s.test, 100);
+        for i in 0..100 {
+            assert_eq!(mt[i] + mv[i] + me[i], 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = train_val_test_split(500, 0.6, 0.2, 7);
+        let b = train_val_test_split(500, 0.6, 0.2, 7);
+        let c = train_val_test_split(500, 0.6, 0.2, 8);
+        assert_eq!(a.train, b.train);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_fractions_rejected() {
+        train_val_test_split(10, 0.8, 0.3, 1);
+    }
+}

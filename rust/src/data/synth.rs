@@ -1,0 +1,226 @@
+//! Synthetic dataset construction.
+
+use super::splits::{train_val_test_split, Splits};
+use crate::graph::{planted_partition, CsrGraph, GraphStats, PlantedPartitionConfig};
+use crate::util::rng::Rng;
+
+/// Prediction task kind (paper: multi-class for arxiv/products, multi-
+/// label binary for proteins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Single label in `[0, classes)`; metric = accuracy.
+    MultiClass,
+    /// `classes` independent binary labels; metric = mean ROC-AUC.
+    MultiLabel,
+}
+
+/// Specification of a synthetic dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub n: usize,
+    /// Classes (MultiClass) or number of binary tasks (MultiLabel).
+    pub classes: usize,
+    /// Planted fine communities (homophily source).
+    pub communities: usize,
+    /// Super-communities (coarse homophily scale; see generate.rs).
+    pub supers: usize,
+    pub intra_degree: f64,
+    /// Same-super cross-community expected degree.
+    pub super_degree: f64,
+    pub inter_degree: f64,
+    /// Probability a node's canonical label comes from its SUPER-community
+    /// (coarse signal a few position partitions can capture) rather than
+    /// its fine community.
+    pub super_label_weight: f64,
+    /// Training fraction (matches the original OGB split regimes:
+    /// arxiv 0.54, products 0.08, proteins 0.65).
+    pub train_frac: f64,
+    /// Probability a node's label deviates from its community's canonical
+    /// label — controls how much signal needs *node-specific* modeling,
+    /// which is exactly the PosHashEmb x-component's job.
+    pub label_flip: f64,
+    pub task: TaskKind,
+    /// Embedding dimension the paper pairs with this dataset.
+    pub d: usize,
+    pub seed: u64,
+}
+
+/// A realized dataset: graph + labels + splits.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub graph: CsrGraph,
+    /// Planted community of each node (ground truth, not visible to models).
+    pub communities: Vec<u32>,
+    /// MultiClass: `labels[i] ∈ [0, classes)`.
+    /// MultiLabel: row-major `n × classes` in {0, 1}.
+    pub labels: Vec<u32>,
+    pub splits: Splits,
+}
+
+impl Dataset {
+    /// Generate the dataset deterministically from its spec.
+    pub fn generate(spec: &DatasetSpec) -> Self {
+        let (graph, communities) = planted_partition(&PlantedPartitionConfig {
+            n: spec.n,
+            communities: spec.communities,
+            supers: spec.supers,
+            intra_degree: spec.intra_degree,
+            super_degree: spec.super_degree,
+            inter_degree: spec.inter_degree,
+            seed: spec.seed,
+        });
+        let mut rng = Rng::seed_from_u64(spec.seed ^ 0x1ABE1);
+        let comms_per_super = spec.communities.div_ceil(spec.supers);
+        let labels = match spec.task {
+            TaskKind::MultiClass => {
+                // two-scale canonical label: coarse (super-community) with
+                // prob super_label_weight, else fine (community); uniform
+                // flip with prob label_flip. Mirrors real graphs where the
+                // label field is smooth at coarse scales with fine detail.
+                (0..spec.n)
+                    .map(|i| {
+                        let fine = communities[i] % spec.classes as u32;
+                        let coarse =
+                            (communities[i] as usize / comms_per_super) as u32 % spec.classes as u32;
+                        let canon = if rng.gen_bool(spec.super_label_weight) { coarse } else { fine };
+                        if rng.gen_bool(spec.label_flip) {
+                            rng.gen_range(spec.classes) as u32
+                        } else {
+                            canon
+                        }
+                    })
+                    .collect()
+            }
+            TaskKind::MultiLabel => {
+                // each task t marks a random subset of SUPER-communities
+                // positive (coarse signal) and flips a subset of fine
+                // communities (fine detail); node flips with label_flip.
+                let mut positive: Vec<Vec<bool>> = Vec::with_capacity(spec.classes);
+                for _ in 0..spec.classes {
+                    let super_pos: Vec<bool> =
+                        (0..spec.supers).map(|_| rng.gen_bool(0.5)).collect();
+                    positive.push(
+                        (0..spec.communities)
+                            .map(|c| {
+                                let base = super_pos[(c / comms_per_super).min(spec.supers - 1)];
+                                if rng.gen_bool(1.0 - spec.super_label_weight) {
+                                    rng.gen_bool(0.5)
+                                } else {
+                                    base
+                                }
+                            })
+                            .collect(),
+                    );
+                }
+                let mut labels = vec![0u32; spec.n * spec.classes];
+                for i in 0..spec.n {
+                    for t in 0..spec.classes {
+                        let canon = positive[t][communities[i] as usize];
+                        let flipped = rng.gen_bool(spec.label_flip);
+                        labels[i * spec.classes + t] = u32::from(canon ^ flipped);
+                    }
+                }
+                labels
+            }
+        };
+        let val_frac = ((1.0 - spec.train_frac) / 2.0).min(0.2);
+        let splits = train_val_test_split(spec.n, spec.train_frac, val_frac, spec.seed ^ 0x5114);
+        Dataset { spec: spec.clone(), graph, communities, labels, splits }
+    }
+
+    /// Graph statistics with label-homophily (Table II analog row).
+    pub fn stats(&self) -> GraphStats {
+        match self.spec.task {
+            TaskKind::MultiClass => GraphStats::compute(&self.graph, Some(&self.labels)),
+            TaskKind::MultiLabel => GraphStats::compute(&self.graph, Some(&self.communities)),
+        }
+    }
+
+    /// Labels as i32 (HLO input layout).
+    pub fn labels_i32(&self) -> Vec<i32> {
+        self.labels.iter().map(|&x| x as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec;
+
+    #[test]
+    fn multiclass_labels_in_range() {
+        let mut s = spec("synth-arxiv").unwrap();
+        s.n = 2000; // shrink for test speed
+        s.communities = 40;
+        let ds = Dataset::generate(&s);
+        assert_eq!(ds.labels.len(), 2000);
+        assert!(ds.labels.iter().all(|&l| l < 40));
+    }
+
+    #[test]
+    fn multilabel_shape_and_binary() {
+        let mut s = spec("synth-proteins").unwrap();
+        s.n = 1200;
+        s.communities = 12;
+        let ds = Dataset::generate(&s);
+        assert_eq!(ds.labels.len(), 1200 * 16);
+        assert!(ds.labels.iter().all(|&l| l <= 1));
+        // both classes present in most tasks
+        let mut pos = vec![0usize; 16];
+        for i in 0..1200 {
+            for t in 0..16 {
+                pos[t] += ds.labels[i * 16 + t] as usize;
+            }
+        }
+        let nontrivial = pos.iter().filter(|&&p| p > 120 && p < 1080).count();
+        assert!(nontrivial >= 12, "degenerate tasks: {pos:?}");
+    }
+
+    #[test]
+    fn labels_correlate_with_position() {
+        let mut s = spec("synth-arxiv").unwrap();
+        s.n = 4000;
+        let ds = Dataset::generate(&s);
+        let cps = s.communities.div_ceil(s.supers);
+        let agree = (0..4000)
+            .filter(|&i| {
+                let fine = ds.communities[i] % s.classes as u32;
+                let coarse = (ds.communities[i] as usize / cps) as u32 % s.classes as u32;
+                ds.labels[i] == fine || ds.labels[i] == coarse
+            })
+            .count();
+        // canonical (fine or coarse) survives unless flipped: ≈ 1 - flip
+        let frac = agree as f64 / 4000.0;
+        assert!(frac > 0.6, "label-position agreement {frac}");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut s = spec("synth-arxiv").unwrap();
+        s.n = 1000;
+        let a = Dataset::generate(&s);
+        let b = Dataset::generate(&s);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.splits.train, b.splits.train);
+    }
+
+    #[test]
+    fn graph_has_homophily() {
+        let mut s = spec("synth-arxiv").unwrap();
+        s.n = 3000;
+        let ds = Dataset::generate(&s);
+        // label homophily well above the 1/classes chance rate
+        let st = ds.stats();
+        let chance = 1.0 / s.classes as f64;
+        assert!(
+            st.edge_homophily.unwrap() > 4.0 * chance,
+            "homophily {:?} vs chance {chance}",
+            st.edge_homophily
+        );
+        // community homophily is the strong signal
+        let cst = crate::graph::GraphStats::compute(&ds.graph, Some(&ds.communities));
+        assert!(cst.edge_homophily.unwrap() > 0.3);
+    }
+}

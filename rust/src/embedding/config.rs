@@ -1,0 +1,142 @@
+//! Embedding method configuration.
+
+
+/// All embedding-layer methods evaluated in the paper.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EmbeddingMethod {
+    /// One-hot full embedding table `W ∈ R^{n×d}` (paper's FullEmb).
+    Full,
+    /// Hashing trick [6]: one hash into `buckets` shared rows.
+    HashTrick { buckets: usize },
+    /// Bloom embeddings [9]: `h` hashes, unweighted sum.
+    Bloom { buckets: usize, h: usize },
+    /// Hash embeddings [7]: `h` hashes + learned per-node importance.
+    HashEmb { buckets: usize, h: usize },
+    /// Deep hash embeddings [8]: dense hash encoding + MLP.
+    Dhe { encoding_dim: usize, hidden: usize, layers: usize },
+    /// Position-specific only (PosEmb L-level, Eq. 9/11).
+    PosEmb { levels: usize },
+    /// PosEmb 1-level with random membership (Table III baseline).
+    RandomPart { parts: usize },
+    /// PosEmb + full node-specific table (Table III/V "PosFullEmb").
+    PosFullEmb { levels: usize },
+    /// PosEmb + globally shared hash-embedding pool (Eq. 13).
+    PosHashEmbInter { levels: usize, buckets: usize, h: usize },
+    /// PosEmb + per-partition pools of `c` rows each (Eq. 12).
+    /// `compression = c`; total pool is `m_0 · c` rows.
+    PosHashEmbIntra { levels: usize, compression: usize, h: usize },
+}
+
+/// Coarse family grouping used for reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodFamily {
+    Full,
+    Hashing,
+    Position,
+    PositionHash,
+    Dhe,
+}
+
+impl EmbeddingMethod {
+    /// Short display name matching the paper's tables.
+    pub fn name(&self) -> String {
+        match self {
+            EmbeddingMethod::Full => "FullEmb".into(),
+            EmbeddingMethod::HashTrick { .. } => "HashTrick".into(),
+            EmbeddingMethod::Bloom { .. } => "Bloom".into(),
+            EmbeddingMethod::HashEmb { .. } => "HashEmb".into(),
+            EmbeddingMethod::Dhe { .. } => "DHE".into(),
+            EmbeddingMethod::PosEmb { levels } => format!("PosEmb {levels}-level"),
+            EmbeddingMethod::RandomPart { .. } => "RandomPart".into(),
+            EmbeddingMethod::PosFullEmb { levels } => format!("PosFullEmb {levels}-level"),
+            EmbeddingMethod::PosHashEmbInter { h, .. } => format!("PosHashEmb Inter (h={h})"),
+            EmbeddingMethod::PosHashEmbIntra { h, .. } => format!("PosHashEmb Intra (h={h})"),
+        }
+    }
+
+    /// Family for report grouping.
+    pub fn family(&self) -> MethodFamily {
+        match self {
+            EmbeddingMethod::Full => MethodFamily::Full,
+            EmbeddingMethod::HashTrick { .. }
+            | EmbeddingMethod::Bloom { .. }
+            | EmbeddingMethod::HashEmb { .. } => MethodFamily::Hashing,
+            EmbeddingMethod::Dhe { .. } => MethodFamily::Dhe,
+            EmbeddingMethod::PosEmb { .. } | EmbeddingMethod::RandomPart { .. } => {
+                MethodFamily::Position
+            }
+            EmbeddingMethod::PosFullEmb { .. }
+            | EmbeddingMethod::PosHashEmbInter { .. }
+            | EmbeddingMethod::PosHashEmbIntra { .. } => MethodFamily::PositionHash,
+        }
+    }
+
+    /// Does this method need a graph hierarchy?
+    pub fn needs_hierarchy(&self) -> bool {
+        matches!(
+            self,
+            EmbeddingMethod::PosEmb { .. }
+                | EmbeddingMethod::PosFullEmb { .. }
+                | EmbeddingMethod::PosHashEmbInter { .. }
+                | EmbeddingMethod::PosHashEmbIntra { .. }
+        )
+    }
+
+    /// Number of hierarchy levels used (0 for non-position methods).
+    pub fn levels(&self) -> usize {
+        match self {
+            EmbeddingMethod::PosEmb { levels }
+            | EmbeddingMethod::PosFullEmb { levels }
+            | EmbeddingMethod::PosHashEmbInter { levels, .. }
+            | EmbeddingMethod::PosHashEmbIntra { levels, .. } => *levels,
+            EmbeddingMethod::RandomPart { .. } => 1,
+            _ => 0,
+        }
+    }
+
+    /// Paper-default PosHashEmb (§IV-D): `k = ⌈n^(1/4)⌉`, `L = 3`,
+    /// `c = ⌈sqrt(n/k)⌉`, `b = c·k`, `h = 2`, Intra pools.
+    pub fn paper_default_intra(n: usize) -> (Self, usize) {
+        let k = (n as f64).powf(0.25).ceil() as usize;
+        let c = ((n as f64 / k as f64).sqrt()).ceil() as usize;
+        (EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h: 2 }, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_paper_tables() {
+        assert_eq!(EmbeddingMethod::Full.name(), "FullEmb");
+        assert_eq!(EmbeddingMethod::PosEmb { levels: 3 }.name(), "PosEmb 3-level");
+        assert_eq!(
+            EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 8, h: 2 }.name(),
+            "PosHashEmb Intra (h=2)"
+        );
+    }
+
+    #[test]
+    fn paper_defaults_for_arxiv_scale() {
+        // paper: ogbn-arxiv n=169,343, alpha=1/4 -> k ≈ 21, c = ⌈sqrt(n/k)⌉ ≈ 90
+        let (m, k) = EmbeddingMethod::paper_default_intra(169_343);
+        assert_eq!(k, 21);
+        match m {
+            EmbeddingMethod::PosHashEmbIntra { levels, compression, h } => {
+                assert_eq!(levels, 3);
+                assert_eq!(h, 2);
+                assert_eq!(compression, 90);
+            }
+            _ => panic!("wrong method"),
+        }
+    }
+
+    #[test]
+    fn hierarchy_requirements() {
+        assert!(!EmbeddingMethod::Full.needs_hierarchy());
+        assert!(!EmbeddingMethod::RandomPart { parts: 8 }.needs_hierarchy());
+        assert!(EmbeddingMethod::PosEmb { levels: 2 }.needs_hierarchy());
+        assert_eq!(EmbeddingMethod::RandomPart { parts: 8 }.levels(), 1);
+    }
+}

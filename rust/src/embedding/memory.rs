@@ -1,0 +1,175 @@
+//! Memory cost model and budget solver.
+//!
+//! Implements the parameter-count formulas of DESIGN.md §4 (from paper
+//! §II-B/III) and, for Figure 4, solves for method hyperparameters that
+//! hit a target fraction of the FullEmb size (the paper's 1/2, 1/6, 1/12
+//! and 1/34 budgets).
+
+use super::config::EmbeddingMethod;
+
+/// A priced method: parameter count and savings vs full.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    pub method_name: String,
+    pub params: usize,
+    pub full_params: usize,
+    pub fraction_of_full: f64,
+    pub savings_pct: f64,
+}
+
+impl MemoryReport {
+    /// Price an already-built plan.
+    pub fn from_plan(plan: &super::EmbeddingPlan) -> Self {
+        let params = plan.num_params();
+        let full = plan.full_size();
+        MemoryReport {
+            method_name: plan.method.name(),
+            params,
+            full_params: full,
+            fraction_of_full: params as f64 / full as f64,
+            savings_pct: plan.savings() * 100.0,
+        }
+    }
+
+    /// Paper-style row: "method  params  1/x of full  savings%".
+    pub fn row(&self) -> String {
+        format!(
+            "| {:<26} | {:>12} | 1/{:<6.1} | {:>6.1}% |",
+            self.method_name,
+            self.params,
+            1.0 / self.fraction_of_full.max(1e-12),
+            self.savings_pct
+        )
+    }
+}
+
+/// Parameter count of the position-specific component for a hierarchy
+/// with per-level partition counts `m` and top dimension `d`
+/// (`d_j = d / 2^j`, Eq. 11 + Table IV note).
+pub fn position_params(m: &[usize], d: usize) -> usize {
+    m.iter().enumerate().map(|(j, &mj)| mj * (d >> j).max(1)).sum()
+}
+
+/// Solve for the method configuration that hits `fraction` of the full
+/// `n·d` budget, mirroring the paper's Figure-4 protocol:
+///
+/// * table-based hashing baselines: choose `B` so `B·d (+ n·h) ≈ budget`;
+/// * PosHashEmb: keep the 3-level position component fixed and set the
+///   node-specific pool `b` to fill what remains; when the position
+///   component alone exceeds the budget, fall back to PosEmb 1-level with
+///   `k` chosen to fit (paper §IV-I: "when needed ... we use only the
+///   position-specific component with k selected accordingly").
+pub fn budget_for_fraction(
+    n: usize,
+    d: usize,
+    m: &[usize],
+    h: usize,
+    fraction: f64,
+) -> BudgetedMethods {
+    let budget = (n as f64 * d as f64 * fraction) as usize;
+    let hash_trick_b = (budget / d).max(1);
+    let hash_emb_b = budget.saturating_sub(n * h).max(d) / d;
+    let pos_cost = position_params(m, d);
+    let m0 = m.first().copied().unwrap_or(1);
+    let poshash = if pos_cost + n * h < budget {
+        // fill the remainder with the node-specific pool
+        let remaining = budget - pos_cost - n * h;
+        let b = (remaining / d).max(m0); // at least one row per pool
+        let c = (b / m0).max(1);
+        PosBudget::Intra { c, h }
+    } else {
+        // position-only: pick k so k·d ≈ budget (1-level)
+        let k = (budget / d).clamp(2, n);
+        PosBudget::PositionOnly { k }
+    };
+    BudgetedMethods {
+        budget_params: budget,
+        hash_trick: EmbeddingMethod::HashTrick { buckets: hash_trick_b },
+        bloom: EmbeddingMethod::Bloom { buckets: hash_trick_b, h },
+        hash_emb: EmbeddingMethod::HashEmb { buckets: hash_emb_b.max(1), h },
+        poshash,
+    }
+}
+
+/// The PosHashEmb arm of a budget solution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PosBudget {
+    /// 3-level position + intra pools of `c` rows.
+    Intra { c: usize, h: usize },
+    /// Budget too small for hierarchy+hash: PosEmb 1-level with `k` parts.
+    PositionOnly { k: usize },
+}
+
+/// Methods configured to a common memory budget (one Figure-4 x-point).
+#[derive(Debug, Clone)]
+pub struct BudgetedMethods {
+    pub budget_params: usize,
+    pub hash_trick: EmbeddingMethod,
+    pub bloom: EmbeddingMethod,
+    pub hash_emb: EmbeddingMethod,
+    pub poshash: PosBudget,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_params_formula() {
+        // m = [4, 16, 64], d = 32: 4*32 + 16*16 + 64*8 = 128+256+512
+        assert_eq!(position_params(&[4, 16, 64], 32), 896);
+    }
+
+    #[test]
+    fn budget_half_gives_roughly_half_params() {
+        let n = 10_000;
+        let d = 64;
+        let bm = budget_for_fraction(n, d, &[10, 100, 1000], 2, 0.5);
+        // hash trick: B*d ≈ n*d/2
+        if let EmbeddingMethod::HashTrick { buckets } = bm.hash_trick {
+            let frac = (buckets * d) as f64 / (n * d) as f64;
+            assert!((frac - 0.5).abs() < 0.01, "frac {frac}");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn tiny_budget_falls_back_to_position_only() {
+        let n = 10_000;
+        let d = 64;
+        // 1/34 of full = ~18.8k params; position component for m=[10,100,1000]
+        // costs 10*64+100*32+1000*16 = 19,840 > budget - n*h  → fallback
+        let bm = budget_for_fraction(n, d, &[10, 100, 1000], 2, 1.0 / 34.0);
+        match bm.poshash {
+            PosBudget::PositionOnly { k } => assert!(k >= 2 && k < n),
+            PosBudget::Intra { .. } => panic!("expected position-only fallback"),
+        }
+    }
+
+    #[test]
+    fn generous_budget_gives_intra() {
+        let bm = budget_for_fraction(10_000, 64, &[10, 100, 1000], 2, 0.5);
+        match bm.poshash {
+            PosBudget::Intra { c, h } => {
+                assert!(c >= 1);
+                assert_eq!(h, 2);
+            }
+            _ => panic!("expected intra"),
+        }
+    }
+
+    #[test]
+    fn hash_emb_accounts_for_importance_weights() {
+        let n = 10_000;
+        let d = 64;
+        let bm = budget_for_fraction(n, d, &[10], 2, 0.25);
+        if let EmbeddingMethod::HashEmb { buckets, h } = bm.hash_emb {
+            let total = buckets * d + n * h;
+            let budget = (n * d) / 4;
+            assert!(total <= budget + d, "total {total} > budget {budget}");
+        } else {
+            panic!()
+        }
+    }
+}

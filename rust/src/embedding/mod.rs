@@ -1,0 +1,45 @@
+//! Embedding-layer methods — the paper's contribution plus every baseline.
+//!
+//! Everything in the paper reduces to (Eq. 7):
+//!
+//! ```text
+//! v_i = p_i + x_i
+//! p_i = Σ_j pad_d(P_j[z_i(j)])                         (Eq. 11, optional)
+//! x_i = Σ_t y_i(t) · X[idx_t(i)]                        (Eq. 12/13, optional)
+//! ```
+//!
+//! with every baseline a degenerate case:
+//! * FullEmb     — no `p`; `X = W ∈ R^{n×d}`, `h=1`, `idx_0(i)=i`, `y≡1`.
+//! * HashTrick   — no `p`; `h=1`, `idx` = one universal hash, `y≡1` (Eq. 4).
+//! * Bloom       — no `p`; `h=2`, `y≡1` (double hashing, Eq. 5).
+//! * HashEmb     — no `p`; `h=2`, learned `Y ∈ R^{n×h}` (Eq. 6).
+//! * PosEmb      — no `x`; L-level hierarchy (Eq. 9/11).
+//! * RandomPart  — PosEmb 1-level with uniform-random membership.
+//! * PosFullEmb  — `p` + FullEmb-style `x`.
+//! * PosHashEmb Inter — `p` + global pool of `b` rows (Eq. 13).
+//! * PosHashEmb Intra — `p` + per-level-0-partition pools of `c = b/m_0`
+//!   rows, realized as one `m_0·c × d` table with offset indices
+//!   `idx_t(i) = z_i(0)·c + (H_t(i) mod c)` (Eq. 12).
+//! * DHE — the odd one out: dense hash encoding + MLP (no tables).
+//!
+//! Because of this unification a *single* AOT-lowered composition (and a
+//! single Pallas kernel) serves all table-based methods; only the static
+//! index arrays and table shapes differ. `plan` builds those arrays,
+//! `memory` prices them (paper §II/III cost model), and `reference` is the
+//! pure-Rust oracle the HLO output is tested against.
+//!
+//! **Dimension note.** Eq. 11 sums level embeddings of *different* widths
+//! (`d_j = d/2^j`). The paper does not state the alignment; we zero-extend
+//! each level vector to `d` (level j contributes to the first `d_j`
+//! coordinates), which preserves both the stated parameter counts and the
+//! sum form. Recorded in DESIGN.md §4.
+
+mod config;
+mod memory;
+mod plan;
+mod reference;
+
+pub use config::{EmbeddingMethod, MethodFamily};
+pub use memory::{budget_for_fraction, BudgetedMethods, MemoryReport, PosBudget};
+pub use plan::{DhePlan, EmbeddingPlan, NodePlan, PositionPlan, TableShape};
+pub use reference::{compose_embeddings, init_params, ParamStore};

@@ -1,0 +1,415 @@
+//! Embedding plans: the bridge between a method config and the tensors
+//! the AOT-compiled model consumes.
+//!
+//! A plan fixes, for one (graph, method) pair:
+//! * the **parameter shapes** in a canonical order (must match
+//!   `python/compile/embeddings.py::param_order` exactly — checked by the
+//!   `python/tests/test_param_layout.py` golden test),
+//! * the **static index arrays** (hierarchy paths `z`, hash indices,
+//!   identity indices) that are fed to the compiled HLO as inputs, and
+//! * the DHE dense encoding where applicable.
+
+use super::config::EmbeddingMethod;
+use crate::hashing::HashedIndices;
+use crate::partition::{random_partition, Hierarchy};
+
+/// Shape of a single trainable table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TableShape {
+    /// Canonical parameter name (matches the python side).
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TableShape {
+    /// Number of scalar parameters.
+    pub fn size(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Position-specific part of the plan (Eq. 11).
+#[derive(Debug, Clone)]
+pub struct PositionPlan {
+    /// One table per level; level j has shape `[m_j, d/2^j]`.
+    pub tables: Vec<TableShape>,
+    /// `z[j][i]` = partition id of node i at level j.
+    pub z: Vec<Vec<u32>>,
+}
+
+/// Node-specific part of the plan (Eq. 12/13 and all hashing baselines).
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    /// The pooled table `X` (rows × d).
+    pub table: TableShape,
+    /// `indices[t][i]` = row of X used by node i under hash t.
+    pub indices: Vec<Vec<u32>>,
+    /// Learn per-node importance weights `Y ∈ R^{n×h}`? (else `y ≡ 1`).
+    pub learned_weights: bool,
+}
+
+/// DHE plan: static dense encoding + MLP shapes.
+#[derive(Debug, Clone)]
+pub struct DhePlan {
+    /// Row-major `n × encoding_dim` static encoding in [-1, 1].
+    pub encoding: Vec<f32>,
+    pub encoding_dim: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    /// MLP parameter shapes in order (w0, b0, w1, b1, ...).
+    pub tables: Vec<TableShape>,
+}
+
+/// Complete embedding plan for one (graph, method) pair.
+#[derive(Debug, Clone)]
+pub struct EmbeddingPlan {
+    pub method: EmbeddingMethod,
+    /// Number of nodes.
+    pub n: usize,
+    /// Output embedding dimension.
+    pub d: usize,
+    pub position: Option<PositionPlan>,
+    pub node: Option<NodePlan>,
+    pub dhe: Option<DhePlan>,
+}
+
+impl EmbeddingPlan {
+    /// Build a plan. `hierarchy` is required iff `method.needs_hierarchy()`.
+    /// `seed` drives hash-function draws and RandomPart assignment.
+    pub fn build(
+        n: usize,
+        d: usize,
+        method: &EmbeddingMethod,
+        hierarchy: Option<&Hierarchy>,
+        seed: u64,
+    ) -> Self {
+        assert!(d >= 4 && d % 4 == 0, "d must be a multiple of 4 for 3-level dims");
+        let mut plan = EmbeddingPlan {
+            method: method.clone(),
+            n,
+            d,
+            position: None,
+            node: None,
+            dhe: None,
+        };
+        // position-specific part
+        if method.needs_hierarchy() {
+            let h = hierarchy.expect("method requires a hierarchy");
+            let levels = method.levels();
+            assert!(
+                h.levels() >= levels,
+                "hierarchy has {} levels, method needs {}",
+                h.levels(),
+                levels
+            );
+            plan.position = Some(Self::position_plan(h, levels, d));
+        }
+        if let EmbeddingMethod::RandomPart { parts } = method {
+            // same shapes as PosEmb 1-level, random membership
+            let z = vec![random_partition(n, *parts, seed)];
+            plan.position = Some(PositionPlan {
+                tables: vec![TableShape { name: "pos_0".into(), rows: *parts, cols: d }],
+                z,
+            });
+        }
+        // node-specific part
+        plan.node = match method {
+            EmbeddingMethod::Full | EmbeddingMethod::PosFullEmb { .. } => Some(NodePlan {
+                table: TableShape { name: "node_x".into(), rows: n, cols: d },
+                indices: vec![(0..n as u32).collect()],
+                learned_weights: false,
+            }),
+            EmbeddingMethod::HashTrick { buckets } => {
+                Some(Self::hashed_node_plan(n, d, *buckets, 1, false, seed))
+            }
+            EmbeddingMethod::Bloom { buckets, h } => {
+                Some(Self::hashed_node_plan(n, d, *buckets, *h, false, seed))
+            }
+            EmbeddingMethod::HashEmb { buckets, h } => {
+                Some(Self::hashed_node_plan(n, d, *buckets, *h, true, seed))
+            }
+            EmbeddingMethod::PosHashEmbInter { buckets, h, .. } => {
+                Some(Self::hashed_node_plan(n, d, *buckets, *h, true, seed))
+            }
+            EmbeddingMethod::PosHashEmbIntra { compression, h, .. } => {
+                let hier = hierarchy.expect("intra requires hierarchy");
+                Some(Self::intra_node_plan(n, d, hier, *compression, *h, seed))
+            }
+            _ => None,
+        };
+        // DHE
+        if let EmbeddingMethod::Dhe { encoding_dim, hidden, layers } = method {
+            plan.dhe = Some(Self::dhe_plan(n, d, *encoding_dim, *hidden, *layers, seed));
+        }
+        plan
+    }
+
+    fn position_plan(h: &Hierarchy, levels: usize, d: usize) -> PositionPlan {
+        let mut tables = Vec::with_capacity(levels);
+        for j in 0..levels {
+            let dj = (d >> j).max(1);
+            tables.push(TableShape { name: format!("pos_{j}"), rows: h.m[j], cols: dj });
+        }
+        PositionPlan { tables, z: h.z[..levels].to_vec() }
+    }
+
+    fn hashed_node_plan(
+        n: usize,
+        d: usize,
+        buckets: usize,
+        h: usize,
+        learned: bool,
+        seed: u64,
+    ) -> NodePlan {
+        let hi = HashedIndices::build(n, h, buckets as u32, seed);
+        NodePlan {
+            table: TableShape { name: "node_x".into(), rows: buckets, cols: d },
+            indices: hi.indices,
+            learned_weights: learned,
+        }
+    }
+
+    /// Intra-partition pools: one `c × d` pool per level-0 partition,
+    /// realized as a single `(m_0 · c) × d` table with offset indices
+    /// `z_0(i)·c + (H_t(i) mod c)`.
+    fn intra_node_plan(
+        n: usize,
+        d: usize,
+        hier: &Hierarchy,
+        c: usize,
+        h: usize,
+        seed: u64,
+    ) -> NodePlan {
+        let m0 = hier.m[0];
+        let hi = HashedIndices::build(n, h, c as u32, seed);
+        let z0 = &hier.z[0];
+        let indices: Vec<Vec<u32>> = (0..h)
+            .map(|t| {
+                (0..n)
+                    .map(|i| z0[i] * c as u32 + hi.bucket(t, i))
+                    .collect()
+            })
+            .collect();
+        NodePlan {
+            table: TableShape { name: "node_x".into(), rows: m0 * c, cols: d },
+            indices,
+            learned_weights: true,
+        }
+    }
+
+    fn dhe_plan(
+        n: usize,
+        d: usize,
+        encoding_dim: usize,
+        hidden: usize,
+        layers: usize,
+        seed: u64,
+    ) -> DhePlan {
+        // dense encoding: encoding_dim universal hashes into a large range,
+        // scaled to [-1, 1] (the paper's DHE uses uniform transform of
+        // hashes; B=10^6 there — any large range works identically).
+        const RANGE: u32 = 1 << 20;
+        let hi = HashedIndices::build(n, encoding_dim, RANGE, seed ^ 0xD4E);
+        let mut encoding = vec![0f32; n * encoding_dim];
+        for t in 0..encoding_dim {
+            for i in 0..n {
+                encoding[i * encoding_dim + t] =
+                    (hi.bucket(t, i) as f32 / (RANGE - 1) as f32) * 2.0 - 1.0;
+            }
+        }
+        let mut tables = Vec::new();
+        let mut in_dim = encoding_dim;
+        for l in 0..layers {
+            tables.push(TableShape { name: format!("dhe_w{l}"), rows: in_dim, cols: hidden });
+            tables.push(TableShape { name: format!("dhe_b{l}"), rows: 1, cols: hidden });
+            in_dim = hidden;
+        }
+        tables.push(TableShape { name: "dhe_wout".into(), rows: in_dim, cols: d });
+        tables.push(TableShape { name: "dhe_bout".into(), rows: 1, cols: d });
+        DhePlan { encoding, encoding_dim, hidden, layers, tables }
+    }
+
+    /// All trainable tables in canonical order:
+    /// `pos_0..pos_{L-1}, node_x, node_y, dhe_*`.
+    pub fn param_shapes(&self) -> Vec<TableShape> {
+        let mut out = Vec::new();
+        if let Some(p) = &self.position {
+            out.extend(p.tables.iter().cloned());
+        }
+        if let Some(nx) = &self.node {
+            out.push(nx.table.clone());
+            if nx.learned_weights {
+                out.push(TableShape {
+                    name: "node_y".into(),
+                    rows: self.n,
+                    cols: nx.indices.len(),
+                });
+            }
+        }
+        if let Some(dhe) = &self.dhe {
+            out.extend(dhe.tables.iter().cloned());
+        }
+        out
+    }
+
+    /// Total trainable parameters of the embedding layer.
+    pub fn num_params(&self) -> usize {
+        self.param_shapes().iter().map(|t| t.size()).sum()
+    }
+
+    /// Parameters of the FullEmb baseline at this (n, d) — the paper's
+    /// "full size" reference for savings percentages.
+    pub fn full_size(&self) -> usize {
+        self.n * self.d
+    }
+
+    /// Memory savings vs FullEmb, as a fraction in [0, 1] (negative when
+    /// the method is *larger* than full, e.g. PosFullEmb).
+    pub fn savings(&self) -> f64 {
+        1.0 - self.num_params() as f64 / self.full_size() as f64
+    }
+
+    /// Hash-index arrays flattened `h × n` row-major (HLO input), if any.
+    pub fn node_indices_i32(&self) -> Option<Vec<i32>> {
+        self.node.as_ref().map(|nx| {
+            nx.indices.iter().flat_map(|row| row.iter().map(|&x| x as i32)).collect()
+        })
+    }
+
+    /// Hierarchy paths flattened `L × n` row-major (HLO input), if any.
+    pub fn z_indices_i32(&self) -> Option<Vec<i32>> {
+        self.position.as_ref().map(|p| {
+            p.z.iter().flat_map(|row| row.iter().map(|&x| x as i32)).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{planted_partition, PlantedPartitionConfig};
+    use crate::partition::HierarchyConfig;
+
+    fn hierarchy(n: usize, k: usize, levels: usize) -> Hierarchy {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n,
+            communities: k,
+            intra_degree: 8.0,
+            inter_degree: 1.0,
+            seed: 51,
+            ..Default::default()
+        });
+        Hierarchy::build(&g, &HierarchyConfig::new(k, levels))
+    }
+
+    #[test]
+    fn full_plan_shapes() {
+        let p = EmbeddingPlan::build(100, 16, &EmbeddingMethod::Full, None, 0);
+        let shapes = p.param_shapes();
+        assert_eq!(shapes.len(), 1);
+        assert_eq!(shapes[0].rows, 100);
+        assert_eq!(shapes[0].cols, 16);
+        assert_eq!(p.num_params(), 1600);
+        assert_eq!(p.savings(), 0.0);
+        // identity indices
+        let idx = p.node_indices_i32().unwrap();
+        assert_eq!(idx[5], 5);
+    }
+
+    #[test]
+    fn hashemb_plan_counts_match_eq6() {
+        // size = B*d + n*h  (paper Eq. 6 commentary)
+        let p = EmbeddingPlan::build(1000, 8, &EmbeddingMethod::HashEmb { buckets: 50, h: 2 }, None, 1);
+        assert_eq!(p.num_params(), 50 * 8 + 1000 * 2);
+        assert!(p.node.as_ref().unwrap().learned_weights);
+    }
+
+    #[test]
+    fn bloom_has_no_importance_weights() {
+        let p = EmbeddingPlan::build(1000, 8, &EmbeddingMethod::Bloom { buckets: 50, h: 2 }, None, 1);
+        assert_eq!(p.num_params(), 50 * 8);
+        assert!(!p.node.as_ref().unwrap().learned_weights);
+    }
+
+    #[test]
+    fn posemb_3level_dims_halve() {
+        let h = hierarchy(400, 3, 3);
+        let p = EmbeddingPlan::build(400, 32, &EmbeddingMethod::PosEmb { levels: 3 }, Some(&h), 2);
+        let shapes = p.param_shapes();
+        assert_eq!(shapes.len(), 3);
+        assert_eq!((shapes[0].rows, shapes[0].cols), (3, 32));
+        assert_eq!((shapes[1].rows, shapes[1].cols), (9, 16));
+        assert_eq!((shapes[2].rows, shapes[2].cols), (27, 8));
+        // m*d sum (paper: Σ m_j d_j)
+        assert_eq!(p.num_params(), 3 * 32 + 9 * 16 + 27 * 8);
+    }
+
+    #[test]
+    fn intra_indices_stay_inside_partition_pool() {
+        let h = hierarchy(600, 4, 3);
+        let c = 7usize;
+        let p = EmbeddingPlan::build(
+            600,
+            16,
+            &EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h: 2 },
+            Some(&h),
+            3,
+        );
+        let nx = p.node.as_ref().unwrap();
+        assert_eq!(nx.table.rows, 4 * c);
+        for t in 0..2 {
+            for i in 0..600 {
+                let idx = nx.indices[t][i] as usize;
+                let part = h.z[0][i] as usize;
+                assert!(idx >= part * c && idx < (part + 1) * c, "node {i} escaped its pool");
+            }
+        }
+    }
+
+    #[test]
+    fn posfullemb_larger_than_full() {
+        let h = hierarchy(300, 3, 1);
+        let p =
+            EmbeddingPlan::build(300, 16, &EmbeddingMethod::PosFullEmb { levels: 1 }, Some(&h), 4);
+        assert!(p.num_params() > p.full_size());
+        assert!(p.savings() < 0.0);
+    }
+
+    #[test]
+    fn paper_default_savings_band() {
+        // paper claims 88–97% savings for PosHashEmb at paper defaults.
+        let n = 16_900;
+        let (method, k) = EmbeddingMethod::paper_default_intra(n);
+        let h = hierarchy(n, k, 3);
+        let p = EmbeddingPlan::build(n, 128, &method, Some(&h), 5);
+        let s = p.savings();
+        assert!(s > 0.80 && s < 0.99, "savings {s}");
+    }
+
+    #[test]
+    fn dhe_plan_shapes() {
+        let p = EmbeddingPlan::build(
+            200,
+            16,
+            &EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 64, layers: 1 },
+            None,
+            6,
+        );
+        let dhe = p.dhe.as_ref().unwrap();
+        assert_eq!(dhe.encoding.len(), 200 * 32);
+        assert!(dhe.encoding.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        let shapes = p.param_shapes();
+        // w0 (32x64) b0 (1x64) wout (64x16) bout (1x16)
+        assert_eq!(shapes.len(), 4);
+        assert_eq!(p.num_params(), 32 * 64 + 64 + 64 * 16 + 16);
+    }
+
+    #[test]
+    fn randompart_matches_posemb1_shape() {
+        let h = hierarchy(500, 5, 1);
+        let pos = EmbeddingPlan::build(500, 16, &EmbeddingMethod::PosEmb { levels: 1 }, Some(&h), 7);
+        let rnd = EmbeddingPlan::build(500, 16, &EmbeddingMethod::RandomPart { parts: 5 }, None, 7);
+        assert_eq!(pos.num_params(), rnd.num_params());
+    }
+}

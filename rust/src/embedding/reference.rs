@@ -1,0 +1,317 @@
+//! Pure-Rust reference composition of embeddings.
+//!
+//! This is the L3-side oracle: it computes `v_i = p_i + x_i` exactly as
+//! the paper defines, in plain loops. The AOT-compiled HLO (and the
+//! Pallas kernel inside it) is verified against this in
+//! `rust/tests/hlo_parity.rs`; it also powers the pure-Rust unit tests
+//! and the `embedding_compose` criterion baseline.
+
+use super::plan::EmbeddingPlan;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Named parameter tensors (row-major f32).
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    tensors: HashMap<String, (Vec<usize>, Vec<f32>)>,
+    order: Vec<String>,
+}
+
+impl ParamStore {
+    /// Insert a tensor; names must be unique.
+    pub fn insert(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch for {name}");
+        assert!(
+            self.tensors.insert(name.to_string(), (shape, data)).is_none(),
+            "duplicate tensor {name}"
+        );
+        self.order.push(name.to_string());
+    }
+
+    /// Tensor data by name.
+    pub fn get(&self, name: &str) -> &[f32] {
+        &self.tensors.get(name).unwrap_or_else(|| panic!("missing tensor {name}")).1
+    }
+
+    /// Mutable tensor data by name.
+    pub fn get_mut(&mut self, name: &str) -> &mut [f32] {
+        &mut self.tensors.get_mut(name).unwrap_or_else(|| panic!("missing tensor {name}")).1
+    }
+
+    /// Tensor shape by name.
+    pub fn shape(&self, name: &str) -> &[usize] {
+        &self.tensors.get(name).unwrap_or_else(|| panic!("missing tensor {name}")).0
+    }
+
+    /// Insertion order (canonical parameter order).
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Total scalar count.
+    pub fn num_params(&self) -> usize {
+        self.tensors.values().map(|(_, d)| d.len()).sum()
+    }
+}
+
+/// Deterministically initialize all tables of `plan`.
+///
+/// Embedding tables: uniform(-a, a) with `a = 1/sqrt(d)` (the usual
+/// embedding init); importance weights `node_y`: constant 1 (paper's hash
+/// embeddings start from equal contribution); DHE biases zero.
+pub fn init_params(plan: &EmbeddingPlan, seed: u64) -> ParamStore {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut store = ParamStore::default();
+    for t in plan.param_shapes() {
+        let data: Vec<f32> = if t.name == "node_y" {
+            vec![1.0; t.size()]
+        } else if t.name.starts_with("dhe_b") {
+            vec![0.0; t.size()]
+        } else {
+            let a = 1.0 / (t.cols as f32).sqrt();
+            (0..t.size()).map(|_| rng.gen_f32_range(-a, a)).collect()
+        };
+        store.insert(&t.name, vec![t.rows, t.cols], data);
+    }
+    store
+}
+
+/// Compose the full `n × d` embedding matrix (row-major) from `plan` and
+/// `params` — the reference implementation of Eq. 7/11/12/13 and the DHE
+/// forward pass.
+pub fn compose_embeddings(plan: &EmbeddingPlan, params: &ParamStore) -> Vec<f32> {
+    let n = plan.n;
+    let d = plan.d;
+    let mut out = vec![0f32; n * d];
+
+    // position-specific: v[i][..d_j] += P_j[z_j(i)]
+    if let Some(pos) = &plan.position {
+        for (j, table) in pos.tables.iter().enumerate() {
+            let pj = params.get(&table.name);
+            let dj = table.cols;
+            let z = &pos.z[j];
+            for i in 0..n {
+                let row = z[i] as usize;
+                debug_assert!(row < table.rows);
+                let src = &pj[row * dj..(row + 1) * dj];
+                let dst = &mut out[i * d..i * d + dj];
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += s;
+                }
+            }
+        }
+    }
+
+    // node-specific: v[i] += Σ_t y[i][t] · X[idx_t(i)]
+    if let Some(node) = &plan.node {
+        let x = params.get(&node.table.name);
+        let h = node.indices.len();
+        let y: Option<&[f32]> = if node.learned_weights { Some(params.get("node_y")) } else { None };
+        for i in 0..n {
+            for t in 0..h {
+                let row = node.indices[t][i] as usize;
+                debug_assert!(row < node.table.rows);
+                let w = y.map_or(1.0, |y| y[i * h + t]);
+                let src = &x[row * d..(row + 1) * d];
+                let dst = &mut out[i * d..(i + 1) * d];
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+        }
+    }
+
+    // DHE: v[i] += MLP(encoding[i]); relu activations, linear output.
+    if let Some(dhe) = &plan.dhe {
+        let mut act: Vec<f32> = Vec::new();
+        for i in 0..n {
+            act.clear();
+            act.extend_from_slice(&dhe.encoding[i * dhe.encoding_dim..(i + 1) * dhe.encoding_dim]);
+            for l in 0..dhe.layers {
+                let w = params.get(&format!("dhe_w{l}"));
+                let b = params.get(&format!("dhe_b{l}"));
+                let (in_dim, out_dim) = (act.len(), dhe.hidden);
+                let mut next = vec![0f32; out_dim];
+                for (o, nv) in next.iter_mut().enumerate() {
+                    let mut s = b[o];
+                    for (k, &a) in act.iter().enumerate() {
+                        s += a * w[k * out_dim + o];
+                    }
+                    *nv = s.max(0.0); // relu
+                }
+                debug_assert_eq!(in_dim, params.shape(&format!("dhe_w{l}"))[0]);
+                act = next;
+            }
+            let w = params.get("dhe_wout");
+            let b = params.get("dhe_bout");
+            let in_dim = act.len();
+            let dst = &mut out[i * d..(i + 1) * d];
+            for (o, dv) in dst.iter_mut().enumerate() {
+                let mut s = b[o];
+                for k in 0..in_dim {
+                    s += act[k] * w[k * d + o];
+                }
+                *dv += s;
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::EmbeddingMethod;
+    use crate::graph::{planted_partition, PlantedPartitionConfig};
+    use crate::partition::{Hierarchy, HierarchyConfig};
+
+    fn hier(n: usize, k: usize, levels: usize) -> Hierarchy {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n,
+            communities: k,
+            intra_degree: 8.0,
+            inter_degree: 1.0,
+            seed: 61,
+            ..Default::default()
+        });
+        Hierarchy::build(&g, &HierarchyConfig::new(k, levels))
+    }
+
+    #[test]
+    fn fullemb_is_table_lookup() {
+        let plan = EmbeddingPlan::build(10, 4, &EmbeddingMethod::Full, None, 0);
+        let params = init_params(&plan, 1);
+        let v = compose_embeddings(&plan, &params);
+        let w = params.get("node_x");
+        assert_eq!(v, w); // identity indices, y=1: v == W exactly
+    }
+
+    #[test]
+    fn posemb_nodes_in_same_partition_share_embedding() {
+        let n = 200;
+        let h = hier(n, 4, 1);
+        let plan = EmbeddingPlan::build(n, 8, &EmbeddingMethod::PosEmb { levels: 1 }, Some(&h), 2);
+        let params = init_params(&plan, 3);
+        let v = compose_embeddings(&plan, &params);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if h.z[0][i] == h.z[0][j] {
+                    assert_eq!(v[i * 8..(i + 1) * 8], v[j * 8..(j + 1) * 8]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchy_sum_matches_manual() {
+        let n = 50;
+        let h = hier(n, 2, 2);
+        let plan = EmbeddingPlan::build(n, 8, &EmbeddingMethod::PosEmb { levels: 2 }, Some(&h), 4);
+        let params = init_params(&plan, 5);
+        let v = compose_embeddings(&plan, &params);
+        // manual check node 7: P0[z0] zero-extended + P1[z1] zero-extended
+        let i = 7usize;
+        let p0 = params.get("pos_0");
+        let p1 = params.get("pos_1");
+        let z0 = h.z[0][i] as usize;
+        let z1 = h.z[1][i] as usize;
+        for c in 0..8 {
+            let a = p0[z0 * 8 + c];
+            let b = if c < 4 { p1[z1 * 4 + c] } else { 0.0 };
+            assert!((v[i * 8 + c] - (a + b)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hashemb_weights_scale_contributions() {
+        let n = 20;
+        let plan =
+            EmbeddingPlan::build(n, 4, &EmbeddingMethod::HashEmb { buckets: 6, h: 2 }, None, 6);
+        let mut params = init_params(&plan, 7);
+        // zero out the second hash's weight for node 3 and check v changes
+        let v1 = compose_embeddings(&plan, &params);
+        params.get_mut("node_y")[3 * 2 + 1] = 0.0;
+        let v2 = compose_embeddings(&plan, &params);
+        let node = plan.node.as_ref().unwrap();
+        let x = params.get("node_x");
+        let idx = node.indices[1][3] as usize;
+        for c in 0..4 {
+            let expect = v1[3 * 4 + c] - x[idx * 4 + c];
+            assert!((v2[3 * 4 + c] - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bloom_is_unweighted_sum_of_two_rows() {
+        let n = 10;
+        let plan = EmbeddingPlan::build(n, 4, &EmbeddingMethod::Bloom { buckets: 5, h: 2 }, None, 8);
+        let params = init_params(&plan, 9);
+        let v = compose_embeddings(&plan, &params);
+        let node = plan.node.as_ref().unwrap();
+        let x = params.get("node_x");
+        for i in 0..n {
+            let (r0, r1) = (node.indices[0][i] as usize, node.indices[1][i] as usize);
+            for c in 0..4 {
+                let expect = x[r0 * 4 + c] + x[r1 * 4 + c];
+                assert!((v[i * 4 + c] - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn poshash_is_sum_of_components() {
+        let n = 120;
+        let h = hier(n, 3, 3);
+        let full = EmbeddingPlan::build(
+            n,
+            16,
+            &EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: 20, h: 2 },
+            Some(&h),
+            10,
+        );
+        let params = init_params(&full, 11);
+        let v = compose_embeddings(&full, &params);
+
+        // position-only plan with the same tables
+        let pos_only = EmbeddingPlan::build(n, 16, &EmbeddingMethod::PosEmb { levels: 3 }, Some(&h), 10);
+        let mut pos_params = ParamStore::default();
+        for t in pos_only.param_shapes() {
+            pos_params.insert(&t.name, vec![t.rows, t.cols], params.get(&t.name).to_vec());
+        }
+        let p = compose_embeddings(&pos_only, &pos_params);
+        // x = v - p must equal the node-specific composition alone
+        let node_only =
+            EmbeddingPlan::build(n, 16, &EmbeddingMethod::HashEmb { buckets: 20, h: 2 }, None, 10);
+        let mut node_params = ParamStore::default();
+        node_params.insert("node_x", vec![20, 16], params.get("node_x").to_vec());
+        node_params.insert("node_y", vec![n, 2], params.get("node_y").to_vec());
+        let x = compose_embeddings(&node_only, &node_params);
+        for i in 0..n * 16 {
+            assert!((v[i] - (p[i] + x[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dhe_forward_is_finite_and_nonzero() {
+        let plan = EmbeddingPlan::build(
+            30,
+            8,
+            &EmbeddingMethod::Dhe { encoding_dim: 16, hidden: 32, layers: 1 },
+            None,
+            12,
+        );
+        let params = init_params(&plan, 13);
+        let v = compose_embeddings(&plan, &params);
+        assert!(v.iter().all(|x| x.is_finite()));
+        assert!(v.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let plan = EmbeddingPlan::build(50, 8, &EmbeddingMethod::Full, None, 0);
+        let a = init_params(&plan, 42);
+        let b = init_params(&plan, 42);
+        assert_eq!(a.get("node_x"), b.get("node_x"));
+    }
+}

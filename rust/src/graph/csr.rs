@@ -1,0 +1,352 @@
+//! CSR graph storage.
+//!
+//! `CsrGraph` is the single in-memory graph representation used by the
+//! partitioner, the samplers and the dataset registry. Node ids are dense
+//! `u32` in `[0, n)`. Edge weights are `f32` (uniform `1.0` unless the
+//! generator or loader supplies weights); the multilevel coarsener relies
+//! on integer-like accumulated weights, so weights are kept exact for
+//! small sums.
+
+
+/// Immutable undirected graph in compressed-sparse-row form.
+///
+/// Invariants (checked by `debug_validate`, exercised by proptests):
+/// * `indptr.len() == n + 1`, `indptr[0] == 0`, monotone non-decreasing.
+/// * `indices.len() == indptr[n] == 2 * m` for `m` undirected edges.
+/// * symmetric: `v ∈ adj(u)  ⇔  u ∈ adj(v)` with equal weight.
+/// * no self loops.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    indptr: Vec<u64>,
+    indices: Vec<u32>,
+    weights: Vec<f32>,
+    /// Per-node vertex weight (1 for plain graphs; coarse graphs carry the
+    /// number of fine nodes collapsed into each super-node).
+    vwgts: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Number of *undirected* edges (each stored twice).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+
+    /// Number of directed adjacency entries (`2 * num_edges`).
+    #[inline]
+    pub fn num_adjacency_entries(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Neighbors of `u`.
+    #[inline]
+    pub fn neighbors(&self, u: u32) -> &[u32] {
+        let (s, e) = self.range(u);
+        &self.indices[s..e]
+    }
+
+    /// Edge weights aligned with `neighbors(u)`.
+    #[inline]
+    pub fn edge_weights(&self, u: u32) -> &[f32] {
+        let (s, e) = self.range(u);
+        &self.weights[s..e]
+    }
+
+    /// Neighbor/weight pairs of `u`.
+    #[inline]
+    pub fn edges(&self, u: u32) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let (s, e) = self.range(u);
+        self.indices[s..e].iter().copied().zip(self.weights[s..e].iter().copied())
+    }
+
+    /// Degree of `u`.
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        let (s, e) = self.range(u);
+        e - s
+    }
+
+    /// Vertex weight of `u` (number of original nodes it represents).
+    #[inline]
+    pub fn vertex_weight(&self, u: u32) -> u32 {
+        self.vwgts[u as usize]
+    }
+
+    /// Total vertex weight of the graph.
+    pub fn total_vertex_weight(&self) -> u64 {
+        self.vwgts.iter().map(|&w| w as u64).sum()
+    }
+
+    /// Raw CSR row pointer array (length `n + 1`).
+    pub fn indptr(&self) -> &[u64] {
+        &self.indptr
+    }
+
+    /// Raw CSR column index array.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    #[inline]
+    fn range(&self, u: u32) -> (usize, usize) {
+        (self.indptr[u as usize] as usize, self.indptr[u as usize + 1] as usize)
+    }
+
+    /// COO edge arrays `(src, dst)` over all directed adjacency entries.
+    /// This is the exact layout the AOT-compiled GNN consumes
+    /// (`segment_sum` over `dst`).
+    pub fn to_coo(&self) -> (Vec<u32>, Vec<u32>) {
+        let mut src = Vec::with_capacity(self.indices.len());
+        let mut dst = Vec::with_capacity(self.indices.len());
+        for u in 0..self.num_nodes() as u32 {
+            for &v in self.neighbors(u) {
+                src.push(u);
+                dst.push(v);
+            }
+        }
+        (src, dst)
+    }
+
+    /// Symmetric-normalized edge coefficients `1/sqrt(deg(u)*deg(v))`
+    /// aligned with `to_coo` order, with self-degree+1 (GCN renormalization
+    /// trick: \hat{A} = A + I handled by adding self loops downstream).
+    pub fn gcn_norm_coefficients(&self) -> Vec<f32> {
+        let mut coefs = Vec::with_capacity(self.indices.len());
+        for u in 0..self.num_nodes() as u32 {
+            let du = (self.degree(u) + 1) as f32;
+            for &v in self.neighbors(u) {
+                let dv = (self.degree(v) + 1) as f32;
+                coefs.push(1.0 / (du * dv).sqrt());
+            }
+        }
+        coefs
+    }
+
+    /// Exhaustive structural validation; O(m log m). Used by tests.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_nodes();
+        if self.indptr[0] != 0 {
+            return Err("indptr[0] != 0".into());
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err("indptr tail mismatch".into());
+        }
+        if self.weights.len() != self.indices.len() {
+            return Err("weights length mismatch".into());
+        }
+        if self.vwgts.len() != n {
+            return Err("vwgts length mismatch".into());
+        }
+        for w in self.indptr.windows(2) {
+            if w[1] < w[0] {
+                return Err("indptr not monotone".into());
+            }
+        }
+        // symmetry + no self loops
+        use std::collections::HashMap;
+        let mut seen: HashMap<(u32, u32), f32> = HashMap::new();
+        for u in 0..n as u32 {
+            for (v, w) in self.edges(u) {
+                if v == u {
+                    return Err(format!("self loop at {u}"));
+                }
+                if v as usize >= n {
+                    return Err(format!("neighbor {v} out of range"));
+                }
+                seen.insert((u, v), w);
+            }
+        }
+        for (&(u, v), &w) in &seen {
+            match seen.get(&(v, u)) {
+                Some(&w2) if (w - w2).abs() < 1e-6 => {}
+                Some(_) => return Err(format!("asymmetric weight on ({u},{v})")),
+                None => return Err(format!("missing reverse edge ({v},{u})")),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder that deduplicates and symmetrizes edges.
+///
+/// Parallel edges are merged by summing weights (the behaviour the
+/// coarsener needs); self loops are dropped.
+pub struct GraphBuilder {
+    n: usize,
+    /// (u, v, w) with u < v — canonical undirected form.
+    edges: Vec<(u32, u32, f32)>,
+    vwgts: Option<Vec<u32>>,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph on `n` nodes.
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new(), vwgts: None }
+    }
+
+    /// Supply per-node vertex weights (coarse graphs).
+    pub fn with_vertex_weights(mut self, vwgts: Vec<u32>) -> Self {
+        assert_eq!(vwgts.len(), self.n);
+        self.vwgts = Some(vwgts);
+        self
+    }
+
+    /// Add an undirected edge; self loops silently dropped.
+    pub fn add_edge(&mut self, u: u32, v: u32, w: f32) {
+        if u == v {
+            return;
+        }
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.edges.push((a, b, w));
+    }
+
+    /// Number of (possibly duplicated) edges added so far.
+    pub fn pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Finalize into CSR, merging duplicates.
+    pub fn build(mut self) -> CsrGraph {
+        self.edges.sort_unstable_by_key(|&(u, v, _)| (u, v));
+        // merge duplicates
+        let mut merged: Vec<(u32, u32, f32)> = Vec::with_capacity(self.edges.len());
+        for (u, v, w) in self.edges {
+            match merged.last_mut() {
+                Some(last) if last.0 == u && last.1 == v => last.2 += w,
+                _ => merged.push((u, v, w)),
+            }
+        }
+        let n = self.n;
+        let mut deg = vec![0u64; n];
+        for &(u, v, _) in &merged {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut indptr = vec![0u64; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let total = indptr[n] as usize;
+        let mut indices = vec![0u32; total];
+        let mut weights = vec![0f32; total];
+        let mut cursor: Vec<u64> = indptr[..n].to_vec();
+        for &(u, v, w) in &merged {
+            let cu = cursor[u as usize] as usize;
+            indices[cu] = v;
+            weights[cu] = w;
+            cursor[u as usize] += 1;
+            let cv = cursor[v as usize] as usize;
+            indices[cv] = u;
+            weights[cv] = w;
+            cursor[v as usize] += 1;
+        }
+        // per-row sort for deterministic layout + binary-searchable rows
+        for u in 0..n {
+            let (s, e) = (indptr[u] as usize, indptr[u + 1] as usize);
+            let mut row: Vec<(u32, f32)> =
+                indices[s..e].iter().copied().zip(weights[s..e].iter().copied()).collect();
+            row.sort_unstable_by_key(|&(v, _)| v);
+            for (i, (v, w)) in row.into_iter().enumerate() {
+                indices[s + i] = v;
+                weights[s + i] = w;
+            }
+        }
+        CsrGraph {
+            indptr,
+            indices,
+            weights,
+            vwgts: self.vwgts.unwrap_or_else(|| vec![1; n]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> CsrGraph {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(2, 0, 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn triangle_structure() {
+        let g = triangle();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(2), &[0, 1]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 0, 1.0);
+        b.add_edge(0, 1, 1.0);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn parallel_edges_merge_weights() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 0, 2.5);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.edge_weights(0), &[3.5]);
+        assert_eq!(g.edge_weights(1), &[3.5]);
+    }
+
+    #[test]
+    fn coo_roundtrip_counts() {
+        let g = triangle();
+        let (src, dst) = g.to_coo();
+        assert_eq!(src.len(), 6);
+        assert_eq!(dst.len(), 6);
+        // every coo entry is a real adjacency
+        for (s, d) in src.iter().zip(dst.iter()) {
+            assert!(g.neighbors(*s).contains(d));
+        }
+    }
+
+    #[test]
+    fn gcn_norm_symmetric_on_regular_graph() {
+        let g = triangle();
+        let coefs = g.gcn_norm_coefficients();
+        // 3-regular-ish: all degrees 2, so coef = 1/3 everywhere
+        for c in coefs {
+            assert!((c - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn isolated_nodes_allowed() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        let g = b.build();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.degree(3), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn default_vertex_weights_are_one() {
+        let g = triangle();
+        assert_eq!(g.total_vertex_weight(), 3);
+    }
+}

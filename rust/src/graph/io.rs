@@ -1,0 +1,123 @@
+//! Edge-list IO.
+//!
+//! Plain-text interchange: one `u v [w]` per line, `#` comments, blank
+//! lines skipped. Used by `poshashemb partition --graph <file>` and the
+//! partition-explorer example so users can feed their own graphs.
+
+use super::csr::{CsrGraph, GraphBuilder};
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Read an undirected edge list. Node count is `max id + 1` unless
+/// `num_nodes` forces a larger graph (for isolated-tail nodes).
+pub fn read_edge_list(path: &Path, num_nodes: Option<usize>) -> Result<CsrGraph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: u32 = it
+            .next()
+            .ok_or_else(|| anyhow!("line {}: missing src", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let v: u32 = it
+            .next()
+            .ok_or_else(|| anyhow!("line {}: missing dst", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        let w: f32 = match it.next() {
+            Some(tok) => tok.parse().with_context(|| format!("line {}: bad weight", lineno + 1))?,
+            None => 1.0,
+        };
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v, w));
+    }
+    let n = num_nodes.unwrap_or(max_id as usize + 1);
+    if n <= max_id as usize {
+        return Err(anyhow!("num_nodes {} <= max node id {}", n, max_id));
+    }
+    let mut b = GraphBuilder::new(n);
+    for (u, v, w) in edges {
+        b.add_edge(u, v, w);
+    }
+    Ok(b.build())
+}
+
+/// Write the graph as an undirected edge list (each edge once, u < v).
+pub fn write_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# poshashemb edge list: n={} m={}", g.num_nodes(), g.num_edges())?;
+    for u in 0..g.num_nodes() as u32 {
+        for (v, wt) in g.edges(u) {
+            if u < v {
+                if (wt - 1.0).abs() < f32::EPSILON {
+                    writeln!(w, "{u} {v}")?;
+                } else {
+                    writeln!(w, "{u} {v} {wt}")?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{planted_partition, PlantedPartitionConfig};
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n: 200,
+            communities: 4,
+            intra_degree: 6.0,
+            inter_degree: 1.0,
+            seed: 9,
+            ..Default::default()
+        });
+        let dir = crate::util::tempdir::TempDir::new("poshashemb").unwrap();
+        let path = dir.path().join("g.txt");
+        write_edge_list(&g, &path).unwrap();
+        let g2 = read_edge_list(&path, Some(g.num_nodes())).unwrap();
+        assert_eq!(g.num_nodes(), g2.num_nodes());
+        assert_eq!(g.num_edges(), g2.num_edges());
+        assert_eq!(g.indices(), g2.indices());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let dir = crate::util::tempdir::TempDir::new("poshashemb").unwrap();
+        let path = dir.path().join("g.txt");
+        std::fs::write(&path, "# header\n\n0 1\n1 2 2.5\n").unwrap();
+        let g = read_edge_list(&path, None).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.edge_weights(2), &[2.5]);
+    }
+
+    #[test]
+    fn bad_num_nodes_rejected() {
+        let dir = crate::util::tempdir::TempDir::new("poshashemb").unwrap();
+        let path = dir.path().join("g.txt");
+        std::fs::write(&path, "0 5\n").unwrap();
+        assert!(read_edge_list(&path, Some(3)).is_err());
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        let dir = crate::util::tempdir::TempDir::new("poshashemb").unwrap();
+        let path = dir.path().join("g.txt");
+        std::fs::write(&path, "0 x\n").unwrap();
+        assert!(read_edge_list(&path, None).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Graph statistics — backs Table II ("Dataset statistics") of the paper
+//! and the `poshashemb report datasets` subcommand.
+
+use super::csr::CsrGraph;
+
+/// Summary statistics of a graph (paper Table II columns plus degree
+/// distribution details used in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub min_degree: usize,
+    pub max_degree: usize,
+    pub mean_degree: f64,
+    pub median_degree: usize,
+    pub isolated_nodes: usize,
+    /// Fraction of adjacency entries within the given communities (edge
+    /// homophily); `None` when no membership supplied.
+    pub edge_homophily: Option<f64>,
+}
+
+impl GraphStats {
+    /// Compute stats; `membership` (e.g. planted communities or labels)
+    /// enables the homophily column.
+    pub fn compute(g: &CsrGraph, membership: Option<&[u32]>) -> Self {
+        let n = g.num_nodes();
+        let mut degrees: Vec<usize> = (0..n as u32).map(|u| g.degree(u)).collect();
+        let isolated = degrees.iter().filter(|&&d| d == 0).count();
+        let mean = degrees.iter().sum::<usize>() as f64 / n.max(1) as f64;
+        degrees.sort_unstable();
+        let edge_homophily = membership.map(|m| {
+            assert_eq!(m.len(), n);
+            let mut same = 0usize;
+            let mut total = 0usize;
+            for u in 0..n as u32 {
+                for &v in g.neighbors(u) {
+                    total += 1;
+                    same += usize::from(m[u as usize] == m[v as usize]);
+                }
+            }
+            if total == 0 {
+                0.0
+            } else {
+                same as f64 / total as f64
+            }
+        });
+        GraphStats {
+            num_nodes: n,
+            num_edges: g.num_edges(),
+            min_degree: degrees.first().copied().unwrap_or(0),
+            max_degree: degrees.last().copied().unwrap_or(0),
+            mean_degree: mean,
+            median_degree: degrees.get(n / 2).copied().unwrap_or(0),
+            isolated_nodes: isolated,
+            edge_homophily,
+        }
+    }
+
+    /// Paper-style one-line row (Table II format).
+    pub fn table_row(&self, name: &str) -> String {
+        format!(
+            "| {:<16} | {:>9} | {:>10} | deg μ={:>6.2} max={:>5} | homophily={} |",
+            name,
+            self.num_nodes,
+            self.num_edges,
+            self.mean_degree,
+            self.max_degree,
+            self.edge_homophily.map_or("n/a".to_string(), |h| format!("{h:.3}")),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{planted_partition, GraphBuilder, PlantedPartitionConfig};
+
+    #[test]
+    fn stats_on_path_graph() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(2, 3, 1.0);
+        let g = b.build();
+        let s = GraphStats::compute(&g, None);
+        assert_eq!(s.num_nodes, 4);
+        assert_eq!(s.num_edges, 3);
+        assert_eq!(s.min_degree, 1);
+        assert_eq!(s.max_degree, 2);
+        assert_eq!(s.isolated_nodes, 0);
+        assert!(s.edge_homophily.is_none());
+    }
+
+    #[test]
+    fn homophily_reflects_planted_structure() {
+        let (g, m) = planted_partition(&PlantedPartitionConfig {
+            n: 800,
+            communities: 8,
+            intra_degree: 9.0,
+            inter_degree: 1.0,
+            seed: 5,
+            ..Default::default()
+        });
+        let s = GraphStats::compute(&g, Some(&m));
+        assert!(s.edge_homophily.unwrap() > 0.8);
+    }
+
+    #[test]
+    fn homophily_zero_when_all_distinct() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        let g = b.build();
+        let m = vec![0, 1, 2];
+        let s = GraphStats::compute(&g, Some(&m));
+        assert_eq!(s.edge_homophily.unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Universal hashing for integers — the substrate behind the
+//! node-specific component (paper §III-B) and the HashTrick / Bloom /
+//! HashEmb baselines (§II-B).
+//!
+//! The paper uses Carter–Wegman universal hashing for integers [13]:
+//! `H(x) = ((a·x + b) mod p) mod B` with `p` a prime larger than the
+//! universe and `a ∈ [1, p)`, `b ∈ [0, p)` drawn per function.
+
+mod universal;
+
+pub use universal::{HashFamily, UniversalHash};
+
+/// Precomputed multi-hash index table: `indices[t][i] = H_t(i)` for node
+/// `i` and hash function `t`. This is exactly the static `u` index array
+/// the AOT-lowered embedding computation consumes (the HLO takes hashed
+/// indices as an input so one compiled artifact serves any hash seeds).
+#[derive(Debug, Clone)]
+pub struct HashedIndices {
+    /// `h` rows of `n` bucket ids each.
+    pub indices: Vec<Vec<u32>>,
+    /// Number of buckets each row maps into.
+    pub buckets: u32,
+}
+
+impl HashedIndices {
+    /// Hash every node id in `[0, n)` with `h` independent functions into
+    /// `buckets` buckets.
+    pub fn build(n: usize, h: usize, buckets: u32, seed: u64) -> Self {
+        assert!(buckets >= 1);
+        let family = HashFamily::new(seed);
+        let fns: Vec<UniversalHash> = (0..h).map(|t| family.function(t as u64, buckets)).collect();
+        let indices = fns
+            .iter()
+            .map(|f| (0..n as u64).map(|i| f.hash(i)).collect())
+            .collect();
+        HashedIndices { indices, buckets }
+    }
+
+    /// Number of hash functions.
+    pub fn num_functions(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Bucket of node `i` under hash `t`.
+    pub fn bucket(&self, t: usize, i: usize) -> u32 {
+        self.indices[t][i]
+    }
+
+    /// Flatten to a single row-major `h × n` i32 array (HLO input layout).
+    pub fn flatten_i32(&self) -> Vec<i32> {
+        self.indices.iter().flat_map(|row| row.iter().map(|&x| x as i32)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_buckets_in_range() {
+        let hi = HashedIndices::build(5000, 2, 37, 9);
+        for row in &hi.indices {
+            assert!(row.iter().all(|&b| b < 37));
+        }
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        let hi = HashedIndices::build(2000, 2, 64, 3);
+        let same = hi.indices[0]
+            .iter()
+            .zip(hi.indices[1].iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        // two independent uniform maps agree w.p. 1/64: expect ~31 of 2000
+        assert!(same < 120, "rows too correlated: {same}");
+    }
+
+    #[test]
+    fn load_is_roughly_uniform() {
+        let hi = HashedIndices::build(64_000, 1, 64, 5);
+        let mut load = vec![0usize; 64];
+        for &b in &hi.indices[0] {
+            load[b as usize] += 1;
+        }
+        // expectation 1000; universal hashing keeps this within ~3 sigma
+        for &l in &load {
+            assert!(l > 700 && l < 1300, "bucket load {l}");
+        }
+    }
+
+    #[test]
+    fn flatten_layout() {
+        let hi = HashedIndices::build(3, 2, 10, 1);
+        let flat = hi.flatten_i32();
+        assert_eq!(flat.len(), 6);
+        assert_eq!(flat[0], hi.bucket(0, 0) as i32);
+        assert_eq!(flat[3], hi.bucket(1, 0) as i32);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = HashedIndices::build(100, 2, 16, 42);
+        let b = HashedIndices::build(100, 2, 16, 42);
+        let c = HashedIndices::build(100, 2, 16, 43);
+        assert_eq!(a.indices, b.indices);
+        assert_ne!(a.indices, c.indices);
+    }
+}

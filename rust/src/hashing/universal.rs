@@ -1,0 +1,167 @@
+//! Carter–Wegman universal hash functions over 64-bit integers.
+//!
+//! `h_{a,b}(x) = ((a·x + b) mod p) mod B` with Mersenne prime
+//! `p = 2^61 - 1`. Multiplication is done in 128 bits with the standard
+//! fast mod-Mersenne reduction, giving an exactly-universal family (not
+//! just an ad-hoc mixer) as required by the paper's reference [13].
+
+use crate::util::rng::Rng;
+
+/// Mersenne prime 2^61 - 1.
+pub const P: u64 = (1u64 << 61) - 1;
+
+/// A single universal hash function into `buckets` buckets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UniversalHash {
+    a: u64, // in [1, p)
+    b: u64, // in [0, p)
+    buckets: u32,
+}
+
+impl UniversalHash {
+    /// Construct from explicit coefficients (testing); panics if invalid.
+    pub fn from_coefficients(a: u64, b: u64, buckets: u32) -> Self {
+        assert!(a >= 1 && a < P && b < P && buckets >= 1);
+        UniversalHash { a, b, buckets }
+    }
+
+    /// Hash `x` into `[0, buckets)`.
+    #[inline]
+    pub fn hash(&self, x: u64) -> u32 {
+        let v = mod_p(mul_mod_p(self.a, mod_p(x)) + self.b);
+        (v % self.buckets as u64) as u32
+    }
+}
+
+/// Seeded family of independent universal hash functions.
+#[derive(Debug, Clone)]
+pub struct HashFamily {
+    seed: u64,
+}
+
+impl HashFamily {
+    /// Family keyed by `seed`.
+    pub fn new(seed: u64) -> Self {
+        HashFamily { seed }
+    }
+
+    /// The `index`-th function of the family, into `buckets` buckets.
+    /// Functions for different indices are drawn independently.
+    pub fn function(&self, index: u64, buckets: u32) -> UniversalHash {
+        let mut rng = Rng::seed_from_u64(self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(index));
+        let a = gen_below_p(&mut rng, 1);
+        let b = gen_below_p(&mut rng, 0);
+        UniversalHash { a, b, buckets }
+    }
+}
+
+/// Uniform draw in [lo, P) by rejection sampling 61-bit values
+/// (rejection probability ~2^-61, effectively zero).
+fn gen_below_p(rng: &mut Rng, lo: u64) -> u64 {
+    loop {
+        let x = rng.next_u64() >> 3; // 61 bits
+        if x >= lo && x < P {
+            return x;
+        }
+    }
+}
+
+/// x mod (2^61 - 1), for x < 2^64.
+#[inline]
+fn mod_p(x: u64) -> u64 {
+    let mut r = (x & P) + (x >> 61);
+    if r >= P {
+        r -= P;
+    }
+    r
+}
+
+/// (a * b) mod (2^61 - 1) via 128-bit product.
+#[inline]
+fn mul_mod_p(a: u64, b: u64) -> u64 {
+    let prod = (a as u128) * (b as u128);
+    let lo = (prod & P as u128) as u64;
+    let hi = (prod >> 61) as u64;
+    mod_p(lo + mod_p(hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mod_p_correct_small() {
+        assert_eq!(mod_p(0), 0);
+        assert_eq!(mod_p(P), 0);
+        assert_eq!(mod_p(P + 5), 5);
+        assert_eq!(mod_p(u64::MAX), u64::MAX % P);
+    }
+
+    #[test]
+    fn mul_mod_matches_u128_reference() {
+        let cases = [
+            (1u64, 1u64),
+            (P - 1, P - 1),
+            (123_456_789, 987_654_321),
+            (1u64 << 60, 3),
+            (0x0123_4567_89AB_CDEF % P, 0xFEDC_BA98_7654_3210 % P),
+        ];
+        for (a, b) in cases {
+            let expect = ((a as u128 * b as u128) % P as u128) as u64;
+            assert_eq!(mul_mod_p(a, b), expect, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn hash_in_range_and_deterministic() {
+        let f = HashFamily::new(7).function(0, 97);
+        for x in 0..10_000u64 {
+            let h1 = f.hash(x);
+            assert!(h1 < 97);
+            assert_eq!(h1, f.hash(x));
+        }
+    }
+
+    #[test]
+    fn pairwise_collision_rate_near_universal_bound() {
+        // universal: Pr[h(x)=h(y)] <= ~1/B. Empirically check over many
+        // pairs and functions.
+        let b = 50u32;
+        let family = HashFamily::new(11);
+        let mut collisions = 0usize;
+        let mut trials = 0usize;
+        for fi in 0..20u64 {
+            let f = family.function(fi, b);
+            for x in 0..100u64 {
+                for y in (x + 1)..100 {
+                    trials += 1;
+                    collisions += usize::from(f.hash(x) == f.hash(y));
+                }
+            }
+        }
+        let rate = collisions as f64 / trials as f64;
+        assert!(rate < 2.0 / b as f64, "collision rate {rate} vs 1/B {}", 1.0 / b as f64);
+    }
+
+    #[test]
+    fn different_indices_give_different_functions() {
+        let family = HashFamily::new(3);
+        let f0 = family.function(0, 1000);
+        let f1 = family.function(1, 1000);
+        let same = (0..1000u64).filter(|&x| f0.hash(x) == f1.hash(x)).count();
+        assert!(same < 30, "functions too similar: {same}/1000");
+    }
+
+    #[test]
+    fn explicit_coefficients() {
+        let f = UniversalHash::from_coefficients(1, 0, 10);
+        assert_eq!(f.hash(7), 7);
+        assert_eq!(f.hash(17), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_a_rejected() {
+        UniversalHash::from_coefficients(0, 0, 10);
+    }
+}

@@ -1,0 +1,33 @@
+//! # poshashemb
+//!
+//! Production-grade reproduction of *"Position-based Hash Embeddings For
+//! Scaling Graph Neural Networks"* (Kalantzi & Karypis, 2021) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — coordinator and substrates: CSR graphs,
+//!   a from-scratch multilevel k-way partitioner (METIS substitute),
+//!   universal hashing, embedding plans for every method in the paper,
+//!   synthetic homophilous datasets, the training orchestrator, and the
+//!   PJRT runtime that executes AOT-compiled training steps.
+//! * **Layer 2** — GNN models (GCN / GraphSAGE / GAT) + loss + Adam in
+//!   JAX, lowered once to HLO text by `python/compile/aot.py`.
+//! * **Layer 1** — the embedding gather/combine hot-spot as a Pallas
+//!   kernel (`python/compile/kernels/gather_combine.py`).
+//!
+//! Python never runs at training time: the Rust binary loads
+//! `artifacts/*.hlo.txt` via PJRT and owns the training loop.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod graph;
+pub mod hashing;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,184 @@
+//! `poshashemb` CLI launcher.
+//!
+//! Subcommands:
+//! * `report datasets` — Table II analog (dataset statistics).
+//! * `list [--group G]` — list experiment configs in the grid.
+//! * `gen-manifest [--grid full|smoke] [--out PATH]` — write the AOT
+//!   request consumed by `python/compile/aot.py`.
+//! * `partition --dataset D --k K [--levels L]` — run the multilevel
+//!   partitioner and report cut/imbalance/hierarchy stats.
+//! * `train --experiment NAME [--seed S] [--epochs N] [--verbose]` —
+//!   train one configuration via the PJRT runtime.
+//! * `experiment --group t3|t4|t5|f3|f4 [--dataset D]` — regenerate one
+//!   paper table/figure.
+//!
+//! Argument parsing is hand-rolled (offline build: no clap).
+
+use anyhow::{anyhow, bail, Result};
+use poshashemb::bench_harness::{print_table, rows_from_outcomes, Harness};
+use poshashemb::config::{full_grid, smoke_grid, write_aot_request};
+use poshashemb::coordinator::{run_experiment, TrainOptions};
+use poshashemb::data::{spec, Dataset, DATASET_NAMES};
+use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
+use poshashemb::runtime::{Manifest, RuntimeClient};
+use std::collections::HashMap;
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` / `--flag` style args after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            map.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(map)
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = args.get(1..).unwrap_or(&[]).to_vec();
+    // allow `report datasets` (positional) by skipping non-flag tokens
+    let flag_args: Vec<String> = rest.iter().skip_while(|a| !a.starts_with("--")).cloned().collect();
+    let flags = parse_flags(&flag_args)?;
+    match cmd {
+        "report" | "datasets" => cmd_report(),
+        "list" => cmd_list(&flags),
+        "gen-manifest" => cmd_gen_manifest(&flags),
+        "partition" => cmd_partition(&flags),
+        "train" => cmd_train(&flags),
+        "experiment" => cmd_experiment(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (see `poshashemb help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "poshashemb — Position-based Hash Embeddings for GNNs (paper reproduction)\n\n\
+         USAGE: poshashemb <subcommand> [--flags]\n\n\
+         report datasets                        dataset statistics (Table II)\n\
+         list [--group G]                       list experiment grid configs\n\
+         gen-manifest [--grid full|smoke]       write artifacts/manifest_request.json\n\
+         partition --dataset D --k K [--levels L]   run the multilevel partitioner\n\
+         train --experiment NAME [--seed S] [--epochs N] [--verbose]\n\
+         experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table"
+    );
+}
+
+fn cmd_report() -> Result<()> {
+    println!("| {:<16} | {:>9} | {:>10} | degree | homophily |", "Dataset", "#Nodes", "#Edges");
+    for name in DATASET_NAMES {
+        let ds = Dataset::generate(&spec(name).unwrap());
+        println!("{}", ds.stats().table_row(name));
+    }
+    Ok(())
+}
+
+fn cmd_list(flags: &HashMap<String, String>) -> Result<()> {
+    let group = flags.get("group").map(String::as_str);
+    for e in full_grid() {
+        if group.map_or(true, |g| e.group == g) {
+            println!("{:<40} {:<6} {:<16} {}", e.name, e.group, e.dataset, e.method.name());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_manifest(flags: &HashMap<String, String>) -> Result<()> {
+    let grid = match flags.get("grid").map(String::as_str).unwrap_or("full") {
+        "full" => full_grid(),
+        "smoke" => smoke_grid(),
+        other => bail!("unknown grid '{other}'"),
+    };
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "artifacts/manifest_request.json".to_string());
+    std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
+    write_aot_request(&grid, Path::new(&out))?;
+    println!("wrote {} configs to {out}", grid.len());
+    Ok(())
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
+    let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
+    let ds = Dataset::generate(&sp);
+    let k: usize = flags.get("k").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    let levels: usize = flags.get("levels").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let t0 = std::time::Instant::now();
+    if levels <= 1 {
+        let p = partition(&ds.graph, &PartitionConfig::with_k(k));
+        println!(
+            "{dsname}: n={} m={} k={k} cut={:.0} imbalance={:.3} sizes={:?} [{:?}]",
+            ds.graph.num_nodes(),
+            ds.graph.num_edges(),
+            p.edge_cut,
+            p.imbalance,
+            &p.part_sizes()[..k.min(12)],
+            t0.elapsed()
+        );
+    } else {
+        let h = Hierarchy::build(&ds.graph, &HierarchyConfig::new(k, levels));
+        h.validate().map_err(|e| anyhow!(e))?;
+        println!(
+            "{dsname}: {levels}-level hierarchy k={k} m={:?} total={} [{:?}]",
+            h.m,
+            h.total_partitions(),
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("experiment").ok_or_else(|| anyhow!("--experiment NAME required"))?;
+    let e = full_grid()
+        .into_iter()
+        .find(|e| &e.name == name)
+        .ok_or_else(|| anyhow!("unknown experiment '{name}' (see `poshashemb list`)"))?;
+    let seed: u64 = flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let mut opts = TrainOptions { verbose: flags.contains_key("verbose"), ..Default::default() };
+    if let Some(ep) = flags.get("epochs") {
+        opts.epochs = Some(ep.parse()?);
+    }
+    let dir = std::env::var("POSHASH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let client = RuntimeClient::cpu()?;
+    let manifest = Manifest::load(Path::new(&dir))?;
+    let outcome = run_experiment(&client, &manifest, &e, seed, &opts)?;
+    println!("{}", outcome.row());
+    Ok(())
+}
+
+fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
+    let group = flags.get("group").ok_or_else(|| anyhow!("--group t3|t4|t5|f3|f4 required"))?;
+    let harness = Harness::from_env()?;
+    let exps = harness.group(group, flags.get("dataset").map(String::as_str));
+    if exps.is_empty() {
+        bail!("no artifacts for group {group}; run `make artifacts` with the full grid");
+    }
+    let outcomes = harness.run_all(&exps)?;
+    let rows = rows_from_outcomes(&exps, &outcomes, |e| e.method.name());
+    print_table(&format!("group {group}"), &rows);
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Graph contraction given a matching.
+//!
+//! Matched pairs become single super-nodes; vertex weights add; parallel
+//! edges between super-nodes merge by summing weights (handled by
+//! `GraphBuilder`); edges internal to a collapsed pair disappear.
+
+use crate::graph::{CsrGraph, GraphBuilder};
+
+/// Contract `g` along `matching` (an involution, `matching[u] ∈ {u, v}`).
+/// Returns the coarse graph and the fine→coarse node map.
+pub fn coarsen(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
+    let n = g.num_nodes();
+    assert_eq!(matching.len(), n);
+    let mut map = vec![u32::MAX; n];
+    let mut coarse_n = 0u32;
+    for u in 0..n {
+        let v = matching[u] as usize;
+        if map[u] != u32::MAX {
+            continue;
+        }
+        map[u] = coarse_n;
+        if v != u {
+            map[v] = coarse_n;
+        }
+        coarse_n += 1;
+    }
+    let mut vwgts = vec![0u32; coarse_n as usize];
+    for u in 0..n {
+        vwgts[map[u] as usize] += g.vertex_weight(u as u32);
+    }
+    let mut b = GraphBuilder::new(coarse_n as usize).with_vertex_weights(vwgts);
+    for u in 0..n as u32 {
+        for (v, w) in g.edges(u) {
+            if u < v {
+                let (cu, cv) = (map[u as usize], map[v as usize]);
+                if cu != cv {
+                    b.add_edge(cu, cv, w);
+                }
+            }
+        }
+    }
+    (b.build(), map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// square 0-1-2-3-0 with matching (0,1) and (2,3) →
+    /// coarse: two super-nodes joined by a weight-2 edge.
+    #[test]
+    fn square_contracts_to_heavy_edge() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(2, 3, 1.0);
+        b.add_edge(3, 0, 1.0);
+        let g = b.build();
+        let matching = vec![1, 0, 3, 2];
+        let (cg, map) = coarsen(&g, &matching);
+        assert_eq!(cg.num_nodes(), 2);
+        assert_eq!(cg.num_edges(), 1);
+        assert_eq!(cg.edge_weights(0), &[2.0]);
+        assert_eq!(cg.vertex_weight(0), 2);
+        assert_eq!(cg.vertex_weight(1), 2);
+        assert_eq!(map[0], map[1]);
+        assert_eq!(map[2], map[3]);
+        assert_ne!(map[0], map[2]);
+    }
+
+    #[test]
+    fn self_matched_nodes_survive() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        let g = b.build();
+        let matching = vec![1, 0, 2]; // 2 self-matched
+        let (cg, map) = coarsen(&g, &matching);
+        assert_eq!(cg.num_nodes(), 2);
+        assert_eq!(cg.vertex_weight(map[2]), 1);
+        assert_eq!(cg.num_edges(), 1);
+        cg.validate().unwrap();
+    }
+
+    #[test]
+    fn total_vertex_weight_preserved() {
+        let mut b = GraphBuilder::new(6);
+        for (u, v) in [(0, 1), (1, 2), (3, 4), (4, 5), (2, 3)] {
+            b.add_edge(u, v, 1.0);
+        }
+        let g = b.build();
+        let matching = vec![1, 0, 3, 2, 5, 4];
+        let (cg, _) = coarsen(&g, &matching);
+        assert_eq!(cg.total_vertex_weight(), g.total_vertex_weight());
+    }
+
+    #[test]
+    fn edge_cut_weight_preserved_across_contraction() {
+        // cut edges between super-nodes keep their total weight
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 2, 1.5);
+        b.add_edge(0, 3, 0.5);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(0, 1, 9.0); // internal to supernode A
+        b.add_edge(2, 3, 9.0); // internal to supernode B
+        let g = b.build();
+        let matching = vec![1, 0, 3, 2];
+        let (cg, _) = coarsen(&g, &matching);
+        assert_eq!(cg.num_edges(), 1);
+        assert_eq!(cg.edge_weights(0), &[3.0]); // 1.5 + 0.5 + 1.0
+    }
+}

@@ -1,0 +1,232 @@
+//! Recursive hierarchical k-way partitioning (paper Algorithm 1, line 2:
+//! `Z, l ← metis(G, k, L)`).
+//!
+//! Level 0 is a k-way partition of the whole graph; level j+1 splits each
+//! level-j partition into k parts by partitioning its induced subgraph,
+//! so level j has `m_j = k^(j+1)` partition ids. Partition ids are
+//! globally dense per level with `id_{j+1} = id_j * k + local`, so a
+//! node's path through the hierarchy is recoverable from any level's id.
+
+use super::{partition, PartitionConfig};
+use crate::graph::{CsrGraph, GraphBuilder};
+
+/// Configuration for hierarchy construction.
+#[derive(Debug, Clone)]
+pub struct HierarchyConfig {
+    /// Branching factor k (paper: `k = n^alpha`).
+    pub k: usize,
+    /// Number of levels L (paper default 3).
+    pub levels: usize,
+    /// Base partitioner configuration (k is overridden per split).
+    pub base: PartitionConfig,
+}
+
+impl HierarchyConfig {
+    /// Hierarchy with k parts per level, L levels, default partitioner.
+    pub fn new(k: usize, levels: usize) -> Self {
+        HierarchyConfig { k, levels, base: PartitionConfig::default() }
+    }
+
+    /// Paper's `k = ceil(n^alpha)` rule (Eq. 8).
+    pub fn from_alpha(n: usize, alpha: f64, levels: usize) -> Self {
+        let k = (n as f64).powf(alpha).round().max(2.0) as usize;
+        Self::new(k, levels)
+    }
+}
+
+/// The L-level membership structure (paper's **Z** matrix).
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    /// `z[j][i]` = partition id of node `i` at level `j` (level 0 coarsest).
+    pub z: Vec<Vec<u32>>,
+    /// Number of partitions per level: `m[j] = k^(j+1)` (paper's vector l).
+    /// Note these are *nominal* counts; empty partitions can occur when a
+    /// subgraph has fewer nodes than k.
+    pub m: Vec<usize>,
+    /// Branching factor.
+    pub k: usize,
+}
+
+impl Hierarchy {
+    /// Build an L-level hierarchy over `g`.
+    pub fn build(g: &CsrGraph, cfg: &HierarchyConfig) -> Self {
+        assert!(cfg.levels >= 1, "need at least one level");
+        assert!(cfg.k >= 2, "k must be >= 2");
+        let n = g.num_nodes();
+        let mut z: Vec<Vec<u32>> = Vec::with_capacity(cfg.levels);
+        let mut m: Vec<usize> = Vec::with_capacity(cfg.levels);
+
+        // level 0: partition the whole graph
+        let p0 = partition(g, &PartitionConfig { k: cfg.k, ..cfg.base.clone() });
+        z.push(p0.part.clone());
+        m.push(cfg.k);
+
+        // subsequent levels: split each current partition into k
+        for lvl in 1..cfg.levels {
+            let prev = &z[lvl - 1];
+            let prev_m = m[lvl - 1];
+            let mut cur = vec![0u32; n];
+            // group node ids by previous-level partition
+            let mut groups: Vec<Vec<u32>> = vec![Vec::new(); prev_m];
+            for (i, &p) in prev.iter().enumerate() {
+                groups[p as usize].push(i as u32);
+            }
+            for (pid, nodes) in groups.iter().enumerate() {
+                if nodes.is_empty() {
+                    continue;
+                }
+                let (sub, _back) = induced_subgraph(g, nodes);
+                let seed = cfg.base.seed ^ ((lvl as u64) << 32) ^ pid as u64;
+                let sp = partition(&sub, &PartitionConfig { k: cfg.k, seed, ..cfg.base.clone() });
+                for (local, &orig) in nodes.iter().enumerate() {
+                    cur[orig as usize] = (pid * cfg.k) as u32 + sp.part[local];
+                }
+            }
+            z.push(cur);
+            m.push(prev_m * cfg.k);
+        }
+        Hierarchy { z, m, k: cfg.k }
+    }
+
+    /// Number of levels.
+    pub fn levels(&self) -> usize {
+        self.z.len()
+    }
+
+    /// Membership path of node `i`: `[z_0(i), .., z_{L-1}(i)]`.
+    pub fn path(&self, i: usize) -> Vec<u32> {
+        self.z.iter().map(|lvl| lvl[i]).collect()
+    }
+
+    /// Total number of partitions across all levels (paper Eq. 10).
+    pub fn total_partitions(&self) -> usize {
+        self.m.iter().sum()
+    }
+
+    /// Check the parent-child consistency invariant
+    /// `z_{j+1}(i) / k == z_j(i)` for all nodes and levels.
+    pub fn validate(&self) -> Result<(), String> {
+        for j in 1..self.levels() {
+            for i in 0..self.z[0].len() {
+                if self.z[j][i] as usize / self.k != self.z[j - 1][i] as usize {
+                    return Err(format!("node {i}: level {j} id {} inconsistent with parent {}",
+                        self.z[j][i], self.z[j - 1][i]));
+                }
+            }
+        }
+        for (j, lvl) in self.z.iter().enumerate() {
+            for (i, &p) in lvl.iter().enumerate() {
+                if p as usize >= self.m[j] {
+                    return Err(format!("node {i}: level {j} id {p} out of range {}", self.m[j]));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extract the induced subgraph on `nodes`; returns the subgraph (local
+/// ids = index into `nodes`) and the local→global map (`nodes` itself).
+pub fn induced_subgraph(g: &CsrGraph, nodes: &[u32]) -> (CsrGraph, Vec<u32>) {
+    let mut global_to_local = std::collections::HashMap::with_capacity(nodes.len());
+    for (local, &orig) in nodes.iter().enumerate() {
+        global_to_local.insert(orig, local as u32);
+    }
+    let vwgts = nodes.iter().map(|&u| g.vertex_weight(u)).collect();
+    let mut b = GraphBuilder::new(nodes.len()).with_vertex_weights(vwgts);
+    for (local, &orig) in nodes.iter().enumerate() {
+        for (v, w) in g.edges(orig) {
+            if let Some(&lv) = global_to_local.get(&v) {
+                if (local as u32) < lv {
+                    b.add_edge(local as u32, lv, w);
+                }
+            }
+        }
+    }
+    (b.build(), nodes.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{planted_partition, PlantedPartitionConfig};
+
+    fn sbm(n: usize) -> CsrGraph {
+        planted_partition(&PlantedPartitionConfig {
+            n,
+            communities: 8,
+            intra_degree: 8.0,
+            inter_degree: 1.5,
+            seed: 41,
+            ..Default::default()
+        })
+        .0
+    }
+
+    #[test]
+    fn three_level_hierarchy_shapes() {
+        let g = sbm(1000);
+        let h = Hierarchy::build(&g, &HierarchyConfig::new(3, 3));
+        assert_eq!(h.levels(), 3);
+        assert_eq!(h.m, vec![3, 9, 27]);
+        assert_eq!(h.total_partitions(), 39); // 3 + 9 + 27 (Eq. 10)
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn paths_are_consistent() {
+        let g = sbm(500);
+        let h = Hierarchy::build(&g, &HierarchyConfig::new(2, 3));
+        for i in 0..g.num_nodes() {
+            let p = h.path(i);
+            assert_eq!(p.len(), 3);
+            assert_eq!(p[1] as usize / 2, p[0] as usize);
+            assert_eq!(p[2] as usize / 2, p[1] as usize);
+        }
+    }
+
+    #[test]
+    fn alpha_rule_matches_paper() {
+        // paper §IV-E: ogbn-arxiv n=169,343, alpha=3/8 -> k=125? They list
+        // alpha 1/8..6/8 -> k {5,25,125,441,9261}. Check a couple.
+        let cfg = HierarchyConfig::from_alpha(169_343, 0.25, 3);
+        assert_eq!(cfg.k, 20); // n^(1/4) ≈ 20.3
+        let cfg = HierarchyConfig::from_alpha(169_343, 0.5, 3);
+        assert_eq!(cfg.k, 412); // n^(1/2) ≈ 411.5 (paper rounds to 441=21^2 via different rule)
+    }
+
+    #[test]
+    fn single_level_is_plain_partition() {
+        let g = sbm(300);
+        let h = Hierarchy::build(&g, &HierarchyConfig::new(4, 1));
+        assert_eq!(h.levels(), 1);
+        assert_eq!(h.m, vec![4]);
+        let distinct: std::collections::HashSet<u32> = h.z[0].iter().copied().collect();
+        assert!(distinct.len() <= 4 && distinct.len() >= 2);
+    }
+
+    #[test]
+    fn induced_subgraph_structure() {
+        let g = sbm(200);
+        let nodes: Vec<u32> = (0..50).collect();
+        let (sub, back) = induced_subgraph(&g, &nodes);
+        assert_eq!(sub.num_nodes(), 50);
+        assert_eq!(back, nodes);
+        sub.validate().unwrap();
+        // every subgraph edge is an original edge
+        for u in 0..50u32 {
+            for &v in sub.neighbors(u) {
+                assert!(g.neighbors(back[u as usize]).contains(&back[v as usize]));
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_partitions_dont_crash() {
+        // n smaller than k^L: deep levels get degenerate splits
+        let g = sbm(40);
+        let h = Hierarchy::build(&g, &HierarchyConfig::new(4, 3));
+        h.validate().unwrap();
+        assert_eq!(h.m, vec![4, 16, 64]);
+    }
+}

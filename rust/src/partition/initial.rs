@@ -1,0 +1,138 @@
+//! Initial k-way partitioning of the coarsest graph by greedy graph
+//! growing (GGGP): grow each part from a random seed along a BFS-like
+//! frontier ordered by connectivity gain, stopping at the balance target.
+//! Leftover nodes (disconnected pockets) are assigned to the lightest
+//! part.
+
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+use std::collections::BinaryHeap;
+
+/// Grow a balanced k-way partition on (small) graph `g`.
+pub fn greedy_growing(g: &CsrGraph, k: usize, epsilon: f64, rng: &mut Rng) -> Vec<u32> {
+    let n = g.num_nodes();
+    const FREE: u32 = u32::MAX;
+    let mut part = vec![FREE; n];
+    let total_w = g.total_vertex_weight() as f64;
+    let max_part_w = ((total_w / k as f64) * (1.0 + epsilon)).ceil() as u64;
+    let target_w = (total_w / k as f64).ceil() as u64;
+
+    let mut part_w = vec![0u64; k];
+    for p in 0..k {
+        // pick an unassigned seed (random probes, then linear scan)
+        let mut seed = None;
+        for _ in 0..16 {
+            let cand = rng.gen_range(n);
+            if part[cand] == FREE {
+                seed = Some(cand);
+                break;
+            }
+        }
+        let seed = match seed.or_else(|| (0..n).find(|&u| part[u] == FREE)) {
+            Some(s) => s,
+            None => break, // everything assigned
+        };
+        // frontier heap keyed by gain = weight-to-part (max-heap on f32 bits)
+        let mut heap: BinaryHeap<(ordered::F64, u32)> = BinaryHeap::new();
+        heap.push((ordered::F64(0.0), seed as u32));
+        while let Some((_, u)) = heap.pop() {
+            let ui = u as usize;
+            if part[ui] != FREE {
+                continue;
+            }
+            let vw = g.vertex_weight(u) as u64;
+            if part_w[p] + vw > max_part_w {
+                continue;
+            }
+            part[ui] = p as u32;
+            part_w[p] += vw;
+            if part_w[p] >= target_w {
+                break;
+            }
+            for (v, w) in g.edges(u) {
+                if part[v as usize] == FREE {
+                    heap.push((ordered::F64(w as f64), v));
+                }
+            }
+        }
+    }
+    // leftovers → lightest part
+    for u in 0..n {
+        if part[u] == FREE {
+            let (p, _) = part_w.iter().enumerate().min_by_key(|(_, &w)| w).unwrap();
+            part[u] = p as u32;
+            part_w[p] += g.vertex_weight(u as u32) as u64;
+        }
+    }
+    part
+}
+
+/// Total-order f64 wrapper for the frontier heap.
+mod ordered {
+    #[derive(PartialEq)]
+    pub struct F64(pub f64);
+    impl Eq for F64 {}
+    impl PartialOrd for F64 {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for F64 {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.0.total_cmp(&other.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{planted_partition, GraphBuilder, PlantedPartitionConfig};
+    
+    #[test]
+    fn all_nodes_assigned_in_range() {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n: 300,
+            communities: 3,
+            intra_degree: 8.0,
+            inter_degree: 1.0,
+            seed: 21,
+            ..Default::default()
+        });
+        let mut rng = Rng::seed_from_u64(5);
+        let part = greedy_growing(&g, 3, 0.05, &mut rng);
+        assert!(part.iter().all(|&p| p < 3));
+        let mut sizes = [0usize; 3];
+        for &p in &part {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s > 0));
+    }
+
+    #[test]
+    fn growing_respects_rough_balance() {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n: 1000,
+            communities: 10,
+            intra_degree: 8.0,
+            inter_degree: 2.0,
+            seed: 22,
+            ..Default::default()
+        });
+        let mut rng = Rng::seed_from_u64(6);
+        let part = greedy_growing(&g, 5, 0.10, &mut rng);
+        let imb = crate::partition::imbalance(&g, &part, 5);
+        // growing alone can exceed (1+eps) via the leftover sweep; refine
+        // tightens it later. Assert a loose sanity bound here.
+        assert!(imb < 1.6, "imbalance {imb}");
+    }
+
+    #[test]
+    fn handles_edgeless_graph() {
+        let g = GraphBuilder::new(10).build();
+        let mut rng = Rng::seed_from_u64(7);
+        let part = greedy_growing(&g, 2, 0.1, &mut rng);
+        let ones = part.iter().filter(|&&p| p == 1).count();
+        assert!(ones >= 3 && ones <= 7, "split {ones}/10");
+    }
+}

@@ -1,0 +1,264 @@
+//! Multilevel k-way graph partitioner — the METIS substitute.
+//!
+//! The paper (Algorithm 1, line 2) calls `metis(G, k, L)` to obtain the
+//! membership matrix **Z**. METIS itself is not available here, so this
+//! module implements the same multilevel paradigm from scratch:
+//!
+//! 1. **Coarsening** (`matching` + `coarsen`): heavy-edge matching
+//!    collapses matched pairs into super-nodes until the graph is small.
+//! 2. **Initial partitioning** (`initial`): greedy graph growing produces
+//!    a balanced k-way partition of the coarsest graph.
+//! 3. **Uncoarsening + refinement** (`refine`): the partition is projected
+//!    back level by level; boundary nodes are moved by positive-gain
+//!    greedy passes (a k-way FM variant) under a balance constraint.
+//!
+//! `hierarchy` applies the partitioner recursively to build the L-level
+//! hierarchy of Algorithm 1 and the per-node membership vectors `z_i`.
+//! `random` provides the RandomPart baseline of Table III.
+
+mod coarsen;
+mod hierarchy;
+mod initial;
+mod matching;
+mod random;
+mod refine;
+
+pub use coarsen::coarsen;
+pub use hierarchy::{Hierarchy, HierarchyConfig};
+pub use matching::heavy_edge_matching;
+pub use random::random_partition;
+
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Partitioner configuration.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    /// Number of parts.
+    pub k: usize,
+    /// Allowed imbalance: max part weight ≤ (1 + epsilon) * ceil(W / k).
+    pub epsilon: f64,
+    /// Stop coarsening when the graph has at most `coarsen_until * k`
+    /// nodes (or coarsening stalls).
+    pub coarsen_until: usize,
+    /// Refinement passes per uncoarsening level.
+    pub refine_passes: usize,
+    /// RNG seed (tie-breaking in matching/growing).
+    pub seed: u64,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig { k: 2, epsilon: 0.10, coarsen_until: 30, refine_passes: 4, seed: 1 }
+    }
+}
+
+impl PartitionConfig {
+    /// Config for `k` parts with library defaults.
+    pub fn with_k(k: usize) -> Self {
+        PartitionConfig { k, ..Default::default() }
+    }
+}
+
+/// Result of a k-way partitioning.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    /// `part[i]` ∈ [0, k) for every node.
+    pub part: Vec<u32>,
+    /// Number of parts requested.
+    pub k: usize,
+    /// Total weight of cut edges.
+    pub edge_cut: f64,
+    /// max part weight / ideal part weight.
+    pub imbalance: f64,
+}
+
+impl Partitioning {
+    /// Nodes per part.
+    pub fn part_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &p in &self.part {
+            sizes[p as usize] += 1;
+        }
+        sizes
+    }
+}
+
+/// Compute the weighted edge cut of an assignment.
+pub fn edge_cut(g: &CsrGraph, part: &[u32]) -> f64 {
+    let mut cut = 0f64;
+    for u in 0..g.num_nodes() as u32 {
+        for (v, w) in g.edges(u) {
+            if part[u as usize] != part[v as usize] {
+                cut += w as f64;
+            }
+        }
+    }
+    cut / 2.0
+}
+
+/// Compute imbalance: `max_part_weight / (W / k)`.
+pub fn imbalance(g: &CsrGraph, part: &[u32], k: usize) -> f64 {
+    let mut wts = vec![0u64; k];
+    for u in 0..g.num_nodes() {
+        wts[part[u] as usize] += g.vertex_weight(u as u32) as u64;
+    }
+    let ideal = g.total_vertex_weight() as f64 / k as f64;
+    wts.iter().copied().max().unwrap_or(0) as f64 / ideal.max(1.0)
+}
+
+/// Multilevel k-way partitioning — the main entry point.
+pub fn partition(g: &CsrGraph, cfg: &PartitionConfig) -> Partitioning {
+    assert!(cfg.k >= 1, "k must be >= 1");
+    let n = g.num_nodes();
+    if cfg.k == 1 || n <= cfg.k {
+        // trivial cases: single part, or fewer nodes than parts (spread
+        // round-robin so every part is non-empty where possible).
+        let part: Vec<u32> = (0..n).map(|i| (i % cfg.k) as u32).collect();
+        let cut = edge_cut(g, &part);
+        let imb = imbalance(g, &part, cfg.k);
+        return Partitioning { part, k: cfg.k, edge_cut: cut, imbalance: imb };
+    }
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+
+    // ---- coarsening phase ----
+    // levels[i] = (graph, map-to-coarser) ; last graph has no map yet
+    let mut graphs: Vec<CsrGraph> = vec![g.clone()];
+    let mut maps: Vec<Vec<u32>> = Vec::new();
+    let target = (cfg.coarsen_until * cfg.k).max(2 * cfg.k);
+    loop {
+        let cur = graphs.last().unwrap();
+        if cur.num_nodes() <= target {
+            break;
+        }
+        let matching = heavy_edge_matching(cur, &mut rng);
+        let (coarse, map) = coarsen(cur, &matching);
+        // stall guard: coarsening must shrink by ≥5% or we stop
+        if coarse.num_nodes() as f64 > cur.num_nodes() as f64 * 0.95 {
+            break;
+        }
+        maps.push(map);
+        graphs.push(coarse);
+    }
+
+    // ---- initial partitioning on the coarsest graph ----
+    let coarsest = graphs.last().unwrap();
+    let mut part = initial::greedy_growing(coarsest, cfg.k, cfg.epsilon, &mut rng);
+    refine::refine(coarsest, &mut part, cfg.k, cfg.epsilon, cfg.refine_passes);
+
+    // ---- uncoarsening + refinement ----
+    for lvl in (0..maps.len()).rev() {
+        let fine = &graphs[lvl];
+        let map = &maps[lvl];
+        let mut fine_part = vec![0u32; fine.num_nodes()];
+        for (u, &cu) in map.iter().enumerate() {
+            fine_part[u] = part[cu as usize];
+        }
+        refine::refine(fine, &mut fine_part, cfg.k, cfg.epsilon, cfg.refine_passes);
+        part = fine_part;
+    }
+
+    let cut = edge_cut(g, &part);
+    let imb = imbalance(g, &part, cfg.k);
+    Partitioning { part, k: cfg.k, edge_cut: cut, imbalance: imb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{planted_partition, GraphBuilder, PlantedPartitionConfig};
+
+    fn sbm(n: usize, k: usize, seed: u64) -> (CsrGraph, Vec<u32>) {
+        planted_partition(&PlantedPartitionConfig {
+            n,
+            communities: k,
+            intra_degree: 10.0,
+            inter_degree: 1.0,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn partition_covers_all_parts_and_is_balanced() {
+        let (g, _) = sbm(1200, 4, 11);
+        let p = partition(&g, &PartitionConfig::with_k(4));
+        assert_eq!(p.part.len(), g.num_nodes());
+        let sizes = p.part_sizes();
+        assert!(sizes.iter().all(|&s| s > 0), "empty part: {sizes:?}");
+        assert!(p.imbalance < 1.2, "imbalance {}", p.imbalance);
+    }
+
+    #[test]
+    fn partition_recovers_planted_communities() {
+        // With strong homophily the min-cut partition should align with the
+        // planted blocks far better than chance.
+        let (g, membership) = sbm(1000, 4, 3);
+        let p = partition(&g, &PartitionConfig::with_k(4));
+        // purity: for each found part, the max planted-block share
+        let mut counts = vec![[0usize; 4]; 4];
+        for (i, &fp) in p.part.iter().enumerate() {
+            counts[fp as usize][membership[i] as usize] += 1;
+        }
+        let mut pure = 0usize;
+        for row in &counts {
+            pure += row.iter().max().unwrap();
+        }
+        let purity = pure as f64 / g.num_nodes() as f64;
+        assert!(purity > 0.75, "purity {purity}");
+    }
+
+    #[test]
+    fn partition_cut_beats_random() {
+        let (g, _) = sbm(800, 4, 17);
+        let p = partition(&g, &PartitionConfig::with_k(4));
+        let rand_part = random_partition(g.num_nodes(), 4, 99);
+        let rand_cut = edge_cut(&g, &rand_part);
+        assert!(
+            p.edge_cut < rand_cut * 0.5,
+            "multilevel cut {} vs random {}",
+            p.edge_cut,
+            rand_cut
+        );
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let (g, _) = sbm(100, 2, 5);
+        let p = partition(&g, &PartitionConfig::with_k(1));
+        assert!(p.part.iter().all(|&x| x == 0));
+        assert_eq!(p.edge_cut, 0.0);
+    }
+
+    #[test]
+    fn more_parts_than_nodes() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 1.0);
+        let g = b.build();
+        let p = partition(&g, &PartitionConfig::with_k(8));
+        assert_eq!(p.part.len(), 3);
+        assert!(p.part.iter().all(|&x| (x as usize) < 8));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (g, _) = sbm(600, 3, 2);
+        let cfg = PartitionConfig { k: 3, seed: 123, ..Default::default() };
+        let p1 = partition(&g, &cfg);
+        let p2 = partition(&g, &cfg);
+        assert_eq!(p1.part, p2.part);
+    }
+
+    #[test]
+    fn disconnected_graph_handled() {
+        // two disjoint triangles + isolated nodes
+        let mut b = GraphBuilder::new(8);
+        for (u, v) in [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)] {
+            b.add_edge(u, v, 1.0);
+        }
+        let g = b.build();
+        let p = partition(&g, &PartitionConfig::with_k(2));
+        assert_eq!(p.part.len(), 8);
+        assert!(p.imbalance <= 1.6);
+    }
+}

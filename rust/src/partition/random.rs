@@ -1,0 +1,43 @@
+//! Random partitioning — the RandomPart baseline of Table III.
+//!
+//! The paper notes RandomPart "is a hashing trick with the number of hash
+//! buckets B equal to the number of partitions k": nodes are assigned to
+//! parts uniformly at random, destroying the positional signal while
+//! keeping the parameter count identical to PosEmb 1-level.
+
+use crate::util::rng::Rng;
+
+/// Uniform random assignment of `n` nodes to `k` parts.
+pub fn random_partition(n: usize, k: usize, seed: u64) -> Vec<u32> {
+    assert!(k >= 1);
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| rng.gen_range(k) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_parts_roughly_uniformly() {
+        let part = random_partition(10_000, 8, 1);
+        let mut sizes = vec![0usize; 8];
+        for &p in &part {
+            sizes[p as usize] += 1;
+        }
+        for &s in &sizes {
+            assert!(s > 1000 && s < 1500, "size {s}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(random_partition(100, 4, 7), random_partition(100, 4, 7));
+        assert_ne!(random_partition(100, 4, 7), random_partition(100, 4, 8));
+    }
+
+    #[test]
+    fn k1_all_zero() {
+        assert!(random_partition(50, 1, 3).iter().all(|&p| p == 0));
+    }
+}

@@ -1,0 +1,223 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `artifacts/manifest.json` lists every lowered HLO module with its flat
+//! input ABI (name/shape/dtype in positional order) and output arity.
+//! The trainer never guesses an input position — it resolves names
+//! against this spec (`python/tests/test_model.py::
+//! test_input_specs_abi_is_stable` pins the producer side).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of an artifact input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One positional input of a lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered artifact (train or eval module of one experiment config).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Path of the HLO text file, relative to the manifest dir.
+    pub path: String,
+    /// "train" or "eval".
+    pub mode: String,
+    pub inputs: Vec<InputSpec>,
+    /// Number of trainable parameter tensors (first `num_params` inputs).
+    pub num_params: usize,
+    /// Output tuple arity.
+    pub num_outputs: usize,
+}
+
+impl ArtifactSpec {
+    /// Position of a named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input named {name}", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let root = Json::parse(text).context("manifest.json parse error")?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'artifacts' array"))?;
+        let mut artifacts = HashMap::new();
+        for a in arts {
+            let spec = Self::parse_artifact(a)?;
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    fn parse_artifact(a: &Json) -> Result<ArtifactSpec> {
+        let name = a
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing name"))?
+            .to_string();
+        let name2 = name.clone();
+        let field_str = move |k: &str| -> Result<String> {
+            Ok(a.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name2}: missing {k}"))?
+                .to_string())
+        };
+        let name3 = name.clone();
+        let field_num = move |k: &str| -> Result<usize> {
+            a.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("artifact {name3}: missing {k}"))
+        };
+        let mut inputs = Vec::new();
+        for i in a
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+        {
+            let iname = i
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("input missing name"))?
+                .to_string();
+            let shape: Vec<usize> = i
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("input {iname}: missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?;
+            let dtype = match i.get("dtype").and_then(Json::as_str) {
+                Some("f32") => Dtype::F32,
+                Some("i32") => Dtype::I32,
+                other => bail!("input {iname}: bad dtype {other:?}"),
+            };
+            inputs.push(InputSpec { name: iname, shape, dtype });
+        }
+        Ok(ArtifactSpec {
+            name,
+            path: field_str("path")?,
+            mode: field_str("mode")?,
+            inputs,
+            num_params: field_num("num_params")?,
+            num_outputs: field_num("num_outputs")?,
+        })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest ({} available); re-run `make artifacts`",
+                self.artifacts.len()
+            )
+        })
+    }
+
+    /// Does the manifest contain this artifact?
+    pub fn contains(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+
+    /// All artifact names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "x.train", "path": "x.train.hlo.txt", "mode": "train",
+         "inputs": [
+           {"name": "pos_0", "shape": [5, 8], "dtype": "f32"},
+           {"name": "z", "shape": [1, 40], "dtype": "i32"}
+         ],
+         "num_params": 1, "num_outputs": 4}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let a = m.get("x.train").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![5, 8]);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.input_index("z").unwrap(), 1);
+        assert!(a.input_index("nope").is_err());
+        assert_eq!(m.hlo_path(a), Path::new("/tmp/a/x.train.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "b"}]}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{}"#, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_mentions_make() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let err = m.get("missing").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn elements_product() {
+        let i = InputSpec { name: "a".into(), shape: vec![3, 4, 2], dtype: Dtype::F32 };
+        assert_eq!(i.elements(), 24);
+        let s = InputSpec { name: "s".into(), shape: vec![], dtype: Dtype::F32 };
+        assert_eq!(s.elements(), 1);
+    }
+}

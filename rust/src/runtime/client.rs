@@ -1,0 +1,167 @@
+//! `xla` crate wrapper: PJRT CPU client, compile-from-HLO-text with an
+//! executable cache, and host↔device tensor helpers.
+
+use super::artifact::{ArtifactSpec, Dtype, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A host-side tensor matched to an artifact input slot.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    /// Scalar f32 (rank-0).
+    pub fn scalar(x: f32) -> Self {
+        HostTensor::F32(vec![x], vec![])
+    }
+
+    /// Shape of the tensor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    /// Dtype tag.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    /// Check this tensor against an input spec.
+    pub fn check(&self, spec: &super::InputSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!("input {}: shape {:?} != spec {:?}", spec.name, self.shape(), spec.shape);
+        }
+        if self.dtype() != spec.dtype {
+            bail!("input {}: dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    /// Compiled executables keyed by artifact name.
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl RuntimeClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(RuntimeClient { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile the HLO text at `path` (no caching).
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))
+    }
+
+    /// Compile (or fetch from cache) the executable for `spec`.
+    pub fn load(
+        &self,
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&spec.name) {
+                return Ok(exe.clone());
+            }
+        }
+        let exe = std::sync::Arc::new(
+            self.compile_hlo_file(&manifest.hlo_path(spec))
+                .with_context(|| format!("loading artifact {}", spec.name))?,
+        );
+        self.cache.lock().unwrap().insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32(data, shape) => {
+                self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+            }
+            HostTensor::I32(data, shape) => {
+                self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+            }
+        };
+        buf.map_err(|e| anyhow!("upload: {e}"))
+    }
+
+    /// Upload a literal (e.g. a decomposed tuple element) to the device.
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_literal(None, lit).map_err(|e| anyhow!("upload_literal: {e}"))
+    }
+
+    /// Execute on device buffers; returns the flat output buffers
+    /// (the modules are lowered with `return_tuple=True`, so PJRT
+    /// returns one buffer per tuple element).
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = exe.execute_b(args).map_err(|e| anyhow!("execute: {e}"))?;
+        if out.is_empty() {
+            bail!("execute returned no replica output");
+        }
+        Ok(out.swap_remove(0))
+    }
+
+    /// Download a device buffer as f32 (works for rank-N f32 outputs).
+    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Download a scalar f32 output.
+    pub fn download_scalar(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
+        Ok(self.download_f32(buf)?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InputSpec;
+
+    #[test]
+    fn host_tensor_check() {
+        let spec = InputSpec { name: "x".into(), shape: vec![2, 3], dtype: Dtype::F32 };
+        let ok = HostTensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert!(ok.check(&spec).is_ok());
+        let bad_shape = HostTensor::F32(vec![0.0; 4], vec![2, 2]);
+        assert!(bad_shape.check(&spec).is_err());
+        let bad_dtype = HostTensor::I32(vec![0; 6], vec![2, 3]);
+        assert!(bad_dtype.check(&spec).is_err());
+    }
+
+    #[test]
+    fn scalar_shape_is_rank0() {
+        let s = HostTensor::scalar(1.5);
+        assert!(s.shape().is_empty());
+    }
+}

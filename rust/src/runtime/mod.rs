@@ -1,0 +1,20 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them
+//! on the request path. Python is never invoked here — artifacts are
+//! produced once by `make artifacts` (python/compile/aot.py) and this
+//! module is the only consumer.
+//!
+//! * [`artifact`] — `artifacts/manifest.json` schema: per-artifact input
+//!   specs (the ABI the train/eval HLO was lowered against).
+//! * [`client`] — `xla` crate wrapper: compile-from-text, executable
+//!   cache, host↔device tensor helpers.
+//!
+//! Hot-loop design: parameters and optimizer state live as `PjRtBuffer`s
+//! on the device; each training step consumes the previous step's output
+//! buffers directly (`execute_b`), so the per-step host traffic is one
+//! scalar (the loss).
+
+mod artifact;
+mod client;
+
+pub use artifact::{ArtifactSpec, Dtype, InputSpec, Manifest};
+pub use client::{HostTensor, RuntimeClient};

@@ -1,0 +1,103 @@
+//! Micro-benchmark harness for `harness = false` benches (criterion is
+//! unavailable offline). Warmup, timed iterations, mean/p50/p95 and
+//! throughput reporting; `--quick` env knob for CI runs.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    /// One-line report, optionally with a derived throughput
+    /// (`items / mean`).
+    pub fn report(&self, items: Option<(u64, &str)>) -> String {
+        let tp = items
+            .map(|(count, unit)| {
+                let per_sec = count as f64 / self.mean.as_secs_f64();
+                format!("  {:>12.0} {unit}/s", per_sec)
+            })
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10.3?} (p50 {:>10.3?}, p95 {:>10.3?}, n={}){}",
+            self.name, self.mean, self.p50, self.p95, self.iters, tp
+        )
+    }
+}
+
+/// Is quick mode on? (`BENCH_QUICK=1` → fewer iterations.)
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")
+}
+
+/// Run `f` repeatedly and collect timing statistics.
+///
+/// `f` should perform one logical operation; its return value is
+/// black-boxed to stop the optimizer eliding the work.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    let (warmup, min_iters, budget) = if quick() {
+        (1, 3, Duration::from_millis(200))
+    } else {
+        (2, 10, Duration::from_secs(2))
+    };
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 1000) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    BenchResult { name: name.to_string(), iters: samples.len(), mean, p50, p95 }
+}
+
+/// Optimizer barrier (stable-Rust std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let r = bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.iters >= 3);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn report_includes_throughput() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let r = bench("tp", || 1u32);
+        let line = r.report(Some((1000, "ops")));
+        assert!(line.contains("ops/s"));
+    }
+}

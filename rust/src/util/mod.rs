@@ -1,0 +1,21 @@
+//! In-tree utility substrates.
+//!
+//! The build is fully offline, so the usual ecosystem crates (rand,
+//! serde_json, criterion, proptest, tempfile, clap) are replaced by small
+//! purpose-built implementations:
+//!
+//! * [`rng`] — deterministic xoshiro256++ RNG with the sampling helpers
+//!   the partitioner/generators need.
+//! * [`json`] — a minimal JSON value type, serializer and recursive-
+//!   descent parser (artifact manifests, experiment configs, reports).
+//! * [`bench`] — the measurement harness behind `cargo bench`
+//!   (`harness = false` benches): warmup + timed iterations + stats.
+//! * [`proptest`] — a tiny property-testing driver: seeded random inputs,
+//!   shrink-free but reproducible (failing seed printed).
+//! * [`tempdir`] — RAII temp directories for tests.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod tempdir;

@@ -1,0 +1,62 @@
+//! Tiny property-testing driver (proptest is unavailable offline).
+//!
+//! `run_cases(n, seed, |rng| ...)` executes a property over `n` random
+//! inputs drawn from a seeded RNG; on failure the panic message includes
+//! the case seed so the exact input is reproducible with
+//! `run_single(seed, ...)`.
+
+use super::rng::Rng;
+
+/// Run `property` over `cases` independent seeded RNGs. Panics (with the
+/// failing case seed) if the property panics.
+pub fn run_cases(cases: usize, base_seed: u64, mut property: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let case_seed = base_seed.wrapping_mul(0x100_0000).wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from_u64(case_seed);
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run one failing case by its seed.
+pub fn run_single(case_seed: u64, mut property: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::seed_from_u64(case_seed);
+    property(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        run_cases(50, 1, |rng| {
+            let x = rng.gen_range(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            run_cases(50, 2, |rng| {
+                let x = rng.gen_range(10);
+                assert!(x != 7, "hit the bad value");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("seed"), "msg: {msg}");
+    }
+}

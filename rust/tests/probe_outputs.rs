@@ -1,0 +1,44 @@
+// Diagnostic: inspect PJRT output structure for a lowered artifact.
+// (Requires `make artifacts` for the smoke grid.)
+use poshashemb::runtime::{Dtype, HostTensor, Manifest, RuntimeClient};
+
+#[test]
+fn probe_eval_outputs() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return Ok(());
+    }
+    let client = RuntimeClient::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    for name in ["arxiv_gcn_posemb3.eval", "arxiv_gcn_posemb3.train"] {
+        if !manifest.contains(name) { continue; }
+        let spec = manifest.get(name)?;
+        let exe = client.compile_hlo_file(&manifest.hlo_path(spec))?;
+        let mut bufs = Vec::new();
+        for i in &spec.inputs {
+            let n: usize = i.shape.iter().product::<usize>().max(1);
+            let t = match i.dtype {
+                Dtype::F32 => HostTensor::F32(vec![0.01; n], i.shape.clone()),
+                Dtype::I32 => HostTensor::I32(vec![0; n], i.shape.clone()),
+            };
+            bufs.push(client.upload(&t)?);
+        }
+        let outs = exe.execute_b::<&xla::PjRtBuffer>(&bufs.iter().collect::<Vec<_>>())?;
+        println!("{name}: outer len {}", outs.len());
+        for (i, replica) in outs.iter().enumerate() {
+            println!("  [{i}] inner len {} (expect {} outputs)", replica.len(), spec.num_outputs);
+            for (j, b) in replica.iter().enumerate().take(3) {
+                println!("    [{i}][{j}] shape {:?}", b.on_device_shape());
+            }
+        }
+        // packed ABI: both train and eval roots are single f32 arrays —
+        // downloadable directly (tuple buffers would abort in 0.5.1).
+        let lit = outs[0][0].to_literal_sync()?;
+        println!("  literal size_bytes {}", lit.size_bytes());
+        let v = lit.to_vec::<f32>()?;
+        assert!(!v.is_empty());
+        assert_eq!(outs[0].len(), spec.num_outputs);
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Property-based tests over the substrates (in-tree proptest driver:
+//! seeded random cases, failing seed printed for reproduction).
+
+use poshashemb::embedding::{compose_embeddings, init_params, EmbeddingMethod, EmbeddingPlan};
+use poshashemb::graph::{planted_partition, GraphBuilder, PlantedPartitionConfig};
+use poshashemb::hashing::HashedIndices;
+use poshashemb::partition::{
+    edge_cut, partition, random_partition, Hierarchy, HierarchyConfig, PartitionConfig,
+};
+use poshashemb::util::json::Json;
+use poshashemb::util::proptest::run_cases;
+use poshashemb::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> poshashemb::graph::CsrGraph {
+    let n = 20 + rng.gen_range(400);
+    let m = n + rng.gen_range(4 * n);
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..m {
+        let u = rng.gen_range(n) as u32;
+        let v = rng.gen_range(n) as u32;
+        b.add_edge(u, v, 1.0 + rng.gen_f64() as f32);
+    }
+    b.build()
+}
+
+#[test]
+fn prop_builder_output_is_always_valid_csr() {
+    run_cases(40, 0xA, |rng| {
+        let g = random_graph(rng);
+        g.validate().expect("invalid CSR");
+    });
+}
+
+#[test]
+fn prop_partition_covers_and_respects_k() {
+    run_cases(25, 0xB, |rng| {
+        let g = random_graph(rng);
+        let k = 2 + rng.gen_range(7);
+        let p = partition(&g, &PartitionConfig { k, seed: rng.next_u64(), ..Default::default() });
+        assert_eq!(p.part.len(), g.num_nodes());
+        assert!(p.part.iter().all(|&x| (x as usize) < k));
+        // recomputed cut matches the reported cut
+        assert!((edge_cut(&g, &p.part) - p.edge_cut).abs() < 1e-3);
+    });
+}
+
+#[test]
+fn prop_partition_beats_random_on_homophilous_graphs() {
+    run_cases(10, 0xC, |rng| {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n: 600 + rng.gen_range(600),
+            communities: 4 + rng.gen_range(4),
+            intra_degree: 10.0,
+            inter_degree: 1.5,
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let k = 4;
+        let p = partition(&g, &PartitionConfig::with_k(k));
+        let rcut = edge_cut(&g, &random_partition(g.num_nodes(), k, rng.next_u64()));
+        assert!(p.edge_cut < rcut, "multilevel {} !< random {rcut}", p.edge_cut);
+    });
+}
+
+#[test]
+fn prop_hierarchy_parent_child_consistent() {
+    run_cases(12, 0xD, |rng| {
+        let g = random_graph(rng);
+        let k = 2 + rng.gen_range(3);
+        let levels = 1 + rng.gen_range(3);
+        let h = Hierarchy::build(&g, &HierarchyConfig::new(k, levels));
+        h.validate().expect("inconsistent hierarchy");
+        assert_eq!(h.total_partitions(), (1..=levels).map(|j| k.pow(j as u32)).sum::<usize>());
+    });
+}
+
+#[test]
+fn prop_hash_indices_in_range_all_shapes() {
+    run_cases(50, 0xE, |rng| {
+        let n = 1 + rng.gen_range(3000);
+        let h = 1 + rng.gen_range(4);
+        let b = 1 + rng.gen_range(512) as u32;
+        let hi = HashedIndices::build(n, h, b, rng.next_u64());
+        for row in &hi.indices {
+            assert_eq!(row.len(), n);
+            assert!(row.iter().all(|&x| x < b));
+        }
+    });
+}
+
+#[test]
+fn prop_plan_savings_matches_param_count() {
+    run_cases(30, 0xF, |rng| {
+        let n = 100 + rng.gen_range(2000);
+        let d = [8usize, 16, 32][rng.gen_range(3)];
+        let b = 1 + rng.gen_range(n / 2);
+        let method = match rng.gen_range(4) {
+            0 => EmbeddingMethod::Full,
+            1 => EmbeddingMethod::HashTrick { buckets: b },
+            2 => EmbeddingMethod::Bloom { buckets: b, h: 2 },
+            _ => EmbeddingMethod::HashEmb { buckets: b, h: 2 },
+        };
+        let plan = EmbeddingPlan::build(n, d, &method, None, rng.next_u64());
+        let expect = match &method {
+            EmbeddingMethod::Full => n * d,
+            EmbeddingMethod::HashTrick { buckets } | EmbeddingMethod::Bloom { buckets, .. } => {
+                buckets * d
+            }
+            EmbeddingMethod::HashEmb { buckets, h } => buckets * d + n * h,
+            _ => unreachable!(),
+        };
+        assert_eq!(plan.num_params(), expect);
+        let s = plan.savings();
+        assert!((s - (1.0 - expect as f64 / (n * d) as f64)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_composition_is_linear_in_tables() {
+    // v(2 * params) == 2 * v(params) for weight-linear methods
+    run_cases(15, 0x10, |rng| {
+        let n = 50 + rng.gen_range(200);
+        let plan = EmbeddingPlan::build(
+            n,
+            16,
+            &EmbeddingMethod::Bloom { buckets: 1 + rng.gen_range(40), h: 2 },
+            None,
+            rng.next_u64(),
+        );
+        let params = init_params(&plan, rng.next_u64());
+        let v1 = compose_embeddings(&plan, &params);
+        let mut doubled = params.clone();
+        for name in doubled.names().to_vec() {
+            for x in doubled.get_mut(&name) {
+                *x *= 2.0;
+            }
+        }
+        let v2 = compose_embeddings(&plan, &doubled);
+        for (a, b) in v1.iter().zip(v2.iter()) {
+            assert!((2.0 * a - b).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    run_cases(60, 0x11, |rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth > 2 { rng.gen_range(4) } else { rng.gen_range(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.gen_bool(0.5)),
+                2 => Json::Num((rng.gen_f64() * 2e6).round() / 2.0 - 5e5),
+                3 => Json::Str(format!("s{}-\"x\"\n", rng.gen_range(1000))),
+                4 => Json::Arr((0..rng.gen_range(5)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.gen_range(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 0);
+        let s = v.to_string();
+        let back = Json::parse(&s).expect("reparse");
+        assert_eq!(v, back, "roundtrip mismatch for {s}");
+    });
+}
