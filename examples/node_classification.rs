@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         epochs: Some(epochs),
         eval_every: 5,
         patience: 0, // run to completion so the loss curve is full length
-        verbose: false,
+        ..Default::default()
     };
 
     let mut summaries = Vec::new();
@@ -54,12 +54,20 @@ fn main() -> anyhow::Result<()> {
         "PosHashEmb Intra(h=2): acc {:.3} with {} params ({:.1}% savings vs FullEmb)",
         pos.test_metric, pos.memory.params, pos.memory.savings_pct
     );
-    println!("FullEmb baseline     : acc {:.3} with {} params", full.test_metric, full.memory.params);
-    let delta = pos.test_metric - full.test_metric;
     println!(
-        "accuracy delta {delta:+.3} at {:.0}x parameter reduction — {}",
-        full.memory.params as f64 / pos.memory.params as f64,
-        if delta >= -0.01 { "paper claim HOLDS" } else { "below paper claim" }
+        "FullEmb baseline     : acc {:.3} with {} params",
+        full.test_metric,
+        full.memory.params
+    );
+    let delta = pos.test_metric - full.test_metric;
+    let verdict = if delta >= -0.01 {
+        "paper claim HOLDS"
+    } else {
+        "below paper claim"
+    };
+    println!(
+        "accuracy delta {delta:+.3} at {:.0}x parameter reduction — {verdict}",
+        full.memory.params as f64 / pos.memory.params as f64
     );
     Ok(())
 }

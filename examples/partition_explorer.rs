@@ -20,8 +20,15 @@ fn main() {
         ..Default::default()
     });
     println!("SBM: n={} m={}", sbm.num_nodes(), sbm.num_edges());
-    println!("| {:>4} | {:>10} | {:>10} | {:>9} | {:>7} | {:>9} |",
-        "k", "cut", "rand cut", "imbalance", "purity", "time");
+    println!(
+        "| {:>4} | {:>10} | {:>10} | {:>9} | {:>7} | {:>9} |",
+        "k",
+        "cut",
+        "rand cut",
+        "imbalance",
+        "purity",
+        "time"
+    );
     for k in [2usize, 4, 8, 16, 32, 64] {
         let t = Instant::now();
         let p = partition(&sbm, &PartitionConfig::with_k(k));
@@ -33,9 +40,15 @@ fn main() {
             *counts[fp as usize].entry(membership[i]).or_insert(0usize) += 1;
         }
         let pure: usize = counts.iter().map(|c| c.values().max().copied().unwrap_or(0)).sum();
-        println!("| {:>4} | {:>10.0} | {:>10.0} | {:>9.3} | {:>6.1}% | {:>8.1?} |",
-            k, p.edge_cut, rand_cut, p.imbalance,
-            100.0 * pure as f64 / sbm.num_nodes() as f64, elapsed);
+        println!(
+            "| {:>4} | {:>10.0} | {:>10.0} | {:>9.3} | {:>6.1}% | {:>8.1?} |",
+            k,
+            p.edge_cut,
+            rand_cut,
+            p.imbalance,
+            100.0 * pure as f64 / sbm.num_nodes() as f64,
+            elapsed
+        );
     }
 
     let rg = rmat(&RmatConfig { scale: 14, edge_factor: 8, ..Default::default() });
@@ -44,7 +57,13 @@ fn main() {
         let t = Instant::now();
         let p = partition(&rg, &PartitionConfig::with_k(k));
         let rand_cut = edge_cut(&rg, &random_partition(rg.num_nodes(), k, 1));
-        println!("k={k:<3} cut={:.0} (random {:.0}, {:.1}x better) imbalance={:.3} [{:?}]",
-            p.edge_cut, rand_cut, rand_cut / p.edge_cut.max(1.0), p.imbalance, t.elapsed());
+        println!(
+            "k={k:<3} cut={:.0} (random {:.0}, {:.1}x better) imbalance={:.3} [{:?}]",
+            p.edge_cut,
+            rand_cut,
+            rand_cut / p.edge_cut.max(1.0),
+            p.imbalance,
+            t.elapsed()
+        );
     }
 }

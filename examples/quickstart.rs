@@ -1,12 +1,12 @@
 //! Quickstart: the PosHashEmb pipeline in five steps, no artifacts
-//! required (uses the pure-Rust reference composition).
+//! required (pure Rust: reference oracle + parallel compose engine).
 //!
 //! ```bash
-//! cargo run --release --offline --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use poshashemb::embedding::{
-    compose_embeddings, init_params, EmbeddingMethod, EmbeddingPlan, MemoryReport,
+    compose_embeddings, init_params, ComposeEngine, EmbeddingMethod, EmbeddingPlan, MemoryReport,
 };
 use poshashemb::graph::{planted_partition, GraphStats, PlantedPartitionConfig};
 use poshashemb::partition::{Hierarchy, HierarchyConfig};
@@ -22,15 +22,23 @@ fn main() {
         ..Default::default()
     });
     let stats = GraphStats::compute(&graph, Some(&communities));
-    println!("graph: {} nodes, {} edges, homophily {:.3}",
-        stats.num_nodes, stats.num_edges, stats.edge_homophily.unwrap());
+    println!(
+        "graph: {} nodes, {} edges, homophily {:.3}",
+        stats.num_nodes,
+        stats.num_edges,
+        stats.edge_homophily.unwrap()
+    );
 
     // 2. Hierarchical k-way partitioning (paper Algorithm 1, line 2).
     //    k = ⌈n^(1/4)⌉ = 10, three levels -> m = [10, 100, 1000].
     let cfg = HierarchyConfig::from_alpha(graph.num_nodes(), 0.25, 3);
     let hierarchy = Hierarchy::build(&graph, &cfg);
-    println!("hierarchy: k={} m={:?} ({} partitions total)",
-        hierarchy.k, hierarchy.m, hierarchy.total_partitions());
+    println!(
+        "hierarchy: k={} m={:?} ({} partitions total)",
+        hierarchy.k,
+        hierarchy.m,
+        hierarchy.total_partitions()
+    );
 
     // 3. The paper's default method: PosHashEmb Intra (h=2).
     let (method, _) = EmbeddingMethod::paper_default_intra(graph.num_nodes());
@@ -44,11 +52,22 @@ fn main() {
     let full = EmbeddingPlan::build(graph.num_nodes(), d, &EmbeddingMethod::Full, None, 0);
     println!("{}", MemoryReport::from_plan(&full).row());
 
-    // 5. Compose node embeddings (v_i = p_i + x_i, Eq. 7).
+    // 5. Compose node embeddings (v_i = p_i + x_i, Eq. 7) with the
+    //    blocked parallel engine, and verify it against the scalar oracle.
     let params = init_params(&plan, 42);
-    let v = compose_embeddings(&plan, &params);
-    println!("\ncomposed {} x {} embedding matrix; v[0][..4] = {:?}",
-        graph.num_nodes(), d, &v[..4]);
+    let engine = ComposeEngine::new(&plan);
+    let v = engine.compose_all(&params);
+    let oracle = compose_embeddings(&plan, &params);
+    assert_eq!(v, oracle, "engine must be bit-identical to the reference");
+    let sample: Vec<u32> = vec![0, 17, 4242, 9999];
+    let vb = engine.compose_batch(&params, &sample);
+    assert_eq!(&vb[..d], &v[..d], "batch row 0 must match full row 0");
+    println!(
+        "\ncomposed {} x {} embedding matrix; v[0][..4] = {:?}",
+        graph.num_nodes(),
+        d,
+        &v[..4]
+    );
 
     // Homophily check: same-partition nodes have more-similar embeddings.
     let z0 = &plan.position.as_ref().unwrap().z[0];

@@ -1,48 +1,69 @@
-//! L3 perf microbench: embedding-plan construction and the pure-Rust
-//! reference composition (host-side baseline the HLO path is compared
-//! against in EXPERIMENTS.md §Perf).
+//! Embedding-compose microbench: the scalar reference oracle vs the
+//! blocked rayon `ComposeEngine` (full-matrix and minibatch paths),
+//! across every `EmbeddingMethod` variant.
+//!
+//! Default scale is the acceptance configuration n = 100k, d = 64; set
+//! `BENCH_QUICK=1` (CI smoke) for a reduced n with minimal iterations.
+//! The summary line reports the parallel-vs-reference speedup — expected
+//! ≥ 4x on a multi-core host for the table-based methods.
 
-use poshashemb::embedding::{compose_embeddings, init_params, EmbeddingMethod, EmbeddingPlan};
+use poshashemb::bench_harness::{bench_compose, ComposeBenchRecord};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
 use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
 use poshashemb::partition::{Hierarchy, HierarchyConfig};
-use poshashemb::util::bench::{bench, black_box, section};
+use poshashemb::util::bench::{quick, section};
 
 fn main() {
-    let n = 50_000;
+    let n: usize = if quick() { 20_000 } else { 100_000 };
     let d = 64;
+    let batch = 4096;
+    let k = (n as f64).powf(0.25).ceil() as usize; // paper Eq. 8, alpha = 1/4
+    let c = ((n as f64 / k as f64).sqrt()).ceil() as usize;
+    let b = c * k;
+
+    eprintln!("building graph + 3-level hierarchy (n={n}, k={k})...");
     let (g, _) = planted_partition(&PlantedPartitionConfig {
         n,
-        communities: 32,
-        intra_degree: 12.0,
+        communities: 64,
+        intra_degree: 10.0,
         inter_degree: 2.0,
         seed: 5,
-            ..Default::default()
+        ..Default::default()
     });
-    let hier = Hierarchy::build(&g, &HierarchyConfig::new(15, 3));
+    let hier = Hierarchy::build(&g, &HierarchyConfig::new(k, 3));
 
-    section("plan construction (n=50k, d=64)");
-    for (name, method) in [
+    let methods: Vec<(&str, EmbeddingMethod)> = vec![
         ("full", EmbeddingMethod::Full),
-        ("hashemb", EmbeddingMethod::HashEmb { buckets: 2048, h: 2 }),
-        ("intra_h2", EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 58, h: 2 }),
-    ] {
-        let r = bench(&format!("plan {name}"), || {
-            black_box(EmbeddingPlan::build(n, d, &method, Some(&hier), 0))
-        });
-        println!("{}", r.report(Some((n as u64, "nodes"))));
-    }
-
-    section("reference composition (n=50k, d=64)");
-    for (name, method) in [
-        ("full", EmbeddingMethod::Full),
+        ("hashtrick", EmbeddingMethod::HashTrick { buckets: b }),
+        ("bloom", EmbeddingMethod::Bloom { buckets: b, h: 2 }),
+        ("hashemb", EmbeddingMethod::HashEmb { buckets: b, h: 2 }),
+        ("dhe", EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 32, layers: 1 }),
+        ("posemb1", EmbeddingMethod::PosEmb { levels: 1 }),
         ("posemb3", EmbeddingMethod::PosEmb { levels: 3 }),
-        ("intra_h2", EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 58, h: 2 }),
-    ] {
-        let plan = EmbeddingPlan::build(n, d, &method, Some(&hier), 0);
-        let params = init_params(&plan, 1);
-        let r = bench(&format!("compose {name}"), || {
-            black_box(compose_embeddings(&plan, &params))
-        });
-        println!("{}", r.report(Some(((n * d) as u64, "elements"))));
+        ("randompart", EmbeddingMethod::RandomPart { parts: k }),
+        ("posfullemb3", EmbeddingMethod::PosFullEmb { levels: 3 }),
+        ("inter_h2", EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: b, h: 2 }),
+        ("intra_h2", EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h: 2 }),
+    ];
+
+    let mut all: Vec<ComposeBenchRecord> = Vec::new();
+    for (tag, method) in &methods {
+        section(&format!("compose {tag} (n={n}, d={d})"));
+        let hr = method.needs_hierarchy().then_some(&hier);
+        let plan = EmbeddingPlan::build(n, d, method, hr, 0);
+        let records = bench_compose(&plan, batch);
+        for r in &records {
+            println!("{}", r.row());
+        }
+        all.extend(records);
     }
+
+    section("summary: parallel compose_all speedup vs reference");
+    for r in all.iter().filter(|r| r.path == "parallel") {
+        let s = r.speedup_vs_reference.unwrap_or(0.0);
+        let verdict = if s >= 4.0 { "PASS (>= 4x)" } else { "below 4x" };
+        println!("{:<26} {s:>6.2}x  {verdict}", r.method);
+    }
+    let threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+    println!("(host parallelism: {threads} threads; the 4x target assumes a multi-core host)");
 }

@@ -3,7 +3,9 @@
 //! ≥ 1M edges/s end-to-end for k-way partitioning.
 
 use poshashemb::graph::{planted_partition, rmat, PlantedPartitionConfig, RmatConfig};
-use poshashemb::partition::{heavy_edge_matching, partition, Hierarchy, HierarchyConfig, PartitionConfig};
+use poshashemb::partition::{
+    heavy_edge_matching, partition, Hierarchy, HierarchyConfig, PartitionConfig,
+};
 use poshashemb::util::bench::{bench, black_box, section};
 use poshashemb::util::rng::Rng;
 
@@ -14,7 +16,7 @@ fn main() {
         intra_degree: 12.0,
         inter_degree: 2.0,
         seed: 3,
-            ..Default::default()
+        ..Default::default()
     });
     let edges = sbm.num_edges() as u64;
     section(&format!("partitioner on SBM n=50k m={edges}"));

@@ -1,15 +1,25 @@
-//! Shared experiment harness for the benches and the `experiment` CLI
-//! subcommand: runs groups of experiments over multiple seeds and prints
-//! paper-style tables (mean ± std per cell).
+//! Shared experiment harness for the benches and the CLI:
+//!
+//! * [`Harness`] + table printers — runs groups of experiments over
+//!   multiple seeds through the PJRT runtime and prints paper-style
+//!   tables (mean ± std per cell). Needs the `pjrt` feature at runtime.
+//! * [`bench_compose`] — host-side compose benchmarking shared by
+//!   `benches/embedding_compose.rs` and the `poshashemb compose`
+//!   subcommand: reference oracle vs [`ComposeEngine`] full-matrix vs
+//!   minibatch paths, with serde-serializable records for CI smoke.
 //!
 //! Seeds default to 2 and are controlled with `POSHASH_SEEDS`; epochs can
 //! be capped with `POSHASH_EPOCHS` (useful for CI smoke runs).
 
 use crate::config::{full_grid, Experiment};
 use crate::coordinator::{run_experiment, TrainOptions, TrainOutcome};
+use crate::embedding::{compose_embeddings, init_params, ComposeEngine, EmbeddingPlan};
 use crate::metrics::fmt_cell;
 use crate::runtime::{Manifest, RuntimeClient};
+use crate::util::bench::{bench, black_box, BenchResult};
+use crate::util::rng::Rng;
 use anyhow::Result;
+use serde::Serialize;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -40,7 +50,7 @@ impl Harness {
                 opts.patience = p;
             }
         }
-        opts.verbose = std::env::var("POSHASH_VERBOSE").map_or(false, |v| v == "1");
+        opts.verbose = std::env::var("POSHASH_VERBOSE").is_ok_and(|v| v == "1");
         Ok(Harness { client, manifest, opts, seeds: (0..num_seeds as u64).collect() })
     }
 
@@ -49,7 +59,7 @@ impl Harness {
         full_grid()
             .into_iter()
             .filter(|e| e.group == group)
-            .filter(|e| dataset.map_or(true, |d| e.dataset == d))
+            .filter(|e| dataset.is_none_or(|d| e.dataset == d))
             .filter(|e| self.manifest.contains(&format!("{}.train", e.name)))
             .collect()
     }
@@ -174,14 +184,127 @@ pub fn rows_from_outcomes(
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// Host-side compose benchmarking (no PJRT needed)
+// ---------------------------------------------------------------------
+
+/// One measured compose path, serializable for CI smoke artifacts.
+#[derive(Debug, Clone, Serialize)]
+pub struct ComposeBenchRecord {
+    /// Method display name (paper table naming).
+    pub method: String,
+    /// "reference" | "parallel" | "batch".
+    pub path: String,
+    pub n: usize,
+    pub d: usize,
+    /// Rows composed per invocation (n, or the batch size).
+    pub rows: usize,
+    pub iters: usize,
+    pub mean_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    /// Composed elements (rows × d) per second.
+    pub elements_per_sec: f64,
+    /// Mean-time ratio vs the reference path, normalized per row
+    /// (so the batch path is comparable). `None` for the reference row.
+    pub speedup_vs_reference: Option<f64>,
+}
+
+impl ComposeBenchRecord {
+    fn from_result(plan: &EmbeddingPlan, path: &str, rows: usize, r: &BenchResult) -> Self {
+        let elements = (rows * plan.d) as f64;
+        ComposeBenchRecord {
+            method: plan.method.name(),
+            path: path.to_string(),
+            n: plan.n,
+            d: plan.d,
+            rows,
+            iters: r.iters,
+            mean_ns: r.mean.as_nanos() as u64,
+            p50_ns: r.p50.as_nanos() as u64,
+            p95_ns: r.p95.as_nanos() as u64,
+            elements_per_sec: elements / r.mean.as_secs_f64(),
+            speedup_vs_reference: None,
+        }
+    }
+
+    /// Human-readable report line.
+    pub fn row(&self) -> String {
+        let speedup = self
+            .speedup_vs_reference
+            .map(|s| format!("  {s:>6.2}x vs reference"))
+            .unwrap_or_default();
+        format!(
+            "{:<26} {:<9} rows={:<7} mean {:>10.3?} ({:>12.0} elem/s){speedup}",
+            self.method,
+            self.path,
+            self.rows,
+            std::time::Duration::from_nanos(self.mean_ns),
+            self.elements_per_sec
+        )
+    }
+}
+
+/// Benchmark the three compose paths on one plan: the scalar reference
+/// oracle, `ComposeEngine::compose_all`, and `ComposeEngine::
+/// compose_batch` over `batch` uniformly-sampled node ids.
+pub fn bench_compose(plan: &EmbeddingPlan, batch: usize) -> Vec<ComposeBenchRecord> {
+    let params = init_params(plan, 1);
+    let engine = ComposeEngine::new(plan);
+    let n = plan.n;
+    let label = plan.method.name();
+
+    let reference = bench(&format!("{label} reference"), || {
+        black_box(compose_embeddings(plan, &params))
+    });
+    let parallel =
+        bench(&format!("{label} parallel"), || black_box(engine.compose_all(&params)));
+    let batch = batch.clamp(1, n);
+    let mut rng = Rng::seed_from_u64(0xBA7C);
+    let ids: Vec<u32> = (0..batch).map(|_| rng.gen_range(n) as u32).collect();
+    let batched =
+        bench(&format!("{label} batch"), || black_box(engine.compose_batch(&params, &ids)));
+
+    // per-row normalized speedups vs the reference path
+    let ref_row_secs = reference.mean.as_secs_f64() / n as f64;
+    let rec_ref = ComposeBenchRecord::from_result(plan, "reference", n, &reference);
+    let mut rec_par = ComposeBenchRecord::from_result(plan, "parallel", n, &parallel);
+    rec_par.speedup_vs_reference =
+        Some(ref_row_secs * n as f64 / parallel.mean.as_secs_f64().max(1e-12));
+    let mut rec_bat = ComposeBenchRecord::from_result(plan, "batch", batch, &batched);
+    rec_bat.speedup_vs_reference =
+        Some(ref_row_secs * batch as f64 / batched.mean.as_secs_f64().max(1e-12));
+    vec![rec_ref, rec_par, rec_bat]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::embedding::EmbeddingMethod;
 
     #[test]
     fn short_formatting() {
         assert_eq!(short(42), "42");
         assert_eq!(short(12_000), "12k");
         assert_eq!(short(3_400_000), "3.4M");
+    }
+
+    #[test]
+    fn bench_compose_produces_three_serializable_records() {
+        crate::util::bench::set_quick(true);
+        let plan =
+            EmbeddingPlan::build(400, 8, &EmbeddingMethod::HashEmb { buckets: 32, h: 2 }, None, 0);
+        let recs = bench_compose(&plan, 64);
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].path, "reference");
+        assert_eq!(recs[1].path, "parallel");
+        assert_eq!(recs[2].path, "batch");
+        assert_eq!(recs[2].rows, 64);
+        assert!(recs[1].speedup_vs_reference.is_some());
+        let json = serde_json::to_string(&recs).unwrap();
+        assert!(json.contains("\"elements_per_sec\""), "json: {json}");
+        for r in &recs {
+            assert!(r.row().contains("elem/s"));
+        }
     }
 }

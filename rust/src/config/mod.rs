@@ -139,7 +139,8 @@ pub fn full_grid() -> Vec<Experiment> {
         for model in model_pairs(dataset) {
             // --- Table III / IV ------------------------------------------------
             out.push(exp(dataset, model, "full", EmbeddingMethod::Full, k, "t3"));
-            out.push(exp(dataset, model, "posemb1", EmbeddingMethod::PosEmb { levels: 1 }, k, "t3"));
+            let posemb1 = EmbeddingMethod::PosEmb { levels: 1 };
+            out.push(exp(dataset, model, "posemb1", posemb1, k, "t3"));
             out.push(exp(
                 dataset,
                 model,
@@ -156,8 +157,10 @@ pub fn full_grid() -> Vec<Experiment> {
                 k,
                 "t3",
             ));
-            out.push(exp(dataset, model, "posemb2", EmbeddingMethod::PosEmb { levels: 2 }, k, "t4"));
-            out.push(exp(dataset, model, "posemb3", EmbeddingMethod::PosEmb { levels: 3 }, k, "t4"));
+            let posemb2 = EmbeddingMethod::PosEmb { levels: 2 };
+            out.push(exp(dataset, model, "posemb2", posemb2, k, "t4"));
+            let posemb3 = EmbeddingMethod::PosEmb { levels: 3 };
+            out.push(exp(dataset, model, "posemb3", posemb3, k, "t4"));
             // --- Table V -------------------------------------------------------
             out.push(exp(
                 dataset,
@@ -421,11 +424,8 @@ mod tests {
     #[test]
     fn dhe_excluded_on_products() {
         let grid = full_grid();
-        assert!(!grid
-            .iter()
-            .any(|e| e.dataset == "synth-products" && matches!(e.method, EmbeddingMethod::Dhe { .. })));
-        assert!(grid
-            .iter()
-            .any(|e| e.dataset == "synth-arxiv" && matches!(e.method, EmbeddingMethod::Dhe { .. })));
+        let is_dhe = |e: &Experiment| matches!(e.method, EmbeddingMethod::Dhe { .. });
+        assert!(!grid.iter().any(|e| e.dataset == "synth-products" && is_dhe(e)));
+        assert!(grid.iter().any(|e| e.dataset == "synth-arxiv" && is_dhe(e)));
     }
 }

@@ -9,7 +9,7 @@ use crate::util::rng::Rng;
 /// GNN parameter shapes in ABI order (mirrors `model.py::gnn_param_specs`).
 pub fn gnn_param_shapes(model: ModelKind, d: usize, classes: usize) -> Vec<TableShape> {
     let mut dims = vec![d];
-    dims.extend(std::iter::repeat(HIDDEN).take(NUM_LAYERS - 1));
+    dims.extend(std::iter::repeat_n(HIDDEN, NUM_LAYERS - 1));
     dims.push(classes);
     let mut out = Vec::new();
     for l in 0..NUM_LAYERS {

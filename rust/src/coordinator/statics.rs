@@ -14,7 +14,11 @@ use crate::embedding::EmbeddingPlan;
 use crate::runtime::HostTensor;
 
 /// Build all named static tensors for (dataset, model, plan).
-pub fn build_statics(ds: &Dataset, model: ModelKind, plan: &EmbeddingPlan) -> Vec<(String, HostTensor)> {
+pub fn build_statics(
+    ds: &Dataset,
+    model: ModelKind,
+    plan: &EmbeddingPlan,
+) -> Vec<(String, HostTensor)> {
     let mut out = Vec::new();
     let n = ds.graph.num_nodes();
     // embedding statics (ABI order: z, node_idx, dhe_enc)
@@ -148,7 +152,8 @@ mod tests {
     #[test]
     fn coo_shapes_match_graph() {
         let ds = small_ds();
-        let plan = EmbeddingPlan::build(500, 64, &EmbeddingMethod::HashTrick { buckets: 32 }, None, 0);
+        let plan =
+            EmbeddingPlan::build(500, 64, &EmbeddingMethod::HashTrick { buckets: 32 }, None, 0);
         let statics = build_statics(&ds, ModelKind::Sage, &plan);
         let src = statics.iter().find(|(n, _)| n == "src").unwrap();
         assert_eq!(src.1.shape(), &[ds.graph.num_adjacency_entries()]);

@@ -7,15 +7,21 @@
 //! is ONE flat f32 vector. The train HLO maps `state -> state'`, so the
 //! hot loop feeds each output buffer straight back as the next input:
 //! zero host traffic except the loss probe.
+//!
+//! Host-side compose wiring: before uploading the initial state the
+//! trainer (optionally, on by default) cross-checks the blocked
+//! [`ComposeEngine`](crate::embedding::ComposeEngine) against the scalar
+//! reference oracle on the exact plan being trained, so engine drift
+//! aborts a run instead of silently diverging from what the HLO computes.
 
 use super::params::init_full_params;
 use super::statics::build_statics;
 use crate::config::{materialize, Experiment};
 use crate::data::{Splits, TaskKind};
-use crate::embedding::MemoryReport;
+use crate::embedding::{compose, MemoryReport};
 use crate::metrics::{accuracy, mean_roc_auc};
-use crate::runtime::{HostTensor, Manifest, RuntimeClient};
-use anyhow::{bail, Context, Result};
+use crate::runtime::{DeviceBuffer, Executable, HostTensor, Manifest, RuntimeClient};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// Knobs for a training run.
 #[derive(Debug, Clone)]
@@ -28,11 +34,19 @@ pub struct TrainOptions {
     pub patience: usize,
     /// Print progress lines.
     pub verbose: bool,
+    /// Cross-check ComposeEngine vs the reference oracle at startup.
+    pub verify_compose: bool,
 }
 
 impl Default for TrainOptions {
     fn default() -> Self {
-        TrainOptions { epochs: None, eval_every: 5, patience: 6, verbose: false }
+        TrainOptions {
+            epochs: None,
+            eval_every: 5,
+            patience: 6,
+            verbose: false,
+            verify_compose: true,
+        }
     }
 }
 
@@ -91,6 +105,10 @@ pub fn run_experiment(
 
     // ---- packed initial state ----
     let store = init_full_params(&plan, e.model, classes, seed);
+    if opts.verify_compose {
+        compose::self_check(&plan, &store, 1e-5)
+            .map_err(|msg| anyhow!("{}: compose engine self-check failed: {msg}", e.name))?;
+    }
     let num_p = store.names().len();
     if num_p != train_spec.num_params {
         bail!(
@@ -148,15 +166,14 @@ pub fn run_experiment(
     let mut epochs_run = 0usize;
 
     for epoch in 0..epochs {
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(static_bufs.len() + 3);
+        let mut args: Vec<&DeviceBuffer> = Vec::with_capacity(static_bufs.len() + 3);
         args.push(&state);
         args.extend(static_bufs.iter());
         args.push(&labels_buf);
         args.push(&mask_buf);
-        let mut outs = train_exe
-            .execute_b::<&xla::PjRtBuffer>(&args)
-            .map_err(|err| anyhow::anyhow!("train step: {err}"))?
-            .swap_remove(0);
+        let mut outs = client
+            .execute(&train_exe, &args)
+            .map_err(|err| anyhow!("{}: train step: {err}", e.name))?;
         if outs.len() != 1 {
             bail!("{}: expected 1 state output, got {}", e.name, outs.len());
         }
@@ -215,17 +232,14 @@ pub fn run_experiment(
 
 fn run_eval(
     client: &RuntimeClient,
-    eval_exe: &xla::PjRtLoadedExecutable,
-    state: &xla::PjRtBuffer,
-    static_bufs: &[xla::PjRtBuffer],
+    eval_exe: &Executable,
+    state: &DeviceBuffer,
+    static_bufs: &[DeviceBuffer],
 ) -> Result<Vec<f32>> {
-    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + static_bufs.len());
+    let mut args: Vec<&DeviceBuffer> = Vec::with_capacity(1 + static_bufs.len());
     args.push(state);
     args.extend(static_bufs.iter());
-    let outs = eval_exe
-        .execute_b::<&xla::PjRtBuffer>(&args)
-        .map_err(|err| anyhow::anyhow!("eval step: {err}"))?
-        .swap_remove(0);
+    let outs = client.execute(eval_exe, &args).map_err(|err| anyhow!("eval step: {err}"))?;
     client.download_f32(&outs[0])
 }
 

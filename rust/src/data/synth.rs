@@ -81,10 +81,11 @@ impl Dataset {
                 // label field is smooth at coarse scales with fine detail.
                 (0..spec.n)
                     .map(|i| {
-                        let fine = communities[i] % spec.classes as u32;
-                        let coarse =
-                            (communities[i] as usize / comms_per_super) as u32 % spec.classes as u32;
-                        let canon = if rng.gen_bool(spec.super_label_weight) { coarse } else { fine };
+                        let classes = spec.classes as u32;
+                        let fine = communities[i] % classes;
+                        let coarse = (communities[i] as usize / comms_per_super) as u32 % classes;
+                        let use_coarse = rng.gen_bool(spec.super_label_weight);
+                        let canon = if use_coarse { coarse } else { fine };
                         if rng.gen_bool(spec.label_flip) {
                             rng.gen_range(spec.classes) as u32
                         } else {

@@ -1,0 +1,32 @@
+//! Arbitrary-id composition: the shared fan-out that powers both
+//! `compose_all` (ids = 0..n) and `compose_batch` (minibatch subsets).
+//!
+//! The id list is split into fixed-size blocks; each block owns a
+//! disjoint slice of the output matrix, so blocks run on the rayon pool
+//! with no synchronization and the result is independent of thread
+//! count. Serial execution (small inputs, or `parallel = false`) runs
+//! the identical kernel, so both paths produce identical bits.
+
+use super::blocked::{compose_chunk, ResolvedPlan};
+use super::ComposeOptions;
+use rayon::prelude::*;
+
+/// Compose rows for `ids` into `out` (`ids.len() × d`), overwriting it.
+pub(super) fn compose_ids_into(
+    rp: &ResolvedPlan,
+    opts: &ComposeOptions,
+    ids: &[u32],
+    out: &mut [f32],
+    d: usize,
+) {
+    assert_eq!(out.len(), ids.len() * d, "output buffer must be ids.len() × d");
+    out.fill(0.0);
+    let block = opts.block_nodes.max(1);
+    if opts.parallel && ids.len() > block {
+        out.par_chunks_mut(block * d)
+            .zip(ids.par_chunks(block))
+            .for_each(|(out_block, id_block)| compose_chunk(rp, id_block, out_block, d));
+    } else {
+        compose_chunk(rp, ids, out, d);
+    }
+}

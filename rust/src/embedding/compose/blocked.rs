@@ -1,0 +1,125 @@
+//! Per-block compose kernels and the resolved (borrow-only) plan views.
+//!
+//! A "block" is a contiguous slice of the output matrix paired with the
+//! node ids that fill it. All kernels accumulate into `out` in exactly
+//! the same per-element order as `reference::compose_embeddings`
+//! (position levels ascending, then hash functions ascending, then the
+//! DHE MLP), so the engine is bitwise-deterministic and bit-identical to
+//! the oracle regardless of block size or thread count — parallel blocks
+//! touch disjoint output rows.
+
+use super::dhe::{add_dhe, DheView};
+use crate::embedding::plan::EmbeddingPlan;
+use crate::embedding::reference::ParamStore;
+
+/// One position level resolved to raw slices (Eq. 11 inputs).
+pub(super) struct PosView<'a> {
+    /// Level dimension `d_j` (columns of the level table).
+    pub dj: usize,
+    /// The level table, row-major `m_j × d_j`.
+    pub table: &'a [f32],
+    /// Per-node partition id at this level.
+    pub z: &'a [u32],
+}
+
+/// The node-specific component resolved to raw slices (Eq. 12/13 inputs).
+pub(super) struct NodeView<'a> {
+    /// Number of hash functions `h`.
+    pub h: usize,
+    /// The pooled table `X`, row-major `rows × d`.
+    pub table: &'a [f32],
+    /// `indices[t][i]` = row of X for node i under hash t.
+    pub indices: &'a [Vec<u32>],
+    /// Learned importance weights `Y` (`n × h`), or `None` for `y ≡ 1`.
+    pub y: Option<&'a [f32]>,
+}
+
+/// A plan with every tensor name resolved to a slice once per call, so
+/// the hot loops never touch the `ParamStore` hash map.
+pub(super) struct ResolvedPlan<'a> {
+    pub position: Vec<PosView<'a>>,
+    pub node: Option<NodeView<'a>>,
+    pub dhe: Option<DheView<'a>>,
+}
+
+impl<'a> ResolvedPlan<'a> {
+    /// Resolve all tables of `plan` against `params`.
+    pub fn new(plan: &'a EmbeddingPlan, params: &'a ParamStore) -> Self {
+        let mut position = Vec::new();
+        if let Some(pos) = &plan.position {
+            for (j, table) in pos.tables.iter().enumerate() {
+                position.push(PosView {
+                    dj: table.cols,
+                    table: params.get(&table.name),
+                    z: &pos.z[j],
+                });
+            }
+        }
+        let node = plan.node.as_ref().map(|nx| NodeView {
+            h: nx.indices.len(),
+            table: params.get(&nx.table.name),
+            indices: &nx.indices,
+            y: nx.learned_weights.then(|| params.get("node_y")),
+        });
+        let dhe = plan.dhe.as_ref().map(|dp| DheView {
+            encoding: &dp.encoding,
+            encoding_dim: dp.encoding_dim,
+            hidden: dp.hidden,
+            layers: (0..dp.layers)
+                .map(|l| (params.get(&format!("dhe_w{l}")), params.get(&format!("dhe_b{l}"))))
+                .collect(),
+            wout: params.get("dhe_wout"),
+            bout: params.get("dhe_bout"),
+        });
+        ResolvedPlan { position, node, dhe }
+    }
+}
+
+/// Compose embeddings for the nodes in `ids` into `out`
+/// (`ids.len() × d`, row b holds node `ids[b]`). `out` must be zeroed.
+pub(super) fn compose_chunk(rp: &ResolvedPlan, ids: &[u32], out: &mut [f32], d: usize) {
+    debug_assert_eq!(out.len(), ids.len() * d);
+    for pos in &rp.position {
+        add_position(pos, ids, out, d);
+    }
+    if let Some(node) = &rp.node {
+        add_node(node, ids, out, d);
+    }
+    if let Some(dhe) = &rp.dhe {
+        add_dhe(dhe, ids, out, d);
+    }
+}
+
+/// `out[b][..d_j] += P_j[z_j(ids[b])]` — zero-extended level gather.
+fn add_position(v: &PosView, ids: &[u32], out: &mut [f32], d: usize) {
+    let dj = v.dj;
+    for (b, &i) in ids.iter().enumerate() {
+        let row = v.z[i as usize] as usize;
+        let src = &v.table[row * dj..(row + 1) * dj];
+        let dst = &mut out[b * d..b * d + dj];
+        for (o, s) in dst.iter_mut().zip(src) {
+            *o += s;
+        }
+    }
+}
+
+/// `out[b] += Σ_t y[ids[b]][t] · X[idx_t(ids[b])]` — weighted hash gather.
+///
+/// The `t` loop is outermost so each output element accumulates hash
+/// contributions in ascending-`t` order (float-parity with the oracle)
+/// while the inner loop streams one index row sequentially.
+fn add_node(v: &NodeView, ids: &[u32], out: &mut [f32], d: usize) {
+    for t in 0..v.h {
+        let idx = &v.indices[t];
+        for (b, &i) in ids.iter().enumerate() {
+            let i = i as usize;
+            let row = idx[i] as usize;
+            let w = v.y.map_or(1.0, |y| y[i * v.h + t]);
+            let src = &v.table[row * d..(row + 1) * d];
+            let dst = &mut out[b * d..(b + 1) * d];
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o += w * s;
+            }
+        }
+    }
+}

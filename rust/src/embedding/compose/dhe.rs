@@ -1,0 +1,54 @@
+//! Blocked DHE forward pass (dense hash encoding → MLP, relu hidden
+//! layers, linear output added into the composed embedding).
+//!
+//! The scalar loops mirror `reference::compose_embeddings` exactly so the
+//! engine stays bit-identical to the oracle; the win over the reference
+//! is batching (scratch activations are allocated once per block, not
+//! once per node) and running blocks on all cores.
+
+/// DHE plan + parameters resolved to raw slices.
+pub(super) struct DheView<'a> {
+    /// Row-major `n × encoding_dim` static encoding.
+    pub encoding: &'a [f32],
+    pub encoding_dim: usize,
+    pub hidden: usize,
+    /// Hidden layers in order: `(w_l, b_l)` with `w_l` row-major
+    /// `in_dim × hidden`.
+    pub layers: Vec<(&'a [f32], &'a [f32])>,
+    /// Output projection `in_dim × d` and bias `d`.
+    pub wout: &'a [f32],
+    pub bout: &'a [f32],
+}
+
+/// `out[b] += MLP(encoding[ids[b]])` for every node in the block.
+pub(super) fn add_dhe(v: &DheView, ids: &[u32], out: &mut [f32], d: usize) {
+    let mut act: Vec<f32> = Vec::with_capacity(v.encoding_dim.max(v.hidden));
+    let mut next: Vec<f32> = Vec::with_capacity(v.hidden);
+    for (b, &i) in ids.iter().enumerate() {
+        let i = i as usize;
+        act.clear();
+        act.extend_from_slice(&v.encoding[i * v.encoding_dim..(i + 1) * v.encoding_dim]);
+        for (w, bias) in &v.layers {
+            let out_dim = v.hidden;
+            next.clear();
+            next.resize(out_dim, 0.0);
+            for (o, nv) in next.iter_mut().enumerate() {
+                let mut s = bias[o];
+                for (k, &a) in act.iter().enumerate() {
+                    s += a * w[k * out_dim + o];
+                }
+                *nv = s.max(0.0); // relu
+            }
+            std::mem::swap(&mut act, &mut next);
+        }
+        let in_dim = act.len();
+        let dst = &mut out[b * d..(b + 1) * d];
+        for (o, dv) in dst.iter_mut().enumerate() {
+            let mut s = v.bout[o];
+            for k in 0..in_dim {
+                s += act[k] * v.wout[k * d + o];
+            }
+            *dv += s;
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Blocked, rayon-parallel embedding-compose engine — the servable
+//! counterpart of the scalar oracle in `reference.rs`.
+//!
+//! The paper's entire contribution funnels through one computation
+//! (Eq. 7): `v_i = p_i + x_i`, a sum of position-specific gathers
+//! (Eq. 11), weighted node-specific hash gathers (Eq. 12/13) and, for
+//! DHE, an MLP forward. [`ComposeEngine`] fuses all of it into
+//! cache-friendly per-node-block passes:
+//!
+//! * [`ComposeEngine::compose_all`] — the full `n × d` matrix; drop-in
+//!   replacement for [`reference::compose_embeddings`] (bit-identical
+//!   output, parallel over node blocks).
+//! * [`ComposeEngine::compose_batch`] — embeddings for an arbitrary node
+//!   subset, the entry point minibatch training needs on graphs where
+//!   materializing all `n × d` is exactly what the paper says to avoid.
+//!
+//! Table names are resolved against the [`ParamStore`] once per call (not
+//! per node), blocks own disjoint output slices (no locks, deterministic
+//! bits regardless of thread count), and per-element accumulation order
+//! matches the reference oracle exactly, so parity holds to the last ulp.
+//! `reference.rs` stays as the oracle; `self_check` wires that parity
+//! into the trainer as a startup invariant.
+//!
+//! [`reference::compose_embeddings`]: crate::embedding::compose_embeddings
+
+mod batch;
+mod blocked;
+mod dhe;
+
+use self::batch::compose_ids_into;
+use self::blocked::ResolvedPlan;
+use super::plan::EmbeddingPlan;
+use super::reference::{compose_embeddings, ParamStore};
+
+/// Tuning knobs for the engine.
+#[derive(Debug, Clone)]
+pub struct ComposeOptions {
+    /// Nodes per parallel work unit. At `d = 64` the default keeps one
+    /// block's output (~256 KiB) inside L2 while amortizing rayon's
+    /// per-task overhead.
+    pub block_nodes: usize,
+    /// Run blocks on the rayon pool (`false` = same kernels, one thread).
+    pub parallel: bool,
+}
+
+impl Default for ComposeOptions {
+    fn default() -> Self {
+        ComposeOptions { block_nodes: 1024, parallel: true }
+    }
+}
+
+/// The compose engine: borrows a plan, composes against any parameter
+/// state (parameters change every training step; the plan does not).
+pub struct ComposeEngine<'p> {
+    plan: &'p EmbeddingPlan,
+    opts: ComposeOptions,
+    /// `0..n`, materialized once so `compose_all_into` stays
+    /// allocation-free on the hot path.
+    all_ids: Vec<u32>,
+}
+
+impl<'p> ComposeEngine<'p> {
+    /// Engine with default options.
+    pub fn new(plan: &'p EmbeddingPlan) -> Self {
+        Self::with_options(plan, ComposeOptions::default())
+    }
+
+    /// Engine with explicit options.
+    pub fn with_options(plan: &'p EmbeddingPlan, opts: ComposeOptions) -> Self {
+        assert!(opts.block_nodes >= 1, "block_nodes must be >= 1");
+        let all_ids = (0..plan.n as u32).collect();
+        ComposeEngine { plan, opts, all_ids }
+    }
+
+    /// The underlying plan.
+    pub fn plan(&self) -> &EmbeddingPlan {
+        self.plan
+    }
+
+    /// Compose the full `n × d` embedding matrix (row-major).
+    pub fn compose_all(&self, params: &ParamStore) -> Vec<f32> {
+        let mut out = vec![0f32; self.plan.n * self.plan.d];
+        self.compose_all_into(params, &mut out);
+        out
+    }
+
+    /// Compose the full matrix into a caller-owned buffer (`n × d`),
+    /// overwriting it — the allocation-free hot-loop variant (the id
+    /// range is cached on the engine; only tiny per-call views are
+    /// resolved).
+    pub fn compose_all_into(&self, params: &ParamStore, out: &mut [f32]) {
+        let rp = ResolvedPlan::new(self.plan, params);
+        compose_ids_into(&rp, &self.opts, &self.all_ids, out, self.plan.d);
+    }
+
+    /// Compose embeddings for `nodes` only (row b = node `nodes[b]`,
+    /// `nodes.len() × d` row-major). Ids may repeat and appear in any
+    /// order; each must be `< n`.
+    pub fn compose_batch(&self, params: &ParamStore, nodes: &[u32]) -> Vec<f32> {
+        let mut out = vec![0f32; nodes.len() * self.plan.d];
+        self.compose_batch_into(params, nodes, &mut out);
+        out
+    }
+
+    /// Batch compose into a caller-owned buffer (`nodes.len() × d`),
+    /// overwriting it.
+    pub fn compose_batch_into(&self, params: &ParamStore, nodes: &[u32], out: &mut [f32]) {
+        let n = self.plan.n as u32;
+        assert!(nodes.iter().all(|&i| i < n), "batch node id out of range (n = {n})");
+        let rp = ResolvedPlan::new(self.plan, params);
+        compose_ids_into(&rp, &self.opts, nodes, out, self.plan.d);
+    }
+}
+
+/// Cross-check the engine against the scalar oracle on this exact
+/// (plan, params) pair: full compose and a strided batch must agree
+/// within `tol`. The trainer runs this at startup (cheap at our n) so an
+/// engine/oracle divergence aborts a run instead of corrupting it.
+pub fn self_check(plan: &EmbeddingPlan, params: &ParamStore, tol: f32) -> Result<(), String> {
+    let oracle = compose_embeddings(plan, params);
+    let engine = ComposeEngine::new(plan);
+    let fast = engine.compose_all(params);
+    let d = plan.d;
+    for (i, (a, b)) in fast.iter().zip(oracle.iter()).enumerate() {
+        if (a - b).abs() > tol {
+            return Err(format!(
+                "compose_all diverges from reference at node {} dim {}: {a} vs {b}",
+                i / d,
+                i % d
+            ));
+        }
+    }
+    // strided batch: prime stride to hit many blocks/partitions
+    let nodes: Vec<u32> = (0..plan.n as u32).step_by(7).collect();
+    let batch = engine.compose_batch(params, &nodes);
+    for (b, &i) in nodes.iter().enumerate() {
+        let row = &batch[b * d..(b + 1) * d];
+        let want = &oracle[i as usize * d..(i as usize + 1) * d];
+        for (c, (x, y)) in row.iter().zip(want).enumerate() {
+            if (x - y).abs() > tol {
+                return Err(format!(
+                    "compose_batch diverges from reference at node {i} dim {c}: {x} vs {y}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{init_params, EmbeddingMethod};
+    use crate::graph::{planted_partition, PlantedPartitionConfig};
+    use crate::partition::{Hierarchy, HierarchyConfig};
+
+    fn hier(n: usize, k: usize, levels: usize) -> Hierarchy {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n,
+            communities: k,
+            intra_degree: 8.0,
+            inter_degree: 1.0,
+            seed: 77,
+            ..Default::default()
+        });
+        Hierarchy::build(&g, &HierarchyConfig::new(k, levels))
+    }
+
+    fn methods(n: usize) -> Vec<EmbeddingMethod> {
+        let b = (n / 4).max(2);
+        vec![
+            EmbeddingMethod::Full,
+            EmbeddingMethod::HashTrick { buckets: b },
+            EmbeddingMethod::Bloom { buckets: b, h: 2 },
+            EmbeddingMethod::HashEmb { buckets: b, h: 3 },
+            EmbeddingMethod::Dhe { encoding_dim: 8, hidden: 16, layers: 1 },
+            EmbeddingMethod::PosEmb { levels: 3 },
+            EmbeddingMethod::RandomPart { parts: 5 },
+            EmbeddingMethod::PosFullEmb { levels: 2 },
+            EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: b, h: 2 },
+            EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 4, h: 2 },
+        ]
+    }
+
+    #[test]
+    fn engine_is_bit_identical_to_reference_for_every_method() {
+        let n = 257; // odd: exercises a ragged final block
+        let h = hier(n, 3, 3);
+        for method in methods(n) {
+            let hr = method.needs_hierarchy().then_some(&h);
+            let plan = EmbeddingPlan::build(n, 16, &method, hr, 5);
+            let params = init_params(&plan, 6);
+            let oracle = crate::embedding::compose_embeddings(&plan, &params);
+            let engine = ComposeEngine::with_options(
+                &plan,
+                ComposeOptions { block_nodes: 64, parallel: true },
+            );
+            let fast = engine.compose_all(&params);
+            assert_eq!(fast, oracle, "method {}", method.name());
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_agree_exactly() {
+        let n = 500;
+        let h = hier(n, 4, 3);
+        let plan = EmbeddingPlan::build(
+            n,
+            32,
+            &EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 6, h: 2 },
+            Some(&h),
+            1,
+        );
+        let params = init_params(&plan, 2);
+        let popts = ComposeOptions { block_nodes: 32, parallel: true };
+        let sopts = ComposeOptions { block_nodes: 32, parallel: false };
+        let par = ComposeEngine::with_options(&plan, popts).compose_all(&params);
+        let ser = ComposeEngine::with_options(&plan, sopts).compose_all(&params);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn batch_rows_match_full_rows() {
+        let n = 300;
+        let h = hier(n, 3, 2);
+        let plan = EmbeddingPlan::build(
+            n,
+            16,
+            &EmbeddingMethod::PosHashEmbInter { levels: 2, buckets: 40, h: 2 },
+            Some(&h),
+            3,
+        );
+        let params = init_params(&plan, 4);
+        let engine = ComposeEngine::new(&plan);
+        let full = engine.compose_all(&params);
+        // unordered, with repeats
+        let nodes: Vec<u32> = vec![299, 0, 7, 7, 150, 3, 299];
+        let batch = engine.compose_batch(&params, &nodes);
+        for (b, &i) in nodes.iter().enumerate() {
+            assert_eq!(
+                &batch[b * 16..(b + 1) * 16],
+                &full[i as usize * 16..(i as usize + 1) * 16],
+                "row {b} (node {i})"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let plan = EmbeddingPlan::build(50, 8, &EmbeddingMethod::Full, None, 0);
+        let params = init_params(&plan, 1);
+        let engine = ComposeEngine::new(&plan);
+        assert!(engine.compose_batch(&params, &[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn batch_rejects_out_of_range_ids() {
+        let plan = EmbeddingPlan::build(50, 8, &EmbeddingMethod::Full, None, 0);
+        let params = init_params(&plan, 1);
+        ComposeEngine::new(&plan).compose_batch(&params, &[50]);
+    }
+
+    #[test]
+    fn block_size_one_still_correct() {
+        let n = 65;
+        let plan =
+            EmbeddingPlan::build(n, 8, &EmbeddingMethod::HashEmb { buckets: 11, h: 2 }, None, 9);
+        let params = init_params(&plan, 10);
+        let opts = ComposeOptions { block_nodes: 1, parallel: true };
+        let fast = ComposeEngine::with_options(&plan, opts).compose_all(&params);
+        let oracle = crate::embedding::compose_embeddings(&plan, &params);
+        assert_eq!(fast, oracle);
+    }
+
+    #[test]
+    fn self_check_passes_and_catches_drift() {
+        let n = 120;
+        let h = hier(n, 3, 3);
+        let (method, _) = EmbeddingMethod::paper_default_intra(n);
+        let plan = EmbeddingPlan::build(n, 16, &method, Some(&h), 0);
+        let params = init_params(&plan, 1);
+        assert!(self_check(&plan, &params, 1e-5).is_ok());
+        // exercise the failure path: a negative tolerance fails on the
+        // very first element (|a - b| = 0 > -1), proving the check is live
+        let err = self_check(&plan, &params, -1.0).unwrap_err();
+        assert!(err.contains("diverges"), "err: {err}");
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_buffers() {
+        let plan = EmbeddingPlan::build(40, 8, &EmbeddingMethod::Full, None, 0);
+        let params = init_params(&plan, 3);
+        let engine = ComposeEngine::new(&plan);
+        let clean = engine.compose_all(&params);
+        let mut dirty = vec![f32::NAN; 40 * 8];
+        engine.compose_all_into(&params, &mut dirty);
+        assert_eq!(clean, dirty);
+    }
+}

@@ -1,6 +1,5 @@
 //! Embedding method configuration.
 
-
 /// All embedding-layer methods evaluated in the paper.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EmbeddingMethod {

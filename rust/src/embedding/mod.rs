@@ -25,8 +25,10 @@
 //! Because of this unification a *single* AOT-lowered composition (and a
 //! single Pallas kernel) serves all table-based methods; only the static
 //! index arrays and table shapes differ. `plan` builds those arrays,
-//! `memory` prices them (paper §II/III cost model), and `reference` is the
-//! pure-Rust oracle the HLO output is tested against.
+//! `memory` prices them (paper §II/III cost model), `reference` is the
+//! pure-Rust oracle the HLO output is tested against, and [`compose`] is
+//! the blocked, rayon-parallel engine that serves the same computation at
+//! hardware speed (full-matrix and minibatch entry points).
 //!
 //! **Dimension note.** Eq. 11 sums level embeddings of *different* widths
 //! (`d_j = d/2^j`). The paper does not state the alignment; we zero-extend
@@ -34,11 +36,13 @@
 //! coordinates), which preserves both the stated parameter counts and the
 //! sum form. Recorded in DESIGN.md §4.
 
+pub mod compose;
 mod config;
 mod memory;
 mod plan;
 mod reference;
 
+pub use compose::{ComposeEngine, ComposeOptions};
 pub use config::{EmbeddingMethod, MethodFamily};
 pub use memory::{budget_for_fraction, BudgetedMethods, MemoryReport, PosBudget};
 pub use plan::{DhePlan, EmbeddingPlan, NodePlan, PositionPlan, TableShape};

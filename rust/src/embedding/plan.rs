@@ -320,14 +320,16 @@ mod tests {
     #[test]
     fn hashemb_plan_counts_match_eq6() {
         // size = B*d + n*h  (paper Eq. 6 commentary)
-        let p = EmbeddingPlan::build(1000, 8, &EmbeddingMethod::HashEmb { buckets: 50, h: 2 }, None, 1);
+        let p =
+            EmbeddingPlan::build(1000, 8, &EmbeddingMethod::HashEmb { buckets: 50, h: 2 }, None, 1);
         assert_eq!(p.num_params(), 50 * 8 + 1000 * 2);
         assert!(p.node.as_ref().unwrap().learned_weights);
     }
 
     #[test]
     fn bloom_has_no_importance_weights() {
-        let p = EmbeddingPlan::build(1000, 8, &EmbeddingMethod::Bloom { buckets: 50, h: 2 }, None, 1);
+        let p =
+            EmbeddingPlan::build(1000, 8, &EmbeddingMethod::Bloom { buckets: 50, h: 2 }, None, 1);
         assert_eq!(p.num_params(), 50 * 8);
         assert!(!p.node.as_ref().unwrap().learned_weights);
     }
@@ -408,7 +410,8 @@ mod tests {
     #[test]
     fn randompart_matches_posemb1_shape() {
         let h = hierarchy(500, 5, 1);
-        let pos = EmbeddingPlan::build(500, 16, &EmbeddingMethod::PosEmb { levels: 1 }, Some(&h), 7);
+        let pos =
+            EmbeddingPlan::build(500, 16, &EmbeddingMethod::PosEmb { levels: 1 }, Some(&h), 7);
         let rnd = EmbeddingPlan::build(500, 16, &EmbeddingMethod::RandomPart { parts: 5 }, None, 7);
         assert_eq!(pos.num_params(), rnd.num_params());
     }

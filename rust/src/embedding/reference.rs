@@ -106,7 +106,7 @@ pub fn compose_embeddings(plan: &EmbeddingPlan, params: &ParamStore) -> Vec<f32>
     if let Some(node) = &plan.node {
         let x = params.get(&node.table.name);
         let h = node.indices.len();
-        let y: Option<&[f32]> = if node.learned_weights { Some(params.get("node_y")) } else { None };
+        let y: Option<&[f32]> = node.learned_weights.then(|| params.get("node_y"));
         for i in 0..n {
             for t in 0..h {
                 let row = node.indices[t][i] as usize;
@@ -245,7 +245,8 @@ mod tests {
     #[test]
     fn bloom_is_unweighted_sum_of_two_rows() {
         let n = 10;
-        let plan = EmbeddingPlan::build(n, 4, &EmbeddingMethod::Bloom { buckets: 5, h: 2 }, None, 8);
+        let plan =
+            EmbeddingPlan::build(n, 4, &EmbeddingMethod::Bloom { buckets: 5, h: 2 }, None, 8);
         let params = init_params(&plan, 9);
         let v = compose_embeddings(&plan, &params);
         let node = plan.node.as_ref().unwrap();
@@ -274,7 +275,8 @@ mod tests {
         let v = compose_embeddings(&full, &params);
 
         // position-only plan with the same tables
-        let pos_only = EmbeddingPlan::build(n, 16, &EmbeddingMethod::PosEmb { levels: 3 }, Some(&h), 10);
+        let pos_only =
+            EmbeddingPlan::build(n, 16, &EmbeddingMethod::PosEmb { levels: 3 }, Some(&h), 10);
         let mut pos_params = ParamStore::default();
         for t in pos_only.param_shapes() {
             pos_params.insert(&t.name, vec![t.rows, t.cols], params.get(&t.name).to_vec());

@@ -7,7 +7,6 @@
 //! on integer-like accumulated weights, so weights are kept exact for
 //! small sums.
 
-
 /// Immutable undirected graph in compressed-sparse-row form.
 ///
 /// Invariants (checked by `debug_validate`, exercised by proptests):

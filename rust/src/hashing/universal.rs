@@ -48,7 +48,8 @@ impl HashFamily {
     /// The `index`-th function of the family, into `buckets` buckets.
     /// Functions for different indices are drawn independently.
     pub fn function(&self, index: u64, buckets: u32) -> UniversalHash {
-        let mut rng = Rng::seed_from_u64(self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(index));
+        let key = self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(index);
+        let mut rng = Rng::seed_from_u64(key);
         let a = gen_below_p(&mut rng, 1);
         let b = gen_below_p(&mut rng, 0);
         UniversalHash { a, b, buckets }

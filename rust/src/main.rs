@@ -11,14 +11,18 @@
 //!   train one configuration via the PJRT runtime.
 //! * `experiment --group t3|t4|t5|f3|f4 [--dataset D]` — regenerate one
 //!   paper table/figure.
+//! * `compose --dataset D [--method M] [--batch B] [--json]` — benchmark
+//!   the host-side compose engine (reference vs parallel vs batch paths);
+//!   runs without PJRT artifacts.
 //!
-//! Argument parsing is hand-rolled (offline build: no clap).
+//! Argument parsing is hand-rolled (minimal-dependency build: no clap).
 
 use anyhow::{anyhow, bail, Result};
-use poshashemb::bench_harness::{print_table, rows_from_outcomes, Harness};
-use poshashemb::config::{full_grid, smoke_grid, write_aot_request};
+use poshashemb::bench_harness::{bench_compose, print_table, rows_from_outcomes, Harness};
+use poshashemb::config::{default_c, default_k, full_grid, smoke_grid, write_aot_request};
 use poshashemb::coordinator::{run_experiment, TrainOptions};
 use poshashemb::data::{spec, Dataset, DATASET_NAMES};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
 use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
 use poshashemb::runtime::{Manifest, RuntimeClient};
 use std::collections::HashMap;
@@ -55,7 +59,8 @@ fn run() -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let rest: Vec<String> = args.get(1..).unwrap_or(&[]).to_vec();
     // allow `report datasets` (positional) by skipping non-flag tokens
-    let flag_args: Vec<String> = rest.iter().skip_while(|a| !a.starts_with("--")).cloned().collect();
+    let flag_args: Vec<String> =
+        rest.iter().skip_while(|a| !a.starts_with("--")).cloned().collect();
     let flags = parse_flags(&flag_args)?;
     match cmd {
         "report" | "datasets" => cmd_report(),
@@ -64,6 +69,7 @@ fn run() -> Result<()> {
         "partition" => cmd_partition(&flags),
         "train" => cmd_train(&flags),
         "experiment" => cmd_experiment(&flags),
+        "compose" => cmd_compose(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -81,7 +87,8 @@ fn print_help() {
          gen-manifest [--grid full|smoke]       write artifacts/manifest_request.json\n\
          partition --dataset D --k K [--levels L]   run the multilevel partitioner\n\
          train --experiment NAME [--seed S] [--epochs N] [--verbose]\n\
-         experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table"
+         experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table\n\
+         compose [--dataset D] [--method M] [--batch B] [--json]   bench the compose engine"
     );
 }
 
@@ -97,7 +104,7 @@ fn cmd_report() -> Result<()> {
 fn cmd_list(flags: &HashMap<String, String>) -> Result<()> {
     let group = flags.get("group").map(String::as_str);
     for e in full_grid() {
-        if group.map_or(true, |g| e.group == g) {
+        if group.is_none_or(|g| e.group == g) {
             println!("{:<40} {:<6} {:<16} {}", e.name, e.group, e.dataset, e.method.name());
         }
     }
@@ -167,6 +174,50 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let manifest = Manifest::load(Path::new(&dir))?;
     let outcome = run_experiment(&client, &manifest, &e, seed, &opts)?;
     println!("{}", outcome.row());
+    Ok(())
+}
+
+/// Host-side compose-engine benchmark: no PJRT artifacts required.
+fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
+    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
+    let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
+    let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
+    let batch: usize = flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(1024);
+    let n = sp.n;
+    let k = default_k(n);
+    let c = default_c(n, k);
+    let b = c * k;
+    let method = match tag {
+        "full" => EmbeddingMethod::Full,
+        "hashtrick" => EmbeddingMethod::HashTrick { buckets: b },
+        "bloom" => EmbeddingMethod::Bloom { buckets: b, h: 2 },
+        "hashemb" => EmbeddingMethod::HashEmb { buckets: b, h: 2 },
+        "dhe" => EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 64, layers: 1 },
+        "posemb1" => EmbeddingMethod::PosEmb { levels: 1 },
+        "posemb3" => EmbeddingMethod::PosEmb { levels: 3 },
+        "randompart" => EmbeddingMethod::RandomPart { parts: k },
+        "posfullemb" => EmbeddingMethod::PosFullEmb { levels: 3 },
+        "inter" => EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: b, h: 2 },
+        "intra" => EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h: 2 },
+        other => bail!("unknown method '{other}' (see `poshashemb help`)"),
+    };
+    let ds = Dataset::generate(&sp);
+    let hier = if method.needs_hierarchy() {
+        let levels = method.levels().max(1);
+        Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(k, levels)))
+    } else {
+        None
+    };
+    let plan = EmbeddingPlan::build(n, sp.d, &method, hier.as_ref(), 0);
+    eprintln!("compose bench: {dsname} n={n} d={} method={}", sp.d, method.name());
+    let records = bench_compose(&plan, batch);
+    if flags.contains_key("json") {
+        println!("{}", serde_json::to_string_pretty(&records)?);
+    } else {
+        for r in &records {
+            println!("{}", r.row());
+        }
+    }
     Ok(())
 }
 

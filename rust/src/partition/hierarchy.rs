@@ -109,8 +109,11 @@ impl Hierarchy {
         for j in 1..self.levels() {
             for i in 0..self.z[0].len() {
                 if self.z[j][i] as usize / self.k != self.z[j - 1][i] as usize {
-                    return Err(format!("node {i}: level {j} id {} inconsistent with parent {}",
-                        self.z[j][i], self.z[j - 1][i]));
+                    return Err(format!(
+                        "node {i}: level {j} id {} inconsistent with parent {}",
+                        self.z[j][i],
+                        self.z[j - 1][i]
+                    ));
                 }
             }
         }

@@ -88,7 +88,7 @@ mod ordered {
 mod tests {
     use super::*;
     use crate::graph::{planted_partition, GraphBuilder, PlantedPartitionConfig};
-    
+
     #[test]
     fn all_nodes_assigned_in_range() {
         let (g, _) = planted_partition(&PlantedPartitionConfig {

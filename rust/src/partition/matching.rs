@@ -50,7 +50,7 @@ pub fn heavy_edge_matching(g: &CsrGraph, rng: &mut Rng) -> Vec<u32> {
 mod tests {
     use super::*;
     use crate::graph::{planted_partition, GraphBuilder, PlantedPartitionConfig};
-    
+
     #[test]
     fn matching_is_involution() {
         let (g, _) = planted_partition(&PlantedPartitionConfig {

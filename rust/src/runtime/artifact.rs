@@ -172,7 +172,6 @@ impl Manifest {
     }
 }
 
-
 #[cfg(test)]
 mod tests {
     use super::*;

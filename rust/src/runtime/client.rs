@@ -1,11 +1,18 @@
-//! `xla` crate wrapper: PJRT CPU client, compile-from-HLO-text with an
-//! executable cache, and host↔device tensor helpers.
+//! Runtime client: host tensors plus the execution backend.
+//!
+//! Two backends share one API surface so the trainer and harness are
+//! backend-agnostic:
+//!
+//! * **`pjrt` feature on** — the `xla` crate's PJRT CPU client:
+//!   compile-from-HLO-text with an executable cache and host↔device
+//!   tensor transfer.
+//! * **`pjrt` feature off (default)** — a stub whose constructor fails
+//!   with a clear message. Everything that does not execute HLO (plans,
+//!   partitioner, compose engine, manifests) works without the feature;
+//!   only `train`/`experiment`-style commands need it.
 
 use super::artifact::{ArtifactSpec, Dtype, Manifest};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+use anyhow::{bail, Result};
 
 /// A host-side tensor matched to an artifact input slot.
 #[derive(Debug, Clone)]
@@ -47,101 +54,183 @@ impl HostTensor {
     }
 }
 
-/// PJRT client + executable cache.
-pub struct RuntimeClient {
-    client: xla::PjRtClient,
-    /// Compiled executables keyed by artifact name.
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{ArtifactSpec, HostTensor, Manifest};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::{Arc, Mutex};
+
+    /// A compiled (loaded) executable.
+    pub struct Executable(xla::PjRtLoadedExecutable);
+
+    /// A device-resident buffer.
+    pub struct DeviceBuffer(xla::PjRtBuffer);
+
+    /// PJRT client + executable cache.
+    pub struct RuntimeClient {
+        client: xla::PjRtClient,
+        /// Compiled executables keyed by artifact name.
+        cache: Mutex<HashMap<String, Arc<Executable>>>,
+    }
+
+    impl RuntimeClient {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+            Ok(RuntimeClient { client, cache: Mutex::new(HashMap::new()) })
+        }
+
+        /// Platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile the HLO text at `path` (no caching).
+        pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+            Ok(Executable(exe))
+        }
+
+        /// Compile (or fetch from cache) the executable for `spec`.
+        pub fn load(&self, manifest: &Manifest, spec: &ArtifactSpec) -> Result<Arc<Executable>> {
+            {
+                let cache = self.cache.lock().unwrap();
+                if let Some(exe) = cache.get(&spec.name) {
+                    return Ok(exe.clone());
+                }
+            }
+            let exe = Arc::new(
+                self.compile_hlo_file(&manifest.hlo_path(spec))
+                    .with_context(|| format!("loading artifact {}", spec.name))?,
+            );
+            self.cache.lock().unwrap().insert(spec.name.clone(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Upload a host tensor to the device.
+        pub fn upload(&self, t: &HostTensor) -> Result<DeviceBuffer> {
+            let buf = match t {
+                HostTensor::F32(data, shape) => {
+                    self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+                }
+                HostTensor::I32(data, shape) => {
+                    self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+                }
+            };
+            buf.map(DeviceBuffer).map_err(|e| anyhow!("upload: {e}"))
+        }
+
+        /// Execute on device buffers; returns the flat output buffers of
+        /// replica 0 (the modules are lowered with `return_tuple=True`, so
+        /// PJRT returns one buffer per tuple element).
+        pub fn execute(
+            &self,
+            exe: &Executable,
+            args: &[&DeviceBuffer],
+        ) -> Result<Vec<DeviceBuffer>> {
+            let raw: Vec<&xla::PjRtBuffer> = args.iter().map(|b| &b.0).collect();
+            let mut out =
+                exe.0.execute_b::<&xla::PjRtBuffer>(&raw).map_err(|e| anyhow!("execute: {e}"))?;
+            if out.is_empty() {
+                bail!("execute returned no replica output");
+            }
+            Ok(out.swap_remove(0).into_iter().map(DeviceBuffer).collect())
+        }
+
+        /// Download a device buffer as f32 (works for rank-N f32 outputs).
+        pub fn download_f32(&self, buf: &DeviceBuffer) -> Result<Vec<f32>> {
+            let lit = buf.0.to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+            lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+        }
+
+        /// Download a scalar f32 output.
+        pub fn download_scalar(&self, buf: &DeviceBuffer) -> Result<f32> {
+            Ok(self.download_f32(buf)?[0])
+        }
+    }
 }
 
-impl RuntimeClient {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        Ok(RuntimeClient { client, cache: Mutex::new(HashMap::new()) })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{ArtifactSpec, HostTensor, Manifest};
+    use anyhow::{bail, Result};
+    use std::sync::Arc;
+
+    const UNAVAILABLE: &str = "poshashemb was built without the `pjrt` feature: PJRT/HLO \
+         execution (train, experiment, eval) is unavailable. Plans, partitioning and the \
+         compose engine still work. The `pjrt` feature is not wired yet — it needs the \
+         `xla` bindings and a vendored XLA runtime added to rust/Cargo.toml first (ROADMAP: \
+         \"PJRT runtime wiring\")";
+
+    /// A compiled executable (stub — never constructed without `pjrt`).
+    pub struct Executable {
+        _priv: (),
     }
 
-    /// Platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A device-resident buffer (stub — never constructed without `pjrt`).
+    pub struct DeviceBuffer {
+        _priv: (),
     }
 
-    /// Compile the HLO text at `path` (no caching).
-    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e}", path.display()))
+    /// Stub runtime client: construction fails with a clear message, so
+    /// callers hit one actionable error instead of scattered panics.
+    pub struct RuntimeClient {
+        _priv: (),
     }
 
-    /// Compile (or fetch from cache) the executable for `spec`.
-    pub fn load(
-        &self,
-        manifest: &Manifest,
-        spec: &ArtifactSpec,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(exe) = cache.get(&spec.name) {
-                return Ok(exe.clone());
-            }
+    impl RuntimeClient {
+        /// Always fails without the `pjrt` feature.
+        pub fn cpu() -> Result<Self> {
+            bail!(UNAVAILABLE)
         }
-        let exe = std::sync::Arc::new(
-            self.compile_hlo_file(&manifest.hlo_path(spec))
-                .with_context(|| format!("loading artifact {}", spec.name))?,
-        );
-        self.cache.lock().unwrap().insert(spec.name.clone(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Upload a host tensor to the device.
-    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        let buf = match t {
-            HostTensor::F32(data, shape) => {
-                self.client.buffer_from_host_buffer::<f32>(data, shape, None)
-            }
-            HostTensor::I32(data, shape) => {
-                self.client.buffer_from_host_buffer::<i32>(data, shape, None)
-            }
-        };
-        buf.map_err(|e| anyhow!("upload: {e}"))
-    }
-
-    /// Upload a literal (e.g. a decomposed tuple element) to the device.
-    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.client.buffer_from_host_literal(None, lit).map_err(|e| anyhow!("upload_literal: {e}"))
-    }
-
-    /// Execute on device buffers; returns the flat output buffers
-    /// (the modules are lowered with `return_tuple=True`, so PJRT
-    /// returns one buffer per tuple element).
-    pub fn execute(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::PjRtBuffer],
-    ) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut out = exe.execute_b(args).map_err(|e| anyhow!("execute: {e}"))?;
-        if out.is_empty() {
-            bail!("execute returned no replica output");
+        /// Platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            "stub".to_string()
         }
-        Ok(out.swap_remove(0))
-    }
 
-    /// Download a device buffer as f32 (works for rank-N f32 outputs).
-    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
-        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
-    }
+        /// Unreachable without `pjrt` (no client can be constructed).
+        pub fn load(&self, _manifest: &Manifest, _spec: &ArtifactSpec) -> Result<Arc<Executable>> {
+            bail!(UNAVAILABLE)
+        }
 
-    /// Download a scalar f32 output.
-    pub fn download_scalar(&self, buf: &xla::PjRtBuffer) -> Result<f32> {
-        Ok(self.download_f32(buf)?[0])
+        /// Unreachable without `pjrt`.
+        pub fn upload(&self, _t: &HostTensor) -> Result<DeviceBuffer> {
+            bail!(UNAVAILABLE)
+        }
+
+        /// Unreachable without `pjrt`.
+        pub fn execute(
+            &self,
+            _exe: &Executable,
+            _args: &[&DeviceBuffer],
+        ) -> Result<Vec<DeviceBuffer>> {
+            bail!(UNAVAILABLE)
+        }
+
+        /// Unreachable without `pjrt`.
+        pub fn download_f32(&self, _buf: &DeviceBuffer) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
+
+        /// Unreachable without `pjrt`.
+        pub fn download_scalar(&self, _buf: &DeviceBuffer) -> Result<f32> {
+            bail!(UNAVAILABLE)
+        }
     }
 }
+
+pub use imp::{DeviceBuffer, Executable, RuntimeClient};
 
 #[cfg(test)]
 mod tests {
@@ -163,5 +252,12 @@ mod tests {
     fn scalar_shape_is_rank0() {
         let s = HostTensor::scalar(1.5);
         assert!(s.shape().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_client_fails_with_actionable_message() {
+        let err = RuntimeClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "err: {err}");
     }
 }

@@ -5,8 +5,10 @@
 //!
 //! * [`artifact`] — `artifacts/manifest.json` schema: per-artifact input
 //!   specs (the ABI the train/eval HLO was lowered against).
-//! * [`client`] — `xla` crate wrapper: compile-from-text, executable
-//!   cache, host↔device tensor helpers.
+//! * [`client`] — execution backend behind one API: with the `pjrt`
+//!   feature, the `xla` crate (compile-from-text, executable cache,
+//!   host↔device transfer); without it, a stub that fails construction
+//!   with a clear message so the rest of the crate builds dependency-free.
 //!
 //! Hot-loop design: parameters and optimizer state live as `PjRtBuffer`s
 //! on the device; each training step consumes the previous step's output
@@ -17,4 +19,4 @@ mod artifact;
 mod client;
 
 pub use artifact::{ArtifactSpec, Dtype, InputSpec, Manifest};
-pub use client::{HostTensor, RuntimeClient};
+pub use client::{DeviceBuffer, Executable, HostTensor, RuntimeClient};

@@ -31,9 +31,19 @@ impl BenchResult {
     }
 }
 
-/// Is quick mode on? (`BENCH_QUICK=1` → fewer iterations.)
+/// Process-local quick-mode override (tests use this instead of mutating
+/// the environment, which is unsound under the parallel test runner).
+static FORCE_QUICK: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Force quick mode on/off for this process (overrides the env knob).
+pub fn set_quick(on: bool) {
+    FORCE_QUICK.store(on, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Is quick mode on? (`BENCH_QUICK=1` or [`set_quick`] → fewer iterations.)
 pub fn quick() -> bool {
-    std::env::var("BENCH_QUICK").map_or(false, |v| v == "1")
+    FORCE_QUICK.load(std::sync::atomic::Ordering::Relaxed)
+        || std::env::var("BENCH_QUICK").is_ok_and(|v| v == "1")
 }
 
 /// Run `f` repeatedly and collect timing statistics.
@@ -80,7 +90,7 @@ mod tests {
 
     #[test]
     fn bench_produces_sane_stats() {
-        std::env::set_var("BENCH_QUICK", "1");
+        set_quick(true);
         let r = bench("noop-ish", || {
             let mut s = 0u64;
             for i in 0..1000u64 {
@@ -95,7 +105,7 @@ mod tests {
 
     #[test]
     fn report_includes_throughput() {
-        std::env::set_var("BENCH_QUICK", "1");
+        set_quick(true);
         let r = bench("tp", || 1u32);
         let line = r.report(Some((1000, "ops")));
         assert!(line.contains("ops/s"));

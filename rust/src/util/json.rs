@@ -170,7 +170,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { pos: self.pos, msg: msg.to_string() }
     }

@@ -1,8 +1,9 @@
 //! In-tree utility substrates.
 //!
-//! The build is fully offline, so the usual ecosystem crates (rand,
-//! serde_json, criterion, proptest, tempfile, clap) are replaced by small
-//! purpose-built implementations:
+//! The crate keeps its dependency surface minimal (rayon, serde, anyhow;
+//! proptest as a dev-dependency), so several ecosystem crates (rand,
+//! criterion, tempfile, clap) are replaced by small purpose-built
+//! implementations that also work in offline builds:
 //!
 //! * [`rng`] — deterministic xoshiro256++ RNG with the sampling helpers
 //!   the partitioner/generators need.

@@ -1,4 +1,5 @@
-//! Tiny property-testing driver (proptest is unavailable offline).
+//! Tiny in-tree property-testing driver (shrink-free complement to the
+//! `proptest` dev-dependency; keeps offline builds self-contained).
 //!
 //! `run_cases(n, seed, |rng| ...)` executes a property over `n` random
 //! inputs drawn from a seeded RNG; on failure the panic message includes

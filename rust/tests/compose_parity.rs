@@ -1,0 +1,121 @@
+//! Property-based parity: `ComposeEngine::compose_all` and
+//! `compose_batch` must match the scalar oracle
+//! `reference::compose_embeddings` within 1e-5 for EVERY
+//! `EmbeddingMethod` variant, over random graphs, hierarchies, embedding
+//! dimensions, block sizes and hash seeds (proptest shrinks failures to
+//! a minimal case).
+
+use poshashemb::embedding::{
+    compose_embeddings, init_params, ComposeEngine, ComposeOptions, EmbeddingMethod, EmbeddingPlan,
+};
+use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use proptest::prelude::*;
+
+const TOL: f32 = 1e-5;
+
+/// Build the method for a variant index so every enum variant is covered
+/// uniformly; parameters derive from (n, salt) to stay in-range.
+fn method_for(variant: usize, n: usize, salt: usize) -> EmbeddingMethod {
+    let buckets = 2 + (salt % (n / 2).max(1));
+    let h = 1 + salt % 3;
+    let levels = 1 + salt % 3;
+    match variant {
+        0 => EmbeddingMethod::Full,
+        1 => EmbeddingMethod::HashTrick { buckets },
+        2 => EmbeddingMethod::Bloom { buckets, h },
+        3 => EmbeddingMethod::HashEmb { buckets, h },
+        4 => EmbeddingMethod::Dhe {
+            encoding_dim: 4 + salt % 8,
+            hidden: 8 + salt % 8,
+            layers: 1 + salt % 2,
+        },
+        5 => EmbeddingMethod::PosEmb { levels },
+        6 => EmbeddingMethod::RandomPart { parts: 2 + salt % 6 },
+        7 => EmbeddingMethod::PosFullEmb { levels },
+        8 => EmbeddingMethod::PosHashEmbInter { levels, buckets, h },
+        _ => EmbeddingMethod::PosHashEmbIntra { levels, compression: 1 + salt % 9, h },
+    }
+}
+
+fn random_hierarchy(n: usize, k: usize, seed: u64) -> Hierarchy {
+    let (g, _) = planted_partition(&PlantedPartitionConfig {
+        n,
+        communities: k,
+        intra_degree: 6.0,
+        inter_degree: 1.5,
+        seed,
+        ..Default::default()
+    });
+    let mut cfg = HierarchyConfig::new(k, 3);
+    cfg.base.seed = seed ^ 0x51;
+    Hierarchy::build(&g, &cfg)
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!((x - y).abs() <= TOL, "{what}: element {i} diverges: {x} vs {y}");
+    }
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(48))]
+
+    #[test]
+    fn engine_matches_reference_for_all_methods(
+        variant in 0usize..10,
+        n in 40usize..260,
+        d_sel in 0usize..3,
+        k in 2usize..5,
+        salt in 0usize..1000,
+        seed in any::<u64>(),
+        block in 1usize..96,
+    ) {
+        let d = [8usize, 16, 32][d_sel];
+        let method = method_for(variant, n, salt);
+        let hier = method
+            .needs_hierarchy()
+            .then(|| random_hierarchy(n, k, seed ^ 0xF00D));
+        let plan = EmbeddingPlan::build(n, d, &method, hier.as_ref(), seed);
+        let params = init_params(&plan, seed ^ 0x9E37);
+
+        let oracle = compose_embeddings(&plan, &params);
+        let opts = ComposeOptions { block_nodes: block, parallel: true };
+        let engine = ComposeEngine::with_options(&plan, opts);
+
+        // full-matrix path
+        let fast = engine.compose_all(&params);
+        assert_close(&fast, &oracle, &format!("compose_all[{}]", method.name()));
+
+        // minibatch path: strided, unordered, with a repeat
+        let mut nodes: Vec<u32> = (0..n as u32).step_by(1 + salt % 5).collect();
+        nodes.reverse();
+        nodes.push(nodes[0]);
+        let batch = engine.compose_batch(&params, &nodes);
+        for (row, &i) in nodes.iter().enumerate() {
+            let got = &batch[row * d..(row + 1) * d];
+            let want = &oracle[i as usize * d..(i as usize + 1) * d];
+            assert_close(got, want, &format!("compose_batch[{}] node {i}", method.name()));
+        }
+    }
+
+    #[test]
+    fn engine_deterministic_across_block_sizes(
+        n in 50usize..200,
+        seed in any::<u64>(),
+        block_a in 1usize..64,
+        block_b in 64usize..512,
+    ) {
+        let (method, _) = EmbeddingMethod::paper_default_intra(n);
+        let hier = random_hierarchy(n, 3, seed);
+        let plan = EmbeddingPlan::build(n, 16, &method, Some(&hier), seed);
+        let params = init_params(&plan, seed);
+        let a_opts = ComposeOptions { block_nodes: block_a, parallel: true };
+        let b_opts = ComposeOptions { block_nodes: block_b, parallel: false };
+        let a = ComposeEngine::with_options(&plan, a_opts).compose_all(&params);
+        let b = ComposeEngine::with_options(&plan, b_opts).compose_all(&params);
+        // identical accumulation order => identical bits, not just 1e-5
+        prop_assert_eq!(a, b);
+    }
+}

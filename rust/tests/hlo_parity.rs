@@ -12,7 +12,7 @@
 use poshashemb::config::{full_grid, materialize};
 use poshashemb::coordinator::{build_statics, init_full_params};
 use poshashemb::embedding::compose_embeddings;
-use poshashemb::runtime::{HostTensor, Manifest, RuntimeClient};
+use poshashemb::runtime::{DeviceBuffer, HostTensor, Manifest, RuntimeClient};
 use std::path::Path;
 
 fn setup() -> Option<(RuntimeClient, Manifest)> {
@@ -21,7 +21,14 @@ fn setup() -> Option<(RuntimeClient, Manifest)> {
         eprintln!("skipping: run `make artifacts` first");
         return None;
     }
-    Some((RuntimeClient::cpu().unwrap(), Manifest::load(dir).unwrap()))
+    let client = match RuntimeClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return None;
+        }
+    };
+    Some((client, Manifest::load(dir).unwrap()))
 }
 
 /// Run the eval HLO at given packed params, return logits.
@@ -41,8 +48,8 @@ fn eval_logits(
     for (_, t) in statics {
         bufs.push(client.upload(t).unwrap());
     }
-    let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-    let outs = exe.execute_b::<&xla::PjRtBuffer>(&args).unwrap().swap_remove(0);
+    let args: Vec<&DeviceBuffer> = bufs.iter().collect();
+    let outs = client.execute(&exe, &args).unwrap();
     client.download_f32(&outs[0]).unwrap()
 }
 

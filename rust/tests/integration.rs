@@ -13,7 +13,13 @@ fn manifest_or_skip() -> Option<(RuntimeClient, Manifest)> {
         eprintln!("skipping: run `make artifacts` first");
         return None;
     }
-    let client = RuntimeClient::cpu().unwrap();
+    let client = match RuntimeClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return None;
+        }
+    };
     let manifest = Manifest::load(dir).unwrap();
     Some((client, manifest))
 }
@@ -32,7 +38,7 @@ fn training_reduces_loss_and_beats_chance() {
     let Some((client, manifest)) = manifest_or_skip() else { return };
     let grid = full_grid();
     let Some(e) = find_ready(&manifest, &grid, "arxiv_gcn_posemb3") else { return };
-    let opts = TrainOptions { epochs: Some(25), eval_every: 5, patience: 0, verbose: false };
+    let opts = TrainOptions { epochs: Some(25), eval_every: 5, patience: 0, ..Default::default() };
     let out = run_experiment(&client, &manifest, e, 0, &opts).unwrap();
     // losses are probed every epoch for small states, at eval cadence
     // (every 5) for large ones; either way the curve must drop.
@@ -55,7 +61,7 @@ fn hlo_loss_matches_rust_cross_entropy_of_eval_logits() {
     let (ds, _, _) = materialize(e, 3);
 
     // run 1 training epoch to get loss(params_0)
-    let opts = TrainOptions { epochs: Some(1), eval_every: 1, patience: 0, verbose: false };
+    let opts = TrainOptions { epochs: Some(1), eval_every: 1, patience: 0, ..Default::default() };
     let out = run_experiment(&client, &manifest, e, 3, &opts).unwrap();
     let hlo_loss = out.losses[0] as f64;
 
@@ -77,7 +83,7 @@ fn deterministic_given_seed() {
     let Some((client, manifest)) = manifest_or_skip() else { return };
     let grid = full_grid();
     let Some(e) = find_ready(&manifest, &grid, "arxiv_gcn_posemb1") else { return };
-    let opts = TrainOptions { epochs: Some(5), eval_every: 5, patience: 0, verbose: false };
+    let opts = TrainOptions { epochs: Some(5), eval_every: 5, patience: 0, ..Default::default() };
     let a = run_experiment(&client, &manifest, e, 7, &opts).unwrap();
     let b = run_experiment(&client, &manifest, e, 7, &opts).unwrap();
     assert_eq!(a.losses, b.losses);
@@ -89,7 +95,7 @@ fn seeds_change_hash_draws_but_not_shapes() {
     let Some((client, manifest)) = manifest_or_skip() else { return };
     let grid = full_grid();
     let Some(e) = find_ready(&manifest, &grid, "arxiv_gcn_intra_h2") else { return };
-    let opts = TrainOptions { epochs: Some(3), eval_every: 3, patience: 0, verbose: false };
+    let opts = TrainOptions { epochs: Some(3), eval_every: 3, patience: 0, ..Default::default() };
     let a = run_experiment(&client, &manifest, e, 0, &opts).unwrap();
     let b = run_experiment(&client, &manifest, e, 1, &opts).unwrap();
     assert_eq!(a.memory.params, b.memory.params);

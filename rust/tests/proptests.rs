@@ -146,7 +146,8 @@ fn prop_composition_is_linear_in_tables() {
 fn prop_json_roundtrip_random_values() {
     run_cases(60, 0x11, |rng| {
         fn gen(rng: &mut Rng, depth: usize) -> Json {
-            match if depth > 2 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            let kinds = if depth > 2 { 4 } else { 6 };
+            match rng.gen_range(kinds) {
                 0 => Json::Null,
                 1 => Json::Bool(rng.gen_bool(0.5)),
                 2 => Json::Num((rng.gen_f64() * 2e6).round() / 2.0 - 5e5),
