@@ -1,13 +1,12 @@
-//! L3 perf microbench: the multilevel partitioner (coarsening dominates)
-//! on SBM and R-MAT graphs. Throughput target (EXPERIMENTS.md §Perf):
-//! ≥ 1M edges/s end-to-end for k-way partitioning.
+//! L3 perf microbench: the multilevel partitioner on SBM and R-MAT
+//! graphs — scalar oracle vs the parallel matching / CSR-native
+//! contraction / sibling-parallel hierarchy pipeline. Throughput target
+//! (EXPERIMENTS.md §Perf, ROADMAP "Partitioner perf"): ≥ 1M edges/s
+//! end-to-end for k = 32 partitioning of the SBM n = 50k graph.
 
+use poshashemb::bench_harness::bench_partition;
 use poshashemb::graph::{planted_partition, rmat, PlantedPartitionConfig, RmatConfig};
-use poshashemb::partition::{
-    heavy_edge_matching, partition, Hierarchy, HierarchyConfig, PartitionConfig,
-};
-use poshashemb::util::bench::{bench, black_box, section};
-use poshashemb::util::rng::Rng;
+use poshashemb::util::bench::section;
 
 fn main() {
     let (sbm, _) = planted_partition(&PlantedPartitionConfig {
@@ -18,32 +17,14 @@ fn main() {
         seed: 3,
         ..Default::default()
     });
-    let edges = sbm.num_edges() as u64;
-    section(&format!("partitioner on SBM n=50k m={edges}"));
-
-    let r = bench("heavy_edge_matching", || {
-        let mut rng = Rng::seed_from_u64(1);
-        black_box(heavy_edge_matching(&sbm, &mut rng))
-    });
-    println!("{}", r.report(Some((2 * edges, "edge-visits"))));
-
-    for k in [8usize, 32] {
-        let r = bench(&format!("partition k={k}"), || {
-            black_box(partition(&sbm, &PartitionConfig::with_k(k)))
-        });
-        println!("{}", r.report(Some((edges, "edges"))));
+    section(&format!("partitioner on SBM n=50k m={} (k=32, L=3)", sbm.num_edges()));
+    for r in bench_partition(&sbm, 32, 3, 1) {
+        println!("{}", r.row());
     }
 
-    let r = bench("hierarchy L=3 k=16", || {
-        black_box(Hierarchy::build(&sbm, &HierarchyConfig::new(16, 3)))
-    });
-    println!("{}", r.report(Some((edges, "edges"))));
-
     let rg = rmat(&RmatConfig { scale: 15, edge_factor: 8, ..Default::default() });
-    let redges = rg.num_edges() as u64;
-    section(&format!("partitioner on R-MAT n=32k m={redges} (heavy tail)"));
-    let r = bench("partition k=16", || {
-        black_box(partition(&rg, &PartitionConfig::with_k(16)))
-    });
-    println!("{}", r.report(Some((redges, "edges"))));
+    section(&format!("partitioner on R-MAT n=32k m={} (heavy tail, k=16)", rg.num_edges()));
+    for r in bench_partition(&rg, 16, 2, 1) {
+        println!("{}", r.row());
+    }
 }

@@ -14,7 +14,12 @@
 use crate::config::{full_grid, Experiment};
 use crate::coordinator::{run_experiment, TrainOptions, TrainOutcome};
 use crate::embedding::{compose_embeddings, init_params, ComposeEngine, EmbeddingPlan};
+use crate::graph::CsrGraph;
 use crate::metrics::fmt_cell;
+use crate::partition::{
+    coarsen, coarsen_reference, heavy_edge_matching, parallel_heavy_edge_matching, partition,
+    Hierarchy, HierarchyConfig, PartitionConfig,
+};
 use crate::runtime::{Manifest, RuntimeClient};
 use crate::util::bench::{bench, black_box, BenchResult};
 use crate::util::rng::Rng;
@@ -277,6 +282,148 @@ pub fn bench_compose(plan: &EmbeddingPlan, batch: usize) -> Vec<ComposeBenchReco
     vec![rec_ref, rec_par, rec_bat]
 }
 
+// ---------------------------------------------------------------------
+// Host-side partitioner benchmarking (no PJRT needed)
+// ---------------------------------------------------------------------
+
+/// One measured partitioner stage, serializable for CI smoke artifacts.
+#[derive(Debug, Clone, Serialize)]
+pub struct PartitionBenchRecord {
+    /// Pipeline stage: "matching/scalar", "matching/parallel",
+    /// "contract/reference", "contract/csr", "partition/scalar",
+    /// "partition/parallel", "hierarchy/parallel".
+    pub stage: String,
+    pub n: usize,
+    /// Undirected edge count of the input graph.
+    pub edges: usize,
+    /// Parts per split (0 for k-independent stages).
+    pub k: usize,
+    pub iters: usize,
+    pub mean_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    /// Undirected edges processed per second (`edges / mean`).
+    pub edges_per_sec: f64,
+    /// Mean-time ratio vs the scalar/reference counterpart of the same
+    /// stage; `None` on reference rows and unpaired stages.
+    pub speedup_vs_reference: Option<f64>,
+    /// Weighted edge cut (end-to-end partition stages only).
+    pub edge_cut: Option<f64>,
+}
+
+impl PartitionBenchRecord {
+    fn from_result(stage: &str, g: &CsrGraph, k: usize, r: &BenchResult) -> Self {
+        PartitionBenchRecord {
+            stage: stage.to_string(),
+            n: g.num_nodes(),
+            edges: g.num_edges(),
+            k,
+            iters: r.iters,
+            mean_ns: r.mean.as_nanos() as u64,
+            p50_ns: r.p50.as_nanos() as u64,
+            p95_ns: r.p95.as_nanos() as u64,
+            edges_per_sec: g.num_edges() as f64 / r.mean.as_secs_f64().max(1e-12),
+            speedup_vs_reference: None,
+            edge_cut: None,
+        }
+    }
+
+    /// Human-readable report line.
+    pub fn row(&self) -> String {
+        let speedup = self
+            .speedup_vs_reference
+            .map(|s| format!("  {s:>6.2}x vs reference"))
+            .unwrap_or_default();
+        let cut = self.edge_cut.map(|c| format!("  cut={c:.0}")).unwrap_or_default();
+        format!(
+            "{:<20} n={:<7} m={:<8} mean {:>10.3?} ({:>12.0} edges/s){speedup}{cut}",
+            self.stage,
+            self.n,
+            self.edges,
+            std::time::Duration::from_nanos(self.mean_ns),
+            self.edges_per_sec
+        )
+    }
+}
+
+/// Benchmark the partitioner pipeline on `g`: scalar vs parallel
+/// heavy-edge matching, reference vs CSR-native contraction, end-to-end
+/// k-way partitioning on both paths, and the sibling-parallel L-level
+/// hierarchy build.
+///
+/// Before timing anything, the parallel kernels are validated against
+/// their scalar oracles on this exact graph (involution property,
+/// identical contraction structure) — a bench that silently measured a
+/// broken kernel would be worse than no bench.
+pub fn bench_partition(
+    g: &CsrGraph,
+    k: usize,
+    levels: usize,
+    seed: u64,
+) -> Vec<PartitionBenchRecord> {
+    // ---- correctness gates (outside timing) ----
+    let par_m = parallel_heavy_edge_matching(g, seed);
+    for (u, &v) in par_m.iter().enumerate() {
+        assert_eq!(par_m[v as usize] as usize, u, "parallel matching not involutive at {u}");
+    }
+    let (cg_ref, map_ref) = coarsen_reference(g, &par_m);
+    let (cg_csr, map_csr) = coarsen(g, &par_m);
+    assert_eq!(map_ref, map_csr, "contraction maps diverge");
+    assert_eq!(cg_ref.indptr(), cg_csr.indptr(), "contraction indptr diverges");
+    assert_eq!(cg_ref.indices(), cg_csr.indices(), "contraction indices diverge");
+
+    let mut recs = Vec::new();
+    // ---- matching ----
+    let r_ms = bench("matching scalar", || {
+        let mut rng = Rng::seed_from_u64(seed);
+        black_box(heavy_edge_matching(g, &mut rng))
+    });
+    let r_mp = bench("matching parallel", || black_box(parallel_heavy_edge_matching(g, seed)));
+    recs.push(PartitionBenchRecord::from_result("matching/scalar", g, 0, &r_ms));
+    let mut rec = PartitionBenchRecord::from_result("matching/parallel", g, 0, &r_mp);
+    rec.speedup_vs_reference = Some(r_ms.mean.as_secs_f64() / r_mp.mean.as_secs_f64().max(1e-12));
+    recs.push(rec);
+
+    // ---- contraction ----
+    let r_cr = bench("contract reference", || black_box(coarsen_reference(g, &par_m)));
+    let r_cc = bench("contract csr", || black_box(coarsen(g, &par_m)));
+    recs.push(PartitionBenchRecord::from_result("contract/reference", g, 0, &r_cr));
+    let mut rec = PartitionBenchRecord::from_result("contract/csr", g, 0, &r_cc);
+    rec.speedup_vs_reference = Some(r_cr.mean.as_secs_f64() / r_cc.mean.as_secs_f64().max(1e-12));
+    recs.push(rec);
+
+    // ---- end-to-end k-way partition ----
+    // edge cuts are harvested from the first timed iteration (every
+    // iteration is deterministic-identical) instead of extra runs
+    let scfg = PartitionConfig { k, seed, parallel: false, ..Default::default() };
+    let pcfg = PartitionConfig { k, seed, parallel: true, ..Default::default() };
+    let mut scalar_cut = None;
+    let r_ps = bench("partition scalar", || {
+        let p = partition(g, &scfg);
+        scalar_cut.get_or_insert(p.edge_cut);
+        black_box(p)
+    });
+    let mut par_cut = None;
+    let r_pp = bench("partition parallel", || {
+        let p = partition(g, &pcfg);
+        par_cut.get_or_insert(p.edge_cut);
+        black_box(p)
+    });
+    let mut rec = PartitionBenchRecord::from_result("partition/scalar", g, k, &r_ps);
+    rec.edge_cut = scalar_cut;
+    recs.push(rec);
+    let mut rec = PartitionBenchRecord::from_result("partition/parallel", g, k, &r_pp);
+    rec.speedup_vs_reference = Some(r_ps.mean.as_secs_f64() / r_pp.mean.as_secs_f64().max(1e-12));
+    rec.edge_cut = par_cut;
+    recs.push(rec);
+
+    // ---- hierarchy build ----
+    let hcfg = HierarchyConfig::new(k.max(2), levels.max(1));
+    let r_h = bench("hierarchy", || black_box(Hierarchy::build(g, &hcfg)));
+    recs.push(PartitionBenchRecord::from_result("hierarchy/parallel", g, k, &r_h));
+    recs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,6 +452,42 @@ mod tests {
         assert!(json.contains("\"elements_per_sec\""), "json: {json}");
         for r in &recs {
             assert!(r.row().contains("elem/s"));
+        }
+    }
+
+    #[test]
+    fn bench_partition_produces_serializable_records() {
+        crate::util::bench::set_quick(true);
+        let (g, _) = crate::graph::planted_partition(&crate::graph::PlantedPartitionConfig {
+            n: 400,
+            communities: 4,
+            intra_degree: 8.0,
+            inter_degree: 1.5,
+            seed: 9,
+            ..Default::default()
+        });
+        let recs = bench_partition(&g, 4, 2, 1);
+        assert_eq!(recs.len(), 7);
+        let stages: Vec<&str> = recs.iter().map(|r| r.stage.as_str()).collect();
+        assert_eq!(
+            stages,
+            [
+                "matching/scalar",
+                "matching/parallel",
+                "contract/reference",
+                "contract/csr",
+                "partition/scalar",
+                "partition/parallel",
+                "hierarchy/parallel",
+            ]
+        );
+        assert!(recs.iter().all(|r| r.edges_per_sec > 0.0));
+        assert!(recs[1].speedup_vs_reference.is_some());
+        assert!(recs[5].edge_cut.is_some());
+        let json = serde_json::to_string(&recs).unwrap();
+        assert!(json.contains("\"edges_per_sec\""), "json: {json}");
+        for r in &recs {
+            assert!(r.row().contains("edges/s"));
         }
     }
 }

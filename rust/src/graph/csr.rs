@@ -97,6 +97,29 @@ impl CsrGraph {
         (self.indptr[u as usize] as usize, self.indptr[u as usize + 1] as usize)
     }
 
+    /// Assemble a graph directly from CSR arrays — the entry point for
+    /// kernels that produce CSR natively (the partitioner's two-pass
+    /// contraction, induced-subgraph extraction) without paying
+    /// `GraphBuilder`'s edge-list sort.
+    ///
+    /// The caller must uphold the type invariants documented above
+    /// (monotone `indptr`, symmetric adjacency, per-row ascending
+    /// neighbor ids, no self loops). Cheap shape checks run always;
+    /// `validate()` is the exhaustive check used by tests.
+    pub fn from_parts(
+        indptr: Vec<u64>,
+        indices: Vec<u32>,
+        weights: Vec<f32>,
+        vwgts: Vec<u32>,
+    ) -> Self {
+        assert!(!indptr.is_empty() && indptr[0] == 0, "indptr must start at 0");
+        assert_eq!(*indptr.last().unwrap() as usize, indices.len(), "indptr tail mismatch");
+        assert_eq!(weights.len(), indices.len(), "weights length mismatch");
+        assert_eq!(vwgts.len(), indptr.len() - 1, "vwgts length mismatch");
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]), "indptr not monotone");
+        CsrGraph { indptr, indices, weights, vwgts }
+    }
+
     /// COO edge arrays `(src, dst)` over all directed adjacency entries.
     /// This is the exact layout the AOT-compiled GNN consumes
     /// (`segment_sum` over `dst`).
@@ -347,5 +370,25 @@ mod tests {
     fn default_vertex_weights_are_one() {
         let g = triangle();
         assert_eq!(g.total_vertex_weight(), 3);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_builder_output() {
+        let g = triangle();
+        let re = CsrGraph::from_parts(
+            g.indptr().to_vec(),
+            g.indices().to_vec(),
+            (0..g.num_nodes() as u32).flat_map(|u| g.edge_weights(u).to_vec()).collect(),
+            (0..g.num_nodes() as u32).map(|u| g.vertex_weight(u)).collect(),
+        );
+        re.validate().unwrap();
+        assert_eq!(re.indptr(), g.indptr());
+        assert_eq!(re.indices(), g.indices());
+    }
+
+    #[test]
+    #[should_panic(expected = "indptr tail mismatch")]
+    fn from_parts_rejects_bad_shape() {
+        CsrGraph::from_parts(vec![0, 2], vec![1], vec![1.0], vec![1]);
     }
 }

@@ -14,15 +14,22 @@
 //! * `compose --dataset D [--method M] [--batch B] [--json]` — benchmark
 //!   the host-side compose engine (reference vs parallel vs batch paths);
 //!   runs without PJRT artifacts.
+//! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
+//!   benchmark the partitioner pipeline (scalar vs parallel matching,
+//!   reference vs CSR contraction, end-to-end partition, hierarchy);
+//!   defaults to the acceptance SBM (n = 50k, 32 communities).
 //!
 //! Argument parsing is hand-rolled (minimal-dependency build: no clap).
 
 use anyhow::{anyhow, bail, Result};
-use poshashemb::bench_harness::{bench_compose, print_table, rows_from_outcomes, Harness};
+use poshashemb::bench_harness::{
+    bench_compose, bench_partition, print_table, rows_from_outcomes, Harness,
+};
 use poshashemb::config::{default_c, default_k, full_grid, smoke_grid, write_aot_request};
 use poshashemb::coordinator::{run_experiment, TrainOptions};
 use poshashemb::data::{spec, Dataset, DATASET_NAMES};
 use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
 use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
 use poshashemb::runtime::{Manifest, RuntimeClient};
 use std::collections::HashMap;
@@ -70,6 +77,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&flags),
         "experiment" => cmd_experiment(&flags),
         "compose" => cmd_compose(&flags),
+        "partition-bench" => cmd_partition_bench(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -88,7 +96,8 @@ fn print_help() {
          partition --dataset D --k K [--levels L]   run the multilevel partitioner\n\
          train --experiment NAME [--seed S] [--epochs N] [--verbose]\n\
          experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table\n\
-         compose [--dataset D] [--method M] [--batch B] [--json]   bench the compose engine"
+         compose [--dataset D] [--method M] [--batch B] [--json]   bench the compose engine\n\
+         partition-bench [--dataset D] [--k K] [--levels L] [--json]   bench the partitioner"
     );
 }
 
@@ -211,6 +220,46 @@ fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
     let plan = EmbeddingPlan::build(n, sp.d, &method, hier.as_ref(), 0);
     eprintln!("compose bench: {dsname} n={n} d={} method={}", sp.d, method.name());
     let records = bench_compose(&plan, batch);
+    if flags.contains_key("json") {
+        println!("{}", serde_json::to_string_pretty(&records)?);
+    } else {
+        for r in &records {
+            println!("{}", r.row());
+        }
+    }
+    Ok(())
+}
+
+/// Partitioner pipeline benchmark: no PJRT artifacts required. Without
+/// `--dataset` it runs on the acceptance SBM graph (n = 50k, 32
+/// communities) that `cargo bench --bench partitioner` also uses.
+fn cmd_partition_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let k: usize = flags.get("k").map(|v| v.parse()).transpose()?.unwrap_or(32);
+    let levels: usize = flags.get("levels").map(|v| v.parse()).transpose()?.unwrap_or(3);
+    let seed: u64 = flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let (graph, label) = match flags.get("dataset").map(String::as_str) {
+        Some(dsname) => {
+            let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
+            (Dataset::generate(&sp).graph, dsname.to_string())
+        }
+        None => {
+            let (g, _) = planted_partition(&PlantedPartitionConfig {
+                n: 50_000,
+                communities: 32,
+                intra_degree: 12.0,
+                inter_degree: 2.0,
+                seed: 3,
+                ..Default::default()
+            });
+            (g, "sbm-50k".to_string())
+        }
+    };
+    eprintln!(
+        "partition bench: {label} n={} m={} k={k} levels={levels}",
+        graph.num_nodes(),
+        graph.num_edges()
+    );
+    let records = bench_partition(&graph, k, levels, seed);
     if flags.contains_key("json") {
         println!("{}", serde_json::to_string_pretty(&records)?);
     } else {

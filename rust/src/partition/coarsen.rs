@@ -1,14 +1,148 @@
 //! Graph contraction given a matching.
 //!
 //! Matched pairs become single super-nodes; vertex weights add; parallel
-//! edges between super-nodes merge by summing weights (handled by
-//! `GraphBuilder`); edges internal to a collapsed pair disappear.
+//! edges between super-nodes merge by summing weights; edges internal to
+//! a collapsed pair disappear.
+//!
+//! Two implementations of the same contract:
+//!
+//! * [`coarsen`] — CSR-native two-pass kernel: a parallel counting pass
+//!   derives per-coarse-node degree offsets (upper bounds, pre-merge),
+//!   then a parallel scatter fills each coarse row from its two fine
+//!   rows, sorts it, and merges duplicate coarse edges in place. O(m)
+//!   with no per-edge hashing or global edge-list sort; rows are
+//!   disjoint slices, so the pass runs on the rayon pool and the result
+//!   is identical at any thread count.
+//! * [`coarsen_reference`] — the original `GraphBuilder` path, kept as
+//!   the oracle the kernel is validated against (identical structure;
+//!   weights agree up to float summation order).
 
 use crate::graph::{CsrGraph, GraphBuilder};
+use rayon::prelude::*;
+
+/// Split `buf` into consecutive variable-length rows per `offsets`
+/// (`offsets.len() - 1` rows; row i spans `offsets[i]..offsets[i+1]`).
+/// The returned mutable slices are disjoint, so they can be filled in
+/// parallel.
+fn split_rows<'a, T>(mut buf: &'a mut [T], offsets: &[u64]) -> Vec<&'a mut [T]> {
+    let mut rows = Vec::with_capacity(offsets.len().saturating_sub(1));
+    for w in offsets.windows(2) {
+        let (head, tail) = std::mem::take(&mut buf).split_at_mut((w[1] - w[0]) as usize);
+        rows.push(head);
+        buf = tail;
+    }
+    rows
+}
 
 /// Contract `g` along `matching` (an involution, `matching[u] ∈ {u, v}`).
 /// Returns the coarse graph and the fine→coarse node map.
 pub fn coarsen(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
+    let n = g.num_nodes();
+    assert_eq!(matching.len(), n);
+    // Coarse numbering in first-seen fine order — identical to the
+    // reference path, so uncoarsening projections are unchanged.
+    let mut map = vec![u32::MAX; n];
+    let mut rep: Vec<u32> = Vec::with_capacity(n / 2 + 1);
+    for u in 0..n {
+        if map[u] != u32::MAX {
+            continue;
+        }
+        let c = rep.len() as u32;
+        map[u] = c;
+        let v = matching[u] as usize;
+        if v != u {
+            map[v] = c;
+        }
+        rep.push(u as u32);
+    }
+    let cn = rep.len();
+
+    let vwgts: Vec<u32> = rep
+        .par_iter()
+        .map(|&u| {
+            let v = matching[u as usize];
+            g.vertex_weight(u) + if v != u { g.vertex_weight(v) } else { 0 }
+        })
+        .collect();
+
+    // Pass 1 (counting): per-coarse-node slot upper bounds (both fine
+    // adjacency lists, before dedup/self-edge elision) → row offsets.
+    let ub: Vec<u64> = rep
+        .par_iter()
+        .map(|&u| {
+            let v = matching[u as usize];
+            (g.degree(u) + if v != u { g.degree(v) } else { 0 }) as u64
+        })
+        .collect();
+    let mut offsets = vec![0u64; cn + 1];
+    for c in 0..cn {
+        offsets[c + 1] = offsets[c] + ub[c];
+    }
+
+    // Pass 2 (scatter): gather each coarse row from its fine rows, sort
+    // by coarse neighbor, merge duplicates in ascending-neighbor order
+    // (deterministic summation independent of thread count).
+    let mut entries: Vec<(u32, f32)> = vec![(0, 0.0); offsets[cn] as usize];
+    let lens: Vec<usize> = split_rows(&mut entries, &offsets)
+        .into_par_iter()
+        .enumerate()
+        .map(|(c, row)| {
+            let u = rep[c];
+            let v = matching[u as usize];
+            let mut len = 0usize;
+            for m in [u, v] {
+                for (nb, w) in g.edges(m) {
+                    let cnb = map[nb as usize];
+                    if cnb != c as u32 {
+                        row[len] = (cnb, w);
+                        len += 1;
+                    }
+                }
+                if v == u {
+                    break;
+                }
+            }
+            let filled = &mut row[..len];
+            filled.sort_unstable_by_key(|e| e.0);
+            let mut out = 0usize;
+            let mut i = 0usize;
+            while i < len {
+                let (c0, mut wsum) = filled[i];
+                i += 1;
+                while i < len && filled[i].0 == c0 {
+                    wsum += filled[i].1;
+                    i += 1;
+                }
+                filled[out] = (c0, wsum);
+                out += 1;
+            }
+            out
+        })
+        .collect();
+
+    // Compact the merged row prefixes into the final CSR arrays.
+    let mut indptr = vec![0u64; cn + 1];
+    for c in 0..cn {
+        indptr[c + 1] = indptr[c] + lens[c] as u64;
+    }
+    let mut indices = vec![0u32; indptr[cn] as usize];
+    let mut weights = vec![0f32; indptr[cn] as usize];
+    split_rows(&mut indices, &indptr)
+        .into_par_iter()
+        .zip(split_rows(&mut weights, &indptr))
+        .enumerate()
+        .for_each(|(c, (irow, wrow))| {
+            let s = offsets[c] as usize;
+            for (j, &(nb, w)) in entries[s..s + lens[c]].iter().enumerate() {
+                irow[j] = nb;
+                wrow[j] = w;
+            }
+        });
+    (CsrGraph::from_parts(indptr, indices, weights, vwgts), map)
+}
+
+/// Scalar `GraphBuilder` contraction — the oracle for [`coarsen`].
+pub fn coarsen_reference(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
     let n = g.num_nodes();
     assert_eq!(matching.len(), n);
     let mut map = vec![u32::MAX; n];
@@ -109,5 +243,46 @@ mod tests {
         let (cg, _) = coarsen(&g, &matching);
         assert_eq!(cg.num_edges(), 1);
         assert_eq!(cg.edge_weights(0), &[3.0]); // 1.5 + 0.5 + 1.0
+    }
+
+    #[test]
+    fn csr_kernel_matches_reference_on_random_graph() {
+        use crate::graph::{planted_partition, PlantedPartitionConfig};
+        use crate::util::rng::Rng;
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n: 900,
+            communities: 6,
+            intra_degree: 9.0,
+            inter_degree: 2.0,
+            seed: 19,
+            ..Default::default()
+        });
+        let mut rng = Rng::seed_from_u64(5);
+        let matching = super::super::heavy_edge_matching(&g, &mut rng);
+        let (a, amap) = coarsen_reference(&g, &matching);
+        let (b, bmap) = coarsen(&g, &matching);
+        assert_eq!(amap, bmap);
+        assert_eq!(a.indptr(), b.indptr());
+        assert_eq!(a.indices(), b.indices());
+        for u in 0..a.num_nodes() as u32 {
+            for (x, y) in a.edge_weights(u).iter().zip(b.edge_weights(u)) {
+                assert!((x - y).abs() < 1e-4, "weight mismatch at row {u}: {x} vs {y}");
+            }
+            assert_eq!(a.vertex_weight(u), b.vertex_weight(u));
+        }
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_and_edgeless_graphs() {
+        let g0 = GraphBuilder::new(0).build();
+        let (cg0, map0) = coarsen(&g0, &[]);
+        assert_eq!(cg0.num_nodes(), 0);
+        assert!(map0.is_empty());
+        let g3 = GraphBuilder::new(3).build();
+        let (cg3, _) = coarsen(&g3, &[0, 1, 2]);
+        assert_eq!(cg3.num_nodes(), 3);
+        assert_eq!(cg3.num_edges(), 0);
+        cg3.validate().unwrap();
     }
 }

@@ -8,7 +8,8 @@
 //! node's path through the hierarchy is recoverable from any level's id.
 
 use super::{partition, PartitionConfig};
-use crate::graph::{CsrGraph, GraphBuilder};
+use crate::graph::CsrGraph;
+use rayon::prelude::*;
 
 /// Configuration for hierarchy construction.
 #[derive(Debug, Clone)]
@@ -61,25 +62,42 @@ impl Hierarchy {
         z.push(p0.part.clone());
         m.push(cfg.k);
 
-        // subsequent levels: split each current partition into k
+        // Subsequent levels: split each current partition into k. Sibling
+        // subgraphs are independent, so they are extracted and partitioned
+        // on the rayon pool; each worker split reuses one
+        // `global_to_local` scratch buffer across the groups it owns.
+        // Results are collected in pid order and every split seeds from
+        // (lvl, pid), so `z` is identical at any thread count.
         for lvl in 1..cfg.levels {
             let prev = &z[lvl - 1];
             let prev_m = m[lvl - 1];
-            let mut cur = vec![0u32; n];
             // group node ids by previous-level partition
             let mut groups: Vec<Vec<u32>> = vec![Vec::new(); prev_m];
             for (i, &p) in prev.iter().enumerate() {
                 groups[p as usize].push(i as u32);
             }
-            for (pid, nodes) in groups.iter().enumerate() {
-                if nodes.is_empty() {
-                    continue;
-                }
-                let (sub, _back) = induced_subgraph(g, nodes);
-                let seed = cfg.base.seed ^ ((lvl as u64) << 32) ^ pid as u64;
-                let sp = partition(&sub, &PartitionConfig { k: cfg.k, seed, ..cfg.base.clone() });
-                for (local, &orig) in nodes.iter().enumerate() {
-                    cur[orig as usize] = (pid * cfg.k) as u32 + sp.part[local];
+            let parts: Vec<Option<Vec<u32>>> = groups
+                .par_iter()
+                .enumerate()
+                .map_init(
+                    || vec![u32::MAX; n],
+                    |scratch, (pid, nodes)| {
+                        if nodes.is_empty() {
+                            return None;
+                        }
+                        let sub = induced_subgraph_with_scratch(g, nodes, scratch);
+                        let seed = cfg.base.seed ^ ((lvl as u64) << 32) ^ pid as u64;
+                        let pc = PartitionConfig { k: cfg.k, seed, ..cfg.base.clone() };
+                        Some(partition(&sub, &pc).part)
+                    },
+                )
+                .collect();
+            let mut cur = vec![0u32; n];
+            for (pid, (nodes, part)) in groups.iter().zip(&parts).enumerate() {
+                if let Some(part) = part {
+                    for (local, &orig) in nodes.iter().enumerate() {
+                        cur[orig as usize] = (pid * cfg.k) as u32 + part[local];
+                    }
                 }
             }
             z.push(cur);
@@ -130,23 +148,82 @@ impl Hierarchy {
 
 /// Extract the induced subgraph on `nodes`; returns the subgraph (local
 /// ids = index into `nodes`) and the local→global map (`nodes` itself).
+///
+/// Both directions of every adjacency entry whose endpoints are in
+/// `nodes` are copied, so the subgraph of an undirected-symmetric graph
+/// is undirected-symmetric (pinned by
+/// `induced_subgraph_is_undirected_symmetric`) — `validate()` holds on
+/// the result whenever it holds on `g`.
 pub fn induced_subgraph(g: &CsrGraph, nodes: &[u32]) -> (CsrGraph, Vec<u32>) {
-    let mut global_to_local = std::collections::HashMap::with_capacity(nodes.len());
-    for (local, &orig) in nodes.iter().enumerate() {
-        global_to_local.insert(orig, local as u32);
+    let mut scratch = vec![u32::MAX; g.num_nodes()];
+    (induced_subgraph_with_scratch(g, nodes, &mut scratch), nodes.to_vec())
+}
+
+/// CSR-native induced-subgraph extraction with a caller-owned
+/// `global_to_local` scratch buffer (`g.num_nodes()` entries, all
+/// `u32::MAX` on entry; restored on exit). One buffer serves many
+/// sibling extractions without O(n) re-clearing or per-call hashing —
+/// the hot path of [`Hierarchy::build`].
+pub fn induced_subgraph_with_scratch(
+    g: &CsrGraph,
+    nodes: &[u32],
+    global_to_local: &mut [u32],
+) -> CsrGraph {
+    let ln = nodes.len();
+    for (local, &u) in nodes.iter().enumerate() {
+        // unconditional: a dirty scratch or duplicate node would yield a
+        // silently corrupt subgraph, and the check is O(1) per node
+        assert_eq!(global_to_local[u as usize], u32::MAX, "dirty scratch or duplicate node {u}");
+        global_to_local[u as usize] = local as u32;
     }
-    let vwgts = nodes.iter().map(|&u| g.vertex_weight(u)).collect();
-    let mut b = GraphBuilder::new(nodes.len()).with_vertex_weights(vwgts);
-    for (local, &orig) in nodes.iter().enumerate() {
-        for (v, w) in g.edges(orig) {
-            if let Some(&lv) = global_to_local.get(&v) {
-                if (local as u32) < lv {
-                    b.add_edge(local as u32, lv, w);
-                }
+    // counting pass: in-subgraph degree per local node → row offsets
+    let mut indptr = vec![0u64; ln + 1];
+    for (local, &u) in nodes.iter().enumerate() {
+        let mut deg = 0u64;
+        for &v in g.neighbors(u) {
+            if global_to_local[v as usize] != u32::MAX {
+                deg += 1;
+            }
+        }
+        indptr[local + 1] = deg;
+    }
+    for i in 0..ln {
+        indptr[i + 1] += indptr[i];
+    }
+    // fill pass: rows are consecutive, so one cursor walks the arrays
+    let mut indices = vec![0u32; indptr[ln] as usize];
+    let mut weights = vec![0f32; indptr[ln] as usize];
+    let mut cursor = 0usize;
+    for &u in nodes {
+        for (v, w) in g.edges(u) {
+            let lv = global_to_local[v as usize];
+            if lv != u32::MAX {
+                indices[cursor] = lv;
+                weights[cursor] = w;
+                cursor += 1;
             }
         }
     }
-    (b.build(), nodes.to_vec())
+    // ascending `nodes` keep rows sorted for free (global CSR rows are
+    // sorted and the mapping is monotone); arbitrary orders need a
+    // per-row sort to restore the builder's canonical layout.
+    if !nodes.windows(2).all(|w| w[0] <= w[1]) {
+        for local in 0..ln {
+            let (s, e) = (indptr[local] as usize, indptr[local + 1] as usize);
+            let mut row: Vec<(u32, f32)> =
+                indices[s..e].iter().copied().zip(weights[s..e].iter().copied()).collect();
+            row.sort_unstable_by_key(|&(v, _)| v);
+            for (j, (v, w)) in row.into_iter().enumerate() {
+                indices[s + j] = v;
+                weights[s + j] = w;
+            }
+        }
+    }
+    for &u in nodes {
+        global_to_local[u as usize] = u32::MAX;
+    }
+    let vwgts = nodes.iter().map(|&u| g.vertex_weight(u)).collect();
+    CsrGraph::from_parts(indptr, indices, weights, vwgts)
 }
 
 #[cfg(test)]
@@ -221,6 +298,42 @@ mod tests {
             for &v in sub.neighbors(u) {
                 assert!(g.neighbors(back[u as usize]).contains(&back[v as usize]));
             }
+        }
+    }
+
+    #[test]
+    fn induced_subgraph_is_undirected_symmetric() {
+        // Non-contiguous, UNSORTED node set: both directions of every
+        // in-set edge must survive extraction. `validate()` pins the
+        // symmetry invariant (v ∈ adj(u) ⇔ u ∈ adj(v), equal weights).
+        let g = sbm(300);
+        let mut nodes: Vec<u32> = (0..300u32).step_by(3).collect();
+        nodes.reverse();
+        let (sub, back) = induced_subgraph(&g, &nodes);
+        assert_eq!(back, nodes);
+        sub.validate().unwrap();
+        // edge count matches a direct double scan of g over the set
+        let in_set: std::collections::HashSet<u32> = nodes.iter().copied().collect();
+        let mut expect = 0usize;
+        for &u in &nodes {
+            expect += g.neighbors(u).iter().filter(|v| in_set.contains(v)).count();
+        }
+        assert_eq!(sub.num_adjacency_entries(), expect);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_extraction() {
+        let g = sbm(120);
+        let mut scratch = vec![u32::MAX; g.num_nodes()];
+        let sets: [Vec<u32>; 3] =
+            [(0..40u32).collect(), (30..90u32).collect(), (0..120u32).step_by(2).collect()];
+        for nodes in &sets {
+            let reused = induced_subgraph_with_scratch(&g, nodes, &mut scratch);
+            let (fresh, _) = induced_subgraph(&g, nodes);
+            assert_eq!(reused.indptr(), fresh.indptr());
+            assert_eq!(reused.indices(), fresh.indices());
+            reused.validate().unwrap();
+            assert!(scratch.iter().all(|&x| x == u32::MAX), "scratch not restored");
         }
     }
 

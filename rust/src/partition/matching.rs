@@ -1,19 +1,39 @@
 //! Heavy-edge matching (HEM) for the coarsening phase.
 //!
-//! Visits nodes in random order; each unmatched node matches with its
-//! unmatched neighbor of maximum edge weight (ties → lower id). Nodes with
-//! no unmatched neighbor stay matched to themselves — the classic METIS
-//! HEM scheme, which preferentially collapses heavy edges so the coarse
-//! graph preserves the cut structure of the fine graph.
+//! Two implementations of the same contract (`matching[matching[u]] ==
+//! u`, matched pairs are edges, leftovers self-match):
+//!
+//! * [`heavy_edge_matching`] — the scalar oracle. Visits nodes in random
+//!   order; each unmatched node matches with its unmatched neighbor of
+//!   maximum edge weight (ties → lower id) — the classic METIS HEM
+//!   scheme, which preferentially collapses heavy edges so the coarse
+//!   graph preserves the cut structure of the fine graph.
+//! * [`parallel_heavy_edge_matching`] — rayon-parallel local-max
+//!   matching. Each round, every unmatched node proposes to its best
+//!   unmatched neighbor; mutual proposals are claimed lock-free with
+//!   `AtomicU32` compare-exchange over chunked node ranges, and the
+//!   losers retry against the updated matched set in the next round.
+//!   The proposal function is pure (reads only round-start state) and
+//!   claimed pairs are vertex-disjoint, so the result is deterministic
+//!   for a fixed seed at any thread count — only the seeded tie-break
+//!   priorities distinguish two runs, never the schedule.
 
 use crate::graph::CsrGraph;
 use crate::util::rng::Rng;
+use rayon::prelude::*;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+const UNMATCHED: u32 = u32::MAX;
+
+/// Nodes per parallel work unit in the matching rounds: small enough to
+/// load-balance heavy-tailed degree distributions, large enough to
+/// amortize rayon task overhead.
+const MATCH_CHUNK: usize = 4096;
 
 /// `matching[u] == v` means u and v are collapsed together (v may equal u).
 /// Always an involution: `matching[matching[u]] == u`.
 pub fn heavy_edge_matching(g: &CsrGraph, rng: &mut Rng) -> Vec<u32> {
     let n = g.num_nodes();
-    const UNMATCHED: u32 = u32::MAX;
     let mut matching = vec![UNMATCHED; n];
     let mut order: Vec<u32> = (0..n as u32).collect();
     rng.shuffle(&mut order);
@@ -46,10 +66,117 @@ pub fn heavy_edge_matching(g: &CsrGraph, rng: &mut Rng) -> Vec<u32> {
     matching
 }
 
+/// SplitMix64 finalizer — per-node tie-break priorities from a seed.
+#[inline]
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic rayon-parallel heavy-edge matching.
+///
+/// Same contract as [`heavy_edge_matching`] (valid involution, matched
+/// pairs are edges of `g`), built from conflict-resolution rounds:
+///
+/// 1. **Propose** — every still-unmatched node picks its best unmatched
+///    neighbor: maximum edge weight, ties broken by seeded per-node
+///    priority then id. Proposals only read round-start matched state, so
+///    the phase is embarrassingly parallel over chunked node ranges.
+/// 2. **Claim** — a pair (u, v) with mutual proposals is claimed by its
+///    lower endpoint via `AtomicU32` compare-exchange on both slots.
+///    Mutual-best pairs are vertex-disjoint, so claims never conflict;
+///    the CAS guards the invariant rather than arbitrating races. Nodes
+///    whose proposal was one-sided stay unmatched and retry next round;
+///    nodes with no unmatched neighbor left self-match immediately.
+///
+/// A mutual pair always exists while any unmatched node still has an
+/// unmatched neighbor (follow best-proposal pointers: weights are
+/// non-decreasing along the chain and the priority tie-break rules out
+/// longer cycles, so the chain ends in a 2-cycle), so every round makes
+/// progress and the loop terminates.
+pub fn parallel_heavy_edge_matching(g: &CsrGraph, seed: u64) -> Vec<u32> {
+    let n = g.num_nodes();
+    if n == 0 {
+        return Vec::new();
+    }
+    let pri: Vec<u64> = (0..n as u64).into_par_iter().map(|u| mix64(seed ^ mix64(u))).collect();
+    let matching: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNMATCHED)).collect();
+    let candidate: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNMATCHED)).collect();
+    let mut active: Vec<u32> = (0..n as u32).collect();
+    while !active.is_empty() {
+        // Phase 1: propose. Writes land in disjoint slots (one per active
+        // node); reads see only round-start matched state.
+        active.par_chunks(MATCH_CHUNK).for_each(|chunk| {
+            for &u in chunk {
+                let mut best: Option<(f32, u64, u32)> = None;
+                for (v, w) in g.edges(u) {
+                    if v == u || matching[v as usize].load(Ordering::Relaxed) != UNMATCHED {
+                        continue;
+                    }
+                    let pv = pri[v as usize];
+                    let better = match best {
+                        None => true,
+                        Some((bw, bp, bv)) => w > bw || (w == bw && (pv, v) < (bp, bv)),
+                    };
+                    if better {
+                        best = Some((w, pv, v));
+                    }
+                }
+                let c = best.map_or(UNMATCHED, |(_, _, v)| v);
+                candidate[u as usize].store(c, Ordering::Relaxed);
+            }
+        });
+        // Phase 2: claim mutual pairs; retire dead-end nodes.
+        active.par_chunks(MATCH_CHUNK).for_each(|chunk| {
+            for &u in chunk {
+                let v = candidate[u as usize].load(Ordering::Relaxed);
+                if v == UNMATCHED {
+                    // every neighbor is already matched: u can never pair
+                    matching[u as usize].store(u, Ordering::Relaxed);
+                    continue;
+                }
+                if u < v && candidate[v as usize].load(Ordering::Relaxed) == u {
+                    let claim_u = matching[u as usize].compare_exchange(
+                        UNMATCHED,
+                        v,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    );
+                    if claim_u.is_ok() {
+                        let claim_v = matching[v as usize].compare_exchange(
+                            UNMATCHED,
+                            u,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        );
+                        debug_assert!(claim_v.is_ok(), "mutual pairs must be vertex-disjoint");
+                    }
+                }
+            }
+        });
+        let before = active.len();
+        active.retain(|&u| matching[u as usize].load(Ordering::Relaxed) == UNMATCHED);
+        if active.len() == before {
+            // Unreachable by the progress argument above; self-match the
+            // remainder rather than livelock if the invariant ever breaks.
+            if cfg!(debug_assertions) {
+                panic!("matching round made no progress ({} nodes active)", active.len());
+            }
+            for &u in &active {
+                matching[u as usize].store(u, Ordering::Relaxed);
+            }
+            break;
+        }
+    }
+    matching.into_iter().map(AtomicU32::into_inner).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{planted_partition, GraphBuilder, PlantedPartitionConfig};
+    use crate::graph::{planted_partition, CsrGraph, GraphBuilder, PlantedPartitionConfig};
 
     #[test]
     fn matching_is_involution() {
@@ -126,6 +253,73 @@ mod tests {
         let m = heavy_edge_matching(&g, &mut rng);
         let pairs = (0..g.num_nodes()).filter(|&u| m[u] as usize != u).count() / 2;
         // dense-enough graph: expect most nodes matched
+        assert!(pairs as f64 > 0.3 * g.num_nodes() as f64, "pairs {pairs}");
+    }
+
+    fn assert_valid_matching(g: &CsrGraph, m: &[u32]) {
+        assert_eq!(m.len(), g.num_nodes());
+        for u in 0..g.num_nodes() {
+            let v = m[u] as usize;
+            assert!(v < g.num_nodes(), "out of range at {u}");
+            assert_eq!(m[v] as usize, u, "not involutive at {u}");
+            if v != u {
+                assert!(g.neighbors(u as u32).contains(&(v as u32)), "{u}-{v} not an edge");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matching_is_valid_and_deterministic() {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n: 1500,
+            communities: 6,
+            intra_degree: 9.0,
+            inter_degree: 2.0,
+            seed: 12,
+            ..Default::default()
+        });
+        let a = parallel_heavy_edge_matching(&g, 7);
+        let b = parallel_heavy_edge_matching(&g, 7);
+        let c = parallel_heavy_edge_matching(&g, 8);
+        assert_valid_matching(&g, &a);
+        assert_valid_matching(&g, &c);
+        assert_eq!(a, b, "same seed must give identical matchings");
+        assert_ne!(a, c, "different seeds should explore different matchings");
+    }
+
+    #[test]
+    fn parallel_matching_prefers_heavy_edges() {
+        // path a-b-c with b-c twice as heavy: b must pair with c
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 2.0);
+        let g = b.build();
+        for seed in 0..8 {
+            let m = parallel_heavy_edge_matching(&g, seed);
+            assert_eq!(m, vec![0, 2, 1], "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn parallel_matching_handles_degenerate_graphs() {
+        let empty = GraphBuilder::new(0).build();
+        assert!(parallel_heavy_edge_matching(&empty, 1).is_empty());
+        let isolated = GraphBuilder::new(4).build();
+        assert_eq!(parallel_heavy_edge_matching(&isolated, 1), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn parallel_matching_shrinks_graph_substantially() {
+        let (g, _) = planted_partition(&PlantedPartitionConfig {
+            n: 1000,
+            communities: 4,
+            intra_degree: 10.0,
+            inter_degree: 1.0,
+            seed: 8,
+            ..Default::default()
+        });
+        let m = parallel_heavy_edge_matching(&g, 3);
+        let pairs = (0..g.num_nodes()).filter(|&u| m[u] as usize != u).count() / 2;
         assert!(pairs as f64 > 0.3 * g.num_nodes() as f64, "pairs {pairs}");
     }
 }

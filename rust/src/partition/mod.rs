@@ -6,6 +6,10 @@
 //!
 //! 1. **Coarsening** (`matching` + `coarsen`): heavy-edge matching
 //!    collapses matched pairs into super-nodes until the graph is small.
+//!    Both phases are parallel by default (deterministic lock-free
+//!    matching rounds + a CSR-native contraction kernel); the scalar
+//!    implementations stay in-tree as validation oracles and are
+//!    selected with `PartitionConfig { parallel: false, .. }`.
 //! 2. **Initial partitioning** (`initial`): greedy graph growing produces
 //!    a balanced k-way partition of the coarsest graph.
 //! 3. **Uncoarsening + refinement** (`refine`): the partition is projected
@@ -23,9 +27,9 @@ mod matching;
 mod random;
 mod refine;
 
-pub use coarsen::coarsen;
-pub use hierarchy::{Hierarchy, HierarchyConfig};
-pub use matching::heavy_edge_matching;
+pub use coarsen::{coarsen, coarsen_reference};
+pub use hierarchy::{induced_subgraph, induced_subgraph_with_scratch, Hierarchy, HierarchyConfig};
+pub use matching::{heavy_edge_matching, parallel_heavy_edge_matching};
 pub use random::random_partition;
 
 use crate::graph::CsrGraph;
@@ -45,11 +49,25 @@ pub struct PartitionConfig {
     pub refine_passes: usize,
     /// RNG seed (tie-breaking in matching/growing).
     pub seed: u64,
+    /// Coarsen with the deterministic rayon-parallel kernels
+    /// ([`parallel_heavy_edge_matching`] + CSR-native [`coarsen`]);
+    /// `false` selects the full scalar oracle pipeline
+    /// ([`heavy_edge_matching`] + [`coarsen_reference`]). Both are
+    /// deterministic for a fixed seed; the parallel path is additionally
+    /// independent of thread count.
+    pub parallel: bool,
 }
 
 impl Default for PartitionConfig {
     fn default() -> Self {
-        PartitionConfig { k: 2, epsilon: 0.10, coarsen_until: 30, refine_passes: 4, seed: 1 }
+        PartitionConfig {
+            k: 2,
+            epsilon: 0.10,
+            coarsen_until: 30,
+            refine_passes: 4,
+            seed: 1,
+            parallel: true,
+        }
     }
 }
 
@@ -131,8 +149,16 @@ pub fn partition(g: &CsrGraph, cfg: &PartitionConfig) -> Partitioning {
         if cur.num_nodes() <= target {
             break;
         }
-        let matching = heavy_edge_matching(cur, &mut rng);
-        let (coarse, map) = coarsen(cur, &matching);
+        // `parallel: false` is the full scalar pipeline (oracle matching
+        // AND oracle contraction), so benches comparing the two paths
+        // measure the pre-parallelization baseline, not a hybrid.
+        let (coarse, map) = if cfg.parallel {
+            let matching = parallel_heavy_edge_matching(cur, rng.next_u64());
+            coarsen(cur, &matching)
+        } else {
+            let matching = heavy_edge_matching(cur, &mut rng);
+            coarsen_reference(cur, &matching)
+        };
         // stall guard: coarsening must shrink by ≥5% or we stop
         if coarse.num_nodes() as f64 > cur.num_nodes() as f64 * 0.95 {
             break;
@@ -238,6 +264,25 @@ mod tests {
         let p = partition(&g, &PartitionConfig::with_k(8));
         assert_eq!(p.part.len(), 3);
         assert!(p.part.iter().all(|&x| (x as usize) < 8));
+    }
+
+    #[test]
+    fn parallel_coarsening_matches_scalar_quality() {
+        // within 5% of the scalar oracle's cut, or at ground-truth
+        // (planted-partition) quality outright
+        let (g, membership) = sbm(1000, 4, 7);
+        let planted_cut = edge_cut(&g, &membership);
+        let mut cfg = PartitionConfig { k: 4, parallel: false, ..Default::default() };
+        let scalar = partition(&g, &cfg);
+        cfg.parallel = true;
+        let par = partition(&g, &cfg);
+        assert!(
+            par.edge_cut <= scalar.edge_cut * 1.05 + 2.0 || par.edge_cut <= planted_cut,
+            "parallel cut {} vs scalar {} (planted {planted_cut})",
+            par.edge_cut,
+            scalar.edge_cut
+        );
+        assert!(par.imbalance < 1.2, "imbalance {}", par.imbalance);
     }
 
     #[test]

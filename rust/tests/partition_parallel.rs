@@ -1,0 +1,157 @@
+//! Parallel-partitioner validation: property-based checks that the
+//! rayon-parallel coarsening pipeline is (a) structurally valid, (b)
+//! bit-identical across thread counts for a fixed seed, and (c) within
+//! tolerance of the scalar oracle's partition quality — plus the
+//! acceptance pin that `Hierarchy::build` produces identical `z`/`m` at
+//! 1 and 4 threads.
+//!
+//! Thread counts are varied with dedicated `rayon::ThreadPool`s rather
+//! than `RAYON_NUM_THREADS` (the global pool is process-wide and the
+//! test runner is itself parallel).
+
+use poshashemb::graph::{planted_partition, CsrGraph, PlantedPartitionConfig};
+use poshashemb::partition::{
+    coarsen, coarsen_reference, edge_cut, heavy_edge_matching, parallel_heavy_edge_matching,
+    partition, Hierarchy, HierarchyConfig, PartitionConfig,
+};
+use poshashemb::util::rng::Rng;
+use proptest::prelude::*;
+
+fn sbm(n: usize, communities: usize, intra: f64, inter: f64, seed: u64) -> CsrGraph {
+    planted_partition(&PlantedPartitionConfig {
+        n,
+        communities,
+        intra_degree: intra,
+        inter_degree: inter,
+        seed,
+        ..Default::default()
+    })
+    .0
+}
+
+fn in_pool<T: Send>(threads: usize, f: impl FnOnce() -> T + Send) -> T {
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("thread pool")
+        .install(f)
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(12))]
+
+    #[test]
+    fn parallel_matching_is_valid_involution(
+        n in 50usize..800,
+        communities in 2usize..8,
+        intra in 4.0f64..12.0,
+        seed in any::<u64>(),
+    ) {
+        let g = sbm(n, communities, intra, 1.5, seed);
+        let m = parallel_heavy_edge_matching(&g, seed ^ 0x5EED);
+        prop_assert_eq!(m.len(), g.num_nodes());
+        for u in 0..g.num_nodes() {
+            let v = m[u] as usize;
+            prop_assert!(v < g.num_nodes(), "out of range at {u}");
+            prop_assert_eq!(m[v] as usize, u, "not involutive at {u}");
+            if v != u {
+                prop_assert!(
+                    g.neighbors(u as u32).contains(&(v as u32)),
+                    "{u}-{v} matched but not an edge"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matching_bit_identical_across_thread_counts(
+        n in 100usize..1000,
+        communities in 2usize..6,
+        seed in any::<u64>(),
+    ) {
+        let g = sbm(n, communities, 8.0, 2.0, seed);
+        let m1 = in_pool(1, || parallel_heavy_edge_matching(&g, seed));
+        let m4 = in_pool(4, || parallel_heavy_edge_matching(&g, seed));
+        prop_assert_eq!(m1, m4);
+    }
+
+    #[test]
+    fn csr_contraction_matches_reference(
+        n in 60usize..700,
+        communities in 2usize..7,
+        seed in any::<u64>(),
+        use_parallel_matching in any::<bool>(),
+    ) {
+        let g = sbm(n, communities, 7.0, 2.0, seed);
+        let m = if use_parallel_matching {
+            parallel_heavy_edge_matching(&g, seed)
+        } else {
+            heavy_edge_matching(&g, &mut Rng::seed_from_u64(seed))
+        };
+        let (a, amap) = coarsen_reference(&g, &m);
+        let (b, bmap) = coarsen(&g, &m);
+        prop_assert_eq!(amap, bmap);
+        prop_assert_eq!(a.indptr(), b.indptr());
+        prop_assert_eq!(a.indices(), b.indices());
+        for u in 0..a.num_nodes() as u32 {
+            prop_assert_eq!(a.vertex_weight(u), b.vertex_weight(u));
+            for (x, y) in a.edge_weights(u).iter().zip(b.edge_weights(u)) {
+                prop_assert!((x - y).abs() < 1e-4, "row {u} weight {x} vs {y}");
+            }
+        }
+        let valid = b.validate();
+        prop_assert!(valid.is_ok(), "invalid coarse CSR: {:?}", valid);
+    }
+
+    #[test]
+    fn parallel_partition_quality_within_tolerance(
+        n in 600usize..1000,
+        seed in any::<u64>(),
+    ) {
+        // Strong-homophily SBM: the parallel coarsening path must land
+        // within 5% of the scalar oracle's edge cut (small absolute slack
+        // absorbs integer-sized noise on these tiny cuts). A cut at or
+        // below the planted partition's own cut also passes — that is
+        // ground-truth quality even when the scalar run got lucky.
+        let k = 4;
+        let (g, membership) = planted_partition(&PlantedPartitionConfig {
+            n,
+            communities: k,
+            intra_degree: 12.0,
+            inter_degree: 1.0,
+            seed,
+            ..Default::default()
+        });
+        let planted_cut = edge_cut(&g, &membership);
+        let mut cfg = PartitionConfig { k, seed, parallel: false, ..Default::default() };
+        let scalar = partition(&g, &cfg);
+        cfg.parallel = true;
+        let par = partition(&g, &cfg);
+        prop_assert!(
+            par.edge_cut <= scalar.edge_cut * 1.05 + 2.0 || par.edge_cut <= planted_cut,
+            "parallel cut {} vs scalar {} (planted {})",
+            par.edge_cut, scalar.edge_cut, planted_cut
+        );
+    }
+}
+
+#[test]
+fn hierarchy_identical_at_1_and_4_threads() {
+    let g = sbm(2000, 8, 8.0, 1.5, 42);
+    let cfg = HierarchyConfig::new(4, 3);
+    let h1 = in_pool(1, || Hierarchy::build(&g, &cfg));
+    let h4 = in_pool(4, || Hierarchy::build(&g, &cfg));
+    assert_eq!(h1.m, h4.m);
+    assert_eq!(h1.z, h4.z);
+    h1.validate().unwrap();
+}
+
+#[test]
+fn partition_identical_at_1_and_4_threads() {
+    let g = sbm(1500, 6, 9.0, 2.0, 7);
+    let cfg = PartitionConfig { k: 6, seed: 11, ..Default::default() };
+    let p1 = in_pool(1, || partition(&g, &cfg));
+    let p4 = in_pool(4, || partition(&g, &cfg));
+    assert_eq!(p1.part, p4.part);
+    assert_eq!(p1.edge_cut, p4.edge_cut);
+}
