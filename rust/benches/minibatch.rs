@@ -1,0 +1,53 @@
+//! L3 perf microbench: host-side neighbor-sampled minibatch training on
+//! `ComposeEngine::compose_batch` — the large-graph training loop that
+//! never materializes `n × d`. Reports seed nodes/s and batches/s per
+//! configuration (fanout sweep + the full-batch-equivalence oracle),
+//! sharing `bench_harness::bench_minibatch` with the
+//! `poshashemb train-minibatch` CLI subcommand.
+
+use poshashemb::bench_harness::bench_minibatch;
+use poshashemb::config::default_k;
+use poshashemb::coordinator::MinibatchOptions;
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{Fanout, SamplerConfig};
+use poshashemb::util::bench::{quick, section};
+
+fn main() {
+    let sp = spec("synth-arxiv").expect("registered dataset");
+    let ds = Dataset::generate(&sp);
+    let k = default_k(sp.n);
+    let method = EmbeddingMethod::PosHashEmbIntra {
+        levels: 3,
+        compression: ((sp.n as f64 / k as f64).sqrt()).ceil() as usize,
+        h: 2,
+    };
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(k, 3));
+    let plan = EmbeddingPlan::build(sp.n, sp.d, &method, Some(&hier), 0);
+    let epochs = if quick() { 2 } else { 8 };
+    let opts = MinibatchOptions { epochs, ..Default::default() };
+
+    section(&format!(
+        "minibatch training on synth-arxiv n={} d={} ({}, {} epochs)",
+        sp.n,
+        sp.d,
+        method.name(),
+        epochs
+    ));
+    let configs = [
+        SamplerConfig { batch_size: 256, fanout: Fanout::Max(5), shuffle: true },
+        SamplerConfig { batch_size: 512, fanout: Fanout::Max(10), shuffle: true },
+        SamplerConfig { batch_size: 1024, fanout: Fanout::All, shuffle: true },
+        SamplerConfig::oracle(ds.splits.train.len()),
+    ];
+    for cfg in configs {
+        let rec = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &opts).expect("bench run");
+        println!("{}", rec.row());
+        assert!(
+            rec.peak_compose_rows <= sp.n,
+            "compose block exceeded the node count: {}",
+            rec.peak_compose_rows
+        );
+    }
+}

@@ -7,12 +7,19 @@
 //!   `benches/embedding_compose.rs` and the `poshashemb compose`
 //!   subcommand: reference oracle vs [`ComposeEngine`] full-matrix vs
 //!   minibatch paths, with serde-serializable records for CI smoke.
+//! * [`bench_minibatch`] — host-side minibatch-training benchmarking
+//!   shared by `benches/minibatch.rs` and the `poshashemb
+//!   train-minibatch` subcommand: trains a configuration end to end and
+//!   records per-epoch timing, nodes/s and batches/s.
 //!
 //! Seeds default to 2 and are controlled with `POSHASH_SEEDS`; epochs can
 //! be capped with `POSHASH_EPOCHS` (useful for CI smoke runs).
 
 use crate::config::{full_grid, Experiment};
-use crate::coordinator::{run_experiment, TrainOptions, TrainOutcome};
+use crate::coordinator::{
+    run_experiment, MinibatchOptions, MinibatchTrainer, TrainOptions, TrainOutcome,
+};
+use crate::data::Dataset;
 use crate::embedding::{compose_embeddings, init_params, ComposeEngine, EmbeddingPlan};
 use crate::graph::CsrGraph;
 use crate::metrics::fmt_cell;
@@ -21,18 +28,23 @@ use crate::partition::{
     Hierarchy, HierarchyConfig, PartitionConfig,
 };
 use crate::runtime::{Manifest, RuntimeClient};
+use crate::sampler::SamplerConfig;
 use crate::util::bench::{bench, black_box, BenchResult};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use serde::Serialize;
 use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Reusable harness: PJRT client + manifest + options.
 pub struct Harness {
+    /// PJRT execution backend (stub without the `pjrt` feature).
     pub client: RuntimeClient,
+    /// Parsed artifact manifest.
     pub manifest: Manifest,
+    /// Training options shared by every run.
     pub opts: TrainOptions,
+    /// Seeds each experiment is repeated over.
     pub seeds: Vec<u64>,
 }
 
@@ -93,6 +105,7 @@ impl Harness {
 
 /// One row of a paper-style table.
 pub struct TableRow {
+    /// Row label (method name).
     pub label: String,
     /// (column label, metric samples, params) per dataset/model column.
     pub cells: Vec<(String, Vec<f64>, usize)>,
@@ -200,13 +213,19 @@ pub struct ComposeBenchRecord {
     pub method: String,
     /// "reference" | "parallel" | "batch".
     pub path: String,
+    /// Nodes in the graph.
     pub n: usize,
+    /// Embedding dimension.
     pub d: usize,
     /// Rows composed per invocation (n, or the batch size).
     pub rows: usize,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean wall time per invocation in nanoseconds.
     pub mean_ns: u64,
+    /// Median wall time in nanoseconds.
     pub p50_ns: u64,
+    /// 95th-percentile wall time in nanoseconds.
     pub p95_ns: u64,
     /// Composed elements (rows × d) per second.
     pub elements_per_sec: f64,
@@ -293,14 +312,19 @@ pub struct PartitionBenchRecord {
     /// "contract/reference", "contract/csr", "partition/scalar",
     /// "partition/parallel", "hierarchy/parallel".
     pub stage: String,
+    /// Nodes in the input graph.
     pub n: usize,
     /// Undirected edge count of the input graph.
     pub edges: usize,
     /// Parts per split (0 for k-independent stages).
     pub k: usize,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean wall time per invocation in nanoseconds.
     pub mean_ns: u64,
+    /// Median wall time in nanoseconds.
     pub p50_ns: u64,
+    /// 95th-percentile wall time in nanoseconds.
     pub p95_ns: u64,
     /// Undirected edges processed per second (`edges / mean`).
     pub edges_per_sec: f64,
@@ -424,6 +448,119 @@ pub fn bench_partition(
     recs
 }
 
+// ---------------------------------------------------------------------
+// Host-side minibatch-training benchmarking (no PJRT needed)
+// ---------------------------------------------------------------------
+
+/// One measured minibatch training run, serializable for the CI
+/// `minibatch-bench` artifact.
+#[derive(Debug, Clone, Serialize)]
+pub struct MinibatchBenchRecord {
+    /// Dataset name.
+    pub dataset: String,
+    /// Embedding method display name.
+    pub method: String,
+    /// Nodes in the graph.
+    pub n: usize,
+    /// Embedding dimension.
+    pub d: usize,
+    /// Seed nodes per batch.
+    pub batch_size: usize,
+    /// Neighbor fanout per seed (`null` in JSON = unbounded).
+    pub fanout: Option<usize>,
+    /// Epochs trained.
+    pub epochs: usize,
+    /// Batches per epoch.
+    pub batches_per_epoch: usize,
+    /// Seed nodes per epoch (train-split size).
+    pub seeds_per_epoch: usize,
+    /// Largest row count composed for one batch (memory invariant:
+    /// stays below n whenever batches are smaller than the graph).
+    pub peak_compose_rows: usize,
+    /// Mean epoch wall time in nanoseconds.
+    pub mean_epoch_ns: u64,
+    /// Median epoch wall time in nanoseconds.
+    pub p50_epoch_ns: u64,
+    /// 95th-percentile epoch wall time in nanoseconds.
+    pub p95_epoch_ns: u64,
+    /// Seed nodes trained per second (`seeds_per_epoch / mean epoch`).
+    pub nodes_per_sec: f64,
+    /// Batches per second (`batches_per_epoch / mean epoch`).
+    pub batches_per_sec: f64,
+    /// Mean training loss of the first epoch.
+    pub first_loss: f64,
+    /// Mean training loss of the final epoch.
+    pub final_loss: f64,
+    /// Validation metric after training.
+    pub val_metric: f64,
+    /// Test metric after training.
+    pub test_metric: f64,
+}
+
+impl MinibatchBenchRecord {
+    /// Human-readable report line.
+    pub fn row(&self) -> String {
+        let fanout = self.fanout.map_or("all".to_string(), |f| f.to_string());
+        format!(
+            "{:<26} batch={:<5} fanout={:<4} epoch {:>10.3?} ({:>9.0} nodes/s, {:>7.1} batch/s) \
+             loss {:.4}->{:.4} peak_rows={}",
+            self.method,
+            self.batch_size,
+            fanout,
+            std::time::Duration::from_nanos(self.mean_epoch_ns),
+            self.nodes_per_sec,
+            self.batches_per_sec,
+            self.first_loss,
+            self.final_loss,
+            self.peak_compose_rows
+        )
+    }
+}
+
+/// Train `(ds, plan)` with the host minibatch trainer and record
+/// throughput statistics from the run's real per-epoch wall times (no
+/// separate measurement loop: training epochs are the samples).
+pub fn bench_minibatch(
+    dataset: &str,
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    cfg: SamplerConfig,
+    opts: &MinibatchOptions,
+) -> Result<MinibatchBenchRecord> {
+    if opts.epochs == 0 {
+        bail!("bench_minibatch needs at least one epoch");
+    }
+    let mut trainer = MinibatchTrainer::new(ds, plan, cfg, opts.clone())?;
+    let out = trainer.train()?;
+    let mut sorted = out.epoch_ns.clone();
+    sorted.sort_unstable();
+    let mean_ns = (sorted.iter().sum::<u64>() / sorted.len() as u64).max(1);
+    let p50 = sorted[sorted.len() / 2];
+    let p95 = sorted[(sorted.len() * 95 / 100).min(sorted.len() - 1)];
+    let mean_secs = mean_ns as f64 / 1e9;
+    Ok(MinibatchBenchRecord {
+        dataset: dataset.to_string(),
+        method: plan.method.name(),
+        n: plan.n,
+        d: plan.d,
+        batch_size: cfg.batch_size,
+        fanout: cfg.fanout.limit(),
+        epochs: out.losses.len(),
+        batches_per_epoch: out.batches_per_epoch,
+        seeds_per_epoch: out.seeds_per_epoch,
+        peak_compose_rows: out.peak_compose_rows,
+        mean_epoch_ns: mean_ns,
+        p50_epoch_ns: p50,
+        p95_epoch_ns: p95,
+        nodes_per_sec: out.seeds_per_epoch as f64 / mean_secs,
+        batches_per_sec: out.batches_per_epoch as f64 / mean_secs,
+        first_loss: out.losses.first().copied().unwrap_or(f64::NAN),
+        final_loss: out.losses.last().copied().unwrap_or(f64::NAN),
+        val_metric: out.val_metric,
+        test_metric: out.test_metric,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -489,5 +626,38 @@ mod tests {
         for r in &recs {
             assert!(r.row().contains("edges/s"));
         }
+    }
+
+    #[test]
+    fn bench_minibatch_produces_serializable_record() {
+        use crate::sampler::Fanout;
+        let mut spec = crate::data::spec("synth-arxiv").unwrap();
+        spec.n = 400;
+        spec.communities = 20;
+        spec.d = 16;
+        let ds = Dataset::generate(&spec);
+        let plan = EmbeddingPlan::build(
+            spec.n,
+            spec.d,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            0,
+        );
+        let cfg = SamplerConfig { batch_size: 64, fanout: Fanout::Max(4), shuffle: true };
+        let opts = MinibatchOptions { epochs: 2, ..Default::default() };
+        let rec = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &opts).unwrap();
+        assert_eq!(rec.epochs, 2);
+        assert_eq!(rec.batch_size, 64);
+        assert_eq!(rec.fanout, Some(4));
+        assert!(rec.nodes_per_sec > 0.0);
+        assert!(rec.batches_per_sec > 0.0);
+        assert!(rec.peak_compose_rows < spec.n);
+        assert!(rec.final_loss.is_finite());
+        let json = serde_json::to_string(&rec).unwrap();
+        assert!(json.contains("\"nodes_per_sec\""), "json: {json}");
+        assert!(rec.row().contains("nodes/s"));
+        // zero epochs is rejected, not divided by
+        let none = MinibatchOptions { epochs: 0, ..Default::default() };
+        assert!(bench_minibatch("synth-arxiv", &ds, &plan, cfg, &none).is_err());
     }
 }

@@ -10,18 +10,23 @@
 use crate::data::{self, Dataset, TaskKind};
 use crate::embedding::{budget_for_fraction, EmbeddingMethod, EmbeddingPlan, PosBudget};
 use crate::partition::{Hierarchy, HierarchyConfig};
+use crate::sampler::SamplerConfig;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
 /// GNN architecture used by an experiment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelKind {
+    /// Graph convolutional network (Kipf & Welling).
     Gcn,
+    /// GraphSAGE with mean aggregation.
     Sage,
+    /// Graph attention network.
     Gat,
 }
 
 impl ModelKind {
+    /// Lower-case tag used in config names and the CLI.
     pub fn as_str(self) -> &'static str {
         match self {
             ModelKind::Gcn => "gcn",
@@ -30,6 +35,7 @@ impl ModelKind {
         }
     }
 
+    /// Parse a CLI tag.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "gcn" => Ok(ModelKind::Gcn),
@@ -45,8 +51,11 @@ impl ModelKind {
 pub struct Experiment {
     /// Unique config name (artifact key).
     pub name: String,
+    /// Registered dataset name (`data::spec`).
     pub dataset: &'static str,
+    /// GNN architecture.
     pub model: ModelKind,
+    /// Embedding-layer method under test.
     pub method: EmbeddingMethod,
     /// Branching factor for the hierarchy (when the method needs one).
     pub k: usize,
@@ -54,11 +63,16 @@ pub struct Experiment {
     pub group: &'static str,
     /// Training epochs (full batch).
     pub epochs: usize,
+    /// Learning rate.
     pub lr: f64,
+    /// Minibatch sampling knobs for `train-minibatch` (defaults here;
+    /// CLI flags override per run).
+    pub sampling: SamplerConfig,
 }
 
 /// Paper defaults for the GNN stack.
 pub const HIDDEN: usize = 64;
+/// GNN depth (paper default: 2 message-passing layers).
 pub const NUM_LAYERS: usize = 2;
 /// Default epochs (full-batch Adam converges quickly on the synth sets).
 pub const EPOCHS: usize = 80;
@@ -123,6 +137,7 @@ fn exp(
         group,
         epochs: EPOCHS,
         lr: 0.01,
+        sampling: SamplerConfig::default(),
     }
 }
 
@@ -419,6 +434,16 @@ mod tests {
         let s1: Vec<_> = p1.param_shapes().iter().map(|t| (t.rows, t.cols)).collect();
         let s2: Vec<_> = p2.param_shapes().iter().map(|t| (t.rows, t.cols)).collect();
         assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn experiments_carry_minibatch_sampling_defaults() {
+        let grid = smoke_grid();
+        assert!(!grid.is_empty());
+        for e in &grid {
+            assert!(e.sampling.batch_size >= 1, "{}: zero batch size", e.name);
+            assert!(e.sampling.shuffle, "{}: shuffle should default on", e.name);
+        }
     }
 
     #[test]

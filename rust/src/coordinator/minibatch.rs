@@ -1,0 +1,864 @@
+//! Host-side minibatch training on `ComposeEngine::compose_batch`.
+//!
+//! The paper's scaling argument is that the embedding layer's parameters
+//! fit in memory even when the composed `n × d` input matrix does not —
+//! so the trainer must never materialize that matrix. This module closes
+//! the loop: a GraphSAGE-style loop ([`MinibatchTrainer`]) draws seed
+//! batches from the train split ([`SeedBatcher`]), samples a bounded
+//! one-hop neighborhood per batch ([`NeighborSampler`]), composes
+//! **only the block's rows** with
+//! [`ComposeEngine::compose_batch`],
+//! runs a one-layer mean-aggregation head (`logits = W_self·v_i +
+//! W_neigh·mean_{j∈N(i)} v_j + b`), and backpropagates through the
+//! compose (Eq. 7/11/12) into the embedding tables with a sparse
+//! SGD/Adam step ([`Optimizer`]). Peak compose allocation is
+//! `block_rows × d`, tracked as [`MinibatchOutcome::peak_compose_rows`]
+//! and asserted `< n` by `rust/tests/minibatch.rs`.
+//!
+//! **Oracle parity.** [`train_full_batch`] is the same model trained the
+//! classic way — `compose_all`, dense `n × d` activations — kept as the
+//! reference implementation. In the oracle configuration
+//! ([`SamplerConfig::oracle`]: fanout = ∞, one batch = the whole train
+//! split, no shuffle) the minibatch path performs the same update: the
+//! composed rows are bit-identical (compose-engine parity), neighbor
+//! aggregation and gradient scatter follow the same order, so the two
+//! loss trajectories agree within 1e-5 per epoch (pinned by proptest).
+//!
+//! DHE is the one method family not supported here: it has no embedding
+//! tables to scatter gradients into (an MLP backward would be needed),
+//! and the paper itself could not scale DHE to its largest graph.
+
+use super::optim::{GradBuffer, Optimizer, OptimizerKind};
+use crate::data::{Dataset, TaskKind};
+use crate::embedding::{
+    compose, init_params, ComposeEngine, ComposeOptions, EmbeddingPlan, ParamStore,
+};
+use crate::metrics::{accuracy, mean_roc_auc};
+use crate::sampler::{mix_seed, Fanout, NeighborSampler, SampledBlock, SamplerConfig, SeedBatcher};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Knobs for a host-side training run (minibatch or full-batch).
+#[derive(Debug, Clone)]
+pub struct MinibatchOptions {
+    /// Training epochs.
+    pub epochs: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Update rule (SGD, or Adam with lazy sparse moments).
+    pub optimizer: OptimizerKind,
+    /// Seed for parameter init, epoch shuffles and neighbor draws.
+    pub seed: u64,
+    /// Print a progress line per epoch.
+    pub verbose: bool,
+    /// Cross-check the compose engine at startup: full scalar-oracle
+    /// parity at small `n·d`, a bounded parallel-vs-serial probe beyond
+    /// (the minibatch trainer never materializes `n × d`, not even to
+    /// verify itself; the full-batch trainer always uses the full check).
+    pub verify_compose: bool,
+}
+
+impl Default for MinibatchOptions {
+    fn default() -> Self {
+        MinibatchOptions {
+            epochs: 20,
+            lr: 0.01,
+            optimizer: OptimizerKind::Adam,
+            seed: 0,
+            verbose: false,
+            verify_compose: true,
+        }
+    }
+}
+
+/// Result of one host-side training run.
+#[derive(Debug, Clone)]
+pub struct MinibatchOutcome {
+    /// Per-epoch mean training loss (seed-weighted; each batch's loss is
+    /// measured on the parameters it starts from).
+    pub losses: Vec<f64>,
+    /// Wall time of each epoch in nanoseconds.
+    pub epoch_ns: Vec<u64>,
+    /// Validation metric after the final epoch (accuracy or ROC-AUC).
+    pub val_metric: f64,
+    /// Test metric after the final epoch.
+    pub test_metric: f64,
+    /// Largest number of rows composed for a single training batch. The
+    /// minibatch trainer's memory invariant: strictly less than `n`
+    /// whenever batches are smaller than the graph.
+    pub peak_compose_rows: usize,
+    /// Seed nodes visited per epoch (train-split size).
+    pub seeds_per_epoch: usize,
+    /// Batches per epoch.
+    pub batches_per_epoch: usize,
+    /// Total training wall time.
+    pub wall: Duration,
+}
+
+impl MinibatchOutcome {
+    /// One-line summary.
+    pub fn row(&self) -> String {
+        format!(
+            "epochs={} loss {:.4} -> {:.4} val={:.3} test={:.3} peak_rows={} [{:?}]",
+            self.losses.len(),
+            self.losses.first().copied().unwrap_or(f64::NAN),
+            self.losses.last().copied().unwrap_or(f64::NAN),
+            self.val_metric,
+            self.test_metric,
+            self.peak_compose_rows,
+            self.wall
+        )
+    }
+}
+
+/// Neighbor-sampled minibatch trainer over a borrowed (dataset, plan).
+///
+/// Owns the parameters, the optimizer state and all reusable scratch
+/// buffers; the compose buffer grows to the largest sampled block and is
+/// never `n × d`. Runs are bit-identical across rayon thread counts: the
+/// sampler is keyed per `(seed, epoch, batch, node)` and the compose
+/// engine is bitwise thread-count-independent.
+pub struct MinibatchTrainer<'a> {
+    ds: &'a Dataset,
+    engine: ComposeEngine<'a>,
+    cfg: SamplerConfig,
+    opts: MinibatchOptions,
+    params: ParamStore,
+    opt: Optimizer,
+    grads: BTreeMap<String, GradBuffer>,
+    batcher: SeedBatcher,
+    sampler: NeighborSampler<'a>,
+    /// Composed block rows (`block_rows × d`, reused across batches).
+    x: Vec<f32>,
+    /// Per-seed neighbor means (`num_seeds × d`).
+    nbar: Vec<f32>,
+    /// Per-seed logits (`num_seeds × classes`).
+    logits: Vec<f32>,
+    /// Per-seed `dL/dlogits`.
+    glogits: Vec<f32>,
+    /// Per-block-row `dL/dv` (`block_rows × d`).
+    dx: Vec<f32>,
+    /// One seed's `W_neigh·g` back-signal (`d`).
+    dn: Vec<f32>,
+    peak_compose_rows: usize,
+}
+
+impl<'a> MinibatchTrainer<'a> {
+    /// Build a trainer. Fails on DHE plans (no tables to scatter into)
+    /// and, when `verify_compose` is on, on compose-engine drift.
+    pub fn new(
+        ds: &'a Dataset,
+        plan: &'a EmbeddingPlan,
+        cfg: SamplerConfig,
+        opts: MinibatchOptions,
+    ) -> Result<Self> {
+        if plan.dhe.is_some() {
+            bail!("minibatch training does not support DHE (no embedding tables to train)");
+        }
+        if plan.n != ds.graph.num_nodes() {
+            bail!("plan is for n = {} but dataset has {} nodes", plan.n, ds.graph.num_nodes());
+        }
+        if ds.splits.train.is_empty() {
+            bail!("dataset has no training nodes to batch");
+        }
+        let params = init_host_params(plan, ds.spec.classes, opts.seed);
+        if opts.verify_compose {
+            verify_compose_bounded(plan, &params)
+                .map_err(|msg| anyhow!("compose engine self-check failed: {msg}"))?;
+        }
+        let grads = make_grad_buffers(plan, ds.spec.classes);
+        let batcher = SeedBatcher::new(
+            &ds.splits.train,
+            cfg.batch_size,
+            cfg.shuffle,
+            mix_seed(&[opts.seed, 0x5EED5]),
+        );
+        let sampler = NeighborSampler::new(&ds.graph, cfg.fanout, mix_seed(&[opts.seed, 0x54AFF]));
+        let opt = Optimizer::new(opts.optimizer, opts.lr);
+        let dn = vec![0.0; plan.d];
+        Ok(MinibatchTrainer {
+            ds,
+            engine: ComposeEngine::new(plan),
+            cfg,
+            opts,
+            params,
+            opt,
+            grads,
+            batcher,
+            sampler,
+            x: Vec::new(),
+            nbar: Vec::new(),
+            logits: Vec::new(),
+            glogits: Vec::new(),
+            dx: Vec::new(),
+            dn,
+            peak_compose_rows: 0,
+        })
+    }
+
+    /// The trained parameters (embedding tables + head).
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    /// Largest number of rows composed for a single training batch so far.
+    pub fn peak_compose_rows(&self) -> usize {
+        self.peak_compose_rows
+    }
+
+    /// Run one epoch: sample, compose and step every batch. Returns the
+    /// epoch's mean training loss.
+    pub fn train_epoch(&mut self, epoch: usize) -> Result<f64> {
+        let d = self.engine.plan().d;
+        let batches = self.batcher.epoch_batches(epoch);
+        let mut loss_sum = 0f64;
+        let mut seen = 0usize;
+        for (bi, seeds) in batches.iter().enumerate() {
+            let block = self.sampler.sample_block(seeds, epoch, bi);
+            let rows = block.num_rows();
+            self.peak_compose_rows = self.peak_compose_rows.max(rows);
+            if self.x.len() < rows * d {
+                self.x.resize(rows * d, 0.0);
+            }
+            self.engine.compose_batch_into(&self.params, &block.nodes, &mut self.x[..rows * d]);
+            loss_sum += self.step_block(&block);
+            seen += block.num_seeds;
+        }
+        let loss = loss_sum / seen as f64;
+        if !loss.is_finite() {
+            bail!("non-finite training loss at epoch {epoch}");
+        }
+        Ok(loss)
+    }
+
+    /// Train for `opts.epochs` epochs, then evaluate val/test.
+    pub fn train(&mut self) -> Result<MinibatchOutcome> {
+        let t0 = Instant::now();
+        let epochs = self.opts.epochs;
+        let mut losses = Vec::with_capacity(epochs);
+        let mut epoch_ns = Vec::with_capacity(epochs);
+        for epoch in 0..epochs {
+            let e0 = Instant::now();
+            let loss = self.train_epoch(epoch)?;
+            epoch_ns.push(e0.elapsed().as_nanos() as u64);
+            if self.opts.verbose {
+                println!("  epoch {:>4}  loss {loss:.4}", epoch + 1);
+            }
+            losses.push(loss);
+        }
+        let ds = self.ds;
+        let val_metric = self.evaluate(&ds.splits.val)?;
+        let test_metric = self.evaluate(&ds.splits.test)?;
+        Ok(MinibatchOutcome {
+            losses,
+            epoch_ns,
+            val_metric,
+            test_metric,
+            peak_compose_rows: self.peak_compose_rows,
+            seeds_per_epoch: self.batcher.num_seeds(),
+            batches_per_epoch: self.batcher.num_batches(),
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Score a fold with the current parameters, composed chunk by
+    /// chunk. Evaluation uses **full** neighborhoods (standard GraphSAGE
+    /// practice), so one chunk's block is bounded by
+    /// `chunk × (max degree + 1)` rows (and by `n` via dedup) — larger
+    /// than a training block and outside the `peak_compose_rows`
+    /// invariant, but still far from `n × d` on bounded-degree graphs.
+    /// Returns accuracy (multi-class) or mean ROC-AUC (multi-label).
+    pub fn evaluate(&self, fold: &[u32]) -> Result<f64> {
+        if fold.is_empty() {
+            bail!("empty evaluation fold");
+        }
+        let ds = self.ds;
+        let d = self.engine.plan().d;
+        let classes = ds.spec.classes;
+        let chunk = self.cfg.batch_size.max(1);
+        let mut sampler = NeighborSampler::new(&ds.graph, Fanout::All, 0);
+        let mut x: Vec<f32> = Vec::new();
+        let mut nb = vec![0f32; d];
+        let mut scores = vec![0f32; fold.len() * classes];
+        let w_self = self.params.get("head_w_self");
+        let w_neigh = self.params.get("head_w_neigh");
+        let bias = self.params.get("head_b");
+        let mut done = 0usize;
+        for (ci, seeds) in fold.chunks(chunk).enumerate() {
+            let block = sampler.sample_block(seeds, 0, ci);
+            let rows = block.num_rows();
+            if x.len() < rows * d {
+                x.resize(rows * d, 0.0);
+            }
+            self.engine.compose_batch_into(&self.params, &block.nodes, &mut x[..rows * d]);
+            for si in 0..block.num_seeds {
+                mean_rows(&mut nb, &x, block.neighbors_of(si));
+                let xs = &x[si * d..(si + 1) * d];
+                let out = &mut scores[(done + si) * classes..(done + si + 1) * classes];
+                head_logits_row(xs, &nb, w_self, w_neigh, bias, out);
+            }
+            done += block.num_seeds;
+        }
+        // both branches hand the shared metric fns fold-local labels
+        // and indices, so minibatch eval can never drift from the
+        // metric implementations the full-batch paths use
+        let local: Vec<u32> = (0..fold.len() as u32).collect();
+        let metric = match ds.spec.task {
+            TaskKind::MultiClass => {
+                let labels_sub: Vec<u32> = fold.iter().map(|&i| ds.labels[i as usize]).collect();
+                accuracy(&scores, classes, &labels_sub, &local)
+            }
+            TaskKind::MultiLabel => {
+                let labels_sub: Vec<u32> = fold
+                    .iter()
+                    .flat_map(|&i| {
+                        let i = i as usize;
+                        ds.labels[i * classes..(i + 1) * classes].iter().copied()
+                    })
+                    .collect();
+                mean_roc_auc(&scores, classes, &labels_sub, &local)
+            }
+        };
+        Ok(metric)
+    }
+
+    /// Forward + backward + optimizer step on one composed block
+    /// (`self.x[..rows*d]` must hold the block's composed rows).
+    /// Returns the sum of per-seed losses.
+    fn step_block(&mut self, block: &SampledBlock) -> f64 {
+        let d = self.engine.plan().d;
+        let classes = self.ds.spec.classes;
+        let s = block.num_seeds;
+        let rows = block.num_rows();
+
+        // ---- neighbor means (seeds are block rows 0..s) ----
+        if self.nbar.len() < s * d {
+            self.nbar.resize(s * d, 0.0);
+        }
+        for si in 0..s {
+            let nbs = block.neighbors_of(si);
+            mean_rows(&mut self.nbar[si * d..(si + 1) * d], &self.x, nbs);
+        }
+
+        // ---- head forward ----
+        if self.logits.len() < s * classes {
+            self.logits.resize(s * classes, 0.0);
+        }
+        if self.glogits.len() < s * classes {
+            self.glogits.resize(s * classes, 0.0);
+        }
+        {
+            let w_self = self.params.get("head_w_self");
+            let w_neigh = self.params.get("head_w_neigh");
+            let bias = self.params.get("head_b");
+            for si in 0..s {
+                let xs = &self.x[si * d..(si + 1) * d];
+                let nb = &self.nbar[si * d..(si + 1) * d];
+                let out = &mut self.logits[si * classes..(si + 1) * classes];
+                head_logits_row(xs, nb, w_self, w_neigh, bias, out);
+            }
+        }
+
+        // ---- loss + dL/dlogits (mean over the batch's seeds) ----
+        let gscale = match self.ds.spec.task {
+            TaskKind::MultiClass => 1.0 / s as f32,
+            TaskKind::MultiLabel => 1.0 / (s * classes) as f32,
+        };
+        let mut loss_sum = 0f64;
+        for si in 0..s {
+            let node = block.nodes[si] as usize;
+            let lrow = &self.logits[si * classes..(si + 1) * classes];
+            let grow = &mut self.glogits[si * classes..(si + 1) * classes];
+            loss_sum +=
+                loss_and_grad_row(self.ds.spec.task, &self.ds.labels, node, lrow, grow, gscale);
+        }
+
+        // ---- head gradients ----
+        {
+            let gb = self.grads.get_mut("head_w_self").expect("head_w_self grads");
+            for si in 0..s {
+                let g = &self.glogits[si * classes..(si + 1) * classes];
+                let xs = &self.x[si * d..(si + 1) * d];
+                for (a, &xa) in xs.iter().enumerate() {
+                    gb.add_row(a, xa, g);
+                }
+            }
+        }
+        {
+            let gb = self.grads.get_mut("head_w_neigh").expect("head_w_neigh grads");
+            for si in 0..s {
+                let g = &self.glogits[si * classes..(si + 1) * classes];
+                let nb = &self.nbar[si * d..(si + 1) * d];
+                for (a, &na) in nb.iter().enumerate() {
+                    gb.add_row(a, na, g);
+                }
+            }
+        }
+        {
+            let gb = self.grads.get_mut("head_b").expect("head_b grads");
+            for si in 0..s {
+                gb.add_row(0, 1.0, &self.glogits[si * classes..(si + 1) * classes]);
+            }
+        }
+
+        // ---- dL/dv per block row ----
+        if self.dx.len() < rows * d {
+            self.dx.resize(rows * d, 0.0);
+        }
+        self.dx[..rows * d].fill(0.0);
+        {
+            let w_self = self.params.get("head_w_self");
+            let w_neigh = self.params.get("head_w_neigh");
+            for si in 0..s {
+                let g = &self.glogits[si * classes..(si + 1) * classes];
+                for a in 0..d {
+                    let ws = &w_self[a * classes..(a + 1) * classes];
+                    let wn = &w_neigh[a * classes..(a + 1) * classes];
+                    let mut acc_s = 0f32;
+                    let mut acc_n = 0f32;
+                    for ((&gj, wsj), wnj) in g.iter().zip(ws).zip(wn) {
+                        acc_s += gj * wsj;
+                        acc_n += gj * wnj;
+                    }
+                    self.dx[si * d + a] += acc_s;
+                    self.dn[a] = acc_n;
+                }
+                let nbs = block.neighbors_of(si);
+                if !nbs.is_empty() {
+                    let inv = 1.0 / nbs.len() as f32;
+                    for &r in nbs {
+                        let dst = &mut self.dx[r as usize * d..(r as usize + 1) * d];
+                        for (o, v) in dst.iter_mut().zip(&self.dn) {
+                            *o += inv * v;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- scatter into embedding tables (block-row order) ----
+        let plan = self.engine.plan();
+        for (r, &node) in block.nodes.iter().enumerate() {
+            let gv = &self.dx[r * d..(r + 1) * d];
+            scatter_embedding_grad(plan, &self.params, node as usize, gv, &mut self.grads);
+        }
+
+        // ---- optimizer step (BTreeMap order: deterministic) ----
+        self.opt.begin_step();
+        for (name, gb) in self.grads.iter_mut() {
+            self.opt.apply(name, self.params.get_mut(name), gb);
+            gb.clear();
+        }
+        loss_sum
+    }
+}
+
+/// Train the same one-layer model full-batch over `compose_all` — the
+/// reference trainer the minibatch path is pinned against, and the only
+/// host path that materializes the full `n × d` matrix.
+///
+/// In the oracle configuration ([`SamplerConfig::oracle`]) the minibatch
+/// trainer reproduces this loss trajectory within 1e-5 per epoch; the
+/// gradient scatter here deliberately walks nodes in the same order as
+/// the oracle block (train seeds in split order, then discovered
+/// neighbors) so the two paths agree to float associativity.
+pub fn train_full_batch(
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    opts: &MinibatchOptions,
+) -> Result<MinibatchOutcome> {
+    if plan.dhe.is_some() {
+        bail!("full-batch host training does not support DHE (no embedding tables to train)");
+    }
+    let n = plan.n;
+    let d = plan.d;
+    let classes = ds.spec.classes;
+    if n != ds.graph.num_nodes() {
+        bail!("plan is for n = {} but dataset has {} nodes", n, ds.graph.num_nodes());
+    }
+    let mut params = init_host_params(plan, classes, opts.seed);
+    if opts.verify_compose {
+        compose::self_check(plan, &params, 1e-5)
+            .map_err(|msg| anyhow!("compose engine self-check failed: {msg}"))?;
+    }
+    let engine = ComposeEngine::new(plan);
+    let mut opt = Optimizer::new(opts.optimizer, opts.lr);
+    let mut grads = make_grad_buffers(plan, classes);
+    let train = &ds.splits.train;
+    let mut v = vec![0f32; n * d]; // the matrix the minibatch path never builds
+    let mut dv = vec![0f32; n * d];
+    let mut is_touched = vec![false; n];
+    let mut touched: Vec<u32> = Vec::with_capacity(train.len());
+    let mut nbar = vec![0f32; d];
+    let mut dn = vec![0f32; d];
+    let mut logits = vec![0f32; classes];
+    let mut glog = vec![0f32; classes];
+    let gscale = match ds.spec.task {
+        TaskKind::MultiClass => 1.0 / train.len() as f32,
+        TaskKind::MultiLabel => 1.0 / (train.len() * classes) as f32,
+    };
+    let t0 = Instant::now();
+    let mut losses = Vec::with_capacity(opts.epochs);
+    let mut epoch_ns = Vec::with_capacity(opts.epochs);
+    for epoch in 0..opts.epochs {
+        let e0 = Instant::now();
+        engine.compose_all_into(&params, &mut v);
+        // seeds first (split order), then frontier in discovery order —
+        // the oracle block's exact row order.
+        for &i in train {
+            is_touched[i as usize] = true;
+            touched.push(i);
+        }
+        let w_self = params.get("head_w_self");
+        let w_neigh = params.get("head_w_neigh");
+        let bias = params.get("head_b");
+        let mut loss_sum = 0f64;
+        for &i in train {
+            let iu = i as usize;
+            let xs = &v[iu * d..(iu + 1) * d];
+            let nbs = ds.graph.neighbors(i);
+            mean_rows(&mut nbar, &v, nbs);
+            head_logits_row(xs, &nbar, w_self, w_neigh, bias, &mut logits);
+            loss_sum += loss_and_grad_row(ds.spec.task, &ds.labels, iu, &logits, &mut glog, gscale);
+            let gb = grads.get_mut("head_w_self").expect("head grads");
+            for (a, &xa) in xs.iter().enumerate() {
+                gb.add_row(a, xa, &glog);
+            }
+            let gb = grads.get_mut("head_w_neigh").expect("head grads");
+            for (a, &na) in nbar.iter().enumerate() {
+                gb.add_row(a, na, &glog);
+            }
+            grads.get_mut("head_b").expect("head grads").add_row(0, 1.0, &glog);
+            for a in 0..d {
+                let ws = &w_self[a * classes..(a + 1) * classes];
+                let wn = &w_neigh[a * classes..(a + 1) * classes];
+                let mut acc_s = 0f32;
+                let mut acc_n = 0f32;
+                for ((&gj, wsj), wnj) in glog.iter().zip(ws).zip(wn) {
+                    acc_s += gj * wsj;
+                    acc_n += gj * wnj;
+                }
+                dv[iu * d + a] += acc_s;
+                dn[a] = acc_n;
+            }
+            if !nbs.is_empty() {
+                let inv = 1.0 / nbs.len() as f32;
+                for &u in nbs {
+                    let uu = u as usize;
+                    if !is_touched[uu] {
+                        is_touched[uu] = true;
+                        touched.push(u);
+                    }
+                    let dst = &mut dv[uu * d..(uu + 1) * d];
+                    for (o, s) in dst.iter_mut().zip(&dn) {
+                        *o += inv * s;
+                    }
+                }
+            }
+        }
+        for &u in &touched {
+            let uu = u as usize;
+            let gv = &dv[uu * d..(uu + 1) * d];
+            scatter_embedding_grad(plan, &params, uu, gv, &mut grads);
+        }
+        opt.begin_step();
+        for (name, gb) in grads.iter_mut() {
+            opt.apply(name, params.get_mut(name), gb);
+            gb.clear();
+        }
+        for &u in &touched {
+            let uu = u as usize;
+            dv[uu * d..(uu + 1) * d].fill(0.0);
+            is_touched[uu] = false;
+        }
+        touched.clear();
+        let loss = loss_sum / train.len() as f64;
+        if !loss.is_finite() {
+            bail!("non-finite training loss at epoch {epoch}");
+        }
+        losses.push(loss);
+        epoch_ns.push(e0.elapsed().as_nanos() as u64);
+        if opts.verbose {
+            println!("  epoch {:>4}  loss {loss:.4}  (full batch)", epoch + 1);
+        }
+    }
+
+    // ---- final full-matrix evaluation ----
+    engine.compose_all_into(&params, &mut v);
+    let mut scores = vec![0f32; n * classes];
+    {
+        let w_self = params.get("head_w_self");
+        let w_neigh = params.get("head_w_neigh");
+        let bias = params.get("head_b");
+        for i in 0..n {
+            let xs = &v[i * d..(i + 1) * d];
+            mean_rows(&mut nbar, &v, ds.graph.neighbors(i as u32));
+            let out = &mut scores[i * classes..(i + 1) * classes];
+            head_logits_row(xs, &nbar, w_self, w_neigh, bias, out);
+        }
+    }
+    let (val_metric, test_metric) = match ds.spec.task {
+        TaskKind::MultiClass => (
+            accuracy(&scores, classes, &ds.labels, &ds.splits.val),
+            accuracy(&scores, classes, &ds.labels, &ds.splits.test),
+        ),
+        TaskKind::MultiLabel => (
+            mean_roc_auc(&scores, classes, &ds.labels, &ds.splits.val),
+            mean_roc_auc(&scores, classes, &ds.labels, &ds.splits.test),
+        ),
+    };
+    Ok(MinibatchOutcome {
+        losses,
+        epoch_ns,
+        val_metric,
+        test_metric,
+        peak_compose_rows: n,
+        seeds_per_epoch: train.len(),
+        batches_per_epoch: 1,
+        wall: t0.elapsed(),
+    })
+}
+
+/// Startup compose verification that respects the minibatch memory
+/// budget: at small scale (`n·d` ≤ ~4M elements) run the full
+/// [`compose::self_check`] against the scalar oracle; beyond that the
+/// oracle itself would materialize `n × d`, so fall back to a bounded
+/// probe — a ≤4k-row strided `compose_batch` must be bit-identical
+/// between the parallel and serial engine paths (the engine's
+/// thread-count-determinism contract, `O(probe × d)` memory).
+fn verify_compose_bounded(plan: &EmbeddingPlan, params: &ParamStore) -> Result<(), String> {
+    const FULL_CHECK_MAX_ELEMS: usize = 1 << 22;
+    if plan.n * plan.d <= FULL_CHECK_MAX_ELEMS {
+        return compose::self_check(plan, params, 1e-5);
+    }
+    let stride = (plan.n / 4096).max(1);
+    let probe: Vec<u32> = (0..plan.n as u32).step_by(stride).collect();
+    let popts = ComposeOptions { parallel: true, ..Default::default() };
+    let sopts = ComposeOptions { parallel: false, ..Default::default() };
+    let par = ComposeEngine::with_options(plan, popts).compose_batch(params, &probe);
+    let ser = ComposeEngine::with_options(plan, sopts).compose_batch(params, &probe);
+    if par != ser {
+        return Err("parallel and serial compose_batch diverge on the probe batch".into());
+    }
+    Ok(())
+}
+
+/// Embedding tables (via `embedding::init_params`) plus the one-layer
+/// SAGE head (`head_w_self`/`head_w_neigh` uniform ±1/√d, `head_b`
+/// zero), deterministically from `seed`.
+fn init_host_params(plan: &EmbeddingPlan, classes: usize, seed: u64) -> ParamStore {
+    let mut store = init_params(plan, seed);
+    let d = plan.d;
+    let mut rng = Rng::seed_from_u64(mix_seed(&[seed, 0x6EAD]));
+    let a = 1.0 / (d as f32).sqrt();
+    let w_self: Vec<f32> = (0..d * classes).map(|_| rng.gen_f32_range(-a, a)).collect();
+    let w_neigh: Vec<f32> = (0..d * classes).map(|_| rng.gen_f32_range(-a, a)).collect();
+    store.insert("head_w_self", vec![d, classes], w_self);
+    store.insert("head_w_neigh", vec![d, classes], w_neigh);
+    store.insert("head_b", vec![1, classes], vec![0.0; classes]);
+    store
+}
+
+/// One [`GradBuffer`] per trainable table (embedding tables + head).
+fn make_grad_buffers(plan: &EmbeddingPlan, classes: usize) -> BTreeMap<String, GradBuffer> {
+    let mut grads = BTreeMap::new();
+    for t in plan.param_shapes() {
+        grads.insert(t.name.clone(), GradBuffer::new(t.rows, t.cols));
+    }
+    grads.insert("head_w_self".into(), GradBuffer::new(plan.d, classes));
+    grads.insert("head_w_neigh".into(), GradBuffer::new(plan.d, classes));
+    grads.insert("head_b".into(), GradBuffer::new(1, classes));
+    grads
+}
+
+/// Write into `dst` the mean of the given `rows` of the row-major
+/// matrix `mat` (row width = `dst.len()`); zero when `rows` is empty.
+/// Sums in `rows` order — both trainers and both eval paths share this
+/// one implementation, so aggregation bits can never diverge between
+/// them (the oracle-parity contract leans on that).
+fn mean_rows(dst: &mut [f32], mat: &[f32], rows: &[u32]) {
+    let d = dst.len();
+    dst.fill(0.0);
+    for &r in rows {
+        let src = &mat[r as usize * d..(r as usize + 1) * d];
+        for (o, s) in dst.iter_mut().zip(src) {
+            *o += s;
+        }
+    }
+    if !rows.is_empty() {
+        let inv = 1.0 / rows.len() as f32;
+        for o in dst.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// `out = bias + W_self^T·xs + W_neigh^T·nbar` for one seed
+/// (`W ∈ R^{d×classes}` row-major).
+fn head_logits_row(
+    xs: &[f32],
+    nbar: &[f32],
+    w_self: &[f32],
+    w_neigh: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    let classes = out.len();
+    out.copy_from_slice(bias);
+    for (a, (&xa, &na)) in xs.iter().zip(nbar).enumerate() {
+        let ws = &w_self[a * classes..(a + 1) * classes];
+        let wn = &w_neigh[a * classes..(a + 1) * classes];
+        for ((o, wsj), wnj) in out.iter_mut().zip(ws).zip(wn) {
+            *o += xa * wsj + na * wnj;
+        }
+    }
+}
+
+/// Per-seed loss and `dL/dlogits` (written to `glog`, scaled by
+/// `scale`): softmax cross-entropy for multi-class, stable
+/// BCE-with-logits (mean over tasks) for multi-label.
+fn loss_and_grad_row(
+    task: TaskKind,
+    labels: &[u32],
+    node: usize,
+    logits: &[f32],
+    glog: &mut [f32],
+    scale: f32,
+) -> f64 {
+    let classes = logits.len();
+    match task {
+        TaskKind::MultiClass => {
+            let label = labels[node] as usize;
+            let max = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut sum = 0f32;
+            for (g, &x) in glog.iter_mut().zip(logits) {
+                let e = (x - max).exp();
+                *g = e;
+                sum += e;
+            }
+            let inv = scale / sum;
+            for g in glog.iter_mut() {
+                *g *= inv;
+            }
+            glog[label] -= scale;
+            let logz = max + sum.ln();
+            (logz - logits[label]) as f64
+        }
+        TaskKind::MultiLabel => {
+            let mut loss = 0f64;
+            let row = &labels[node * classes..(node + 1) * classes];
+            for ((g, &x), &y) in glog.iter_mut().zip(logits).zip(row) {
+                let yf = y as f32;
+                // stable BCE-with-logits: max(x,0) - x·y + ln(1 + e^-|x|)
+                loss += (x.max(0.0) - x * yf + (-x.abs()).exp().ln_1p()) as f64;
+                let sig = 1.0 / (1.0 + (-x).exp());
+                *g = (sig - yf) * scale;
+            }
+            loss / classes as f64
+        }
+    }
+}
+
+/// Backpropagate one node's `dL/dv` row into its embedding tables
+/// (the compose backward): position levels get the leading `d_j`
+/// coordinates (Eq. 11's zero-extension), the node-specific table gets
+/// `y_t · gv` per hash, and learned importance weights get
+/// `⟨X[idx_t], gv⟩` (Eq. 12/13).
+fn scatter_embedding_grad(
+    plan: &EmbeddingPlan,
+    params: &ParamStore,
+    node: usize,
+    gv: &[f32],
+    grads: &mut BTreeMap<String, GradBuffer>,
+) {
+    if let Some(pos) = &plan.position {
+        for (j, table) in pos.tables.iter().enumerate() {
+            let row = pos.z[j][node] as usize;
+            let gb = grads.get_mut(&table.name).expect("position grads");
+            gb.add_row(row, 1.0, &gv[..table.cols]);
+        }
+    }
+    if let Some(nx) = &plan.node {
+        let h = nx.indices.len();
+        let d = plan.d;
+        let x = params.get(&nx.table.name);
+        let y = nx.learned_weights.then(|| params.get("node_y"));
+        for t in 0..h {
+            let row = nx.indices[t][node] as usize;
+            let w = y.map_or(1.0, |y| y[node * h + t]);
+            grads.get_mut(&nx.table.name).expect("node_x grads").add_row(row, w, gv);
+            if nx.learned_weights {
+                let xrow = &x[row * d..(row + 1) * d];
+                let dot: f32 = xrow.iter().zip(gv).map(|(a, b)| a * b).sum();
+                grads.get_mut("node_y").expect("node_y grads").add_at(node, t, dot);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec;
+    use crate::embedding::EmbeddingMethod;
+
+    fn tiny_dataset() -> Dataset {
+        let mut s = spec("synth-arxiv").unwrap();
+        s.n = 400;
+        s.communities = 20;
+        s.d = 16;
+        Dataset::generate(&s)
+    }
+
+    #[test]
+    fn dhe_plans_are_rejected() {
+        let ds = tiny_dataset();
+        let method = EmbeddingMethod::Dhe { encoding_dim: 8, hidden: 16, layers: 1 };
+        let plan = EmbeddingPlan::build(ds.graph.num_nodes(), 16, &method, None, 0);
+        let err = MinibatchTrainer::new(&ds, &plan, SamplerConfig::default(), Default::default());
+        assert!(err.is_err());
+        assert!(train_full_batch(&ds, &plan, &MinibatchOptions::default()).is_err());
+    }
+
+    #[test]
+    fn host_params_include_head_tables() {
+        let ds = tiny_dataset();
+        let plan = EmbeddingPlan::build(
+            ds.graph.num_nodes(),
+            16,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            1,
+        );
+        let p = init_host_params(&plan, ds.spec.classes, 7);
+        assert_eq!(p.shape("head_w_self"), &[16, ds.spec.classes]);
+        assert_eq!(p.shape("head_w_neigh"), &[16, ds.spec.classes]);
+        assert!(p.get("head_b").iter().all(|&b| b == 0.0));
+        // deterministic per seed
+        let q = init_host_params(&plan, ds.spec.classes, 7);
+        assert_eq!(p.get("head_w_self"), q.get("head_w_self"));
+    }
+
+    #[test]
+    fn single_epoch_runs_and_reports_finite_loss() {
+        let ds = tiny_dataset();
+        let plan = EmbeddingPlan::build(
+            ds.graph.num_nodes(),
+            16,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            1,
+        );
+        let cfg = SamplerConfig { batch_size: 64, fanout: Fanout::Max(4), shuffle: true };
+        let opts = MinibatchOptions { epochs: 2, ..Default::default() };
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        let out = tr.train().unwrap();
+        assert_eq!(out.losses.len(), 2);
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        assert!(out.peak_compose_rows < ds.graph.num_nodes());
+        assert!((0.0..=1.0).contains(&out.test_metric));
+        assert!(out.row().contains("peak_rows"));
+    }
+}

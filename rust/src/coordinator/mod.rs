@@ -1,14 +1,27 @@
 //! Training coordinator: owns the full training lifecycle on the Rust
-//! side — parameter/optimizer state, static tensor construction, the
-//! epoch loop over the AOT train step, periodic evaluation, early
-//! stopping and result aggregation.
+//! side — parameter/optimizer state, static tensor construction, epoch
+//! loops, periodic evaluation, early stopping and result aggregation.
 //!
-//! Python never runs here; the compiled HLO is the only compute.
+//! Two training paths live here:
+//!
+//! * [`run_experiment`] — the AOT/PJRT full-batch path: the compiled
+//!   train-step HLO is the compute, Python never runs, and the packed
+//!   state vector stays device-resident (needs the `pjrt` feature plus
+//!   `make artifacts`).
+//! * [`MinibatchTrainer`] / [`train_full_batch`] — the host-side path:
+//!   GraphSAGE-style neighbor-sampled minibatches composed with
+//!   `ComposeEngine::compose_batch` and stepped with host SGD/Adam
+//!   ([`Optimizer`]); no artifacts required. The full-batch variant is
+//!   the oracle the minibatch path is tested against.
 
+mod minibatch;
+mod optim;
 mod params;
 mod statics;
 mod trainer;
 
-pub use params::{init_full_params, gnn_param_shapes};
+pub use minibatch::{train_full_batch, MinibatchOptions, MinibatchOutcome, MinibatchTrainer};
+pub use optim::{GradBuffer, Optimizer, OptimizerKind};
+pub use params::{gnn_param_shapes, init_full_params};
 pub use statics::build_statics;
 pub use trainer::{run_experiment, TrainOptions, TrainOutcome};

@@ -1,0 +1,274 @@
+//! Host-side first-order optimizers for minibatch training: sparse
+//! gradient accumulation ([`GradBuffer`]) and SGD / lazy-sparse Adam
+//! updates ([`Optimizer`]).
+//!
+//! Minibatch steps touch only the parameter rows a sampled block reaches
+//! (that is the whole point of composing subsets), so the optimizer
+//! works in touched-row space: gradients accumulate into a dense
+//! table-shaped buffer but only touched rows are read, updated and
+//! re-zeroed — `O(params)` memory, `O(touched × d)` work per step.
+//! Adam moments follow the standard lazy/sparse convention: rows that a
+//! step does not touch keep their moments and parameters unchanged, so
+//! the fanout = ∞ oracle configuration (which touches exactly the rows
+//! full-batch training touches) reproduces full-batch Adam bit for bit.
+
+use std::collections::HashMap;
+
+/// Which update rule the host-side trainers apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Plain SGD: `w -= lr · g`.
+    Sgd,
+    /// Adam (Kingma & Ba 2015) with bias correction and lazy sparse
+    /// moments (untouched rows are left untouched).
+    Adam,
+}
+
+impl OptimizerKind {
+    /// CLI tag (`sgd` / `adam`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+
+    /// Parse a CLI tag.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "adam" => Ok(OptimizerKind::Adam),
+            other => Err(format!("unknown optimizer '{other}' (sgd|adam)")),
+        }
+    }
+}
+
+/// Dense table-shaped gradient accumulator with touched-row tracking.
+///
+/// `add_row` sums into a row (marking it touched); `clear` re-zeroes
+/// only the touched rows, so a long training run never pays `O(params)`
+/// per step. Touch order is preserved — together with the deterministic
+/// sampler this keeps whole runs bit-identical across thread counts.
+#[derive(Debug, Clone)]
+pub struct GradBuffer {
+    grad: Vec<f32>,
+    cols: usize,
+    touched: Vec<u32>,
+    is_touched: Vec<bool>,
+}
+
+impl GradBuffer {
+    /// Zeroed accumulator for a `rows × cols` table.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(cols >= 1, "cols must be >= 1");
+        GradBuffer {
+            grad: vec![0.0; rows * cols],
+            cols,
+            touched: Vec::new(),
+            is_touched: vec![false; rows],
+        }
+    }
+
+    /// Columns per row.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Rows touched since the last [`clear`](GradBuffer::clear), in
+    /// first-touch order.
+    pub fn touched_rows(&self) -> &[u32] {
+        &self.touched
+    }
+
+    /// Accumulated gradient of one row.
+    pub fn row(&self, row: usize) -> &[f32] {
+        &self.grad[row * self.cols..(row + 1) * self.cols]
+    }
+
+    #[inline]
+    fn touch(&mut self, row: usize) {
+        if !self.is_touched[row] {
+            self.is_touched[row] = true;
+            self.touched.push(row as u32);
+        }
+    }
+
+    /// `grad[row][..src.len()] += scale · src`. A `src` shorter than the
+    /// row accumulates into the leading columns only (the zero-extension
+    /// convention position tables use, Eq. 11).
+    #[inline]
+    pub fn add_row(&mut self, row: usize, scale: f32, src: &[f32]) {
+        debug_assert!(src.len() <= self.cols, "src wider than the table row");
+        self.touch(row);
+        let base = row * self.cols;
+        let dst = &mut self.grad[base..base + src.len()];
+        for (o, s) in dst.iter_mut().zip(src) {
+            *o += scale * s;
+        }
+    }
+
+    /// `grad[row][col] += v` (importance-weight gradients).
+    #[inline]
+    pub fn add_at(&mut self, row: usize, col: usize, v: f32) {
+        debug_assert!(col < self.cols);
+        self.touch(row);
+        self.grad[row * self.cols + col] += v;
+    }
+
+    /// Zero the touched rows and reset the touch set.
+    pub fn clear(&mut self) {
+        for &r in &self.touched {
+            let base = r as usize * self.cols;
+            self.grad[base..base + self.cols].fill(0.0);
+            self.is_touched[r as usize] = false;
+        }
+        self.touched.clear();
+    }
+}
+
+/// SGD / Adam over named parameter tables, applying updates only to the
+/// rows a [`GradBuffer`] marks touched.
+#[derive(Debug)]
+pub struct Optimizer {
+    kind: OptimizerKind,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    step: u64,
+    /// Lazily allocated per-table (first moment, second moment) state.
+    moments: HashMap<String, (Vec<f32>, Vec<f32>)>,
+}
+
+impl Optimizer {
+    /// Optimizer with standard Adam hyperparameters
+    /// (`beta1 = 0.9`, `beta2 = 0.999`, `eps = 1e-8`).
+    pub fn new(kind: OptimizerKind, lr: f32) -> Self {
+        assert!(lr > 0.0, "lr must be positive");
+        Optimizer {
+            kind,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            step: 0,
+            moments: HashMap::new(),
+        }
+    }
+
+    /// Advance the (bias-correction) step counter; call once per
+    /// minibatch step, before [`apply`](Optimizer::apply).
+    pub fn begin_step(&mut self) {
+        self.step += 1;
+    }
+
+    /// Steps taken so far.
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Apply `gb`'s accumulated gradients to the row-major table `data`.
+    /// Only touched rows are updated; `gb` is not cleared here.
+    pub fn apply(&mut self, name: &str, data: &mut [f32], gb: &GradBuffer) {
+        let cols = gb.cols();
+        match self.kind {
+            OptimizerKind::Sgd => {
+                for &r in gb.touched_rows() {
+                    let base = r as usize * cols;
+                    let dst = &mut data[base..base + cols];
+                    for (w, g) in dst.iter_mut().zip(gb.row(r as usize)) {
+                        *w -= self.lr * g;
+                    }
+                }
+            }
+            OptimizerKind::Adam => {
+                assert!(self.step > 0, "begin_step before apply");
+                let (m, v) = self
+                    .moments
+                    .entry(name.to_string())
+                    .or_insert_with(|| (vec![0.0; data.len()], vec![0.0; data.len()]));
+                let t = self.step.min(i32::MAX as u64) as i32;
+                let bc1 = 1.0 - self.beta1.powi(t);
+                let bc2 = 1.0 - self.beta2.powi(t);
+                let alpha = self.lr * bc2.sqrt() / bc1;
+                for &r in gb.touched_rows() {
+                    let base = r as usize * cols;
+                    for (i, &g) in gb.row(r as usize).iter().enumerate() {
+                        let idx = base + i;
+                        m[idx] = self.beta1 * m[idx] + (1.0 - self.beta1) * g;
+                        v[idx] = self.beta2 * v[idx] + (1.0 - self.beta2) * g * g;
+                        data[idx] -= alpha * m[idx] / (v[idx].sqrt() + self.eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_buffer_accumulates_and_clears_touched_only() {
+        let mut gb = GradBuffer::new(4, 3);
+        gb.add_row(2, 2.0, &[1.0, 2.0, 3.0]);
+        gb.add_row(2, 1.0, &[1.0, 0.0, 0.0]);
+        gb.add_at(0, 1, 5.0);
+        assert_eq!(gb.touched_rows(), &[2, 0]);
+        assert_eq!(gb.row(2), &[3.0, 4.0, 6.0]);
+        assert_eq!(gb.row(0), &[0.0, 5.0, 0.0]);
+        gb.clear();
+        assert!(gb.touched_rows().is_empty());
+        assert_eq!(gb.row(2), &[0.0; 3]);
+    }
+
+    #[test]
+    fn short_src_hits_leading_columns_only() {
+        let mut gb = GradBuffer::new(2, 4);
+        gb.add_row(1, 1.0, &[7.0, 8.0]);
+        assert_eq!(gb.row(1), &[7.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sgd_updates_only_touched_rows() {
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, 0.5);
+        let mut data = vec![1.0f32; 6]; // 3 rows × 2 cols
+        let mut gb = GradBuffer::new(3, 2);
+        gb.add_row(1, 1.0, &[2.0, 4.0]);
+        opt.begin_step();
+        opt.apply("t", &mut data, &gb);
+        assert_eq!(data, vec![1.0, 1.0, 0.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn adam_leaves_untouched_rows_and_their_moments_alone() {
+        let mut opt = Optimizer::new(OptimizerKind::Adam, 0.1);
+        let mut data = vec![1.0f32; 4]; // 2 rows × 2 cols
+        let mut gb = GradBuffer::new(2, 2);
+        for _ in 0..3 {
+            gb.add_row(0, 1.0, &[1.0, -1.0]);
+            opt.begin_step();
+            opt.apply("t", &mut data, &gb);
+            gb.clear();
+        }
+        // row 0 moved toward the gradient direction; row 1 untouched
+        assert!(data[0] < 1.0 && data[1] > 1.0);
+        assert_eq!(&data[2..], &[1.0, 1.0]);
+        // first Adam step moves by ~lr regardless of gradient magnitude
+        let mut opt2 = Optimizer::new(OptimizerKind::Adam, 0.1);
+        let mut w = vec![0.0f32; 2];
+        let mut gb2 = GradBuffer::new(1, 2);
+        gb2.add_row(0, 1.0, &[100.0, 1e-3]);
+        opt2.begin_step();
+        opt2.apply("w", &mut w, &gb2);
+        assert!((w[0] + 0.1).abs() < 1e-3, "w[0] = {}", w[0]);
+    }
+
+    #[test]
+    fn optimizer_kind_parse_roundtrip() {
+        assert_eq!(OptimizerKind::parse("sgd").unwrap(), OptimizerKind::Sgd);
+        assert_eq!(OptimizerKind::parse("adam").unwrap().as_str(), "adam");
+        assert!(OptimizerKind::parse("lbfgs").is_err());
+    }
+}

@@ -53,18 +53,23 @@ impl Default for TrainOptions {
 /// Result of one training run.
 #[derive(Debug, Clone)]
 pub struct TrainOutcome {
+    /// Experiment config name.
     pub experiment: String,
+    /// Seed the run was trained with.
     pub seed: u64,
     /// Per-epoch training losses.
     pub losses: Vec<f32>,
     /// (epoch, val metric) curve.
     pub val_curve: Vec<(usize, f64)>,
-    /// Best validation metric and the test metric at that point.
+    /// Best validation metric.
     pub val_metric: f64,
+    /// Test metric at the best-validation point.
     pub test_metric: f64,
+    /// Epochs actually run (early stopping may cut the budget short).
     pub epochs_run: usize,
     /// Embedding-layer memory report (paper's savings columns).
     pub memory: MemoryReport,
+    /// Total wall time of the run.
     pub wall: std::time::Duration,
 }
 

@@ -6,8 +6,11 @@ use crate::util::rng::Rng;
 /// Node index sets for each fold.
 #[derive(Debug, Clone)]
 pub struct Splits {
+    /// Training node ids.
     pub train: Vec<u32>,
+    /// Validation node ids.
     pub val: Vec<u32>,
+    /// Test node ids.
     pub test: Vec<u32>,
 }
 

@@ -17,7 +17,9 @@ pub enum TaskKind {
 /// Specification of a synthetic dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
+    /// Registered dataset name.
     pub name: &'static str,
+    /// Number of nodes.
     pub n: usize,
     /// Classes (MultiClass) or number of binary tasks (MultiLabel).
     pub classes: usize,
@@ -25,9 +27,11 @@ pub struct DatasetSpec {
     pub communities: usize,
     /// Super-communities (coarse homophily scale; see generate.rs).
     pub supers: usize,
+    /// Expected intra-community degree per node.
     pub intra_degree: f64,
     /// Same-super cross-community expected degree.
     pub super_degree: f64,
+    /// Expected global inter-community degree per node.
     pub inter_degree: f64,
     /// Probability a node's canonical label comes from its SUPER-community
     /// (coarse signal a few position partitions can capture) rather than
@@ -40,22 +44,27 @@ pub struct DatasetSpec {
     /// label — controls how much signal needs *node-specific* modeling,
     /// which is exactly the PosHashEmb x-component's job.
     pub label_flip: f64,
+    /// Prediction task kind (drives loss and metric).
     pub task: TaskKind,
     /// Embedding dimension the paper pairs with this dataset.
     pub d: usize,
+    /// Generation seed (graph, labels and splits all derive from it).
     pub seed: u64,
 }
 
 /// A realized dataset: graph + labels + splits.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// The spec this dataset was generated from.
     pub spec: DatasetSpec,
+    /// The undirected graph.
     pub graph: CsrGraph,
     /// Planted community of each node (ground truth, not visible to models).
     pub communities: Vec<u32>,
     /// MultiClass: `labels[i] ∈ [0, classes)`.
     /// MultiLabel: row-major `n × classes` in {0, 1}.
     pub labels: Vec<u32>,
+    /// Train/val/test node folds.
     pub splits: Splits,
 }
 

@@ -96,6 +96,24 @@ impl<'p> ComposeEngine<'p> {
     /// Compose embeddings for `nodes` only (row b = node `nodes[b]`,
     /// `nodes.len() × d` row-major). Ids may repeat and appear in any
     /// order; each must be `< n`.
+    ///
+    /// Subset compose returns exactly the corresponding `compose_all`
+    /// rows — the invariant minibatch training rests on:
+    ///
+    /// ```
+    /// use poshashemb::embedding::{init_params, ComposeEngine, EmbeddingMethod, EmbeddingPlan};
+    ///
+    /// let method = EmbeddingMethod::HashEmb { buckets: 16, h: 2 };
+    /// let plan = EmbeddingPlan::build(100, 8, &method, None, 0);
+    /// let params = init_params(&plan, 1);
+    /// let engine = ComposeEngine::new(&plan);
+    ///
+    /// let full = engine.compose_all(&params);             // 100 × 8
+    /// let rows = engine.compose_batch(&params, &[5, 99, 5]); // 3 × 8
+    /// assert_eq!(&rows[0..8], &full[5 * 8..6 * 8]);   // row 0 = node 5
+    /// assert_eq!(&rows[8..16], &full[99 * 8..100 * 8]); // row 1 = node 99
+    /// assert_eq!(&rows[0..8], &rows[16..24]);         // repeats allowed
+    /// ```
     pub fn compose_batch(&self, params: &ParamStore, nodes: &[u32]) -> Vec<f32> {
         let mut out = vec![0f32; nodes.len() * self.plan.d];
         self.compose_batch_into(params, nodes, &mut out);

@@ -6,33 +6,81 @@ pub enum EmbeddingMethod {
     /// One-hot full embedding table `W ∈ R^{n×d}` (paper's FullEmb).
     Full,
     /// Hashing trick [6]: one hash into `buckets` shared rows.
-    HashTrick { buckets: usize },
+    HashTrick {
+        /// Shared table rows.
+        buckets: usize,
+    },
     /// Bloom embeddings [9]: `h` hashes, unweighted sum.
-    Bloom { buckets: usize, h: usize },
+    Bloom {
+        /// Shared table rows.
+        buckets: usize,
+        /// Number of hash functions.
+        h: usize,
+    },
     /// Hash embeddings [7]: `h` hashes + learned per-node importance.
-    HashEmb { buckets: usize, h: usize },
+    HashEmb {
+        /// Shared table rows.
+        buckets: usize,
+        /// Number of hash functions.
+        h: usize,
+    },
     /// Deep hash embeddings [8]: dense hash encoding + MLP.
-    Dhe { encoding_dim: usize, hidden: usize, layers: usize },
+    Dhe {
+        /// Dense encoding width.
+        encoding_dim: usize,
+        /// Hidden width of each MLP layer.
+        hidden: usize,
+        /// Number of hidden layers.
+        layers: usize,
+    },
     /// Position-specific only (PosEmb L-level, Eq. 9/11).
-    PosEmb { levels: usize },
+    PosEmb {
+        /// Hierarchy levels used.
+        levels: usize,
+    },
     /// PosEmb 1-level with random membership (Table III baseline).
-    RandomPart { parts: usize },
+    RandomPart {
+        /// Number of random parts.
+        parts: usize,
+    },
     /// PosEmb + full node-specific table (Table III/V "PosFullEmb").
-    PosFullEmb { levels: usize },
+    PosFullEmb {
+        /// Hierarchy levels used.
+        levels: usize,
+    },
     /// PosEmb + globally shared hash-embedding pool (Eq. 13).
-    PosHashEmbInter { levels: usize, buckets: usize, h: usize },
+    PosHashEmbInter {
+        /// Hierarchy levels used.
+        levels: usize,
+        /// Shared pool rows.
+        buckets: usize,
+        /// Number of hash functions.
+        h: usize,
+    },
     /// PosEmb + per-partition pools of `c` rows each (Eq. 12).
     /// `compression = c`; total pool is `m_0 · c` rows.
-    PosHashEmbIntra { levels: usize, compression: usize, h: usize },
+    PosHashEmbIntra {
+        /// Hierarchy levels used.
+        levels: usize,
+        /// Pool rows per level-0 partition (the paper's `c`).
+        compression: usize,
+        /// Number of hash functions.
+        h: usize,
+    },
 }
 
 /// Coarse family grouping used for reporting.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MethodFamily {
+    /// FullEmb.
     Full,
+    /// Hash-based baselines (HashTrick / Bloom / HashEmb).
     Hashing,
+    /// Position-specific only (PosEmb / RandomPart).
     Position,
+    /// Position + node-specific combinations (the paper's contribution).
     PositionHash,
+    /// Deep hash embeddings.
     Dhe,
 }
 

@@ -10,10 +10,15 @@ use super::config::EmbeddingMethod;
 /// A priced method: parameter count and savings vs full.
 #[derive(Debug, Clone)]
 pub struct MemoryReport {
+    /// Method display name.
     pub method_name: String,
+    /// Trainable embedding-layer parameters.
     pub params: usize,
+    /// FullEmb parameter count at the same (n, d).
     pub full_params: usize,
+    /// `params / full_params`.
     pub fraction_of_full: f64,
+    /// Savings vs FullEmb in percent (negative when larger than full).
     pub savings_pct: f64,
 }
 
@@ -95,18 +100,31 @@ pub fn budget_for_fraction(
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PosBudget {
     /// 3-level position + intra pools of `c` rows.
-    Intra { c: usize, h: usize },
+    Intra {
+        /// Pool rows per level-0 partition.
+        c: usize,
+        /// Number of hash functions.
+        h: usize,
+    },
     /// Budget too small for hierarchy+hash: PosEmb 1-level with `k` parts.
-    PositionOnly { k: usize },
+    PositionOnly {
+        /// Partition count of the single level.
+        k: usize,
+    },
 }
 
 /// Methods configured to a common memory budget (one Figure-4 x-point).
 #[derive(Debug, Clone)]
 pub struct BudgetedMethods {
+    /// The parameter budget all methods were fitted to.
     pub budget_params: usize,
+    /// HashTrick at this budget.
     pub hash_trick: EmbeddingMethod,
+    /// Bloom at this budget.
     pub bloom: EmbeddingMethod,
+    /// HashEmb at this budget.
     pub hash_emb: EmbeddingMethod,
+    /// PosHashEmb (or its position-only fallback) at this budget.
     pub poshash: PosBudget,
 }
 

@@ -18,7 +18,9 @@ use crate::partition::{random_partition, Hierarchy};
 pub struct TableShape {
     /// Canonical parameter name (matches the python side).
     pub name: String,
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
 }
 
@@ -54,8 +56,11 @@ pub struct NodePlan {
 pub struct DhePlan {
     /// Row-major `n × encoding_dim` static encoding in [-1, 1].
     pub encoding: Vec<f32>,
+    /// Dense encoding width.
     pub encoding_dim: usize,
+    /// Hidden width of each MLP layer.
     pub hidden: usize,
+    /// Number of hidden layers.
     pub layers: usize,
     /// MLP parameter shapes in order (w0, b0, w1, b1, ...).
     pub tables: Vec<TableShape>,
@@ -64,13 +69,17 @@ pub struct DhePlan {
 /// Complete embedding plan for one (graph, method) pair.
 #[derive(Debug, Clone)]
 pub struct EmbeddingPlan {
+    /// The method this plan realizes.
     pub method: EmbeddingMethod,
     /// Number of nodes.
     pub n: usize,
     /// Output embedding dimension.
     pub d: usize,
+    /// Position-specific component (Eq. 11), if the method has one.
     pub position: Option<PositionPlan>,
+    /// Node-specific component (Eq. 12/13), if the method has one.
     pub node: Option<NodePlan>,
+    /// DHE component, if the method is DHE.
     pub dhe: Option<DhePlan>,
 }
 

@@ -7,12 +7,19 @@ use super::csr::CsrGraph;
 /// distribution details used in EXPERIMENTS.md).
 #[derive(Debug, Clone)]
 pub struct GraphStats {
+    /// Number of nodes.
     pub num_nodes: usize,
+    /// Number of undirected edges.
     pub num_edges: usize,
+    /// Minimum degree.
     pub min_degree: usize,
+    /// Maximum degree.
     pub max_degree: usize,
+    /// Mean degree.
     pub mean_degree: f64,
+    /// Median degree.
     pub median_degree: usize,
+    /// Nodes with no edges.
     pub isolated_nodes: usize,
     /// Fraction of adjacency entries within the given communities (edge
     /// homophily); `None` when no membership supplied.

@@ -7,18 +7,23 @@
 //! * **Layer 3 (this crate)** — coordinator and substrates: CSR graphs,
 //!   a from-scratch multilevel k-way partitioner (METIS substitute),
 //!   universal hashing, embedding plans for every method in the paper,
-//!   synthetic homophilous datasets, the training orchestrator, and the
-//!   PJRT runtime that executes AOT-compiled training steps.
+//!   synthetic homophilous datasets, neighbor-sampled minibatch training
+//!   on the compose engine, the training orchestrator, and the PJRT
+//!   runtime that executes AOT-compiled training steps.
 //! * **Layer 2** — GNN models (GCN / GraphSAGE / GAT) + loss + Adam in
 //!   JAX, lowered once to HLO text by `python/compile/aot.py`.
 //! * **Layer 1** — the embedding gather/combine hot-spot as a Pallas
 //!   kernel (`python/compile/kernels/gather_combine.py`).
 //!
 //! Python never runs at training time: the Rust binary loads
-//! `artifacts/*.hlo.txt` via PJRT and owns the training loop.
+//! `artifacts/*.hlo.txt` via PJRT and owns the training loop. The
+//! host-side minibatch trainer needs no artifacts at all.
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `docs/ARCHITECTURE.md` for the end-to-end data flow and the
+//! per-layer invariants, `DESIGN.md` for the full system inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod config;
@@ -30,4 +35,5 @@ pub mod hashing;
 pub mod metrics;
 pub mod partition;
 pub mod runtime;
+pub mod sampler;
 pub mod util;

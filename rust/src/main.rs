@@ -14,6 +14,11 @@
 //! * `compose --dataset D [--method M] [--batch B] [--json]` — benchmark
 //!   the host-side compose engine (reference vs parallel vs batch paths);
 //!   runs without PJRT artifacts.
+//! * `train-minibatch [--experiment NAME | --dataset D --method M]
+//!   [--batch B] [--fanout F|all] [--epochs N] [--lr LR]
+//!   [--optimizer sgd|adam] [--no-shuffle] [--seed S] [--json]` —
+//!   host-side neighbor-sampled minibatch training on the compose
+//!   engine; runs without PJRT artifacts and emits a JSON bench record.
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
 //!   benchmark the partitioner pipeline (scalar vs parallel matching,
 //!   reference vs CSR contraction, end-to-end partition, hierarchy);
@@ -23,15 +28,18 @@
 
 use anyhow::{anyhow, bail, Result};
 use poshashemb::bench_harness::{
-    bench_compose, bench_partition, print_table, rows_from_outcomes, Harness,
+    bench_compose, bench_minibatch, bench_partition, print_table, rows_from_outcomes, Harness,
 };
-use poshashemb::config::{default_c, default_k, full_grid, smoke_grid, write_aot_request};
-use poshashemb::coordinator::{run_experiment, TrainOptions};
+use poshashemb::config::{
+    default_c, default_k, full_grid, materialize, smoke_grid, write_aot_request,
+};
+use poshashemb::coordinator::{run_experiment, MinibatchOptions, OptimizerKind, TrainOptions};
 use poshashemb::data::{spec, Dataset, DATASET_NAMES};
 use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
 use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
 use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
 use poshashemb::runtime::{Manifest, RuntimeClient};
+use poshashemb::sampler::{Fanout, SamplerConfig};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -75,6 +83,7 @@ fn run() -> Result<()> {
         "gen-manifest" => cmd_gen_manifest(&flags),
         "partition" => cmd_partition(&flags),
         "train" => cmd_train(&flags),
+        "train-minibatch" => cmd_train_minibatch(&flags),
         "experiment" => cmd_experiment(&flags),
         "compose" => cmd_compose(&flags),
         "partition-bench" => cmd_partition_bench(&flags),
@@ -95,6 +104,9 @@ fn print_help() {
          gen-manifest [--grid full|smoke]       write artifacts/manifest_request.json\n\
          partition --dataset D --k K [--levels L]   run the multilevel partitioner\n\
          train --experiment NAME [--seed S] [--epochs N] [--verbose]\n\
+         train-minibatch [--experiment NAME | --dataset D --method M] [--batch B]\n\
+                         [--fanout F|all] [--epochs N] [--lr LR] [--optimizer sgd|adam]\n\
+                         [--no-shuffle] [--seed S] [--verbose] [--json]\n\
          experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table\n\
          compose [--dataset D] [--method M] [--batch B] [--json]   bench the compose engine\n\
          partition-bench [--dataset D] [--k K] [--levels L] [--json]   bench the partitioner"
@@ -186,17 +198,13 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// Host-side compose-engine benchmark: no PJRT artifacts required.
-fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
-    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
-    let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
-    let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
-    let batch: usize = flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(1024);
-    let n = sp.n;
+/// Resolve a CLI method tag to a concrete method at dataset scale
+/// (paper-default k / c / b derived from n, as in `config`).
+fn method_from_tag(tag: &str, n: usize) -> Result<EmbeddingMethod> {
     let k = default_k(n);
     let c = default_c(n, k);
     let b = c * k;
-    let method = match tag {
+    Ok(match tag {
         "full" => EmbeddingMethod::Full,
         "hashtrick" => EmbeddingMethod::HashTrick { buckets: b },
         "bloom" => EmbeddingMethod::Bloom { buckets: b, h: 2 },
@@ -209,7 +217,18 @@ fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
         "inter" => EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: b, h: 2 },
         "intra" => EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h: 2 },
         other => bail!("unknown method '{other}' (see `poshashemb help`)"),
-    };
+    })
+}
+
+/// Host-side compose-engine benchmark: no PJRT artifacts required.
+fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
+    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
+    let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
+    let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
+    let batch: usize = flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(1024);
+    let n = sp.n;
+    let k = default_k(n);
+    let method = method_from_tag(tag, n)?;
     let ds = Dataset::generate(&sp);
     let hier = if method.needs_hierarchy() {
         let levels = method.levels().max(1);
@@ -226,6 +245,86 @@ fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
         for r in &records {
             println!("{}", r.row());
         }
+    }
+    Ok(())
+}
+
+/// Host-side neighbor-sampled minibatch training on the compose engine:
+/// no PJRT artifacts required. Defaults come from the experiment grid
+/// (`--experiment`) or from `SamplerConfig::default()`; flags override.
+fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
+    let seed: u64 = flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let exp_flag = flags.get("experiment");
+    if exp_flag.is_some() && (flags.contains_key("dataset") || flags.contains_key("method")) {
+        bail!("--experiment already fixes the dataset and method; drop --dataset/--method");
+    }
+    let (label, dsname, ds, plan, mut cfg, mut opts) = if let Some(name) = exp_flag {
+        let e = full_grid()
+            .into_iter()
+            .find(|e| &e.name == name)
+            .ok_or_else(|| anyhow!("unknown experiment '{name}' (see `poshashemb list`)"))?;
+        let (ds, _hier, plan) = materialize(&e, seed);
+        let opts =
+            MinibatchOptions { epochs: e.epochs, lr: e.lr as f32, seed, ..Default::default() };
+        (e.name.clone(), e.dataset.to_string(), ds, plan, e.sampling, opts)
+    } else {
+        let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
+        let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
+        let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
+        let method = method_from_tag(tag, sp.n)?;
+        let ds = Dataset::generate(&sp);
+        let hier = if method.needs_hierarchy() {
+            let levels = method.levels().max(1);
+            let k = default_k(sp.n);
+            Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(k, levels)))
+        } else {
+            None
+        };
+        let plan = EmbeddingPlan::build(sp.n, sp.d, &method, hier.as_ref(), seed);
+        let opts = MinibatchOptions { seed, ..Default::default() };
+        (dsname.to_string(), dsname.to_string(), ds, plan, SamplerConfig::default(), opts)
+    };
+    if let Some(b) = flags.get("batch") {
+        cfg.batch_size = b.parse()?;
+        if cfg.batch_size == 0 {
+            bail!("--batch must be >= 1");
+        }
+    }
+    if let Some(f) = flags.get("fanout") {
+        cfg.fanout = Fanout::parse(f).map_err(|e| anyhow!(e))?;
+    }
+    if flags.contains_key("no-shuffle") {
+        cfg.shuffle = false;
+    }
+    if let Some(e) = flags.get("epochs") {
+        opts.epochs = e.parse()?;
+    }
+    if let Some(lr) = flags.get("lr") {
+        opts.lr = lr.parse()?;
+        if !opts.lr.is_finite() || opts.lr <= 0.0 {
+            bail!("--lr must be a positive number");
+        }
+    }
+    if let Some(o) = flags.get("optimizer") {
+        opts.optimizer = OptimizerKind::parse(o).map_err(|e| anyhow!(e))?;
+    }
+    opts.verbose = flags.contains_key("verbose");
+    eprintln!(
+        "minibatch train: {label} n={} d={} method={} batch={} fanout={} epochs={} {} lr={}",
+        plan.n,
+        plan.d,
+        plan.method.name(),
+        cfg.batch_size,
+        cfg.fanout,
+        opts.epochs,
+        opts.optimizer.as_str(),
+        opts.lr
+    );
+    let record = bench_minibatch(&dsname, &ds, &plan, cfg, &opts)?;
+    if flags.contains_key("json") {
+        println!("{}", serde_json::to_string_pretty(&record)?);
+    } else {
+        println!("{}", record.row());
     }
     Ok(())
 }

@@ -15,15 +15,20 @@ use std::path::{Path, PathBuf};
 /// Element type of an artifact input.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 /// One positional input of a lowered HLO module.
 #[derive(Debug, Clone)]
 pub struct InputSpec {
+    /// Input name (resolved by the trainer, never positional guessing).
     pub name: String,
+    /// Tensor shape (empty = rank 0).
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: Dtype,
 }
 
@@ -37,11 +42,13 @@ impl InputSpec {
 /// One lowered artifact (train or eval module of one experiment config).
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (`<config>.train` / `<config>.eval`).
     pub name: String,
     /// Path of the HLO text file, relative to the manifest dir.
     pub path: String,
     /// "train" or "eval".
     pub mode: String,
+    /// Positional input ABI.
     pub inputs: Vec<InputSpec>,
     /// Number of trainable parameter tensors (first `num_params` inputs).
     pub num_params: usize,
@@ -62,6 +69,7 @@ impl ArtifactSpec {
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and its HLO files) live in.
     pub dir: PathBuf,
     artifacts: HashMap<String, ArtifactSpec>,
 }

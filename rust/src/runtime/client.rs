@@ -17,7 +17,9 @@ use anyhow::{bail, Result};
 /// A host-side tensor matched to an artifact input slot.
 #[derive(Debug, Clone)]
 pub enum HostTensor {
+    /// f32 data + shape.
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data + shape.
     I32(Vec<i32>, Vec<usize>),
 }
 

@@ -3,9 +3,9 @@
 //! produced once by `make artifacts` (python/compile/aot.py) and this
 //! module is the only consumer.
 //!
-//! * [`artifact`] — `artifacts/manifest.json` schema: per-artifact input
+//! * `artifact` — `artifacts/manifest.json` schema: per-artifact input
 //!   specs (the ABI the train/eval HLO was lowered against).
-//! * [`client`] — execution backend behind one API: with the `pjrt`
+//! * `client` — execution backend behind one API: with the `pjrt`
 //!   feature, the `xla` crate (compile-from-text, executable cache,
 //!   host↔device transfer); without it, a stub that fails construction
 //!   with a clear message so the rest of the crate builds dependency-free.

@@ -1,0 +1,201 @@
+//! Fanout-bounded uniform neighbor sampling on CSR graphs.
+
+use super::{mix_seed, Fanout};
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// One sampled computation block: the node rows a minibatch step
+/// composes, plus the seed → sampled-neighbor topology over those rows.
+///
+/// Layout invariants (pinned by `rust/tests/minibatch.rs`):
+/// * `nodes` holds **unique** global node ids; the first `num_seeds`
+///   entries are the batch's seed nodes in batch order, followed by the
+///   sampled frontier in discovery order.
+/// * `neighbors_of(s)` returns **local** row indices into `nodes`, so a
+///   trainer can compose `nodes` once with `compose_batch` and aggregate
+///   entirely in block-row space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SampledBlock {
+    /// Unique global node ids to compose (seeds first, then frontier).
+    pub nodes: Vec<u32>,
+    /// Number of seed rows (the prefix of `nodes`).
+    pub num_seeds: usize,
+    /// CSR-style offsets into `neigh_idx`, one row per seed
+    /// (`len == num_seeds + 1`).
+    pub neigh_ptr: Vec<u32>,
+    /// Sampled neighbors as local row indices into `nodes`.
+    pub neigh_idx: Vec<u32>,
+}
+
+impl SampledBlock {
+    /// Total rows to compose (`nodes.len()`): the batch's peak compose
+    /// allocation is exactly `num_rows() × d`.
+    pub fn num_rows(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Sampled neighbors of seed row `s`, as local row indices.
+    pub fn neighbors_of(&self, s: usize) -> &[u32] {
+        let (lo, hi) = (self.neigh_ptr[s] as usize, self.neigh_ptr[s + 1] as usize);
+        &self.neigh_idx[lo..hi]
+    }
+}
+
+/// Uniform neighbor sampler over a [`CsrGraph`], bounded by a [`Fanout`].
+///
+/// Seeds with degree ≤ fanout keep their whole neighborhood (in
+/// adjacency order); larger neighborhoods are sampled without
+/// replacement by a partial Fisher–Yates draw whose RNG is keyed by
+/// `(stream seed, epoch, batch, node)` via [`mix_seed`] — so every block
+/// is reproducible at any thread count, and resampling the same batch
+/// coordinates always returns the same block.
+///
+/// The sampler owns a `global → local` scratch array (`u32::MAX` =
+/// absent, restored after every call), so block construction does no
+/// hashing and allocates only the block itself.
+pub struct NeighborSampler<'g> {
+    graph: &'g CsrGraph,
+    fanout: Fanout,
+    seed: u64,
+    node_to_local: Vec<u32>,
+    pick: Vec<u32>,
+}
+
+impl<'g> NeighborSampler<'g> {
+    /// Sampler over `graph` with the given fanout; `seed` keys all draws.
+    pub fn new(graph: &'g CsrGraph, fanout: Fanout, seed: u64) -> Self {
+        NeighborSampler {
+            graph,
+            fanout,
+            seed,
+            node_to_local: vec![u32::MAX; graph.num_nodes()],
+            pick: Vec::new(),
+        }
+    }
+
+    /// The configured fanout.
+    pub fn fanout(&self) -> Fanout {
+        self.fanout
+    }
+
+    /// Sample the one-hop block for `seeds` (distinct ids) at batch
+    /// coordinates `(epoch, batch)`. Deterministic per
+    /// `(sampler seed, epoch, batch)`; seed order is preserved.
+    pub fn sample_block(&mut self, seeds: &[u32], epoch: usize, batch: usize) -> SampledBlock {
+        let n = self.graph.num_nodes() as u32;
+        let mut nodes: Vec<u32> = Vec::with_capacity(seeds.len() * 2);
+        for (local, &s) in seeds.iter().enumerate() {
+            assert!(s < n, "seed {s} out of range (n = {n})");
+            assert_eq!(self.node_to_local[s as usize], u32::MAX, "duplicate seed {s}");
+            self.node_to_local[s as usize] = local as u32;
+            nodes.push(s);
+        }
+        let mut neigh_ptr: Vec<u32> = Vec::with_capacity(seeds.len() + 1);
+        neigh_ptr.push(0);
+        let mut neigh_idx: Vec<u32> = Vec::new();
+        for &s in seeds {
+            let adj = self.graph.neighbors(s);
+            // `sampled` selects the indirection: the common no-sampling
+            // path (degree ≤ fanout, or Fanout::All) walks `adj`
+            // directly and never touches the `pick` scratch
+            let (take, sampled) = match self.fanout.limit() {
+                Some(f) if adj.len() > f => {
+                    // partial Fisher–Yates over adjacency positions; the
+                    // per-(seed, epoch, batch, node) stream makes the
+                    // draw independent of scheduling and batch layout
+                    let mut rng = Rng::seed_from_u64(mix_seed(&[
+                        self.seed,
+                        epoch as u64,
+                        batch as u64,
+                        s as u64,
+                    ]));
+                    self.pick.clear();
+                    self.pick.extend(0..adj.len() as u32);
+                    for t in 0..f {
+                        let j = t + rng.gen_range(adj.len() - t);
+                        self.pick.swap(t, j);
+                    }
+                    (f, true)
+                }
+                _ => (adj.len(), false),
+            };
+            for t in 0..take {
+                let v = if sampled { adj[self.pick[t] as usize] } else { adj[t] };
+                let local = self.node_to_local[v as usize];
+                let local = if local == u32::MAX {
+                    let l = nodes.len() as u32;
+                    self.node_to_local[v as usize] = l;
+                    nodes.push(v);
+                    l
+                } else {
+                    local
+                };
+                neigh_idx.push(local);
+            }
+            neigh_ptr.push(neigh_idx.len() as u32);
+        }
+        for &u in &nodes {
+            self.node_to_local[u as usize] = u32::MAX;
+        }
+        SampledBlock { nodes, num_seeds: seeds.len(), neigh_ptr, neigh_idx }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        let mut b = GraphBuilder::new(n);
+        for u in 0..n as u32 - 1 {
+            b.add_edge(u, u + 1, 1.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn full_fanout_takes_whole_neighborhood_in_order() {
+        let g = path_graph(5);
+        let mut s = NeighborSampler::new(&g, Fanout::All, 0);
+        let block = s.sample_block(&[2, 0], 0, 0);
+        assert_eq!(block.num_seeds, 2);
+        assert_eq!(&block.nodes[..2], &[2, 0]);
+        // node 2's neighbors are {1, 3}; node 0's neighbor is {1}
+        let n2: Vec<u32> = block.neighbors_of(0).iter().map(|&r| block.nodes[r as usize]).collect();
+        assert_eq!(n2, vec![1, 3]);
+        let n0: Vec<u32> = block.neighbors_of(1).iter().map(|&r| block.nodes[r as usize]).collect();
+        assert_eq!(n0, vec![1]);
+        // node 1 appears once even though two seeds reach it
+        assert_eq!(block.nodes.iter().filter(|&&u| u == 1).count(), 1);
+    }
+
+    #[test]
+    fn fanout_zero_yields_no_neighbors() {
+        let g = path_graph(4);
+        let mut s = NeighborSampler::new(&g, Fanout::Max(0), 0);
+        let block = s.sample_block(&[1, 2], 0, 0);
+        assert_eq!(block.nodes, vec![1, 2]);
+        assert!(block.neighbors_of(0).is_empty());
+        assert!(block.neighbors_of(1).is_empty());
+    }
+
+    #[test]
+    fn scratch_is_restored_between_calls() {
+        let g = path_graph(6);
+        let mut s = NeighborSampler::new(&g, Fanout::Max(1), 9);
+        let a = s.sample_block(&[0, 3], 1, 0);
+        let b = s.sample_block(&[0, 3], 1, 0);
+        assert_eq!(a, b);
+        // disjoint second batch works on the same scratch
+        let c = s.sample_block(&[5], 1, 1);
+        assert_eq!(c.nodes[0], 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate seed")]
+    fn duplicate_seeds_rejected() {
+        let g = path_graph(3);
+        NeighborSampler::new(&g, Fanout::All, 0).sample_block(&[1, 1], 0, 0);
+    }
+}

@@ -7,10 +7,15 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// Median wall time.
     pub p50: Duration,
+    /// 95th-percentile wall time.
     pub p95: Duration,
 }
 

@@ -10,11 +10,17 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always an f64, as in JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys: deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -33,6 +39,7 @@ impl Json {
 
     // -- typed accessors -------------------------------------------------
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -40,6 +47,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -47,10 +55,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -58,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -65,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -79,18 +91,22 @@ impl Json {
 
     // -- builders ---------------------------------------------------------
 
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array from an iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Number from anything convertible to f64.
     pub fn num(x: impl Into<f64>) -> Json {
         Json::Num(x.into())
     }
 
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -153,7 +169,9 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

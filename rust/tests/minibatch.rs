@@ -1,0 +1,270 @@
+//! Minibatch-training validation: property-based checks that (a) the
+//! neighbor sampler respects fanout bounds and block invariants, (b)
+//! sampling and whole training runs are bit-identical across rayon
+//! thread counts for a fixed seed, (c) the fanout = ∞ oracle
+//! configuration reproduces the full-batch trainer's loss trajectory
+//! within 1e-5 per epoch, and (d) the trainer never composes an `n × d`
+//! block (peak compose allocation is bounded by `batch × (fanout + 1)`).
+//!
+//! Thread counts are varied with dedicated `rayon::ThreadPool`s rather
+//! than `RAYON_NUM_THREADS` (the global pool is process-wide and the
+//! test runner is itself parallel).
+
+use poshashemb::coordinator::{
+    train_full_batch, MinibatchOptions, MinibatchTrainer, OptimizerKind,
+};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::graph::{planted_partition, CsrGraph, PlantedPartitionConfig};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{Fanout, NeighborSampler, SamplerConfig, SeedBatcher};
+use poshashemb::util::rng::Rng;
+use proptest::prelude::*;
+use std::collections::HashSet;
+
+fn sbm(n: usize, communities: usize, intra: f64, inter: f64, seed: u64) -> CsrGraph {
+    planted_partition(&PlantedPartitionConfig {
+        n,
+        communities,
+        intra_degree: intra,
+        inter_degree: inter,
+        seed,
+        ..Default::default()
+    })
+    .0
+}
+
+fn in_pool<T: Send>(threads: usize, f: impl FnOnce() -> T + Send) -> T {
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("thread pool")
+        .install(f)
+}
+
+/// Shrunk synth-arxiv analog: small enough for per-epoch full-batch
+/// composes in debug-mode tests, same generator and split machinery.
+fn small_dataset(n: usize, d: usize) -> Dataset {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    Dataset::generate(&s)
+}
+
+fn distinct_seeds(n: usize, count: usize, seed: u64) -> Vec<u32> {
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    Rng::seed_from_u64(seed).shuffle(&mut ids);
+    ids.truncate(count.clamp(1, n));
+    ids
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(12))]
+
+    #[test]
+    fn sampled_blocks_respect_fanout_bounds(
+        n in 80usize..600,
+        communities in 2usize..7,
+        fanout in 1usize..8,
+        seed in any::<u64>(),
+    ) {
+        let g = sbm(n, communities, 7.0, 2.0, seed);
+        let seeds = distinct_seeds(n, n / 4, seed ^ 0xF00);
+        let mut sampler = NeighborSampler::new(&g, Fanout::Max(fanout), seed);
+        let block = sampler.sample_block(&seeds, 3, 1);
+        // seeds form the block prefix, all rows are unique node ids
+        prop_assert_eq!(&block.nodes[..seeds.len()], &seeds[..]);
+        let unique: HashSet<u32> = block.nodes.iter().copied().collect();
+        prop_assert_eq!(unique.len(), block.nodes.len(), "duplicate block rows");
+        for (si, &s) in seeds.iter().enumerate() {
+            let sampled = block.neighbors_of(si);
+            let deg = g.degree(s);
+            prop_assert_eq!(sampled.len(), deg.min(fanout), "seed {} fanout", s);
+            let mut globals = HashSet::new();
+            for &r in sampled {
+                let v = block.nodes[r as usize];
+                prop_assert!(g.neighbors(s).contains(&v), "{v} is not a neighbor of {s}");
+                prop_assert!(globals.insert(v), "neighbor {v} sampled twice for {s}");
+            }
+        }
+        // resampling the same coordinates reproduces the block exactly
+        prop_assert_eq!(block, sampler.sample_block(&seeds, 3, 1));
+    }
+
+    #[test]
+    fn sampling_is_thread_count_invariant(
+        n in 100usize..500,
+        fanout in 1usize..6,
+        seed in any::<u64>(),
+    ) {
+        let g = sbm(n, 4, 8.0, 1.5, seed);
+        let seeds = distinct_seeds(n, 40, seed ^ 0xB00);
+        let block1 = in_pool(1, || {
+            NeighborSampler::new(&g, Fanout::Max(fanout), seed).sample_block(&seeds, 2, 5)
+        });
+        let block4 = in_pool(4, || {
+            NeighborSampler::new(&g, Fanout::Max(fanout), seed).sample_block(&seeds, 2, 5)
+        });
+        prop_assert_eq!(block1, block4);
+        let batcher = SeedBatcher::new(&seeds, 7, true, seed);
+        let b1 = in_pool(1, || batcher.epoch_batches(9));
+        let b4 = in_pool(4, || batcher.epoch_batches(9));
+        prop_assert_eq!(b1, b4);
+    }
+
+    #[test]
+    fn oracle_minibatch_matches_full_batch_trainer(
+        n in 400usize..800,
+        seed in any::<u64>(),
+    ) {
+        // fanout = ∞, one batch = the whole train split, no shuffle:
+        // the minibatch path must reproduce the full-batch trainer's
+        // loss trajectory (acceptance bound: 1e-5 per epoch).
+        let ds = small_dataset(n, 16);
+        let plan = EmbeddingPlan::build(
+            n,
+            16,
+            &EmbeddingMethod::HashEmb { buckets: (n / 8).max(8), h: 2 },
+            None,
+            seed,
+        );
+        let opts = MinibatchOptions {
+            epochs: 6,
+            lr: 0.05,
+            optimizer: OptimizerKind::Sgd,
+            seed,
+            ..Default::default()
+        };
+        let full = train_full_batch(&ds, &plan, &opts).unwrap();
+        let cfg = SamplerConfig::oracle(ds.splits.train.len());
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        let mini = tr.train().unwrap();
+        prop_assert_eq!(mini.losses.len(), full.losses.len());
+        for (e, (a, b)) in mini.losses.iter().zip(&full.losses).enumerate() {
+            prop_assert!(
+                (a - b).abs() <= 1e-5,
+                "epoch {}: minibatch loss {} vs full-batch {}",
+                e, a, b
+            );
+        }
+    }
+}
+
+#[test]
+fn oracle_parity_holds_with_adam_and_position_tables() {
+    // the paper-default method family (position + intra hash pools) with
+    // Adam: same oracle-parity contract as the SGD proptest.
+    let ds = small_dataset(600, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 3));
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 6, h: 2 };
+    let plan = EmbeddingPlan::build(600, 16, &method, Some(&hier), 11);
+    let opts = MinibatchOptions {
+        epochs: 5,
+        lr: 0.01,
+        optimizer: OptimizerKind::Adam,
+        seed: 11,
+        ..Default::default()
+    };
+    let full = train_full_batch(&ds, &plan, &opts).unwrap();
+    let cfg = SamplerConfig::oracle(ds.splits.train.len());
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+    let mini = tr.train().unwrap();
+    for (e, (a, b)) in mini.losses.iter().zip(&full.losses).enumerate() {
+        assert!((a - b).abs() <= 1e-5, "epoch {e}: {a} vs {b}");
+    }
+    // the same data path also yields (near-)identical final metrics;
+    // slack allows a borderline argmax flip from float associativity
+    assert!((mini.val_metric - full.val_metric).abs() <= 0.02);
+    assert!((mini.test_metric - full.test_metric).abs() <= 0.02);
+}
+
+#[test]
+fn trainer_never_composes_a_full_matrix() {
+    // acceptance: peak compose allocation is batch_rows × d, bounded by
+    // batch × (fanout + 1) — never the n × d the paper tells us to avoid.
+    let n = 2000;
+    let ds = small_dataset(n, 16);
+    let plan = EmbeddingPlan::build(
+        n,
+        16,
+        &EmbeddingMethod::HashEmb { buckets: 128, h: 2 },
+        None,
+        5,
+    );
+    let (batch, fanout) = (64, 4);
+    let cfg = SamplerConfig { batch_size: batch, fanout: Fanout::Max(fanout), shuffle: true };
+    let opts = MinibatchOptions { epochs: 3, seed: 5, ..Default::default() };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+    let out = tr.train().unwrap();
+    assert!(out.peak_compose_rows >= batch, "peak {} below batch", out.peak_compose_rows);
+    assert!(
+        out.peak_compose_rows <= batch * (fanout + 1),
+        "peak {} exceeds batch × (fanout + 1) = {}",
+        out.peak_compose_rows,
+        batch * (fanout + 1)
+    );
+    assert!(out.peak_compose_rows < n, "minibatch trainer composed the full matrix");
+    assert!(out.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn training_is_bit_identical_across_thread_counts() {
+    let ds = small_dataset(700, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 2));
+    let method = EmbeddingMethod::PosHashEmbInter { levels: 2, buckets: 60, h: 2 };
+    let plan = EmbeddingPlan::build(700, 16, &method, Some(&hier), 3);
+    let cfg = SamplerConfig { batch_size: 96, fanout: Fanout::Max(5), shuffle: true };
+    let run = || {
+        let opts = MinibatchOptions { epochs: 4, seed: 9, ..Default::default() };
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        tr.train().unwrap().losses
+    };
+    let l1 = in_pool(1, run);
+    let l4 = in_pool(4, run);
+    assert_eq!(l1, l4, "losses diverge across thread counts");
+}
+
+#[test]
+fn minibatch_training_reduces_loss_and_scores_sanely() {
+    let ds = small_dataset(1200, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(5, 3));
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 8, h: 2 };
+    let plan = EmbeddingPlan::build(1200, 16, &method, Some(&hier), 1);
+    let cfg = SamplerConfig { batch_size: 128, fanout: Fanout::Max(8), shuffle: true };
+    let opts = MinibatchOptions { epochs: 15, lr: 0.02, seed: 1, ..Default::default() };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+    let out = tr.train().unwrap();
+    let first = out.losses.first().copied().unwrap();
+    let last = out.losses.last().copied().unwrap();
+    assert!(last < first * 0.95, "loss did not decrease: {first} -> {last}");
+    assert!((0.0..=1.0).contains(&out.val_metric));
+    assert!((0.0..=1.0).contains(&out.test_metric));
+}
+
+#[test]
+fn multilabel_task_trains_with_finite_decreasing_loss() {
+    let mut s = spec("synth-proteins").unwrap();
+    s.n = 600;
+    s.communities = 12;
+    s.d = 16;
+    let ds = Dataset::generate(&s);
+    let plan = EmbeddingPlan::build(
+        600,
+        16,
+        &EmbeddingMethod::HashEmb { buckets: 64, h: 2 },
+        None,
+        2,
+    );
+    let cfg = SamplerConfig { batch_size: 96, fanout: Fanout::Max(6), shuffle: true };
+    let opts = MinibatchOptions { epochs: 10, lr: 0.02, seed: 2, ..Default::default() };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+    let out = tr.train().unwrap();
+    assert!(out.losses.iter().all(|l| l.is_finite()));
+    let first = out.losses.first().copied().unwrap();
+    let last = out.losses.last().copied().unwrap();
+    assert!(last < first, "multilabel loss did not decrease: {first} -> {last}");
+    // ROC-AUC lives in [0, 1]
+    assert!((0.0..=1.0).contains(&out.val_metric));
+    assert!((0.0..=1.0).contains(&out.test_metric));
+}
