@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Throughput-regression gate for the CI bench smokes.
+
+Compares the fresh quick-mode bench records (compose / partition /
+minibatch JSON, produced earlier in the smoke job) against the committed
+``BENCH_baseline.json`` and fails the job when any matched metric drops
+more than the allowed fraction (default 25%). Always writes an
+assembled candidate baseline (``bench-baseline-candidate.json``) so the
+pin job can commit measured numbers on main pushes.
+
+Bootstrap: the repository is authored in an offline environment, so the
+first committed baseline carries ``"bootstrap": true`` and no records.
+In that state the gate is skipped (there is nothing trustworthy to
+compare against) and the pin job replaces the placeholder with the
+candidate measured on CI hardware; from then on the gate is live.
+
+Modes:
+    compare      --baseline B --compose C --partition P --minibatch M
+                 --out CANDIDATE [--tolerance 0.25]
+    is-bootstrap --baseline B      (exit 0 iff the baseline is bootstrap)
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def key_metrics(compose, partition, minibatch):
+    """Flatten the three record files into {key: throughput} pairs."""
+    metrics = {}
+    for r in compose:
+        metrics[f"compose/{r['method']}/{r['path']}"] = r["elements_per_sec"]
+    for r in partition:
+        metrics[f"partition/{r['stage']}"] = r["edges_per_sec"]
+    r = minibatch
+    metrics[f"minibatch/{r['dataset']}/{r['method']}/b{r['batch_size']}"] = r["nodes_per_sec"]
+    return metrics
+
+
+def cmd_compare(args):
+    baseline = load(args.baseline)
+    compose = load(args.compose)
+    partition = load(args.partition)
+    minibatch = load(args.minibatch)
+
+    fresh = key_metrics(compose, partition, minibatch)
+    candidate = {
+        "bootstrap": False,
+        "git_sha": os.environ.get("GITHUB_SHA", "unknown"),
+        "threads": minibatch.get("threads", 0),
+        "metrics": fresh,
+        "records": {
+            "compose": compose,
+            "partition": partition,
+            "minibatch": minibatch,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(candidate, f, indent=2, sort_keys=True)
+    print(f"wrote candidate baseline with {len(fresh)} metrics -> {args.out}")
+
+    if baseline.get("bootstrap"):
+        print("committed baseline is a bootstrap placeholder: gate skipped "
+              "(the pin job will commit this candidate on the next main push)")
+        return 0
+
+    # Absolute throughput is only comparable on the same runner class;
+    # a different worker-thread count is the loudest signal the class
+    # changed (new runner image / CPU generation). Warn-and-skip there
+    # instead of failing unrelated PRs on runner variance.
+    base_threads = baseline.get("threads", 0)
+    if base_threads and candidate["threads"] and base_threads != candidate["threads"]:
+        print(f"runner class changed ({candidate['threads']} threads vs baseline "
+              f"{base_threads}): gate skipped — re-pin BENCH_baseline.json from the "
+              "bench-baseline-candidate artifact to re-arm it")
+        return 0
+
+    old = baseline.get("metrics", {})
+    floor = 1.0 - args.tolerance
+    failures, compared = [], 0
+    for key, prev in sorted(old.items()):
+        now = fresh.get(key)
+        if now is None or prev <= 0:
+            continue  # stage renamed/removed: not a regression signal
+        compared += 1
+        ratio = now / prev
+        marker = "OK " if ratio >= floor else "REG"
+        print(f"  {marker} {key}: {now:,.0f} vs baseline {prev:,.0f} ({ratio:.2f}x)")
+        if ratio < floor:
+            failures.append((key, ratio))
+    if not compared:
+        print("no overlapping metrics between baseline and fresh records")
+        return 0
+    if failures:
+        print(f"\nFAIL: {len(failures)}/{compared} metrics regressed more than "
+              f"{args.tolerance:.0%} vs baseline {baseline.get('git_sha', '?')}:")
+        for key, ratio in failures:
+            print(f"  {key}: {ratio:.2f}x")
+        return 1
+    print(f"bench baseline gate passed: {compared} metrics within {args.tolerance:.0%}")
+    return 0
+
+
+def cmd_is_bootstrap(args):
+    return 0 if load(args.baseline).get("bootstrap") else 1
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    sub = parser.add_subparsers(dest="mode", required=True)
+
+    cmp_p = sub.add_parser("compare")
+    cmp_p.add_argument("--baseline", required=True)
+    cmp_p.add_argument("--compose", required=True)
+    cmp_p.add_argument("--partition", required=True)
+    cmp_p.add_argument("--minibatch", required=True)
+    cmp_p.add_argument("--out", required=True)
+    cmp_p.add_argument("--tolerance", type=float, default=0.25)
+    cmp_p.set_defaults(func=cmd_compare)
+
+    boot_p = sub.add_parser("is-bootstrap")
+    boot_p.add_argument("--baseline", required=True)
+    boot_p.set_defaults(func=cmd_is_bootstrap)
+
+    args = parser.parse_args()
+    sys.exit(args.func(args))
+
+
+if __name__ == "__main__":
+    main()

@@ -50,4 +50,26 @@ fn main() {
             rec.peak_compose_rows
         );
     }
+
+    // serial oracle vs pipelined engine at the default config: the
+    // acceptance comparison (same losses bit for bit, different wall
+    // clock). The serial record is what pre-pipeline builds reported.
+    section("pipelined engine vs serial oracle (bit-identical losses)");
+    let cfg = SamplerConfig { batch_size: 512, fanout: Fanout::Max(10), shuffle: true };
+    let serial_opts =
+        MinibatchOptions { epochs, parallel: false, prefetch: 0, ..Default::default() };
+    let serial = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &serial_opts).expect("serial run");
+    let pipelined = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &opts).expect("pipelined run");
+    assert_eq!(
+        (serial.first_loss.to_bits(), serial.final_loss.to_bits()),
+        (pipelined.first_loss.to_bits(), pipelined.final_loss.to_bits()),
+        "pipelined engine drifted from the serial oracle"
+    );
+    println!("{}", serial.row());
+    println!("{}", pipelined.row());
+    println!(
+        "pipelined speedup: {:.2}x nodes/s over serial ({} threads)",
+        pipelined.nodes_per_sec / serial.nodes_per_sec.max(1e-9),
+        pipelined.threads
+    );
 }

@@ -206,6 +206,23 @@ pub fn rows_from_outcomes(
 // Host-side compose benchmarking (no PJRT needed)
 // ---------------------------------------------------------------------
 
+/// Rayon worker threads the current process runs benches with (recorded
+/// on every bench record so throughput numbers are comparable across
+/// machines and across the committed `BENCH_baseline.json`).
+fn bench_threads() -> usize {
+    rayon::current_num_threads()
+}
+
+/// The commit the record was produced at: `GITHUB_SHA` in CI (or a
+/// `GIT_SHA` override), `"unknown"` when run outside CI — so the
+/// per-commit throughput trajectory in the uploaded artifacts is
+/// self-describing.
+fn bench_git_sha() -> String {
+    std::env::var("GITHUB_SHA")
+        .or_else(|_| std::env::var("GIT_SHA"))
+        .unwrap_or_else(|_| "unknown".to_string())
+}
+
 /// One measured compose path, serializable for CI smoke artifacts.
 #[derive(Debug, Clone, Serialize)]
 pub struct ComposeBenchRecord {
@@ -232,6 +249,10 @@ pub struct ComposeBenchRecord {
     /// Mean-time ratio vs the reference path, normalized per row
     /// (so the batch path is comparable). `None` for the reference row.
     pub speedup_vs_reference: Option<f64>,
+    /// Rayon worker threads available to the run.
+    pub threads: usize,
+    /// Commit the record was produced at (`GITHUB_SHA`, or "unknown").
+    pub git_sha: String,
 }
 
 impl ComposeBenchRecord {
@@ -249,6 +270,8 @@ impl ComposeBenchRecord {
             p95_ns: r.p95.as_nanos() as u64,
             elements_per_sec: elements / r.mean.as_secs_f64(),
             speedup_vs_reference: None,
+            threads: bench_threads(),
+            git_sha: bench_git_sha(),
         }
     }
 
@@ -333,6 +356,10 @@ pub struct PartitionBenchRecord {
     pub speedup_vs_reference: Option<f64>,
     /// Weighted edge cut (end-to-end partition stages only).
     pub edge_cut: Option<f64>,
+    /// Rayon worker threads available to the run.
+    pub threads: usize,
+    /// Commit the record was produced at (`GITHUB_SHA`, or "unknown").
+    pub git_sha: String,
 }
 
 impl PartitionBenchRecord {
@@ -349,6 +376,8 @@ impl PartitionBenchRecord {
             edges_per_sec: g.num_edges() as f64 / r.mean.as_secs_f64().max(1e-12),
             speedup_vs_reference: None,
             edge_cut: None,
+            threads: bench_threads(),
+            git_sha: bench_git_sha(),
         }
     }
 
@@ -495,6 +524,14 @@ pub struct MinibatchBenchRecord {
     pub val_metric: f64,
     /// Test metric after training.
     pub test_metric: f64,
+    /// Pipelined engine (parallel step + prefetch) or the serial oracle.
+    pub parallel: bool,
+    /// Prefetch depth the run used (0 = inline sampling).
+    pub prefetch: usize,
+    /// Rayon worker threads available to the run.
+    pub threads: usize,
+    /// Commit the record was produced at (`GITHUB_SHA`, or "unknown").
+    pub git_sha: String,
 }
 
 impl MinibatchBenchRecord {
@@ -558,6 +595,10 @@ pub fn bench_minibatch(
         final_loss: out.losses.last().copied().unwrap_or(f64::NAN),
         val_metric: out.val_metric,
         test_metric: out.test_metric,
+        parallel: opts.parallel,
+        prefetch: opts.prefetch,
+        threads: bench_threads(),
+        git_sha: bench_git_sha(),
     })
 }
 
@@ -585,8 +626,10 @@ mod tests {
         assert_eq!(recs[2].path, "batch");
         assert_eq!(recs[2].rows, 64);
         assert!(recs[1].speedup_vs_reference.is_some());
+        assert!(recs.iter().all(|r| r.threads >= 1));
         let json = serde_json::to_string(&recs).unwrap();
         assert!(json.contains("\"elements_per_sec\""), "json: {json}");
+        assert!(json.contains("\"threads\"") && json.contains("\"git_sha\""), "json: {json}");
         for r in &recs {
             assert!(r.row().contains("elem/s"));
         }
@@ -653,8 +696,11 @@ mod tests {
         assert!(rec.batches_per_sec > 0.0);
         assert!(rec.peak_compose_rows < spec.n);
         assert!(rec.final_loss.is_finite());
+        assert!(rec.parallel && rec.prefetch > 0, "pipelined engine is the default");
+        assert!(rec.threads >= 1);
         let json = serde_json::to_string(&rec).unwrap();
         assert!(json.contains("\"nodes_per_sec\""), "json: {json}");
+        assert!(json.contains("\"threads\"") && json.contains("\"git_sha\""), "json: {json}");
         assert!(rec.row().contains("nodes/s"));
         // zero epochs is rejected, not divided by
         let none = MinibatchOptions { epochs: 0, ..Default::default() };

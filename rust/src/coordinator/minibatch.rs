@@ -15,6 +15,22 @@
 //! `block_rows × d`, tracked as [`MinibatchOutcome::peak_compose_rows`]
 //! and asserted `< n` by `rust/tests/minibatch.rs`.
 //!
+//! **Pipelined execution.** By default the trainer overlaps and
+//! parallelizes every phase without changing a single bit of the
+//! result: a [`BlockPrefetcher`] samples batch *b + 1* on a dedicated
+//! thread while batch *b* is stepped (blocks are keyed per
+//! `(seed, epoch, batch, node)`, so sampling ahead cannot change them,
+//! and they arrive in batch order through a bounded channel with a
+//! recycle pool); the step itself fans out on rayon — per-seed forward
+//! rows are disjoint, `dL/dv` uses an order-preserving reverse-topology
+//! scatter, embedding gradients accumulate into row-range
+//! [`GradBuffer`] shards that merge touch lists in fixed shard order,
+//! and the optimizer updates touched rows independently. The
+//! `MinibatchOptions { parallel: false, prefetch: 0, .. }` path keeps
+//! the original serial step in-tree as the oracle;
+//! `tests/parallel_train.rs` pins exact (bit-for-bit) loss-trajectory
+//! equality between the two at 1 and 4 threads.
+//!
 //! **Oracle parity.** [`train_full_batch`] is the same model trained the
 //! classic way — `compose_all`, dense `n × d` activations — kept as the
 //! reference implementation. In the oracle configuration
@@ -34,11 +50,19 @@ use crate::embedding::{
     compose, init_params, ComposeEngine, ComposeOptions, EmbeddingPlan, ParamStore,
 };
 use crate::metrics::{accuracy, mean_roc_auc};
-use crate::sampler::{mix_seed, Fanout, NeighborSampler, SampledBlock, SamplerConfig, SeedBatcher};
+use crate::sampler::{
+    mix_seed, BlockPrefetcher, Fanout, NeighborSampler, SampledBlock, SamplerConfig, SeedBatcher,
+};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
+use rayon::prelude::*;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+/// Row-range shards per gradient table in the parallel scatter phase —
+/// a fixed constant (not the pool size), so the work decomposition and
+/// therefore the touch-merge order never depend on thread count.
+const SCATTER_SHARDS: usize = 16;
 
 /// Knobs for a host-side training run (minibatch or full-batch).
 #[derive(Debug, Clone)]
@@ -58,6 +82,21 @@ pub struct MinibatchOptions {
     /// (the minibatch trainer never materializes `n × d`, not even to
     /// verify itself; the full-batch trainer always uses the full check).
     pub verify_compose: bool,
+    /// Run the forward/backward/apply phases of every step on the rayon
+    /// pool. The parallel step is engineered to be **bit-identical** to
+    /// the serial one (disjoint output ownership, order-preserving
+    /// reverse scatter, row-range gradient sharding — see the module
+    /// docs), so this knob trades nothing but wall time; `false` keeps
+    /// the original serial step in-tree as the oracle
+    /// (`tests/parallel_train.rs` pins serial ≡ parallel at 1 and 4
+    /// threads).
+    pub parallel: bool,
+    /// Sampled blocks prefetched ahead of the trainer by a dedicated
+    /// sampler thread (see [`BlockPrefetcher`]); `0` samples on the
+    /// calling thread exactly as the serial loop always has. Prefetching
+    /// cannot change results — blocks are keyed per
+    /// `(seed, epoch, batch, node)` and delivered in batch order.
+    pub prefetch: usize,
 }
 
 impl Default for MinibatchOptions {
@@ -69,6 +108,8 @@ impl Default for MinibatchOptions {
             seed: 0,
             verbose: false,
             verify_compose: true,
+            parallel: true,
+            prefetch: 2,
         }
     }
 }
@@ -129,7 +170,11 @@ pub struct MinibatchTrainer<'a> {
     opt: Optimizer,
     grads: BTreeMap<String, GradBuffer>,
     batcher: SeedBatcher,
-    sampler: NeighborSampler<'a>,
+    /// Inline sampler for the un-prefetched path, built lazily on first
+    /// use: the default pipelined path samples on the prefetch thread
+    /// (which owns its own sampler), and the `O(n)` global→local
+    /// scratch should not sit allocated twice at large `n`.
+    sampler: Option<NeighborSampler<'a>>,
     /// Composed block rows (`block_rows × d`, reused across batches).
     x: Vec<f32>,
     /// Per-seed neighbor means (`num_seeds × d`).
@@ -140,8 +185,28 @@ pub struct MinibatchTrainer<'a> {
     glogits: Vec<f32>,
     /// Per-block-row `dL/dv` (`block_rows × d`).
     dx: Vec<f32>,
-    /// One seed's `W_neigh·g` back-signal (`d`).
+    /// One seed's `W_neigh·g` back-signal (`d`) — serial path only.
     dn: Vec<f32>,
+    /// Sampler stream seed (shared verbatim with the prefetcher so
+    /// prefetched blocks are bit-identical to inline sampling).
+    sampler_seed: u64,
+    /// Per-seed losses (parallel path: computed concurrently, summed in
+    /// seed order so the epoch loss matches the serial path's bits).
+    losses_buf: Vec<f64>,
+    /// Per-seed `W_self·g` back-signals (`num_seeds × d`, parallel path).
+    dself: Vec<f32>,
+    /// Per-seed `W_neigh·g` back-signals (`num_seeds × d`, parallel path).
+    dnbuf: Vec<f32>,
+    /// Per-seed `1 / |sampled neighbors|` (0 when isolated).
+    inv_deg: Vec<f32>,
+    /// Reverse-topology CSR offsets (`block_rows + 1`).
+    rev_ptr: Vec<u32>,
+    /// Reverse-topology fill cursors (scratch for the counting sort).
+    rev_cur: Vec<u32>,
+    /// Reverse-topology entries: for each block row, the seeds that
+    /// scatter into it (ascending), with the row's own seed id doubling
+    /// as the "add your own `W_self` signal here" marker.
+    rev_idx: Vec<u32>,
     peak_compose_rows: usize,
 }
 
@@ -175,8 +240,9 @@ impl<'a> MinibatchTrainer<'a> {
             cfg.shuffle,
             mix_seed(&[opts.seed, 0x5EED5]),
         );
-        let sampler = NeighborSampler::new(&ds.graph, cfg.fanout, mix_seed(&[opts.seed, 0x54AFF]));
-        let opt = Optimizer::new(opts.optimizer, opts.lr);
+        let sampler_seed = mix_seed(&[opts.seed, 0x54AFF]);
+        let mut opt = Optimizer::new(opts.optimizer, opts.lr);
+        opt.parallel = opts.parallel;
         let dn = vec![0.0; plan.d];
         Ok(MinibatchTrainer {
             ds,
@@ -187,13 +253,21 @@ impl<'a> MinibatchTrainer<'a> {
             opt,
             grads,
             batcher,
-            sampler,
+            sampler: None,
             x: Vec::new(),
             nbar: Vec::new(),
             logits: Vec::new(),
             glogits: Vec::new(),
             dx: Vec::new(),
             dn,
+            sampler_seed,
+            losses_buf: Vec::new(),
+            dself: Vec::new(),
+            dnbuf: Vec::new(),
+            inv_deg: Vec::new(),
+            rev_ptr: Vec::new(),
+            rev_cur: Vec::new(),
+            rev_idx: Vec::new(),
             peak_compose_rows: 0,
         })
     }
@@ -208,22 +282,41 @@ impl<'a> MinibatchTrainer<'a> {
         self.peak_compose_rows
     }
 
-    /// Run one epoch: sample, compose and step every batch. Returns the
+    /// Compose one sampled block and step on it: the shared body of the
+    /// inline and prefetched epoch loops. Returns the block's summed
+    /// per-seed loss.
+    fn process_block(&mut self, block: &SampledBlock) -> f64 {
+        let d = self.engine.plan().d;
+        let rows = block.num_rows();
+        self.peak_compose_rows = self.peak_compose_rows.max(rows);
+        if self.x.len() < rows * d {
+            self.x.resize(rows * d, 0.0);
+        }
+        // one plan resolution per step; the sampler guarantees every id
+        // is < n, so the per-call bounds pre-scan is skipped
+        let prepared = self.engine.prepare(&self.params);
+        prepared.compose_into_unchecked(&block.nodes, &mut self.x[..rows * d]);
+        self.step_block(block)
+    }
+
+    /// Run one epoch, sampling every block on the calling thread (the
+    /// original, un-prefetched loop — [`train`](MinibatchTrainer::train)
+    /// overlaps sampling instead when `opts.prefetch > 0`). Returns the
     /// epoch's mean training loss.
     pub fn train_epoch(&mut self, epoch: usize) -> Result<f64> {
-        let d = self.engine.plan().d;
+        if self.sampler.is_none() {
+            let ds = self.ds;
+            let sampler = NeighborSampler::new(&ds.graph, self.cfg.fanout, self.sampler_seed);
+            self.sampler = Some(sampler);
+        }
         let batches = self.batcher.epoch_batches(epoch);
         let mut loss_sum = 0f64;
         let mut seen = 0usize;
+        let mut block = SampledBlock::default();
         for (bi, seeds) in batches.iter().enumerate() {
-            let block = self.sampler.sample_block(seeds, epoch, bi);
-            let rows = block.num_rows();
-            self.peak_compose_rows = self.peak_compose_rows.max(rows);
-            if self.x.len() < rows * d {
-                self.x.resize(rows * d, 0.0);
-            }
-            self.engine.compose_batch_into(&self.params, &block.nodes, &mut self.x[..rows * d]);
-            loss_sum += self.step_block(&block);
+            let sampler = self.sampler.as_mut().expect("inline sampler initialized above");
+            sampler.sample_block_into(seeds, epoch, bi, &mut block);
+            loss_sum += self.process_block(&block);
             seen += block.num_seeds;
         }
         let loss = loss_sum / seen as f64;
@@ -233,20 +326,64 @@ impl<'a> MinibatchTrainer<'a> {
         Ok(loss)
     }
 
-    /// Train for `opts.epochs` epochs, then evaluate val/test.
+    /// One epoch over blocks delivered by the prefetcher (bit-identical
+    /// to [`train_epoch`](MinibatchTrainer::train_epoch): same blocks,
+    /// same order — only the sampling overlaps the stepping).
+    fn train_epoch_streamed(&mut self, epoch: usize, stream: &BlockPrefetcher) -> Result<f64> {
+        let batches = self.batcher.num_batches();
+        let mut loss_sum = 0f64;
+        let mut seen = 0usize;
+        for _ in 0..batches {
+            let block = stream
+                .recv()
+                .map_err(|_| anyhow!("block prefetch thread stopped early at epoch {epoch}"))?;
+            loss_sum += self.process_block(&block);
+            seen += block.num_seeds;
+            stream.recycle(block);
+        }
+        let loss = loss_sum / seen as f64;
+        if !loss.is_finite() {
+            bail!("non-finite training loss at epoch {epoch}");
+        }
+        Ok(loss)
+    }
+
+    /// Train for `opts.epochs` epochs, then evaluate val/test. With
+    /// `opts.prefetch > 0` a dedicated sampler thread materializes
+    /// upcoming blocks while the current one is stepped.
     pub fn train(&mut self) -> Result<MinibatchOutcome> {
         let t0 = Instant::now();
         let epochs = self.opts.epochs;
         let mut losses = Vec::with_capacity(epochs);
         let mut epoch_ns = Vec::with_capacity(epochs);
-        for epoch in 0..epochs {
-            let e0 = Instant::now();
-            let loss = self.train_epoch(epoch)?;
-            epoch_ns.push(e0.elapsed().as_nanos() as u64);
-            if self.opts.verbose {
-                println!("  epoch {:>4}  loss {loss:.4}", epoch + 1);
+        if self.opts.prefetch > 0 && epochs > 0 {
+            let ds = self.ds;
+            let batcher = self.batcher.clone();
+            let (fanout, seed, depth) = (self.cfg.fanout, self.sampler_seed, self.opts.prefetch);
+            std::thread::scope(|scope| -> Result<()> {
+                let stream =
+                    BlockPrefetcher::spawn(scope, &ds.graph, batcher, fanout, seed, epochs, depth);
+                for epoch in 0..epochs {
+                    let e0 = Instant::now();
+                    let loss = self.train_epoch_streamed(epoch, &stream)?;
+                    epoch_ns.push(e0.elapsed().as_nanos() as u64);
+                    if self.opts.verbose {
+                        println!("  epoch {:>4}  loss {loss:.4}", epoch + 1);
+                    }
+                    losses.push(loss);
+                }
+                Ok(())
+            })?;
+        } else {
+            for epoch in 0..epochs {
+                let e0 = Instant::now();
+                let loss = self.train_epoch(epoch)?;
+                epoch_ns.push(e0.elapsed().as_nanos() as u64);
+                if self.opts.verbose {
+                    println!("  epoch {:>4}  loss {loss:.4}", epoch + 1);
+                }
+                losses.push(loss);
             }
-            losses.push(loss);
         }
         let ds = self.ds;
         let val_metric = self.evaluate(&ds.splits.val)?;
@@ -285,6 +422,9 @@ impl<'a> MinibatchTrainer<'a> {
         let w_self = self.params.get("head_w_self");
         let w_neigh = self.params.get("head_w_neigh");
         let bias = self.params.get("head_b");
+        // parameters are frozen during evaluation: resolve the plan once
+        // for the whole fold instead of once per chunk
+        let prepared = self.engine.prepare(&self.params);
         let mut done = 0usize;
         for (ci, seeds) in fold.chunks(chunk).enumerate() {
             let block = sampler.sample_block(seeds, 0, ci);
@@ -292,7 +432,7 @@ impl<'a> MinibatchTrainer<'a> {
             if x.len() < rows * d {
                 x.resize(rows * d, 0.0);
             }
-            self.engine.compose_batch_into(&self.params, &block.nodes, &mut x[..rows * d]);
+            prepared.compose_into_unchecked(&block.nodes, &mut x[..rows * d]);
             for si in 0..block.num_seeds {
                 mean_rows(&mut nb, &x, block.neighbors_of(si));
                 let xs = &x[si * d..(si + 1) * d];
@@ -326,8 +466,20 @@ impl<'a> MinibatchTrainer<'a> {
 
     /// Forward + backward + optimizer step on one composed block
     /// (`self.x[..rows*d]` must hold the block's composed rows).
-    /// Returns the sum of per-seed losses.
+    /// Returns the sum of per-seed losses. Dispatches to the serial
+    /// oracle step or the bit-identical parallel step per
+    /// `opts.parallel`.
     fn step_block(&mut self, block: &SampledBlock) -> f64 {
+        if self.opts.parallel {
+            self.step_block_parallel(block)
+        } else {
+            self.step_block_serial(block)
+        }
+    }
+
+    /// The original single-threaded step — kept verbatim as the oracle
+    /// the parallel step is pinned against (`tests/parallel_train.rs`).
+    fn step_block_serial(&mut self, block: &SampledBlock) -> f64 {
         let d = self.engine.plan().d;
         let classes = self.ds.spec.classes;
         let s = block.num_seeds;
@@ -452,6 +604,268 @@ impl<'a> MinibatchTrainer<'a> {
             gb.clear();
         }
         loss_sum
+    }
+
+    /// The rayon-parallel step. Produces the **same bits** as
+    /// [`step_block_serial`](MinibatchTrainer::step_block_serial) at any
+    /// thread count, by preserving the serial per-element accumulation
+    /// order everywhere floats meet:
+    ///
+    /// * per-seed forward rows (means, logits, loss grads) are disjoint;
+    ///   per-seed losses land in a buffer summed in seed order;
+    /// * head-weight gradients shard over **W's rows**: each element's
+    ///   contributions still arrive in ascending-seed order;
+    /// * `dL/dv` runs in two phases — per-seed back-signals into
+    ///   disjoint rows, then a reverse-topology scatter in which each
+    ///   block row replays its incoming contributions in ascending
+    ///   iteration order (the row's own `W_self` signal merged at its
+    ///   serial position via the self-marker);
+    /// * embedding-table gradients shard over **destination rows**
+    ///   ([`GradBuffer::sharded_accumulate`]): every shard scans block
+    ///   rows in order, so per-element order is block-row ascending,
+    ///   exactly as the serial scatter;
+    /// * the optimizer updates touched rows independently (order-free).
+    fn step_block_parallel(&mut self, block: &SampledBlock) -> f64 {
+        let plan = self.engine.plan();
+        let d = plan.d;
+        let classes = self.ds.spec.classes;
+        let s = block.num_seeds;
+        let rows = block.num_rows();
+
+        // ---- scratch sizing ----
+        grow(&mut self.nbar, s * d);
+        grow(&mut self.logits, s * classes);
+        grow(&mut self.glogits, s * classes);
+        grow(&mut self.dx, rows * d);
+        grow(&mut self.dself, s * d);
+        grow(&mut self.dnbuf, s * d);
+        grow(&mut self.inv_deg, s);
+        if self.losses_buf.len() < s {
+            self.losses_buf.resize(s, 0.0);
+        }
+
+        // ---- fused per-seed forward: mean, logits, loss, dlogits ----
+        let gscale = match self.ds.spec.task {
+            TaskKind::MultiClass => 1.0 / s as f32,
+            TaskKind::MultiLabel => 1.0 / (s * classes) as f32,
+        };
+        {
+            let x = &self.x;
+            let labels = &self.ds.labels;
+            let task = self.ds.spec.task;
+            let w_self = self.params.get("head_w_self");
+            let w_neigh = self.params.get("head_w_neigh");
+            let bias = self.params.get("head_b");
+            let nbar_rows = self.nbar[..s * d].par_chunks_mut(d);
+            let logit_rows = self.logits[..s * classes].par_chunks_mut(classes);
+            let glog_rows = self.glogits[..s * classes].par_chunks_mut(classes);
+            let loss_cells = self.losses_buf[..s].par_iter_mut();
+            let fwd = nbar_rows.zip(logit_rows).zip(glog_rows);
+            let fwd = fwd.zip(loss_cells).enumerate();
+            fwd.for_each(|(si, (((nb, lrow), grow_row), loss))| {
+                mean_rows(nb, x, block.neighbors_of(si));
+                let xs = &x[si * d..(si + 1) * d];
+                head_logits_row(xs, nb, w_self, w_neigh, bias, lrow);
+                let node = block.nodes[si] as usize;
+                *loss = loss_and_grad_row(task, labels, node, lrow, grow_row, gscale);
+            });
+        }
+        // seed-order sum: the exact f64 additions of the serial loop
+        let loss_sum: f64 = self.losses_buf[..s].iter().sum();
+
+        // ---- head gradients (sharded over W's d rows) ----
+        {
+            let x = &self.x;
+            let nbar = &self.nbar;
+            let glog = &self.glogits;
+            let gb = self.grads.get_mut("head_w_self").expect("head_w_self grads");
+            gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
+                for si in 0..s {
+                    let g = &glog[si * classes..(si + 1) * classes];
+                    let xs = &x[si * d..(si + 1) * d];
+                    for a in sh.rows() {
+                        sh.add_row(a, xs[a], g);
+                    }
+                }
+            });
+            let gb = self.grads.get_mut("head_w_neigh").expect("head_w_neigh grads");
+            gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
+                for si in 0..s {
+                    let g = &glog[si * classes..(si + 1) * classes];
+                    let nb = &nbar[si * d..(si + 1) * d];
+                    for a in sh.rows() {
+                        sh.add_row(a, nb[a], g);
+                    }
+                }
+            });
+            // one bias row: serial, preserving the seed-order adds
+            let gb = self.grads.get_mut("head_b").expect("head_b grads");
+            for si in 0..s {
+                gb.add_row(0, 1.0, &glog[si * classes..(si + 1) * classes]);
+            }
+        }
+
+        // ---- dL/dv phase 1: per-seed W_self / W_neigh back-signals ----
+        {
+            let w_self = self.params.get("head_w_self");
+            let w_neigh = self.params.get("head_w_neigh");
+            let glog = &self.glogits;
+            let ds_rows = self.dself[..s * d].par_chunks_mut(d);
+            let dn_rows = self.dnbuf[..s * d].par_chunks_mut(d);
+            let signals = ds_rows.zip(dn_rows).enumerate();
+            signals.for_each(|(si, (ds_row, dn_row))| {
+                let g = &glog[si * classes..(si + 1) * classes];
+                for a in 0..d {
+                    let ws = &w_self[a * classes..(a + 1) * classes];
+                    let wn = &w_neigh[a * classes..(a + 1) * classes];
+                    let mut acc_s = 0f32;
+                    let mut acc_n = 0f32;
+                    for ((&gj, wsj), wnj) in g.iter().zip(ws).zip(wn) {
+                        acc_s += gj * wsj;
+                        acc_n += gj * wnj;
+                    }
+                    ds_row[a] = acc_s;
+                    dn_row[a] = acc_n;
+                }
+            });
+        }
+        for (si, inv) in self.inv_deg[..s].iter_mut().enumerate() {
+            let deg = block.neighbors_of(si).len();
+            *inv = if deg == 0 { 0.0 } else { 1.0 / deg as f32 };
+        }
+
+        // ---- dL/dv phase 2: order-preserving reverse scatter ----
+        // Counting-sort the block topology into row-major incoming
+        // lists. Appending while walking seeds in ascending order keeps
+        // every row's list ascending; a seed row's own entry (the
+        // self-marker, value == row id — impossible for a topology
+        // entry, the graph has no self loops) lands exactly where the
+        // serial loop added its `W_self` signal.
+        self.rev_ptr.clear();
+        self.rev_ptr.resize(rows + 1, 0);
+        for &r in &block.neigh_idx {
+            self.rev_ptr[r as usize + 1] += 1;
+        }
+        for si in 0..s {
+            self.rev_ptr[si + 1] += 1; // self-marker slot
+        }
+        for i in 0..rows {
+            self.rev_ptr[i + 1] += self.rev_ptr[i];
+        }
+        let total = self.rev_ptr[rows] as usize;
+        self.rev_cur.clear();
+        self.rev_cur.extend_from_slice(&self.rev_ptr[..rows]);
+        if self.rev_idx.len() < total {
+            self.rev_idx.resize(total, 0);
+        }
+        for si in 0..s {
+            let cur = self.rev_cur[si] as usize;
+            self.rev_idx[cur] = si as u32;
+            self.rev_cur[si] += 1;
+            for &r in block.neighbors_of(si) {
+                let cur = self.rev_cur[r as usize] as usize;
+                self.rev_idx[cur] = si as u32;
+                self.rev_cur[r as usize] += 1;
+            }
+        }
+        {
+            let rev_ptr = &self.rev_ptr;
+            let rev_idx = &self.rev_idx;
+            let dself = &self.dself;
+            let dn = &self.dnbuf;
+            let inv = &self.inv_deg;
+            let dx_rows = self.dx[..rows * d].par_chunks_mut(d);
+            dx_rows.enumerate().for_each(|(r, dst)| {
+                dst.fill(0.0);
+                for &sj in &rev_idx[rev_ptr[r] as usize..rev_ptr[r + 1] as usize] {
+                    let sj = sj as usize;
+                    if sj == r {
+                        // the row's own W_self signal (serial: dx[si] += acc_s)
+                        for (o, v) in dst.iter_mut().zip(&dself[sj * d..(sj + 1) * d]) {
+                            *o += v;
+                        }
+                    } else {
+                        let w = inv[sj];
+                        for (o, v) in dst.iter_mut().zip(&dn[sj * d..(sj + 1) * d]) {
+                            *o += w * v;
+                        }
+                    }
+                }
+            });
+        }
+
+        // ---- embedding-table scatter (destination-row sharding) ----
+        let dx = &self.dx;
+        let nodes = &block.nodes;
+        if let Some(pos) = &plan.position {
+            for (j, table) in pos.tables.iter().enumerate() {
+                let z = &pos.z[j];
+                let dj = table.cols;
+                let gb = self.grads.get_mut(&table.name).expect("position grads");
+                gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
+                    for (r, &node) in nodes.iter().enumerate() {
+                        let row = z[node as usize] as usize;
+                        if sh.contains(row) {
+                            sh.add_row(row, 1.0, &dx[r * d..r * d + dj]);
+                        }
+                    }
+                });
+            }
+        }
+        if let Some(nx) = &plan.node {
+            let h = nx.indices.len();
+            let idx = &nx.node_major;
+            let x_table = self.params.get(&nx.table.name);
+            let y = nx.learned_weights.then(|| self.params.get("node_y"));
+            let gb = self.grads.get_mut(&nx.table.name).expect("node_x grads");
+            gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
+                for (r, &node) in nodes.iter().enumerate() {
+                    let i = node as usize;
+                    let gv = &dx[r * d..(r + 1) * d];
+                    for t in 0..h {
+                        let row = idx[i * h + t] as usize;
+                        if sh.contains(row) {
+                            let w = y.map_or(1.0, |y| y[i * h + t]);
+                            sh.add_row(row, w, gv);
+                        }
+                    }
+                }
+            });
+            if nx.learned_weights {
+                // node_y rows are block nodes — unique, one writer each
+                let gb = self.grads.get_mut("node_y").expect("node_y grads");
+                gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
+                    for (r, &node) in nodes.iter().enumerate() {
+                        let i = node as usize;
+                        if sh.contains(i) {
+                            let gv = &dx[r * d..(r + 1) * d];
+                            for t in 0..h {
+                                let row = idx[i * h + t] as usize;
+                                let xrow = &x_table[row * d..(row + 1) * d];
+                                let dot: f32 = xrow.iter().zip(gv).map(|(a, b)| a * b).sum();
+                                sh.add_at(i, t, dot);
+                            }
+                        }
+                    }
+                });
+            }
+        }
+
+        // ---- optimizer step (BTreeMap order; rows update in parallel) ----
+        self.opt.begin_step();
+        for (name, gb) in self.grads.iter_mut() {
+            self.opt.apply(name, self.params.get_mut(name), gb);
+            gb.clear();
+        }
+        loss_sum
+    }
+}
+
+/// Grow a scratch buffer to at least `len` elements (never shrinks —
+/// steady-state steps reuse the largest block's allocation).
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
     }
 }
 

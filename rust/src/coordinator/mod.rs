@@ -12,7 +12,13 @@
 //!   GraphSAGE-style neighbor-sampled minibatches composed with
 //!   `ComposeEngine::compose_batch` and stepped with host SGD/Adam
 //!   ([`Optimizer`]); no artifacts required. The full-batch variant is
-//!   the oracle the minibatch path is tested against.
+//!   the oracle the minibatch path is tested against. By default the
+//!   minibatch path runs **pipelined**: a prefetcher samples upcoming
+//!   blocks on a dedicated thread while the step's forward, backward
+//!   (sharded [`GradBuffer`] accumulation via [`GradShard`]) and
+//!   optimizer apply run on the rayon pool — bit-identical to the
+//!   serial oracle step at any thread count
+//!   (`tests/parallel_train.rs`).
 
 mod minibatch;
 mod optim;
@@ -21,7 +27,7 @@ mod statics;
 mod trainer;
 
 pub use minibatch::{train_full_batch, MinibatchOptions, MinibatchOutcome, MinibatchTrainer};
-pub use optim::{GradBuffer, Optimizer, OptimizerKind};
+pub use optim::{GradBuffer, GradShard, Optimizer, OptimizerKind};
 pub use params::{gnn_param_shapes, init_full_params};
 pub use statics::build_statics;
 pub use trainer::{run_experiment, TrainOptions, TrainOutcome};

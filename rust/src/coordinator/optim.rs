@@ -11,8 +11,18 @@
 //! step does not touch keep their moments and parameters unchanged, so
 //! the fanout = ∞ oracle configuration (which touches exactly the rows
 //! full-batch training touches) reproduces full-batch Adam bit for bit.
+//!
+//! **Parallelism.** Both halves of a step parallelize without giving up
+//! a single bit: accumulation via [`GradBuffer::sharded_accumulate`]
+//! (contiguous row-range shards own disjoint slices — no locks; the
+//! per-element add order is whatever order the caller's scan adds in,
+//! independent of shard or thread count) and the update via
+//! [`Optimizer`]'s `parallel` flag (touched rows are unique, so row
+//! updates are independent and reorder freely).
 
+use rayon::prelude::*;
 use std::collections::HashMap;
+use std::ops::Range;
 
 /// Which update rule the host-side trainers apply.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -124,6 +134,116 @@ impl GradBuffer {
         }
         self.touched.clear();
     }
+
+    /// Lock-free parallel accumulation: split the buffer into at most
+    /// `max_shards` contiguous row-range shards, run `accumulate` on
+    /// every shard on the rayon pool, then merge the shards' touch
+    /// lists back in fixed shard order.
+    ///
+    /// Each destination row belongs to exactly one shard, so shards own
+    /// disjoint `grad` slices and no synchronization (and no merge of
+    /// float state) is needed. `accumulate` must scan its workload in
+    /// the same order for every shard and add only rows the shard
+    /// [`contains`](GradShard::contains) — then each element's
+    /// accumulation order is the scan order, exactly as if the same
+    /// scan had run serially, so the result is **bit-identical** to
+    /// serial accumulation at any shard or thread count (pinned by
+    /// `tests/parallel_train.rs`). The decomposition depends only on
+    /// `(rows, max_shards)`, never on the pool size.
+    pub fn sharded_accumulate<F>(&mut self, max_shards: usize, accumulate: F)
+    where
+        F: Fn(&mut GradShard<'_>) + Sync,
+    {
+        let rows = self.is_touched.len();
+        if rows == 0 {
+            return;
+        }
+        let num = max_shards.clamp(1, rows);
+        let per = rows.div_ceil(num);
+        let mut shards: Vec<GradShard<'_>> = Vec::with_capacity(num);
+        let mut grad_rest: &mut [f32] = &mut self.grad;
+        let mut touch_rest: &mut [bool] = &mut self.is_touched;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = per.min(rows - row0);
+            let (g, g_rest) = std::mem::take(&mut grad_rest).split_at_mut(take * self.cols);
+            let (t, t_rest) = std::mem::take(&mut touch_rest).split_at_mut(take);
+            grad_rest = g_rest;
+            touch_rest = t_rest;
+            shards.push(GradShard {
+                row0,
+                cols: self.cols,
+                grad: g,
+                is_touched: t,
+                touched: Vec::new(),
+            });
+            row0 += take;
+        }
+        shards.par_iter_mut().for_each(&accumulate);
+        for sh in shards {
+            self.touched.extend_from_slice(&sh.touched);
+        }
+    }
+}
+
+/// One contiguous row-range of a [`GradBuffer`], handed to
+/// [`GradBuffer::sharded_accumulate`] workers. Mirrors the buffer's
+/// `add_row`/`add_at` API on global row ids; rows outside the shard are
+/// rejected (debug assert), which is what makes the shards lock-free.
+pub struct GradShard<'a> {
+    row0: usize,
+    cols: usize,
+    grad: &'a mut [f32],
+    is_touched: &'a mut [bool],
+    touched: Vec<u32>,
+}
+
+impl GradShard<'_> {
+    /// The global row range this shard owns.
+    pub fn rows(&self) -> Range<usize> {
+        self.row0..self.row0 + self.is_touched.len()
+    }
+
+    /// Does this shard own `row`?
+    #[inline]
+    pub fn contains(&self, row: usize) -> bool {
+        row >= self.row0 && row < self.row0 + self.is_touched.len()
+    }
+
+    #[inline]
+    fn touch(&mut self, local: usize) {
+        if !self.is_touched[local] {
+            self.is_touched[local] = true;
+            self.touched.push((self.row0 + local) as u32);
+        }
+    }
+
+    /// `grad[row][..src.len()] += scale · src` — the shard-local
+    /// counterpart of [`GradBuffer::add_row`]; `row` is global and must
+    /// be in [`rows`](GradShard::rows).
+    #[inline]
+    pub fn add_row(&mut self, row: usize, scale: f32, src: &[f32]) {
+        debug_assert!(self.contains(row), "row {row} outside shard {:?}", self.rows());
+        debug_assert!(src.len() <= self.cols, "src wider than the table row");
+        let local = row - self.row0;
+        self.touch(local);
+        let base = local * self.cols;
+        let dst = &mut self.grad[base..base + src.len()];
+        for (o, s) in dst.iter_mut().zip(src) {
+            *o += scale * s;
+        }
+    }
+
+    /// `grad[row][col] += v` — the shard-local counterpart of
+    /// [`GradBuffer::add_at`]; `row` is global.
+    #[inline]
+    pub fn add_at(&mut self, row: usize, col: usize, v: f32) {
+        debug_assert!(self.contains(row), "row {row} outside shard {:?}", self.rows());
+        debug_assert!(col < self.cols);
+        let local = row - self.row0;
+        self.touch(local);
+        self.grad[local * self.cols + col] += v;
+    }
 }
 
 /// SGD / Adam over named parameter tables, applying updates only to the
@@ -136,8 +256,40 @@ pub struct Optimizer {
     beta2: f32,
     eps: f32,
     step: u64,
+    /// Run [`apply`](Optimizer::apply) over touched rows on the rayon
+    /// pool when a step touches enough of them. Touched rows are unique
+    /// and row updates are independent, so the parallel path is
+    /// bit-identical to serial at any thread count. Off by default (the
+    /// serial oracle); the pipelined trainer switches it on.
+    pub parallel: bool,
     /// Lazily allocated per-table (first moment, second moment) state.
     moments: HashMap<String, (Vec<f32>, Vec<f32>)>,
+}
+
+/// Fewest touched rows for which the parallel apply path is worth the
+/// rayon dispatch; a fixed constant so the serial/parallel choice never
+/// depends on the pool size.
+const PARALLEL_APPLY_MIN_ROWS: usize = 128;
+
+/// Raw table pointer smuggled into a rayon closure. Safe to share
+/// because every worker derives its row slice from a **unique** touched
+/// row id — slices are disjoint by construction.
+#[derive(Clone, Copy)]
+struct TablePtr(*mut f32);
+unsafe impl Send for TablePtr {}
+unsafe impl Sync for TablePtr {}
+
+impl TablePtr {
+    /// The `cols`-wide row slice starting at `base`.
+    ///
+    /// # Safety
+    /// `base + cols` must be within the table allocation, and no other
+    /// live reference may overlap the row (guaranteed when `base` is
+    /// derived from unique touched row ids).
+    #[inline]
+    unsafe fn row_mut<'a>(self, base: usize, cols: usize) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(base), cols)
+    }
 }
 
 impl Optimizer {
@@ -152,6 +304,7 @@ impl Optimizer {
             beta2: 0.999,
             eps: 1e-8,
             step: 0,
+            parallel: false,
             moments: HashMap::new(),
         }
     }
@@ -168,36 +321,84 @@ impl Optimizer {
     }
 
     /// Apply `gb`'s accumulated gradients to the row-major table `data`.
-    /// Only touched rows are updated; `gb` is not cleared here.
+    /// Only touched rows are updated; `gb` is not cleared here. With
+    /// [`parallel`](Optimizer::parallel) set and enough touched rows,
+    /// the per-row updates run on the rayon pool — same bits, since no
+    /// two touched rows alias.
     pub fn apply(&mut self, name: &str, data: &mut [f32], gb: &GradBuffer) {
         let cols = gb.cols();
+        let touched = gb.touched_rows();
+        let par = self.parallel && touched.len() >= PARALLEL_APPLY_MIN_ROWS;
         match self.kind {
             OptimizerKind::Sgd => {
-                for &r in gb.touched_rows() {
-                    let base = r as usize * cols;
-                    let dst = &mut data[base..base + cols];
-                    for (w, g) in dst.iter_mut().zip(gb.row(r as usize)) {
-                        *w -= self.lr * g;
+                let lr = self.lr;
+                if par {
+                    let table = TablePtr(data.as_mut_ptr());
+                    touched.par_iter().for_each(|&r| {
+                        let base = r as usize * cols;
+                        // SAFETY: touched rows are unique, so each
+                        // worker's row slice is disjoint and in bounds
+                        // (GradBuffer and table share the row count).
+                        let dst = unsafe { table.row_mut(base, cols) };
+                        for (w, g) in dst.iter_mut().zip(gb.row(r as usize)) {
+                            *w -= lr * g;
+                        }
+                    });
+                } else {
+                    for &r in touched {
+                        let base = r as usize * cols;
+                        let dst = &mut data[base..base + cols];
+                        for (w, g) in dst.iter_mut().zip(gb.row(r as usize)) {
+                            *w -= lr * g;
+                        }
                     }
                 }
             }
             OptimizerKind::Adam => {
                 assert!(self.step > 0, "begin_step before apply");
+                let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
                 let (m, v) = self
                     .moments
                     .entry(name.to_string())
                     .or_insert_with(|| (vec![0.0; data.len()], vec![0.0; data.len()]));
                 let t = self.step.min(i32::MAX as u64) as i32;
-                let bc1 = 1.0 - self.beta1.powi(t);
-                let bc2 = 1.0 - self.beta2.powi(t);
+                let bc1 = 1.0 - beta1.powi(t);
+                let bc2 = 1.0 - beta2.powi(t);
                 let alpha = self.lr * bc2.sqrt() / bc1;
-                for &r in gb.touched_rows() {
-                    let base = r as usize * cols;
-                    for (i, &g) in gb.row(r as usize).iter().enumerate() {
-                        let idx = base + i;
-                        m[idx] = self.beta1 * m[idx] + (1.0 - self.beta1) * g;
-                        v[idx] = self.beta2 * v[idx] + (1.0 - self.beta2) * g * g;
-                        data[idx] -= alpha * m[idx] / (v[idx].sqrt() + self.eps);
+                if par {
+                    let table = TablePtr(data.as_mut_ptr());
+                    let m_ptr = TablePtr(m.as_mut_ptr());
+                    let v_ptr = TablePtr(v.as_mut_ptr());
+                    touched.par_iter().for_each(|&r| {
+                        let base = r as usize * cols;
+                        // SAFETY: touched rows are unique, so the data
+                        // and moment row slices of different workers
+                        // never overlap; all three buffers share the
+                        // table's length.
+                        let (dst, mr, vr) = unsafe {
+                            (
+                                table.row_mut(base, cols),
+                                m_ptr.row_mut(base, cols),
+                                v_ptr.row_mut(base, cols),
+                            )
+                        };
+                        for (((w, mi), vi), &g) in
+                            dst.iter_mut().zip(mr).zip(vr).zip(gb.row(r as usize))
+                        {
+                            *mi = beta1 * *mi + (1.0 - beta1) * g;
+                            *vi = beta2 * *vi + (1.0 - beta2) * g * g;
+                            *w -= alpha * *mi / (vi.sqrt() + eps);
+                        }
+                    });
+                } else {
+                    for &r in touched {
+                        let base = r as usize * cols;
+                        for (i, &g) in gb.row(r as usize).iter().enumerate() {
+                            let idx = base + i;
+                            m[idx] = beta1 * m[idx] + (1.0 - beta1) * g;
+                            v[idx] = beta2 * v[idx] + (1.0 - beta2) * g * g;
+                            data[idx] -= alpha * m[idx] / (v[idx].sqrt() + eps);
+                        }
                     }
                 }
             }
@@ -263,6 +464,82 @@ mod tests {
         opt2.begin_step();
         opt2.apply("w", &mut w, &gb2);
         assert!((w[0] + 0.1).abs() < 1e-3, "w[0] = {}", w[0]);
+    }
+
+    #[test]
+    fn sharded_accumulate_matches_serial_accumulation_exactly() {
+        let (rows, cols) = (37, 5);
+        // synthetic scatter workload: every op hits a pseudo-random row
+        let ops: Vec<(usize, f32, Vec<f32>)> = (0..200)
+            .map(|k| {
+                let row = (k * 17 + 3) % rows;
+                let scale = 0.25 + (k % 7) as f32 * 0.125;
+                let src: Vec<f32> = (0..cols).map(|c| (k * cols + c) as f32 * 0.01 - 1.0).collect();
+                (row, scale, src)
+            })
+            .collect();
+        let mut serial = GradBuffer::new(rows, cols);
+        for (row, scale, src) in &ops {
+            serial.add_row(*row, *scale, src);
+        }
+        for shards in [1usize, 3, 8, 64] {
+            let mut sharded = GradBuffer::new(rows, cols);
+            sharded.sharded_accumulate(shards, |sh| {
+                for (row, scale, src) in &ops {
+                    if sh.contains(*row) {
+                        sh.add_row(*row, *scale, src);
+                    }
+                }
+            });
+            for row in 0..rows {
+                assert_eq!(serial.row(row), sharded.row(row), "row {row}, {shards} shards");
+            }
+            let mut a: Vec<u32> = serial.touched_rows().to_vec();
+            let mut b: Vec<u32> = sharded.touched_rows().to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn shard_rows_partition_the_buffer() {
+        let mut gb = GradBuffer::new(10, 2);
+        let mut seen: Vec<usize> = Vec::new();
+        let ranges = std::sync::Mutex::new(&mut seen);
+        gb.sharded_accumulate(3, |sh| {
+            ranges.lock().unwrap().extend(sh.rows());
+            assert!(sh.contains(sh.rows().start));
+            assert!(!sh.contains(sh.rows().end));
+        });
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_apply_is_bit_identical_to_serial() {
+        let (rows, cols) = (PARALLEL_APPLY_MIN_ROWS + 70, 3);
+        for kind in [OptimizerKind::Sgd, OptimizerKind::Adam] {
+            let mut serial = Optimizer::new(kind, 0.05);
+            let mut parallel = Optimizer::new(kind, 0.05);
+            parallel.parallel = true;
+            let init: Vec<f32> = (0..rows * cols).map(|i| (i as f32 * 0.37).sin()).collect();
+            let (mut ws, mut wp) = (init.clone(), init);
+            let mut gb = GradBuffer::new(rows, cols);
+            for step in 0..3 {
+                for r in 0..rows {
+                    let g: Vec<f32> =
+                        (0..cols).map(|c| ((r + c + step) as f32 * 0.11).cos()).collect();
+                    gb.add_row(r, 1.0, &g);
+                }
+                serial.begin_step();
+                parallel.begin_step();
+                serial.apply("t", &mut ws, &gb);
+                parallel.apply("t", &mut wp, &gb);
+                gb.clear();
+                assert_eq!(ws, wp, "{} step {step}", kind.as_str());
+            }
+        }
     }
 
     #[test]

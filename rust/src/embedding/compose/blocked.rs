@@ -28,13 +28,15 @@ pub(super) struct NodeView<'a> {
     pub h: usize,
     /// The pooled table `X`, row-major `rows × d`.
     pub table: &'a [f32],
-    /// `indices[t][i]` = row of X for node i under hash t.
-    pub indices: &'a [Vec<u32>],
+    /// Node-major hash indices: `idx[i * h + t]` = row of X for node i
+    /// under hash t (built once at plan time, so one node's `h` index
+    /// entries share a cache line and the gather walks it sequentially).
+    pub idx: &'a [u32],
     /// Learned importance weights `Y` (`n × h`), or `None` for `y ≡ 1`.
     pub y: Option<&'a [f32]>,
 }
 
-/// A plan with every tensor name resolved to a slice once per call, so
+/// A plan with every tensor name resolved to a slice once per step, so
 /// the hot loops never touch the `ParamStore` hash map.
 pub(super) struct ResolvedPlan<'a> {
     pub position: Vec<PosView<'a>>,
@@ -58,7 +60,7 @@ impl<'a> ResolvedPlan<'a> {
         let node = plan.node.as_ref().map(|nx| NodeView {
             h: nx.indices.len(),
             table: params.get(&nx.table.name),
-            indices: &nx.indices,
+            idx: &nx.node_major,
             y: nx.learned_weights.then(|| params.get("node_y")),
         });
         let dhe = plan.dhe.as_ref().map(|dp| DheView {
@@ -90,35 +92,47 @@ pub(super) fn compose_chunk(rp: &ResolvedPlan, ids: &[u32], out: &mut [f32], d: 
     }
 }
 
-/// `dst[i] += src[i]`, in 8-lane blocks with a scalar remainder.
+/// `dst[i] += src[i]`, in explicit 8-lane blocks with a scalar remainder.
 ///
-/// `chunks_exact(8)` gives the compiler a compile-time trip count, so
-/// the d = 64 hot rows (8 exact blocks) auto-vectorize; per-element
-/// operations and their order are unchanged, keeping the engine
-/// bit-identical to the scalar oracle (see `tests/compose_parity.rs`).
+/// Each lane block loads both sides into `[f32; 8]` arrays, does the
+/// arithmetic lane by lane and stores the whole array back — fixed-size
+/// array arithmetic the autovectorizer cannot miss (one `vaddps` per
+/// block on AVX2, no trip-count analysis needed). Per-element operations
+/// and their order are unchanged (one add per element), keeping the
+/// engine bit-identical to the scalar oracle (`tests/compose_parity.rs`).
 #[inline]
 fn add_row(dst: &mut [f32], src: &[f32]) {
     let mut d8 = dst.chunks_exact_mut(8);
     let mut s8 = src.chunks_exact(8);
     for (dc, sc) in (&mut d8).zip(&mut s8) {
-        for (o, s) in dc.iter_mut().zip(sc) {
-            *o += s;
+        let dl: &mut [f32; 8] = dc.try_into().expect("8-lane chunk");
+        let sl: &[f32; 8] = sc.try_into().expect("8-lane chunk");
+        let mut r = [0f32; 8];
+        for l in 0..8 {
+            r[l] = dl[l] + sl[l];
         }
+        *dl = r;
     }
     for (o, s) in d8.into_remainder().iter_mut().zip(s8.remainder()) {
         *o += s;
     }
 }
 
-/// `dst[i] += w * src[i]`, blocked like [`add_row`].
+/// `dst[i] += w * src[i]`, in explicit 8-lane blocks like [`add_row`]
+/// (the scalar `w` broadcasts across the lane arithmetic; per-element
+/// math is the oracle's single `dst + w·src`).
 #[inline]
 fn add_row_scaled(dst: &mut [f32], src: &[f32], w: f32) {
     let mut d8 = dst.chunks_exact_mut(8);
     let mut s8 = src.chunks_exact(8);
     for (dc, sc) in (&mut d8).zip(&mut s8) {
-        for (o, s) in dc.iter_mut().zip(sc) {
-            *o += w * s;
+        let dl: &mut [f32; 8] = dc.try_into().expect("8-lane chunk");
+        let sl: &[f32; 8] = sc.try_into().expect("8-lane chunk");
+        let mut r = [0f32; 8];
+        for l in 0..8 {
+            r[l] = dl[l] + w * sl[l];
         }
+        *dl = r;
     }
     for (o, s) in d8.into_remainder().iter_mut().zip(s8.remainder()) {
         *o += w * s;
@@ -138,18 +152,21 @@ fn add_position(v: &PosView, ids: &[u32], out: &mut [f32], d: usize) {
 
 /// `out[b] += Σ_t y[ids[b]][t] · X[idx_t(ids[b])]` — weighted hash gather.
 ///
-/// The `t` loop is outermost so each output element accumulates hash
-/// contributions in ascending-`t` order (float-parity with the oracle)
-/// while the inner loop streams one index row sequentially.
+/// Node-major traversal: per block row, the `h` index (and weight)
+/// entries are read from one contiguous run of the node-major arrays,
+/// and each output element still accumulates hash contributions in
+/// ascending-`t` order — exactly the reference oracle's `i`-outer,
+/// `t`-inner order, so float parity holds to the last ulp.
 fn add_node(v: &NodeView, ids: &[u32], out: &mut [f32], d: usize) {
-    for t in 0..v.h {
-        let idx = &v.indices[t];
-        for (b, &i) in ids.iter().enumerate() {
-            let i = i as usize;
-            let row = idx[i] as usize;
-            let w = v.y.map_or(1.0, |y| y[i * v.h + t]);
+    let h = v.h;
+    for (b, &i) in ids.iter().enumerate() {
+        let i = i as usize;
+        let dst = &mut out[b * d..(b + 1) * d];
+        let idx = &v.idx[i * h..(i + 1) * h];
+        for (t, &row) in idx.iter().enumerate() {
+            let row = row as usize;
+            let w = v.y.map_or(1.0, |y| y[i * h + t]);
             let src = &v.table[row * d..(row + 1) * d];
-            let dst = &mut out[b * d..(b + 1) * d];
             add_row_scaled(dst, src, w);
         }
     }

@@ -14,10 +14,13 @@
 //!   subset, the entry point minibatch training needs on graphs where
 //!   materializing all `n × d` is exactly what the paper says to avoid.
 //!
-//! Table names are resolved against the [`ParamStore`] once per call (not
-//! per node), blocks own disjoint output slices (no locks, deterministic
-//! bits regardless of thread count), and per-element accumulation order
-//! matches the reference oracle exactly, so parity holds to the last ulp.
+//! Table names are resolved against the [`ParamStore`] once per
+//! [`ComposeEngine::prepare`] — the one-shot entry points resolve per
+//! call; hot loops (the trainer's step, the evaluator's fold) resolve
+//! once and compose many times through [`PreparedCompose`]. Blocks own
+//! disjoint output slices (no locks, deterministic bits regardless of
+//! thread count), and per-element accumulation order matches the
+//! reference oracle exactly, so parity holds to the last ulp.
 //! `reference.rs` stays as the oracle; `self_check` wires that parity
 //! into the trainer as a startup invariant.
 //!
@@ -84,13 +87,29 @@ impl<'p> ComposeEngine<'p> {
         out
     }
 
+    /// Resolve the plan's table names against one parameter snapshot,
+    /// returning a [`PreparedCompose`] that can compose any number of
+    /// id sets without re-touching the `ParamStore` hash map. The
+    /// trainers resolve once per optimizer step (parameters change
+    /// between steps, the plan never does); the evaluator resolves once
+    /// per fold and composes every chunk through it.
+    pub fn prepare<'a>(&'a self, params: &'a ParamStore) -> PreparedCompose<'a> {
+        PreparedCompose {
+            rp: ResolvedPlan::new(self.plan, params),
+            opts: &self.opts,
+            d: self.plan.d,
+            n: self.plan.n as u32,
+        }
+    }
+
     /// Compose the full matrix into a caller-owned buffer (`n × d`),
     /// overwriting it — the allocation-free hot-loop variant (the id
     /// range is cached on the engine; only tiny per-call views are
     /// resolved).
     pub fn compose_all_into(&self, params: &ParamStore, out: &mut [f32]) {
-        let rp = ResolvedPlan::new(self.plan, params);
-        compose_ids_into(&rp, &self.opts, &self.all_ids, out, self.plan.d);
+        // the cached id range is 0..n by construction, so the bounds
+        // pre-scan of the checked path would be pure overhead here
+        self.prepare(params).compose_into_unchecked(&self.all_ids, out);
     }
 
     /// Compose embeddings for `nodes` only (row b = node `nodes[b]`,
@@ -123,10 +142,47 @@ impl<'p> ComposeEngine<'p> {
     /// Batch compose into a caller-owned buffer (`nodes.len() × d`),
     /// overwriting it.
     pub fn compose_batch_into(&self, params: &ParamStore, nodes: &[u32], out: &mut [f32]) {
-        let n = self.plan.n as u32;
+        self.prepare(params).compose_into(nodes, out);
+    }
+}
+
+/// A compose plan resolved against one parameter snapshot: every table
+/// name is looked up exactly once (in [`ComposeEngine::prepare`]), then
+/// any number of id sets can be composed through the resolved views.
+/// Output bits are identical to the engine's one-shot entry points —
+/// this only hoists the name-resolution and view-building work out of
+/// the per-call path.
+pub struct PreparedCompose<'a> {
+    rp: ResolvedPlan<'a>,
+    opts: &'a ComposeOptions,
+    d: usize,
+    n: u32,
+}
+
+impl PreparedCompose<'_> {
+    /// Compose rows for `nodes` into `out` (`nodes.len() × d`,
+    /// overwriting it). Ids may repeat and appear in any order; each is
+    /// validated `< n` before composing.
+    pub fn compose_into(&self, nodes: &[u32], out: &mut [f32]) {
+        let n = self.n;
         assert!(nodes.iter().all(|&i| i < n), "batch node id out of range (n = {n})");
-        let rp = ResolvedPlan::new(self.plan, params);
-        compose_ids_into(&rp, &self.opts, nodes, out, self.plan.d);
+        compose_ids_into(&self.rp, self.opts, nodes, out, self.d);
+    }
+
+    /// [`compose_into`](PreparedCompose::compose_into) without the
+    /// per-call O(nodes) bounds pre-scan — for hot-path callers whose
+    /// ids are in range by construction (the neighbor sampler asserts
+    /// every id against `n` as it builds a block). Debug builds keep the
+    /// full check; release builds fall back on the kernels' ordinary
+    /// slice bounds checks, so a bad id still panics instead of reading
+    /// out of bounds.
+    pub(crate) fn compose_into_unchecked(&self, nodes: &[u32], out: &mut [f32]) {
+        debug_assert!(
+            nodes.iter().all(|&i| i < self.n),
+            "batch node id out of range (n = {})",
+            self.n
+        );
+        compose_ids_into(&self.rp, self.opts, nodes, out, self.d);
     }
 }
 
@@ -303,6 +359,40 @@ mod tests {
         // very first element (|a - b| = 0 > -1), proving the check is live
         let err = self_check(&plan, &params, -1.0).unwrap_err();
         assert!(err.contains("diverges"), "err: {err}");
+    }
+
+    #[test]
+    fn prepared_compose_matches_one_shot_entry_points() {
+        let n = 310;
+        let h = hier(n, 3, 2);
+        let plan = EmbeddingPlan::build(
+            n,
+            16,
+            &EmbeddingMethod::PosHashEmbInter { levels: 2, buckets: 35, h: 2 },
+            Some(&h),
+            8,
+        );
+        let params = init_params(&plan, 2);
+        let engine = ComposeEngine::new(&plan);
+        let prepared = engine.prepare(&params);
+        let nodes: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let mut via_prepared = vec![f32::NAN; nodes.len() * 16];
+        prepared.compose_into(&nodes, &mut via_prepared);
+        assert_eq!(via_prepared, engine.compose_batch(&params, &nodes));
+        // the unchecked variant composes the same bits
+        let mut unchecked = vec![f32::NAN; nodes.len() * 16];
+        prepared.compose_into_unchecked(&nodes, &mut unchecked);
+        assert_eq!(unchecked, via_prepared);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn prepared_compose_checked_path_rejects_bad_ids() {
+        let plan = EmbeddingPlan::build(50, 8, &EmbeddingMethod::Full, None, 0);
+        let params = init_params(&plan, 1);
+        let engine = ComposeEngine::new(&plan);
+        let mut out = vec![0f32; 8];
+        engine.prepare(&params).compose_into(&[50], &mut out);
     }
 
     #[test]

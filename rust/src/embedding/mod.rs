@@ -42,7 +42,7 @@ mod memory;
 mod plan;
 mod reference;
 
-pub use compose::{ComposeEngine, ComposeOptions};
+pub use compose::{ComposeEngine, ComposeOptions, PreparedCompose};
 pub use config::{EmbeddingMethod, MethodFamily};
 pub use memory::{budget_for_fraction, BudgetedMethods, MemoryReport, PosBudget};
 pub use plan::{DhePlan, EmbeddingPlan, NodePlan, PositionPlan, TableShape};

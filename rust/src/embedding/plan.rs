@@ -47,8 +47,34 @@ pub struct NodePlan {
     pub table: TableShape,
     /// `indices[t][i]` = row of X used by node i under hash t.
     pub indices: Vec<Vec<u32>>,
+    /// The same hash indices in node-major layout
+    /// (`node_major[i * h + t] == indices[t][i]`), built once at plan
+    /// time: one node's `h` rows sit adjacent, so per-node gathers (the
+    /// compose engine's hot loop) walk this array sequentially instead
+    /// of striding across `h` separate arrays. This deliberately
+    /// duplicates `indices` (`n·h` u32 each); the hash-major copy only
+    /// feeds the scalar oracle and the HLO export today — consolidating
+    /// those onto this layout (and dropping `indices`) is the noted
+    /// follow-up in ROADMAP when the AOT ABI is next touched.
+    pub node_major: Vec<u32>,
     /// Learn per-node importance weights `Y ∈ R^{n×h}`? (else `y ≡ 1`).
     pub learned_weights: bool,
+}
+
+impl NodePlan {
+    /// Build a node plan, deriving the node-major index layout from the
+    /// hash-major `indices`.
+    fn new(table: TableShape, indices: Vec<Vec<u32>>, learned_weights: bool) -> Self {
+        let h = indices.len();
+        let n = indices.first().map_or(0, Vec::len);
+        let mut node_major = vec![0u32; n * h];
+        for (t, idx) in indices.iter().enumerate() {
+            for (i, &row) in idx.iter().enumerate() {
+                node_major[i * h + t] = row;
+            }
+        }
+        NodePlan { table, indices, node_major, learned_weights }
+    }
 }
 
 /// DHE plan: static dense encoding + MLP shapes.
@@ -124,11 +150,11 @@ impl EmbeddingPlan {
         }
         // node-specific part
         plan.node = match method {
-            EmbeddingMethod::Full | EmbeddingMethod::PosFullEmb { .. } => Some(NodePlan {
-                table: TableShape { name: "node_x".into(), rows: n, cols: d },
-                indices: vec![(0..n as u32).collect()],
-                learned_weights: false,
-            }),
+            EmbeddingMethod::Full | EmbeddingMethod::PosFullEmb { .. } => Some(NodePlan::new(
+                TableShape { name: "node_x".into(), rows: n, cols: d },
+                vec![(0..n as u32).collect()],
+                false,
+            )),
             EmbeddingMethod::HashTrick { buckets } => {
                 Some(Self::hashed_node_plan(n, d, *buckets, 1, false, seed))
             }
@@ -172,11 +198,11 @@ impl EmbeddingPlan {
         seed: u64,
     ) -> NodePlan {
         let hi = HashedIndices::build(n, h, buckets as u32, seed);
-        NodePlan {
-            table: TableShape { name: "node_x".into(), rows: buckets, cols: d },
-            indices: hi.indices,
-            learned_weights: learned,
-        }
+        NodePlan::new(
+            TableShape { name: "node_x".into(), rows: buckets, cols: d },
+            hi.indices,
+            learned,
+        )
     }
 
     /// Intra-partition pools: one `c × d` pool per level-0 partition,
@@ -200,11 +226,7 @@ impl EmbeddingPlan {
                     .collect()
             })
             .collect();
-        NodePlan {
-            table: TableShape { name: "node_x".into(), rows: m0 * c, cols: d },
-            indices,
-            learned_weights: true,
-        }
+        NodePlan::new(TableShape { name: "node_x".into(), rows: m0 * c, cols: d }, indices, true)
     }
 
     fn dhe_plan(
@@ -374,6 +396,25 @@ mod tests {
                 let idx = nx.indices[t][i] as usize;
                 let part = h.z[0][i] as usize;
                 assert!(idx >= part * c && idx < (part + 1) * c, "node {i} escaped its pool");
+            }
+        }
+    }
+
+    #[test]
+    fn node_major_layout_mirrors_hash_major_indices() {
+        for method in [
+            EmbeddingMethod::Full,
+            EmbeddingMethod::HashEmb { buckets: 30, h: 3 },
+            EmbeddingMethod::Bloom { buckets: 17, h: 2 },
+        ] {
+            let p = EmbeddingPlan::build(200, 8, &method, None, 9);
+            let nx = p.node.as_ref().unwrap();
+            let h = nx.indices.len();
+            assert_eq!(nx.node_major.len(), 200 * h, "{}", method.name());
+            for t in 0..h {
+                for i in 0..200 {
+                    assert_eq!(nx.node_major[i * h + t], nx.indices[t][i]);
+                }
             }
         }
     }

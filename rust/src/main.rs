@@ -16,9 +16,13 @@
 //!   runs without PJRT artifacts.
 //! * `train-minibatch [--experiment NAME | --dataset D --method M]
 //!   [--batch B] [--fanout F|all] [--epochs N] [--lr LR]
-//!   [--optimizer sgd|adam] [--no-shuffle] [--seed S] [--json]` —
-//!   host-side neighbor-sampled minibatch training on the compose
-//!   engine; runs without PJRT artifacts and emits a JSON bench record.
+//!   [--optimizer sgd|adam] [--no-shuffle] [--seed S] [--serial]
+//!   [--prefetch DEPTH] [--json]` — host-side neighbor-sampled
+//!   minibatch training on the compose engine; runs without PJRT
+//!   artifacts and emits a JSON bench record. The pipelined engine
+//!   (prefetched sampling + parallel step) is the default; `--serial`
+//!   selects the single-threaded oracle path (bit-identical losses,
+//!   slower wall clock).
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
 //!   benchmark the partitioner pipeline (scalar vs parallel matching,
 //!   reference vs CSR contraction, end-to-end partition, hierarchy);
@@ -106,7 +110,8 @@ fn print_help() {
          train --experiment NAME [--seed S] [--epochs N] [--verbose]\n\
          train-minibatch [--experiment NAME | --dataset D --method M] [--batch B]\n\
                          [--fanout F|all] [--epochs N] [--lr LR] [--optimizer sgd|adam]\n\
-                         [--no-shuffle] [--seed S] [--verbose] [--json]\n\
+                         [--no-shuffle] [--seed S] [--serial] [--prefetch DEPTH]\n\
+                         [--verbose] [--json]\n\
          experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table\n\
          compose [--dataset D] [--method M] [--batch B] [--json]   bench the compose engine\n\
          partition-bench [--dataset D] [--k K] [--levels L] [--json]   bench the partitioner"
@@ -220,24 +225,32 @@ fn method_from_tag(tag: &str, n: usize) -> Result<EmbeddingMethod> {
     })
 }
 
-/// Host-side compose-engine benchmark: no PJRT artifacts required.
-fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
-    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
+/// Materialize the (dataset, plan) for a CLI `(--dataset, --method)`
+/// pair at paper-default scale knobs (`default_k` / `default_c` via
+/// [`method_from_tag`]) — the shared front half of the `compose` and
+/// `train-minibatch` subcommands.
+fn dataset_and_plan(dsname: &str, tag: &str, seed: u64) -> Result<(Dataset, EmbeddingPlan)> {
     let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
-    let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
-    let batch: usize = flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(1024);
-    let n = sp.n;
-    let k = default_k(n);
-    let method = method_from_tag(tag, n)?;
+    let method = method_from_tag(tag, sp.n)?;
     let ds = Dataset::generate(&sp);
     let hier = if method.needs_hierarchy() {
         let levels = method.levels().max(1);
+        let k = default_k(sp.n);
         Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(k, levels)))
     } else {
         None
     };
-    let plan = EmbeddingPlan::build(n, sp.d, &method, hier.as_ref(), 0);
-    eprintln!("compose bench: {dsname} n={n} d={} method={}", sp.d, method.name());
+    let plan = EmbeddingPlan::build(sp.n, sp.d, &method, hier.as_ref(), seed);
+    Ok((ds, plan))
+}
+
+/// Host-side compose-engine benchmark: no PJRT artifacts required.
+fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
+    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
+    let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
+    let batch: usize = flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(1024);
+    let (_ds, plan) = dataset_and_plan(dsname, tag, 0)?;
+    eprintln!("compose bench: {dsname} n={} d={} method={}", plan.n, plan.d, plan.method.name());
     let records = bench_compose(&plan, batch);
     if flags.contains_key("json") {
         println!("{}", serde_json::to_string_pretty(&records)?);
@@ -269,18 +282,8 @@ fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
         (e.name.clone(), e.dataset.to_string(), ds, plan, e.sampling, opts)
     } else {
         let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
-        let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
         let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
-        let method = method_from_tag(tag, sp.n)?;
-        let ds = Dataset::generate(&sp);
-        let hier = if method.needs_hierarchy() {
-            let levels = method.levels().max(1);
-            let k = default_k(sp.n);
-            Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(k, levels)))
-        } else {
-            None
-        };
-        let plan = EmbeddingPlan::build(sp.n, sp.d, &method, hier.as_ref(), seed);
+        let (ds, plan) = dataset_and_plan(dsname, tag, seed)?;
         let opts = MinibatchOptions { seed, ..Default::default() };
         (dsname.to_string(), dsname.to_string(), ds, plan, SamplerConfig::default(), opts)
     };
@@ -308,9 +311,21 @@ fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(o) = flags.get("optimizer") {
         opts.optimizer = OptimizerKind::parse(o).map_err(|e| anyhow!(e))?;
     }
+    if flags.contains_key("serial") && flags.contains_key("prefetch") {
+        bail!("--serial already disables prefetching; drop --prefetch");
+    }
+    if flags.contains_key("serial") {
+        // the single-threaded oracle path: same losses, no pipeline
+        opts.parallel = false;
+        opts.prefetch = 0;
+    }
+    if let Some(p) = flags.get("prefetch") {
+        opts.prefetch = p.parse()?;
+    }
     opts.verbose = flags.contains_key("verbose");
     eprintln!(
-        "minibatch train: {label} n={} d={} method={} batch={} fanout={} epochs={} {} lr={}",
+        "minibatch train: {label} n={} d={} method={} batch={} fanout={} epochs={} {} lr={} \
+         {} prefetch={}",
         plan.n,
         plan.d,
         plan.method.name(),
@@ -318,7 +333,9 @@ fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
         cfg.fanout,
         opts.epochs,
         opts.optimizer.as_str(),
-        opts.lr
+        opts.lr,
+        if opts.parallel { "pipelined" } else { "serial" },
+        opts.prefetch
     );
     let record = bench_minibatch(&dsname, &ds, &plan, cfg, &opts)?;
     if flags.contains_key("json") {

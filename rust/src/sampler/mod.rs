@@ -24,9 +24,11 @@
 
 mod batcher;
 mod neighbor;
+mod prefetch;
 
 pub use batcher::SeedBatcher;
 pub use neighbor::{NeighborSampler, SampledBlock};
+pub use prefetch::BlockPrefetcher;
 
 /// Per-seed neighbor cap for one sampled hop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

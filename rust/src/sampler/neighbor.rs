@@ -14,7 +14,7 @@ use crate::util::rng::Rng;
 /// * `neighbors_of(s)` returns **local** row indices into `nodes`, so a
 ///   trainer can compose `nodes` once with `compose_batch` and aggregate
 ///   entirely in block-row space.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SampledBlock {
     /// Unique global node ids to compose (seeds first, then frontier).
     pub nodes: Vec<u32>,
@@ -82,17 +82,39 @@ impl<'g> NeighborSampler<'g> {
     /// coordinates `(epoch, batch)`. Deterministic per
     /// `(sampler seed, epoch, batch)`; seed order is preserved.
     pub fn sample_block(&mut self, seeds: &[u32], epoch: usize, batch: usize) -> SampledBlock {
+        let mut block = SampledBlock::default();
+        self.sample_block_into(seeds, epoch, batch, &mut block);
+        block
+    }
+
+    /// [`sample_block`](NeighborSampler::sample_block) into a
+    /// caller-owned block, reusing its vectors' capacity — the
+    /// allocation-free variant the prefetcher's buffer pool drives.
+    /// `block`'s previous contents are discarded; the result is
+    /// identical to a fresh `sample_block` call at the same coordinates.
+    pub fn sample_block_into(
+        &mut self,
+        seeds: &[u32],
+        epoch: usize,
+        batch: usize,
+        block: &mut SampledBlock,
+    ) {
         let n = self.graph.num_nodes() as u32;
-        let mut nodes: Vec<u32> = Vec::with_capacity(seeds.len() * 2);
+        let nodes = &mut block.nodes;
+        nodes.clear();
+        nodes.reserve(seeds.len() * 2);
         for (local, &s) in seeds.iter().enumerate() {
             assert!(s < n, "seed {s} out of range (n = {n})");
             assert_eq!(self.node_to_local[s as usize], u32::MAX, "duplicate seed {s}");
             self.node_to_local[s as usize] = local as u32;
             nodes.push(s);
         }
-        let mut neigh_ptr: Vec<u32> = Vec::with_capacity(seeds.len() + 1);
+        let neigh_ptr = &mut block.neigh_ptr;
+        neigh_ptr.clear();
+        neigh_ptr.reserve(seeds.len() + 1);
         neigh_ptr.push(0);
-        let mut neigh_idx: Vec<u32> = Vec::new();
+        let neigh_idx = &mut block.neigh_idx;
+        neigh_idx.clear();
         for &s in seeds {
             let adj = self.graph.neighbors(s);
             // `sampled` selects the indirection: the common no-sampling
@@ -134,10 +156,10 @@ impl<'g> NeighborSampler<'g> {
             }
             neigh_ptr.push(neigh_idx.len() as u32);
         }
-        for &u in &nodes {
+        for &u in nodes.iter() {
             self.node_to_local[u as usize] = u32::MAX;
         }
-        SampledBlock { nodes, num_seeds: seeds.len(), neigh_ptr, neigh_idx }
+        block.num_seeds = seeds.len();
     }
 }
 
@@ -190,6 +212,17 @@ mod tests {
         // disjoint second batch works on the same scratch
         let c = s.sample_block(&[5], 1, 1);
         assert_eq!(c.nodes[0], 5);
+    }
+
+    #[test]
+    fn sample_block_into_reuses_buffers_and_matches_fresh_blocks() {
+        let g = path_graph(8);
+        let mut s = NeighborSampler::new(&g, Fanout::Max(2), 4);
+        let fresh = s.sample_block(&[1, 4, 6], 0, 0);
+        // a recycled block with unrelated stale contents samples identically
+        let mut reused = s.sample_block(&[0, 7], 3, 9);
+        s.sample_block_into(&[1, 4, 6], 0, 0, &mut reused);
+        assert_eq!(fresh, reused);
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Pipelined-engine validation: property-based checks that (a) sharded
+//! `GradBuffer` accumulation is bit-identical to serial accumulation,
+//! (b) the pipelined trainer (prefetched sampling + parallel backward +
+//! parallel optimizer apply) reproduces the serial oracle trainer's
+//! loss trajectory **exactly** — at 1 and 4 rayon threads, for SGD and
+//! Adam, across prefetch depths — and (c) the parallel optimizer apply
+//! path matches the serial one bit for bit on large touched sets.
+//!
+//! Thread counts are varied with dedicated `rayon::ThreadPool`s rather
+//! than `RAYON_NUM_THREADS` (the global pool is process-wide and the
+//! test runner is itself parallel).
+
+use poshashemb::coordinator::{GradBuffer, MinibatchOptions, MinibatchTrainer, OptimizerKind};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{Fanout, SamplerConfig};
+use proptest::prelude::*;
+
+fn in_pool<T: Send>(threads: usize, f: impl FnOnce() -> T + Send) -> T {
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("thread pool")
+        .install(f)
+}
+
+/// Shrunk synth-arxiv analog (same generator/splits as the seed tests).
+fn small_dataset(n: usize, d: usize) -> Dataset {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    Dataset::generate(&s)
+}
+
+/// Loss trajectory of one training run under the given execution knobs.
+fn run_losses(
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    cfg: SamplerConfig,
+    optimizer: OptimizerKind,
+    parallel: bool,
+    prefetch: usize,
+) -> Vec<f64> {
+    let opts = MinibatchOptions {
+        epochs: 4,
+        lr: 0.03,
+        optimizer,
+        seed: 7,
+        parallel,
+        prefetch,
+        ..Default::default()
+    };
+    let mut tr = MinibatchTrainer::new(ds, plan, cfg, opts).unwrap();
+    tr.train().unwrap().losses
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(12))]
+
+    #[test]
+    fn sharded_accumulation_is_bit_identical_to_serial(
+        rows in 1usize..120,
+        cols in 1usize..12,
+        shards in 1usize..40,
+        ops in prop::collection::vec((0usize..1000, -4.0f32..4.0, -4.0f32..4.0), 1..250),
+    ) {
+        // the same scatter workload applied serially and via row-range
+        // shards must produce identical bits and the same touched set
+        let ops: Vec<(usize, f32, Vec<f32>)> = ops
+            .into_iter()
+            .map(|(row, scale, v)| (row % rows, scale, vec![v; cols]))
+            .collect();
+        let mut serial = GradBuffer::new(rows, cols);
+        for (row, scale, src) in &ops {
+            serial.add_row(*row, *scale, src);
+        }
+        let mut sharded = GradBuffer::new(rows, cols);
+        sharded.sharded_accumulate(shards, |sh| {
+            for (row, scale, src) in &ops {
+                if sh.contains(*row) {
+                    sh.add_row(*row, *scale, src);
+                }
+            }
+        });
+        for row in 0..rows {
+            prop_assert_eq!(serial.row(row), sharded.row(row), "row {}", row);
+        }
+        let mut a: Vec<u32> = serial.touched_rows().to_vec();
+        let mut b: Vec<u32> = sharded.touched_rows().to_vec();
+        a.sort_unstable();
+        b.sort_unstable();
+        prop_assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pipelined_training_reproduces_serial_oracle_exactly(
+        n in 300usize..700,
+        batch in 48usize..160,
+        fanout in 2usize..8,
+        adam in any::<bool>(),
+    ) {
+        // the acceptance pin: prefetched + parallel-backward training
+        // must reproduce the serial trainer's loss trajectory EXACTLY
+        // (bit-for-bit f64 equality), at 1 and at 4 rayon threads.
+        let ds = small_dataset(n, 16);
+        let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 3));
+        let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 5, h: 2 };
+        let plan = EmbeddingPlan::build(n, 16, &method, Some(&hier), 3);
+        let cfg = SamplerConfig { batch_size: batch, fanout: Fanout::Max(fanout), shuffle: true };
+        let optimizer = if adam { OptimizerKind::Adam } else { OptimizerKind::Sgd };
+        let serial = run_losses(&ds, &plan, cfg, optimizer, false, 0);
+        let piped1 = in_pool(1, || run_losses(&ds, &plan, cfg, optimizer, true, 2));
+        let piped4 = in_pool(4, || run_losses(&ds, &plan, cfg, optimizer, true, 2));
+        prop_assert_eq!(&piped1, &serial, "1-thread pipelined vs serial");
+        prop_assert_eq!(&piped4, &serial, "4-thread pipelined vs serial");
+    }
+}
+
+#[test]
+fn prefetch_depth_does_not_change_the_trajectory() {
+    let ds = small_dataset(500, 16);
+    let method = EmbeddingMethod::HashEmb { buckets: 64, h: 2 };
+    let plan = EmbeddingPlan::build(500, 16, &method, None, 1);
+    let cfg = SamplerConfig { batch_size: 64, fanout: Fanout::Max(4), shuffle: true };
+    let baseline = run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, 0);
+    for depth in [1usize, 2, 8] {
+        let got = run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, depth);
+        assert_eq!(got, baseline, "prefetch depth {depth}");
+    }
+}
+
+#[test]
+fn parallel_trainer_is_bit_identical_across_thread_counts_with_head_tables() {
+    // complements tests/minibatch.rs: the full method family (position
+    // levels + intra pools + learned y) through the pipelined path.
+    let ds = small_dataset(650, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 2));
+    let method = EmbeddingMethod::PosHashEmbInter { levels: 2, buckets: 48, h: 2 };
+    let plan = EmbeddingPlan::build(650, 16, &method, Some(&hier), 5);
+    let cfg = SamplerConfig { batch_size: 96, fanout: Fanout::Max(6), shuffle: true };
+    let l1 = in_pool(1, || run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, 2));
+    let l4 = in_pool(4, || run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, 2));
+    assert_eq!(l1, l4);
+}
+
+#[test]
+fn full_embedding_method_trains_identically_serial_and_pipelined() {
+    // FullEmb exercises the identity node plan (h = 1, no learned y):
+    // the node-major gather layout must not disturb it either.
+    let ds = small_dataset(400, 16);
+    let plan = EmbeddingPlan::build(400, 16, &EmbeddingMethod::Full, None, 2);
+    let cfg = SamplerConfig { batch_size: 80, fanout: Fanout::Max(5), shuffle: true };
+    let serial = run_losses(&ds, &plan, cfg, OptimizerKind::Sgd, false, 0);
+    let piped = in_pool(4, || run_losses(&ds, &plan, cfg, OptimizerKind::Sgd, true, 2));
+    assert_eq!(piped, serial);
+}
