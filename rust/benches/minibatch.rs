@@ -1,9 +1,10 @@
 //! L3 perf microbench: host-side neighbor-sampled minibatch training on
 //! `ComposeEngine::compose_batch` — the large-graph training loop that
 //! never materializes `n × d`. Reports seed nodes/s and batches/s per
-//! configuration (fanout sweep + the full-batch-equivalence oracle),
-//! sharing `bench_harness::bench_minibatch` with the
-//! `poshashemb train-minibatch` CLI subcommand.
+//! configuration (fanout sweep, a 2-layer deep-SAGE config, and the
+//! full-batch-equivalence oracle), sharing
+//! `bench_harness::bench_minibatch` with the `poshashemb
+//! train-minibatch` CLI subcommand.
 
 use poshashemb::bench_harness::bench_minibatch;
 use poshashemb::config::default_k;
@@ -11,7 +12,7 @@ use poshashemb::coordinator::MinibatchOptions;
 use poshashemb::data::{spec, Dataset};
 use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
 use poshashemb::partition::{Hierarchy, HierarchyConfig};
-use poshashemb::sampler::{Fanout, SamplerConfig};
+use poshashemb::sampler::{Fanout, Fanouts, SamplerConfig};
 use poshashemb::util::bench::{quick, section};
 
 fn main() {
@@ -36,12 +37,17 @@ fn main() {
         epochs
     ));
     let configs = [
-        SamplerConfig { batch_size: 256, fanout: Fanout::Max(5), shuffle: true },
-        SamplerConfig { batch_size: 512, fanout: Fanout::Max(10), shuffle: true },
-        SamplerConfig { batch_size: 1024, fanout: Fanout::All, shuffle: true },
-        SamplerConfig::oracle(ds.splits.train.len()),
+        SamplerConfig { batch_size: 256, fanouts: Fanout::Max(5).into(), shuffle: true },
+        SamplerConfig { batch_size: 512, fanouts: Fanout::Max(10).into(), shuffle: true },
+        SamplerConfig {
+            batch_size: 512,
+            fanouts: Fanouts::parse("10,5").expect("static fanouts"),
+            shuffle: true,
+        },
+        SamplerConfig { batch_size: 1024, fanouts: Fanout::All.into(), shuffle: true },
+        SamplerConfig::oracle(ds.splits.train.len(), 1),
     ];
-    for cfg in configs {
+    for cfg in &configs {
         let rec = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &opts).expect("bench run");
         println!("{}", rec.row());
         assert!(
@@ -54,22 +60,33 @@ fn main() {
     // serial oracle vs pipelined engine at the default config: the
     // acceptance comparison (same losses bit for bit, different wall
     // clock). The serial record is what pre-pipeline builds reported.
+    // The 2-layer head gets the same A/B to keep the deep path honest.
     section("pipelined engine vs serial oracle (bit-identical losses)");
-    let cfg = SamplerConfig { batch_size: 512, fanout: Fanout::Max(10), shuffle: true };
-    let serial_opts =
-        MinibatchOptions { epochs, parallel: false, prefetch: 0, ..Default::default() };
-    let serial = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &serial_opts).expect("serial run");
-    let pipelined = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &opts).expect("pipelined run");
-    assert_eq!(
-        (serial.first_loss.to_bits(), serial.final_loss.to_bits()),
-        (pipelined.first_loss.to_bits(), pipelined.final_loss.to_bits()),
-        "pipelined engine drifted from the serial oracle"
-    );
-    println!("{}", serial.row());
-    println!("{}", pipelined.row());
-    println!(
-        "pipelined speedup: {:.2}x nodes/s over serial ({} threads)",
-        pipelined.nodes_per_sec / serial.nodes_per_sec.max(1e-9),
-        pipelined.threads
-    );
+    let shallow = SamplerConfig { batch_size: 512, fanouts: Fanout::Max(10).into(), shuffle: true };
+    let deep = SamplerConfig {
+        batch_size: 512,
+        fanouts: Fanouts::parse("10,5").expect("static fanouts"),
+        shuffle: true,
+    };
+    for cfg in [&shallow, &deep] {
+        let serial_opts =
+            MinibatchOptions { epochs, parallel: false, prefetch: 0, ..Default::default() };
+        let serial =
+            bench_minibatch("synth-arxiv", &ds, &plan, cfg, &serial_opts).expect("serial run");
+        let pipelined = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &opts).expect("piped run");
+        assert_eq!(
+            (serial.first_loss.to_bits(), serial.final_loss.to_bits()),
+            (pipelined.first_loss.to_bits(), pipelined.final_loss.to_bits()),
+            "pipelined engine drifted from the serial oracle (L={})",
+            cfg.fanouts.layers()
+        );
+        println!("{}", serial.row());
+        println!("{}", pipelined.row());
+        println!(
+            "pipelined speedup (L={}): {:.2}x nodes/s over serial ({} threads)",
+            cfg.fanouts.layers(),
+            pipelined.nodes_per_sec / serial.nodes_per_sec.max(1e-9),
+            pipelined.threads
+        );
+    }
 }

@@ -495,8 +495,14 @@ pub struct MinibatchBenchRecord {
     pub d: usize,
     /// Seed nodes per batch.
     pub batch_size: usize,
-    /// Neighbor fanout per seed (`null` in JSON = unbounded).
+    /// Hop-0 neighbor fanout per seed (`null` in JSON = unbounded) —
+    /// kept as the legacy scalar; `fanouts` carries the full list.
     pub fanout: Option<usize>,
+    /// Per-hop neighbor fanouts (`null` entries = unbounded); the list
+    /// length equals `layers`.
+    pub fanouts: Vec<Option<usize>>,
+    /// SAGE head depth (= sampled hops per block).
+    pub layers: usize,
     /// Epochs trained.
     pub epochs: usize,
     /// Batches per epoch.
@@ -537,13 +543,18 @@ pub struct MinibatchBenchRecord {
 impl MinibatchBenchRecord {
     /// Human-readable report line.
     pub fn row(&self) -> String {
-        let fanout = self.fanout.map_or("all".to_string(), |f| f.to_string());
+        let fanouts: Vec<String> = self
+            .fanouts
+            .iter()
+            .map(|f| f.map_or("all".to_string(), |x| x.to_string()))
+            .collect();
         format!(
-            "{:<26} batch={:<5} fanout={:<4} epoch {:>10.3?} ({:>9.0} nodes/s, {:>7.1} batch/s) \
-             loss {:.4}->{:.4} peak_rows={}",
+            "{:<26} batch={:<5} L={} fanouts={:<7} epoch {:>10.3?} ({:>9.0} nodes/s, \
+             {:>7.1} batch/s) loss {:.4}->{:.4} peak_rows={}",
             self.method,
             self.batch_size,
-            fanout,
+            self.layers,
+            fanouts.join(","),
             std::time::Duration::from_nanos(self.mean_epoch_ns),
             self.nodes_per_sec,
             self.batches_per_sec,
@@ -561,13 +572,13 @@ pub fn bench_minibatch(
     dataset: &str,
     ds: &Dataset,
     plan: &EmbeddingPlan,
-    cfg: SamplerConfig,
+    cfg: &SamplerConfig,
     opts: &MinibatchOptions,
 ) -> Result<MinibatchBenchRecord> {
     if opts.epochs == 0 {
         bail!("bench_minibatch needs at least one epoch");
     }
-    let mut trainer = MinibatchTrainer::new(ds, plan, cfg, opts.clone())?;
+    let mut trainer = MinibatchTrainer::new(ds, plan, cfg.clone(), opts.clone())?;
     let out = trainer.train()?;
     let mut sorted = out.epoch_ns.clone();
     sorted.sort_unstable();
@@ -581,7 +592,9 @@ pub fn bench_minibatch(
         n: plan.n,
         d: plan.d,
         batch_size: cfg.batch_size,
-        fanout: cfg.fanout.limit(),
+        fanout: cfg.fanouts.get(0).limit(),
+        fanouts: cfg.fanouts.limits(),
+        layers: cfg.fanouts.layers(),
         epochs: out.losses.len(),
         batches_per_epoch: out.batches_per_epoch,
         seeds_per_epoch: out.seeds_per_epoch,
@@ -686,12 +699,14 @@ mod tests {
             None,
             0,
         );
-        let cfg = SamplerConfig { batch_size: 64, fanout: Fanout::Max(4), shuffle: true };
+        let cfg = SamplerConfig { batch_size: 64, fanouts: Fanout::Max(4).into(), shuffle: true };
         let opts = MinibatchOptions { epochs: 2, ..Default::default() };
-        let rec = bench_minibatch("synth-arxiv", &ds, &plan, cfg, &opts).unwrap();
+        let rec = bench_minibatch("synth-arxiv", &ds, &plan, &cfg, &opts).unwrap();
         assert_eq!(rec.epochs, 2);
         assert_eq!(rec.batch_size, 64);
         assert_eq!(rec.fanout, Some(4));
+        assert_eq!(rec.fanouts, vec![Some(4)]);
+        assert_eq!(rec.layers, 1);
         assert!(rec.nodes_per_sec > 0.0);
         assert!(rec.batches_per_sec > 0.0);
         assert!(rec.peak_compose_rows < spec.n);
@@ -700,10 +715,40 @@ mod tests {
         assert!(rec.threads >= 1);
         let json = serde_json::to_string(&rec).unwrap();
         assert!(json.contains("\"nodes_per_sec\""), "json: {json}");
+        assert!(json.contains("\"layers\"") && json.contains("\"fanouts\""), "json: {json}");
         assert!(json.contains("\"threads\"") && json.contains("\"git_sha\""), "json: {json}");
         assert!(rec.row().contains("nodes/s"));
         // zero epochs is rejected, not divided by
         let none = MinibatchOptions { epochs: 0, ..Default::default() };
-        assert!(bench_minibatch("synth-arxiv", &ds, &plan, cfg, &none).is_err());
+        assert!(bench_minibatch("synth-arxiv", &ds, &plan, &cfg, &none).is_err());
+    }
+
+    #[test]
+    fn bench_minibatch_records_layered_runs() {
+        use crate::sampler::Fanouts;
+        let mut spec = crate::data::spec("synth-arxiv").unwrap();
+        spec.n = 400;
+        spec.communities = 20;
+        spec.d = 16;
+        let ds = Dataset::generate(&spec);
+        let plan = EmbeddingPlan::build(
+            spec.n,
+            spec.d,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            0,
+        );
+        let cfg = SamplerConfig {
+            batch_size: 64,
+            fanouts: Fanouts::parse("4,3").unwrap(),
+            shuffle: true,
+        };
+        let opts = MinibatchOptions { epochs: 2, hidden: 16, ..Default::default() };
+        let rec = bench_minibatch("synth-arxiv", &ds, &plan, &cfg, &opts).unwrap();
+        assert_eq!(rec.layers, 2);
+        assert_eq!(rec.fanouts, vec![Some(4), Some(3)]);
+        assert_eq!(rec.fanout, Some(4), "legacy scalar is the hop-0 fanout");
+        assert!(rec.nodes_per_sec > 0.0);
+        assert!(rec.row().contains("L=2"));
     }
 }

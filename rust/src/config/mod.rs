@@ -337,7 +337,7 @@ pub fn aot_config(e: &Experiment) -> Json {
     let emb = Json::obj(vec![
         ("pos_tables", Json::Arr(pos_tables)),
         ("node_rows", Json::num(plan.node.as_ref().map_or(0, |nx| nx.table.rows) as f64)),
-        ("h", Json::num(plan.node.as_ref().map_or(0, |nx| nx.indices.len()) as f64)),
+        ("h", Json::num(plan.node.as_ref().map_or(0, |nx| nx.h) as f64)),
         ("learned_y", Json::Bool(plan.node.as_ref().is_some_and(|nx| nx.learned_weights))),
         ("dhe", dhe),
     ]);

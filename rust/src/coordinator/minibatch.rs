@@ -5,40 +5,55 @@
 //! so the trainer must never materialize that matrix. This module closes
 //! the loop: a GraphSAGE-style loop ([`MinibatchTrainer`]) draws seed
 //! batches from the train split ([`SeedBatcher`]), samples a bounded
-//! one-hop neighborhood per batch ([`NeighborSampler`]), composes
-//! **only the block's rows** with
-//! [`ComposeEngine::compose_batch`],
-//! runs a one-layer mean-aggregation head (`logits = W_self·v_i +
-//! W_neigh·mean_{j∈N(i)} v_j + b`), and backpropagates through the
-//! compose (Eq. 7/11/12) into the embedding tables with a sparse
-//! SGD/Adam step ([`Optimizer`]). Peak compose allocation is
-//! `block_rows × d`, tracked as [`MinibatchOutcome::peak_compose_rows`]
-//! and asserted `< n` by `rust/tests/minibatch.rs`.
+//! multi-hop neighborhood per batch ([`NeighborSampler`] →
+//! [`MultiHopBlock`], one chained hop per configured fanout), composes
+//! **only the outermost hop's rows** with
+//! [`ComposeEngine::compose_batch`], runs an L-layer mean-aggregation
+//! SAGE head (`h⁽ʲ⁺¹⁾ᵢ = σ(Wⱼ_self·h⁽ʲ⁾ᵢ + Wⱼ_neigh·mean_{k∈N(i)}
+//! h⁽ʲ⁾ₖ + bⱼ)`, ReLU between layers, linear logits), and
+//! backpropagates layer by layer — chaining the same order-preserving
+//! reverse-topology scatter through every hop — through the compose
+//! (Eq. 7/11/12) into the embedding tables with a sparse SGD/Adam step
+//! ([`Optimizer`]). Peak compose allocation is `block_rows × d`,
+//! tracked as [`MinibatchOutcome::peak_compose_rows`] and asserted
+//! `< n` by `rust/tests/minibatch.rs`.
+//!
+//! The head depth is the fanout list's length
+//! ([`SamplerConfig::fanouts`]): one fanout (`--fanout 10`) is the
+//! classic one-layer head, `--fanouts 10,5` a two-layer head whose
+//! hop-0 block feeds the **last** layer. With one layer the math, the
+//! parameter names (`head_w_self`/`head_w_neigh`/`head_b`), the RNG
+//! streams and therefore the entire trajectory are bit-identical to the
+//! pre-multi-hop trainer (`rust/tests/multihop.rs` pins this against a
+//! test-local replica of the legacy loop).
 //!
 //! **Pipelined execution.** By default the trainer overlaps and
 //! parallelizes every phase without changing a single bit of the
 //! result: a [`BlockPrefetcher`] samples batch *b + 1* on a dedicated
 //! thread while batch *b* is stepped (blocks are keyed per
-//! `(seed, epoch, batch, node)`, so sampling ahead cannot change them,
-//! and they arrive in batch order through a bounded channel with a
-//! recycle pool); the step itself fans out on rayon — per-seed forward
-//! rows are disjoint, `dL/dv` uses an order-preserving reverse-topology
-//! scatter, embedding gradients accumulate into row-range
-//! [`GradBuffer`] shards that merge touch lists in fixed shard order,
-//! and the optimizer updates touched rows independently. The
-//! `MinibatchOptions { parallel: false, prefetch: 0, .. }` path keeps
-//! the original serial step in-tree as the oracle;
-//! `tests/parallel_train.rs` pins exact (bit-for-bit) loss-trajectory
-//! equality between the two at 1 and 4 threads.
+//! `(seed, epoch, batch, layer, node)`, so sampling ahead cannot change
+//! them, and they arrive in batch order through a bounded channel with
+//! a recycle pool); the step itself fans out on rayon — per-seed
+//! forward rows are disjoint, each layer's `dL/dh` uses an
+//! order-preserving reverse-topology scatter, embedding gradients
+//! accumulate into row-range [`GradBuffer`] shards that merge touch
+//! lists in fixed shard order, and the optimizer updates touched rows
+//! independently. The `MinibatchOptions { parallel: false, prefetch: 0,
+//! .. }` path keeps the serial step in-tree as the oracle;
+//! `tests/parallel_train.rs` and `tests/multihop.rs` pin exact
+//! (bit-for-bit) loss-trajectory equality between the two at 1 and 4
+//! threads, for one- and two-layer heads.
 //!
-//! **Oracle parity.** [`train_full_batch`] is the same model trained the
-//! classic way — `compose_all`, dense `n × d` activations — kept as the
-//! reference implementation. In the oracle configuration
-//! ([`SamplerConfig::oracle`]: fanout = ∞, one batch = the whole train
-//! split, no shuffle) the minibatch path performs the same update: the
-//! composed rows are bit-identical (compose-engine parity), neighbor
-//! aggregation and gradient scatter follow the same order, so the two
-//! loss trajectories agree within 1e-5 per epoch (pinned by proptest).
+//! **Oracle parity.** [`train_full_batch`] is the same L-layer model
+//! trained the classic way — `compose_all`, dense `n × dim` activations
+//! per layer — kept as the reference implementation. In the oracle
+//! configuration ([`SamplerConfig::oracle`]: every fanout = ∞, one
+//! batch = the whole train split, no shuffle) the minibatch path
+//! performs the same update: the composed rows are bit-identical
+//! (compose-engine parity), per-layer aggregation and every gradient
+//! accumulator walk the same row orders (the full-batch trainer replays
+//! the oracle block's per-hop discovery order), so the two loss
+//! trajectories agree within 1e-5 per epoch (pinned by proptest).
 //!
 //! DHE is the one method family not supported here: it has no embedding
 //! tables to scatter gradients into (an MLP backward would be needed),
@@ -51,7 +66,7 @@ use crate::embedding::{
 };
 use crate::metrics::{accuracy, mean_roc_auc};
 use crate::sampler::{
-    mix_seed, BlockPrefetcher, Fanout, NeighborSampler, SampledBlock, SamplerConfig, SeedBatcher,
+    mix_seed, BlockPrefetcher, Fanouts, MultiHopBlock, NeighborSampler, SamplerConfig, SeedBatcher,
 };
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
@@ -85,9 +100,9 @@ pub struct MinibatchOptions {
     /// Run the forward/backward/apply phases of every step on the rayon
     /// pool. The parallel step is engineered to be **bit-identical** to
     /// the serial one (disjoint output ownership, order-preserving
-    /// reverse scatter, row-range gradient sharding — see the module
-    /// docs), so this knob trades nothing but wall time; `false` keeps
-    /// the original serial step in-tree as the oracle
+    /// reverse scatter per layer, row-range gradient sharding — see the
+    /// module docs), so this knob trades nothing but wall time; `false`
+    /// keeps the serial step in-tree as the oracle
     /// (`tests/parallel_train.rs` pins serial ≡ parallel at 1 and 4
     /// threads).
     pub parallel: bool,
@@ -95,8 +110,11 @@ pub struct MinibatchOptions {
     /// sampler thread (see [`BlockPrefetcher`]); `0` samples on the
     /// calling thread exactly as the serial loop always has. Prefetching
     /// cannot change results — blocks are keyed per
-    /// `(seed, epoch, batch, node)` and delivered in batch order.
+    /// `(seed, epoch, batch, layer, node)` and delivered in batch order.
     pub prefetch: usize,
+    /// Hidden width of the SAGE head's intermediate layers (unused by
+    /// one-layer heads, whose single layer maps `d → classes`).
+    pub hidden: usize,
 }
 
 impl Default for MinibatchOptions {
@@ -110,6 +128,7 @@ impl Default for MinibatchOptions {
             verify_compose: true,
             parallel: true,
             prefetch: 2,
+            hidden: 64,
         }
     }
 }
@@ -154,13 +173,38 @@ impl MinibatchOutcome {
     }
 }
 
+/// (`W_self`, `W_neigh`, `b`) parameter names per SAGE layer. One-layer
+/// heads keep the legacy names (`head_w_self`/`head_w_neigh`/`head_b`),
+/// so pre-multi-hop runs, tests and tooling are untouched; deeper heads
+/// use `head{l}_*`.
+fn head_param_names(layers: usize) -> Vec<(String, String, String)> {
+    (0..layers)
+        .map(|l| {
+            if layers == 1 {
+                ("head_w_self".to_string(), "head_w_neigh".to_string(), "head_b".to_string())
+            } else {
+                (format!("head{l}_w_self"), format!("head{l}_w_neigh"), format!("head{l}_b"))
+            }
+        })
+        .collect()
+}
+
+/// `(input, output)` dimensions of SAGE layer `j` in an `layers`-deep
+/// head: the first layer reads the composed `d`-dim embeddings, the
+/// last emits `classes` logits, everything between is `hidden` wide.
+fn layer_dims(d: usize, classes: usize, hidden: usize, layers: usize, j: usize) -> (usize, usize) {
+    let din = if j == 0 { d } else { hidden };
+    let dout = if j + 1 == layers { classes } else { hidden };
+    (din, dout)
+}
+
 /// Neighbor-sampled minibatch trainer over a borrowed (dataset, plan).
 ///
 /// Owns the parameters, the optimizer state and all reusable scratch
 /// buffers; the compose buffer grows to the largest sampled block and is
 /// never `n × d`. Runs are bit-identical across rayon thread counts: the
-/// sampler is keyed per `(seed, epoch, batch, node)` and the compose
-/// engine is bitwise thread-count-independent.
+/// sampler is keyed per `(seed, epoch, batch, layer, node)` and the
+/// compose engine is bitwise thread-count-independent.
 pub struct MinibatchTrainer<'a> {
     ds: &'a Dataset,
     engine: ComposeEngine<'a>,
@@ -170,22 +214,28 @@ pub struct MinibatchTrainer<'a> {
     opt: Optimizer,
     grads: BTreeMap<String, GradBuffer>,
     batcher: SeedBatcher,
+    /// SAGE head depth (= `cfg.fanouts.layers()`).
+    layers: usize,
+    /// Per-layer head parameter names.
+    head: Vec<(String, String, String)>,
     /// Inline sampler for the un-prefetched path, built lazily on first
     /// use: the default pipelined path samples on the prefetch thread
     /// (which owns its own sampler), and the `O(n)` global→local
     /// scratch should not sit allocated twice at large `n`.
     sampler: Option<NeighborSampler<'a>>,
-    /// Composed block rows (`block_rows × d`, reused across batches).
-    x: Vec<f32>,
-    /// Per-seed neighbor means (`num_seeds × d`).
-    nbar: Vec<f32>,
-    /// Per-seed logits (`num_seeds × classes`).
-    logits: Vec<f32>,
+    /// Per-level activations: `acts[0]` is the composed block
+    /// (`block_rows × d`, reused across batches), `acts[j + 1]` is
+    /// layer j's output rows.
+    acts: Vec<Vec<f32>>,
+    /// Per-layer neighbor means (`layer_seeds × layer_in_dim`).
+    nbars: Vec<Vec<f32>>,
     /// Per-seed `dL/dlogits`.
     glogits: Vec<f32>,
-    /// Per-block-row `dL/dv` (`block_rows × d`).
-    dx: Vec<f32>,
-    /// One seed's `W_neigh·g` back-signal (`d`) — serial path only.
+    /// Per-level back-propagated gradients: `dacts[j]` = `dL/dacts[j]`
+    /// (`dacts[0]` is the embedding gradient the tables receive).
+    dacts: Vec<Vec<f32>>,
+    /// One seed's `W_neigh·g` back-signal (widest layer input) — serial
+    /// path only.
     dn: Vec<f32>,
     /// Sampler stream seed (shared verbatim with the prefetcher so
     /// prefetched blocks are bit-identical to inline sampling).
@@ -193,13 +243,14 @@ pub struct MinibatchTrainer<'a> {
     /// Per-seed losses (parallel path: computed concurrently, summed in
     /// seed order so the epoch loss matches the serial path's bits).
     losses_buf: Vec<f64>,
-    /// Per-seed `W_self·g` back-signals (`num_seeds × d`, parallel path).
+    /// Per-seed `W_self·g` back-signals (parallel path, per layer).
     dself: Vec<f32>,
-    /// Per-seed `W_neigh·g` back-signals (`num_seeds × d`, parallel path).
+    /// Per-seed `W_neigh·g` back-signals (parallel path, per layer).
     dnbuf: Vec<f32>,
     /// Per-seed `1 / |sampled neighbors|` (0 when isolated).
     inv_deg: Vec<f32>,
-    /// Reverse-topology CSR offsets (`block_rows + 1`).
+    /// Reverse-topology CSR offsets (`block_rows + 1`, rebuilt per
+    /// layer).
     rev_ptr: Vec<u32>,
     /// Reverse-topology fill cursors (scratch for the counting sort).
     rev_cur: Vec<u32>,
@@ -228,12 +279,16 @@ impl<'a> MinibatchTrainer<'a> {
         if ds.splits.train.is_empty() {
             bail!("dataset has no training nodes to batch");
         }
-        let params = init_host_params(plan, ds.spec.classes, opts.seed);
+        let layers = cfg.fanouts.layers();
+        if layers > 1 && opts.hidden == 0 {
+            bail!("hidden width must be >= 1 for a {layers}-layer head");
+        }
+        let params = init_host_params(plan, ds.spec.classes, layers, opts.hidden, opts.seed);
         if opts.verify_compose {
             verify_compose_bounded(plan, &params)
                 .map_err(|msg| anyhow!("compose engine self-check failed: {msg}"))?;
         }
-        let grads = make_grad_buffers(plan, ds.spec.classes);
+        let grads = make_grad_buffers(plan, ds.spec.classes, layers, opts.hidden);
         let batcher = SeedBatcher::new(
             &ds.splits.train,
             cfg.batch_size,
@@ -243,7 +298,7 @@ impl<'a> MinibatchTrainer<'a> {
         let sampler_seed = mix_seed(&[opts.seed, 0x54AFF]);
         let mut opt = Optimizer::new(opts.optimizer, opts.lr);
         opt.parallel = opts.parallel;
-        let dn = vec![0.0; plan.d];
+        let head = head_param_names(layers);
         Ok(MinibatchTrainer {
             ds,
             engine: ComposeEngine::new(plan),
@@ -253,13 +308,14 @@ impl<'a> MinibatchTrainer<'a> {
             opt,
             grads,
             batcher,
+            layers,
+            head,
             sampler: None,
-            x: Vec::new(),
-            nbar: Vec::new(),
-            logits: Vec::new(),
+            acts: vec![Vec::new(); layers + 1],
+            nbars: vec![Vec::new(); layers],
             glogits: Vec::new(),
-            dx: Vec::new(),
-            dn,
+            dacts: vec![Vec::new(); layers],
+            dn: Vec::new(),
             sampler_seed,
             losses_buf: Vec::new(),
             dself: Vec::new(),
@@ -277,26 +333,30 @@ impl<'a> MinibatchTrainer<'a> {
         &self.params
     }
 
+    /// SAGE head depth (= fanout list length).
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
     /// Largest number of rows composed for a single training batch so far.
     pub fn peak_compose_rows(&self) -> usize {
         self.peak_compose_rows
     }
 
-    /// Compose one sampled block and step on it: the shared body of the
-    /// inline and prefetched epoch loops. Returns the block's summed
-    /// per-seed loss.
-    fn process_block(&mut self, block: &SampledBlock) -> f64 {
+    /// Compose one sampled multi-hop block and step on it: the shared
+    /// body of the inline and prefetched epoch loops. Returns the
+    /// block's summed per-seed loss.
+    fn process_block(&mut self, mhb: &MultiHopBlock) -> f64 {
+        debug_assert_eq!(mhb.num_hops(), self.layers, "block depth != head depth");
         let d = self.engine.plan().d;
-        let rows = block.num_rows();
+        let rows = mhb.num_rows();
         self.peak_compose_rows = self.peak_compose_rows.max(rows);
-        if self.x.len() < rows * d {
-            self.x.resize(rows * d, 0.0);
-        }
+        grow(&mut self.acts[0], rows * d);
         // one plan resolution per step; the sampler guarantees every id
         // is < n, so the per-call bounds pre-scan is skipped
         let prepared = self.engine.prepare(&self.params);
-        prepared.compose_into_unchecked(&block.nodes, &mut self.x[..rows * d]);
-        self.step_block(block)
+        prepared.compose_into_unchecked(&mhb.outer().nodes, &mut self.acts[0][..rows * d]);
+        self.step_block(mhb)
     }
 
     /// Run one epoch, sampling every block on the calling thread (the
@@ -306,18 +366,19 @@ impl<'a> MinibatchTrainer<'a> {
     pub fn train_epoch(&mut self, epoch: usize) -> Result<f64> {
         if self.sampler.is_none() {
             let ds = self.ds;
-            let sampler = NeighborSampler::new(&ds.graph, self.cfg.fanout, self.sampler_seed);
+            let sampler =
+                NeighborSampler::multi_hop(&ds.graph, &self.cfg.fanouts, self.sampler_seed);
             self.sampler = Some(sampler);
         }
         let batches = self.batcher.epoch_batches(epoch);
         let mut loss_sum = 0f64;
         let mut seen = 0usize;
-        let mut block = SampledBlock::default();
+        let mut mhb = MultiHopBlock::default();
         for (bi, seeds) in batches.iter().enumerate() {
             let sampler = self.sampler.as_mut().expect("inline sampler initialized above");
-            sampler.sample_block_into(seeds, epoch, bi, &mut block);
-            loss_sum += self.process_block(&block);
-            seen += block.num_seeds;
+            sampler.sample_multi_into(seeds, epoch, bi, &mut mhb);
+            loss_sum += self.process_block(&mhb);
+            seen += mhb.num_seeds();
         }
         let loss = loss_sum / seen as f64;
         if !loss.is_finite() {
@@ -338,7 +399,7 @@ impl<'a> MinibatchTrainer<'a> {
                 .recv()
                 .map_err(|_| anyhow!("block prefetch thread stopped early at epoch {epoch}"))?;
             loss_sum += self.process_block(&block);
-            seen += block.num_seeds;
+            seen += block.num_seeds();
             stream.recycle(block);
         }
         let loss = loss_sum / seen as f64;
@@ -359,10 +420,11 @@ impl<'a> MinibatchTrainer<'a> {
         if self.opts.prefetch > 0 && epochs > 0 {
             let ds = self.ds;
             let batcher = self.batcher.clone();
-            let (fanout, seed, depth) = (self.cfg.fanout, self.sampler_seed, self.opts.prefetch);
+            let fans = self.cfg.fanouts.clone();
+            let (seed, depth) = (self.sampler_seed, self.opts.prefetch);
             std::thread::scope(|scope| -> Result<()> {
                 let stream =
-                    BlockPrefetcher::spawn(scope, &ds.graph, batcher, fanout, seed, epochs, depth);
+                    BlockPrefetcher::spawn(scope, &ds.graph, batcher, fans, seed, epochs, depth);
                 for epoch in 0..epochs {
                     let e0 = Instant::now();
                     let loss = self.train_epoch_streamed(epoch, &stream)?;
@@ -401,9 +463,9 @@ impl<'a> MinibatchTrainer<'a> {
     }
 
     /// Score a fold with the current parameters, composed chunk by
-    /// chunk. Evaluation uses **full** neighborhoods (standard GraphSAGE
-    /// practice), so one chunk's block is bounded by
-    /// `chunk × (max degree + 1)` rows (and by `n` via dedup) — larger
+    /// chunk. Evaluation uses **full** neighborhoods at every hop
+    /// (standard GraphSAGE practice), so one chunk's block is bounded by
+    /// the chunk's L-hop neighborhood (and by `n` via dedup) — larger
     /// than a training block and outside the `peak_compose_rows`
     /// invariant, but still far from `n × d` on bounded-degree graphs.
     /// Returns accuracy (multi-class) or mean ROC-AUC (multi-label).
@@ -414,32 +476,58 @@ impl<'a> MinibatchTrainer<'a> {
         let ds = self.ds;
         let d = self.engine.plan().d;
         let classes = ds.spec.classes;
+        let layers = self.layers;
+        let hidden = self.opts.hidden;
         let chunk = self.cfg.batch_size.max(1);
-        let mut sampler = NeighborSampler::new(&ds.graph, Fanout::All, 0);
+        let mut sampler = NeighborSampler::multi_hop(&ds.graph, &Fanouts::all(layers), 0);
+        let mut mhb = MultiHopBlock::default();
         let mut x: Vec<f32> = Vec::new();
-        let mut nb = vec![0f32; d];
+        let mut cur: Vec<f32> = Vec::new();
+        let mut nxt: Vec<f32> = Vec::new();
+        let mut nb = vec![0f32; if layers > 1 { d.max(hidden) } else { d }];
         let mut scores = vec![0f32; fold.len() * classes];
-        let w_self = self.params.get("head_w_self");
-        let w_neigh = self.params.get("head_w_neigh");
-        let bias = self.params.get("head_b");
+        let heads: Vec<(&[f32], &[f32], &[f32])> = self
+            .head
+            .iter()
+            .map(|(ws, wn, b)| (self.params.get(ws), self.params.get(wn), self.params.get(b)))
+            .collect();
         // parameters are frozen during evaluation: resolve the plan once
         // for the whole fold instead of once per chunk
         let prepared = self.engine.prepare(&self.params);
         let mut done = 0usize;
         for (ci, seeds) in fold.chunks(chunk).enumerate() {
-            let block = sampler.sample_block(seeds, 0, ci);
-            let rows = block.num_rows();
-            if x.len() < rows * d {
-                x.resize(rows * d, 0.0);
+            sampler.sample_multi_into(seeds, 0, ci, &mut mhb);
+            let rows = mhb.num_rows();
+            grow(&mut x, rows * d);
+            prepared.compose_into_unchecked(&mhb.outer().nodes, &mut x[..rows * d]);
+            for j in 0..layers {
+                let blk = mhb.hop(layers - 1 - j);
+                let s = blk.num_seeds;
+                let (din, dout) = layer_dims(d, classes, hidden, layers, j);
+                grow(&mut nxt, s * dout);
+                let input: &[f32] = if j == 0 { &x } else { &cur };
+                let (w_self, w_neigh, bias) = heads[j];
+                for si in 0..s {
+                    mean_rows(&mut nb[..din], input, blk.neighbors_of(si));
+                    sage_affine_row(
+                        &input[si * din..(si + 1) * din],
+                        &nb[..din],
+                        w_self,
+                        w_neigh,
+                        bias,
+                        &mut nxt[si * dout..(si + 1) * dout],
+                    );
+                }
+                if j + 1 < layers {
+                    for v in nxt[..s * dout].iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                std::mem::swap(&mut cur, &mut nxt);
             }
-            prepared.compose_into_unchecked(&block.nodes, &mut x[..rows * d]);
-            for si in 0..block.num_seeds {
-                mean_rows(&mut nb, &x, block.neighbors_of(si));
-                let xs = &x[si * d..(si + 1) * d];
-                let out = &mut scores[(done + si) * classes..(done + si + 1) * classes];
-                head_logits_row(xs, &nb, w_self, w_neigh, bias, out);
-            }
-            done += block.num_seeds;
+            let s = mhb.num_seeds();
+            scores[done * classes..(done + s) * classes].copy_from_slice(&cur[..s * classes]);
+            done += s;
         }
         // both branches hand the shared metric fns fold-local labels
         // and indices, so minibatch eval can never drift from the
@@ -465,125 +553,168 @@ impl<'a> MinibatchTrainer<'a> {
     }
 
     /// Forward + backward + optimizer step on one composed block
-    /// (`self.x[..rows*d]` must hold the block's composed rows).
+    /// (`self.acts[0]` must hold the outer hop's composed rows).
     /// Returns the sum of per-seed losses. Dispatches to the serial
     /// oracle step or the bit-identical parallel step per
     /// `opts.parallel`.
-    fn step_block(&mut self, block: &SampledBlock) -> f64 {
+    fn step_block(&mut self, mhb: &MultiHopBlock) -> f64 {
         if self.opts.parallel {
-            self.step_block_parallel(block)
+            self.step_block_parallel(mhb)
         } else {
-            self.step_block_serial(block)
+            self.step_block_serial(mhb)
         }
     }
 
-    /// The original single-threaded step — kept verbatim as the oracle
-    /// the parallel step is pinned against (`tests/parallel_train.rs`).
-    fn step_block_serial(&mut self, block: &SampledBlock) -> f64 {
-        let d = self.engine.plan().d;
+    /// The single-threaded step — kept in-tree as the oracle the
+    /// parallel step is pinned against (`tests/parallel_train.rs`,
+    /// `tests/multihop.rs`). With one layer this is, operation for
+    /// operation, the pre-multi-hop trainer's step.
+    fn step_block_serial(&mut self, mhb: &MultiHopBlock) -> f64 {
+        let plan = self.engine.plan();
+        let d = plan.d;
         let classes = self.ds.spec.classes;
-        let s = block.num_seeds;
-        let rows = block.num_rows();
+        let layers = self.layers;
+        let hidden = self.opts.hidden;
+        let s0 = mhb.num_seeds();
 
-        // ---- neighbor means (seeds are block rows 0..s) ----
-        if self.nbar.len() < s * d {
-            self.nbar.resize(s * d, 0.0);
-        }
-        for si in 0..s {
-            let nbs = block.neighbors_of(si);
-            mean_rows(&mut self.nbar[si * d..(si + 1) * d], &self.x, nbs);
-        }
-
-        // ---- head forward ----
-        if self.logits.len() < s * classes {
-            self.logits.resize(s * classes, 0.0);
-        }
-        if self.glogits.len() < s * classes {
-            self.glogits.resize(s * classes, 0.0);
-        }
-        {
-            let w_self = self.params.get("head_w_self");
-            let w_neigh = self.params.get("head_w_neigh");
-            let bias = self.params.get("head_b");
+        // ---- forward: SAGE layer j aggregates with hop L-1-j ----
+        for j in 0..layers {
+            let blk = mhb.hop(layers - 1 - j);
+            let s = blk.num_seeds;
+            let (din, dout) = layer_dims(d, classes, hidden, layers, j);
+            grow(&mut self.nbars[j], s * din);
+            let (alo, ahi) = self.acts.split_at_mut(j + 1);
+            let input: &[f32] = &alo[j];
+            let out = &mut ahi[0];
+            grow(out, s * dout);
+            let nbar = &mut self.nbars[j];
             for si in 0..s {
-                let xs = &self.x[si * d..(si + 1) * d];
-                let nb = &self.nbar[si * d..(si + 1) * d];
-                let out = &mut self.logits[si * classes..(si + 1) * classes];
-                head_logits_row(xs, nb, w_self, w_neigh, bias, out);
+                mean_rows(&mut nbar[si * din..(si + 1) * din], input, blk.neighbors_of(si));
+            }
+            let w_self = self.params.get(&self.head[j].0);
+            let w_neigh = self.params.get(&self.head[j].1);
+            let bias = self.params.get(&self.head[j].2);
+            for si in 0..s {
+                sage_affine_row(
+                    &input[si * din..(si + 1) * din],
+                    &nbar[si * din..(si + 1) * din],
+                    w_self,
+                    w_neigh,
+                    bias,
+                    &mut out[si * dout..(si + 1) * dout],
+                );
+            }
+            if j + 1 < layers {
+                for v in out[..s * dout].iter_mut() {
+                    *v = v.max(0.0);
+                }
             }
         }
 
         // ---- loss + dL/dlogits (mean over the batch's seeds) ----
         let gscale = match self.ds.spec.task {
-            TaskKind::MultiClass => 1.0 / s as f32,
-            TaskKind::MultiLabel => 1.0 / (s * classes) as f32,
+            TaskKind::MultiClass => 1.0 / s0 as f32,
+            TaskKind::MultiLabel => 1.0 / (s0 * classes) as f32,
         };
+        grow(&mut self.glogits, s0 * classes);
         let mut loss_sum = 0f64;
-        for si in 0..s {
-            let node = block.nodes[si] as usize;
-            let lrow = &self.logits[si * classes..(si + 1) * classes];
-            let grow = &mut self.glogits[si * classes..(si + 1) * classes];
-            loss_sum +=
-                loss_and_grad_row(self.ds.spec.task, &self.ds.labels, node, lrow, grow, gscale);
-        }
-
-        // ---- head gradients ----
         {
-            let gb = self.grads.get_mut("head_w_self").expect("head_w_self grads");
-            for si in 0..s {
-                let g = &self.glogits[si * classes..(si + 1) * classes];
-                let xs = &self.x[si * d..(si + 1) * d];
-                for (a, &xa) in xs.iter().enumerate() {
-                    gb.add_row(a, xa, g);
-                }
-            }
-        }
-        {
-            let gb = self.grads.get_mut("head_w_neigh").expect("head_w_neigh grads");
-            for si in 0..s {
-                let g = &self.glogits[si * classes..(si + 1) * classes];
-                let nb = &self.nbar[si * d..(si + 1) * d];
-                for (a, &na) in nb.iter().enumerate() {
-                    gb.add_row(a, na, g);
-                }
-            }
-        }
-        {
-            let gb = self.grads.get_mut("head_b").expect("head_b grads");
-            for si in 0..s {
-                gb.add_row(0, 1.0, &self.glogits[si * classes..(si + 1) * classes]);
+            let seeds_blk = mhb.hop(0);
+            let logits = &self.acts[layers];
+            for si in 0..s0 {
+                let node = seeds_blk.nodes[si] as usize;
+                let lrow = &logits[si * classes..(si + 1) * classes];
+                let grow_row = &mut self.glogits[si * classes..(si + 1) * classes];
+                loss_sum += loss_and_grad_row(
+                    self.ds.spec.task,
+                    &self.ds.labels,
+                    node,
+                    lrow,
+                    grow_row,
+                    gscale,
+                );
             }
         }
 
-        // ---- dL/dv per block row ----
-        if self.dx.len() < rows * d {
-            self.dx.resize(rows * d, 0.0);
-        }
-        self.dx[..rows * d].fill(0.0);
-        {
-            let w_self = self.params.get("head_w_self");
-            let w_neigh = self.params.get("head_w_neigh");
-            for si in 0..s {
-                let g = &self.glogits[si * classes..(si + 1) * classes];
-                for a in 0..d {
-                    let ws = &w_self[a * classes..(a + 1) * classes];
-                    let wn = &w_neigh[a * classes..(a + 1) * classes];
-                    let mut acc_s = 0f32;
-                    let mut acc_n = 0f32;
-                    for ((&gj, wsj), wnj) in g.iter().zip(ws).zip(wn) {
-                        acc_s += gj * wsj;
-                        acc_n += gj * wnj;
+        // ---- backward, outermost layer first ----
+        grow(&mut self.dn, if layers > 1 { d.max(hidden) } else { d });
+        for j in (0..layers).rev() {
+            let blk = mhb.hop(layers - 1 - j);
+            let s = blk.num_seeds;
+            let rows = blk.num_rows();
+            let (din, dout) = layer_dims(d, classes, hidden, layers, j);
+            let (dlo, dhi) = self.dacts.split_at_mut(j + 1);
+            // ReLU backward: the layer's output had an activation iff it
+            // is not the logits layer
+            if j + 1 < layers {
+                let act_out = &self.acts[j + 1];
+                for (gv, &a) in dhi[0][..s * dout].iter_mut().zip(&act_out[..s * dout]) {
+                    if a <= 0.0 {
+                        *gv = 0.0;
                     }
-                    self.dx[si * d + a] += acc_s;
-                    self.dn[a] = acc_n;
                 }
-                let nbs = block.neighbors_of(si);
-                if !nbs.is_empty() {
-                    let inv = 1.0 / nbs.len() as f32;
-                    for &r in nbs {
-                        let dst = &mut self.dx[r as usize * d..(r as usize + 1) * d];
-                        for (o, v) in dst.iter_mut().zip(&self.dn) {
-                            *o += inv * v;
+            }
+            let g: &[f32] = if j + 1 == layers {
+                &self.glogits[..s * dout]
+            } else {
+                &dhi[0][..s * dout]
+            };
+
+            // ---- head gradients (seed-ascending adds) ----
+            {
+                let input = &self.acts[j];
+                let nbar = &self.nbars[j];
+                let gb = self.grads.get_mut(&self.head[j].0).expect("head w_self grads");
+                for si in 0..s {
+                    let grow_row = &g[si * dout..(si + 1) * dout];
+                    let xs = &input[si * din..(si + 1) * din];
+                    for (a, &xa) in xs.iter().enumerate() {
+                        gb.add_row(a, xa, grow_row);
+                    }
+                }
+                let gb = self.grads.get_mut(&self.head[j].1).expect("head w_neigh grads");
+                for si in 0..s {
+                    let grow_row = &g[si * dout..(si + 1) * dout];
+                    let nb = &nbar[si * din..(si + 1) * din];
+                    for (a, &na) in nb.iter().enumerate() {
+                        gb.add_row(a, na, grow_row);
+                    }
+                }
+                let gb = self.grads.get_mut(&self.head[j].2).expect("head bias grads");
+                for si in 0..s {
+                    gb.add_row(0, 1.0, &g[si * dout..(si + 1) * dout]);
+                }
+            }
+
+            // ---- back-signal into this layer's input rows ----
+            {
+                let dh_in = &mut dlo[j];
+                grow(dh_in, rows * din);
+                dh_in[..rows * din].fill(0.0);
+                let w_self = self.params.get(&self.head[j].0);
+                let w_neigh = self.params.get(&self.head[j].1);
+                for si in 0..s {
+                    let grow_row = &g[si * dout..(si + 1) * dout];
+                    for a in 0..din {
+                        let ws = &w_self[a * dout..(a + 1) * dout];
+                        let wn = &w_neigh[a * dout..(a + 1) * dout];
+                        let mut acc_s = 0f32;
+                        let mut acc_n = 0f32;
+                        for ((&gj, wsj), wnj) in grow_row.iter().zip(ws).zip(wn) {
+                            acc_s += gj * wsj;
+                            acc_n += gj * wnj;
+                        }
+                        dh_in[si * din + a] += acc_s;
+                        self.dn[a] = acc_n;
+                    }
+                    let nbs = blk.neighbors_of(si);
+                    if !nbs.is_empty() {
+                        let inv = 1.0 / nbs.len() as f32;
+                        for &r in nbs {
+                            let dst = &mut dh_in[r as usize * din..(r as usize + 1) * din];
+                            for (o, v) in dst.iter_mut().zip(&self.dn[..din]) {
+                                *o += inv * v;
+                            }
                         }
                     }
                 }
@@ -591,10 +722,13 @@ impl<'a> MinibatchTrainer<'a> {
         }
 
         // ---- scatter into embedding tables (block-row order) ----
-        let plan = self.engine.plan();
-        for (r, &node) in block.nodes.iter().enumerate() {
-            let gv = &self.dx[r * d..(r + 1) * d];
-            scatter_embedding_grad(plan, &self.params, node as usize, gv, &mut self.grads);
+        {
+            let outer = mhb.outer();
+            let dx = &self.dacts[0];
+            for (r, &node) in outer.nodes.iter().enumerate() {
+                let gv = &dx[r * d..(r + 1) * d];
+                scatter_embedding_grad(plan, &self.params, node as usize, gv, &mut self.grads);
+            }
         }
 
         // ---- optimizer step (BTreeMap order: deterministic) ----
@@ -609,194 +743,252 @@ impl<'a> MinibatchTrainer<'a> {
     /// The rayon-parallel step. Produces the **same bits** as
     /// [`step_block_serial`](MinibatchTrainer::step_block_serial) at any
     /// thread count, by preserving the serial per-element accumulation
-    /// order everywhere floats meet:
+    /// order everywhere floats meet, layer by layer:
     ///
-    /// * per-seed forward rows (means, logits, loss grads) are disjoint;
-    ///   per-seed losses land in a buffer summed in seed order;
+    /// * per-seed forward rows (means, affine outputs, loss grads) are
+    ///   disjoint; per-seed losses land in a buffer summed in seed
+    ///   order; the ReLU and its backward mask are elementwise;
     /// * head-weight gradients shard over **W's rows**: each element's
     ///   contributions still arrive in ascending-seed order;
-    /// * `dL/dv` runs in two phases — per-seed back-signals into
-    ///   disjoint rows, then a reverse-topology scatter in which each
-    ///   block row replays its incoming contributions in ascending
-    ///   iteration order (the row's own `W_self` signal merged at its
-    ///   serial position via the self-marker);
+    /// * each layer's `dL/dh` runs in two phases — per-seed
+    ///   back-signals into disjoint rows, then a reverse-topology
+    ///   scatter in which each block row replays its incoming
+    ///   contributions in ascending iteration order (the row's own
+    ///   `W_self` signal merged at its serial position via the
+    ///   self-marker);
     /// * embedding-table gradients shard over **destination rows**
     ///   ([`GradBuffer::sharded_accumulate`]): every shard scans block
     ///   rows in order, so per-element order is block-row ascending,
     ///   exactly as the serial scatter;
     /// * the optimizer updates touched rows independently (order-free).
-    fn step_block_parallel(&mut self, block: &SampledBlock) -> f64 {
+    fn step_block_parallel(&mut self, mhb: &MultiHopBlock) -> f64 {
         let plan = self.engine.plan();
         let d = plan.d;
         let classes = self.ds.spec.classes;
-        let s = block.num_seeds;
-        let rows = block.num_rows();
+        let layers = self.layers;
+        let hidden = self.opts.hidden;
+        let s0 = mhb.num_seeds();
 
-        // ---- scratch sizing ----
-        grow(&mut self.nbar, s * d);
-        grow(&mut self.logits, s * classes);
-        grow(&mut self.glogits, s * classes);
-        grow(&mut self.dx, rows * d);
-        grow(&mut self.dself, s * d);
-        grow(&mut self.dnbuf, s * d);
-        grow(&mut self.inv_deg, s);
-        if self.losses_buf.len() < s {
-            self.losses_buf.resize(s, 0.0);
-        }
-
-        // ---- fused per-seed forward: mean, logits, loss, dlogits ----
-        let gscale = match self.ds.spec.task {
-            TaskKind::MultiClass => 1.0 / s as f32,
-            TaskKind::MultiLabel => 1.0 / (s * classes) as f32,
-        };
-        {
-            let x = &self.x;
-            let labels = &self.ds.labels;
-            let task = self.ds.spec.task;
-            let w_self = self.params.get("head_w_self");
-            let w_neigh = self.params.get("head_w_neigh");
-            let bias = self.params.get("head_b");
-            let nbar_rows = self.nbar[..s * d].par_chunks_mut(d);
-            let logit_rows = self.logits[..s * classes].par_chunks_mut(classes);
-            let glog_rows = self.glogits[..s * classes].par_chunks_mut(classes);
-            let loss_cells = self.losses_buf[..s].par_iter_mut();
-            let fwd = nbar_rows.zip(logit_rows).zip(glog_rows);
-            let fwd = fwd.zip(loss_cells).enumerate();
-            fwd.for_each(|(si, (((nb, lrow), grow_row), loss))| {
-                mean_rows(nb, x, block.neighbors_of(si));
-                let xs = &x[si * d..(si + 1) * d];
-                head_logits_row(xs, nb, w_self, w_neigh, bias, lrow);
-                let node = block.nodes[si] as usize;
-                *loss = loss_and_grad_row(task, labels, node, lrow, grow_row, gscale);
-            });
+        // ---- forward: fused per-seed rows, loss fused into the last
+        // layer exactly as the one-layer engine always has ----
+        for j in 0..layers {
+            let blk = mhb.hop(layers - 1 - j);
+            let s = blk.num_seeds;
+            let (din, dout) = layer_dims(d, classes, hidden, layers, j);
+            grow(&mut self.nbars[j], s * din);
+            let (alo, ahi) = self.acts.split_at_mut(j + 1);
+            let input: &[f32] = &alo[j];
+            let out = &mut ahi[0];
+            grow(out, s * dout);
+            let w_self = self.params.get(&self.head[j].0);
+            let w_neigh = self.params.get(&self.head[j].1);
+            let bias = self.params.get(&self.head[j].2);
+            if j + 1 < layers {
+                let nbar_rows = self.nbars[j][..s * din].par_chunks_mut(din);
+                let out_rows = out[..s * dout].par_chunks_mut(dout);
+                nbar_rows.zip(out_rows).enumerate().for_each(|(si, (nb, orow))| {
+                    mean_rows(nb, input, blk.neighbors_of(si));
+                    sage_affine_row(
+                        &input[si * din..(si + 1) * din],
+                        nb,
+                        w_self,
+                        w_neigh,
+                        bias,
+                        orow,
+                    );
+                    for v in orow.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                });
+            } else {
+                let gscale = match self.ds.spec.task {
+                    TaskKind::MultiClass => 1.0 / s as f32,
+                    TaskKind::MultiLabel => 1.0 / (s * classes) as f32,
+                };
+                grow(&mut self.glogits, s * dout);
+                if self.losses_buf.len() < s {
+                    self.losses_buf.resize(s, 0.0);
+                }
+                let labels = &self.ds.labels;
+                let task = self.ds.spec.task;
+                let nodes = &blk.nodes;
+                let nbar_rows = self.nbars[j][..s * din].par_chunks_mut(din);
+                let out_rows = out[..s * dout].par_chunks_mut(dout);
+                let glog_rows = self.glogits[..s * dout].par_chunks_mut(dout);
+                let loss_cells = self.losses_buf[..s].par_iter_mut();
+                let fwd = nbar_rows.zip(out_rows).zip(glog_rows).zip(loss_cells).enumerate();
+                fwd.for_each(|(si, (((nb, orow), grow_row), loss))| {
+                    mean_rows(nb, input, blk.neighbors_of(si));
+                    sage_affine_row(
+                        &input[si * din..(si + 1) * din],
+                        nb,
+                        w_self,
+                        w_neigh,
+                        bias,
+                        orow,
+                    );
+                    let node = nodes[si] as usize;
+                    *loss = loss_and_grad_row(task, labels, node, orow, grow_row, gscale);
+                });
+            }
         }
         // seed-order sum: the exact f64 additions of the serial loop
-        let loss_sum: f64 = self.losses_buf[..s].iter().sum();
+        let loss_sum: f64 = self.losses_buf[..s0].iter().sum();
 
-        // ---- head gradients (sharded over W's d rows) ----
-        {
-            let x = &self.x;
-            let nbar = &self.nbar;
-            let glog = &self.glogits;
-            let gb = self.grads.get_mut("head_w_self").expect("head_w_self grads");
-            gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
-                for si in 0..s {
-                    let g = &glog[si * classes..(si + 1) * classes];
-                    let xs = &x[si * d..(si + 1) * d];
-                    for a in sh.rows() {
-                        sh.add_row(a, xs[a], g);
+        // ---- backward, outermost layer first ----
+        for j in (0..layers).rev() {
+            let blk = mhb.hop(layers - 1 - j);
+            let s = blk.num_seeds;
+            let rows = blk.num_rows();
+            let (din, dout) = layer_dims(d, classes, hidden, layers, j);
+            let (dlo, dhi) = self.dacts.split_at_mut(j + 1);
+            if j + 1 < layers {
+                // ReLU mask, elementwise — same values as the serial mask
+                let act_out = &self.acts[j + 1];
+                dhi[0][..s * dout]
+                    .par_iter_mut()
+                    .zip(act_out[..s * dout].par_iter())
+                    .for_each(|(gv, &a)| {
+                        if a <= 0.0 {
+                            *gv = 0.0;
+                        }
+                    });
+            }
+            let g: &[f32] = if j + 1 == layers {
+                &self.glogits[..s * dout]
+            } else {
+                &dhi[0][..s * dout]
+            };
+
+            // ---- head gradients (sharded over W's din rows) ----
+            {
+                let input = &self.acts[j];
+                let nbar = &self.nbars[j];
+                let gb = self.grads.get_mut(&self.head[j].0).expect("head w_self grads");
+                gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
+                    for si in 0..s {
+                        let grow_row = &g[si * dout..(si + 1) * dout];
+                        let xs = &input[si * din..(si + 1) * din];
+                        for a in sh.rows() {
+                            sh.add_row(a, xs[a], grow_row);
+                        }
                     }
-                }
-            });
-            let gb = self.grads.get_mut("head_w_neigh").expect("head_w_neigh grads");
-            gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
-                for si in 0..s {
-                    let g = &glog[si * classes..(si + 1) * classes];
-                    let nb = &nbar[si * d..(si + 1) * d];
-                    for a in sh.rows() {
-                        sh.add_row(a, nb[a], g);
+                });
+                let gb = self.grads.get_mut(&self.head[j].1).expect("head w_neigh grads");
+                gb.sharded_accumulate(SCATTER_SHARDS, |sh| {
+                    for si in 0..s {
+                        let grow_row = &g[si * dout..(si + 1) * dout];
+                        let nb = &nbar[si * din..(si + 1) * din];
+                        for a in sh.rows() {
+                            sh.add_row(a, nb[a], grow_row);
+                        }
                     }
+                });
+                // one bias row: serial, preserving the seed-order adds
+                let gb = self.grads.get_mut(&self.head[j].2).expect("head bias grads");
+                for si in 0..s {
+                    gb.add_row(0, 1.0, &g[si * dout..(si + 1) * dout]);
                 }
-            });
-            // one bias row: serial, preserving the seed-order adds
-            let gb = self.grads.get_mut("head_b").expect("head_b grads");
+            }
+
+            // ---- dL/dh phase 1: per-seed back-signals ----
+            grow(&mut self.dself, s * din);
+            grow(&mut self.dnbuf, s * din);
+            {
+                let w_self = self.params.get(&self.head[j].0);
+                let w_neigh = self.params.get(&self.head[j].1);
+                let ds_rows = self.dself[..s * din].par_chunks_mut(din);
+                let dn_rows = self.dnbuf[..s * din].par_chunks_mut(din);
+                ds_rows.zip(dn_rows).enumerate().for_each(|(si, (ds_row, dn_row))| {
+                    let grow_row = &g[si * dout..(si + 1) * dout];
+                    for a in 0..din {
+                        let ws = &w_self[a * dout..(a + 1) * dout];
+                        let wn = &w_neigh[a * dout..(a + 1) * dout];
+                        let mut acc_s = 0f32;
+                        let mut acc_n = 0f32;
+                        for ((&gj, wsj), wnj) in grow_row.iter().zip(ws).zip(wn) {
+                            acc_s += gj * wsj;
+                            acc_n += gj * wnj;
+                        }
+                        ds_row[a] = acc_s;
+                        dn_row[a] = acc_n;
+                    }
+                });
+            }
+            if self.inv_deg.len() < s {
+                self.inv_deg.resize(s, 0.0);
+            }
+            for (si, inv) in self.inv_deg[..s].iter_mut().enumerate() {
+                let deg = blk.neighbors_of(si).len();
+                *inv = if deg == 0 { 0.0 } else { 1.0 / deg as f32 };
+            }
+
+            // ---- dL/dh phase 2: order-preserving reverse scatter ----
+            // Counting-sort the hop topology into row-major incoming
+            // lists. Appending while walking seeds in ascending order
+            // keeps every row's list ascending; a seed row's own entry
+            // (the self-marker, value == row id — impossible for a
+            // topology entry, the graph has no self loops) lands exactly
+            // where the serial loop added its `W_self` signal.
+            self.rev_ptr.clear();
+            self.rev_ptr.resize(rows + 1, 0);
+            for &r in &blk.neigh_idx {
+                self.rev_ptr[r as usize + 1] += 1;
+            }
             for si in 0..s {
-                gb.add_row(0, 1.0, &glog[si * classes..(si + 1) * classes]);
+                self.rev_ptr[si + 1] += 1; // self-marker slot
             }
-        }
-
-        // ---- dL/dv phase 1: per-seed W_self / W_neigh back-signals ----
-        {
-            let w_self = self.params.get("head_w_self");
-            let w_neigh = self.params.get("head_w_neigh");
-            let glog = &self.glogits;
-            let ds_rows = self.dself[..s * d].par_chunks_mut(d);
-            let dn_rows = self.dnbuf[..s * d].par_chunks_mut(d);
-            let signals = ds_rows.zip(dn_rows).enumerate();
-            signals.for_each(|(si, (ds_row, dn_row))| {
-                let g = &glog[si * classes..(si + 1) * classes];
-                for a in 0..d {
-                    let ws = &w_self[a * classes..(a + 1) * classes];
-                    let wn = &w_neigh[a * classes..(a + 1) * classes];
-                    let mut acc_s = 0f32;
-                    let mut acc_n = 0f32;
-                    for ((&gj, wsj), wnj) in g.iter().zip(ws).zip(wn) {
-                        acc_s += gj * wsj;
-                        acc_n += gj * wnj;
-                    }
-                    ds_row[a] = acc_s;
-                    dn_row[a] = acc_n;
-                }
-            });
-        }
-        for (si, inv) in self.inv_deg[..s].iter_mut().enumerate() {
-            let deg = block.neighbors_of(si).len();
-            *inv = if deg == 0 { 0.0 } else { 1.0 / deg as f32 };
-        }
-
-        // ---- dL/dv phase 2: order-preserving reverse scatter ----
-        // Counting-sort the block topology into row-major incoming
-        // lists. Appending while walking seeds in ascending order keeps
-        // every row's list ascending; a seed row's own entry (the
-        // self-marker, value == row id — impossible for a topology
-        // entry, the graph has no self loops) lands exactly where the
-        // serial loop added its `W_self` signal.
-        self.rev_ptr.clear();
-        self.rev_ptr.resize(rows + 1, 0);
-        for &r in &block.neigh_idx {
-            self.rev_ptr[r as usize + 1] += 1;
-        }
-        for si in 0..s {
-            self.rev_ptr[si + 1] += 1; // self-marker slot
-        }
-        for i in 0..rows {
-            self.rev_ptr[i + 1] += self.rev_ptr[i];
-        }
-        let total = self.rev_ptr[rows] as usize;
-        self.rev_cur.clear();
-        self.rev_cur.extend_from_slice(&self.rev_ptr[..rows]);
-        if self.rev_idx.len() < total {
-            self.rev_idx.resize(total, 0);
-        }
-        for si in 0..s {
-            let cur = self.rev_cur[si] as usize;
-            self.rev_idx[cur] = si as u32;
-            self.rev_cur[si] += 1;
-            for &r in block.neighbors_of(si) {
-                let cur = self.rev_cur[r as usize] as usize;
+            for i in 0..rows {
+                self.rev_ptr[i + 1] += self.rev_ptr[i];
+            }
+            let total = self.rev_ptr[rows] as usize;
+            self.rev_cur.clear();
+            self.rev_cur.extend_from_slice(&self.rev_ptr[..rows]);
+            if self.rev_idx.len() < total {
+                self.rev_idx.resize(total, 0);
+            }
+            for si in 0..s {
+                let cur = self.rev_cur[si] as usize;
                 self.rev_idx[cur] = si as u32;
-                self.rev_cur[r as usize] += 1;
+                self.rev_cur[si] += 1;
+                for &r in blk.neighbors_of(si) {
+                    let cur = self.rev_cur[r as usize] as usize;
+                    self.rev_idx[cur] = si as u32;
+                    self.rev_cur[r as usize] += 1;
+                }
             }
-        }
-        {
-            let rev_ptr = &self.rev_ptr;
-            let rev_idx = &self.rev_idx;
-            let dself = &self.dself;
-            let dn = &self.dnbuf;
-            let inv = &self.inv_deg;
-            let dx_rows = self.dx[..rows * d].par_chunks_mut(d);
-            dx_rows.enumerate().for_each(|(r, dst)| {
-                dst.fill(0.0);
-                for &sj in &rev_idx[rev_ptr[r] as usize..rev_ptr[r + 1] as usize] {
-                    let sj = sj as usize;
-                    if sj == r {
-                        // the row's own W_self signal (serial: dx[si] += acc_s)
-                        for (o, v) in dst.iter_mut().zip(&dself[sj * d..(sj + 1) * d]) {
-                            *o += v;
-                        }
-                    } else {
-                        let w = inv[sj];
-                        for (o, v) in dst.iter_mut().zip(&dn[sj * d..(sj + 1) * d]) {
-                            *o += w * v;
+            {
+                let dh_in = &mut dlo[j];
+                grow(dh_in, rows * din);
+                let rev_ptr = &self.rev_ptr;
+                let rev_idx = &self.rev_idx;
+                let dself = &self.dself;
+                let dnb = &self.dnbuf;
+                let inv = &self.inv_deg;
+                dh_in[..rows * din].par_chunks_mut(din).enumerate().for_each(|(r, dst)| {
+                    dst.fill(0.0);
+                    for &sj in &rev_idx[rev_ptr[r] as usize..rev_ptr[r + 1] as usize] {
+                        let sj = sj as usize;
+                        if sj == r {
+                            // the row's own W_self signal
+                            for (o, v) in dst.iter_mut().zip(&dself[sj * din..(sj + 1) * din]) {
+                                *o += v;
+                            }
+                        } else {
+                            let w = inv[sj];
+                            for (o, v) in dst.iter_mut().zip(&dnb[sj * din..(sj + 1) * din]) {
+                                *o += w * v;
+                            }
                         }
                     }
-                }
-            });
+                });
+            }
         }
 
         // ---- embedding-table scatter (destination-row sharding) ----
-        let dx = &self.dx;
-        let nodes = &block.nodes;
+        let outer = mhb.outer();
+        let dx = &self.dacts[0];
+        let nodes = &outer.nodes;
         if let Some(pos) = &plan.position {
             for (j, table) in pos.tables.iter().enumerate() {
                 let z = &pos.z[j];
@@ -813,7 +1005,7 @@ impl<'a> MinibatchTrainer<'a> {
             }
         }
         if let Some(nx) = &plan.node {
-            let h = nx.indices.len();
+            let h = nx.h;
             let idx = &nx.node_major;
             let x_table = self.params.get(&nx.table.name);
             let y = nx.learned_weights.then(|| self.params.get("node_y"));
@@ -869,22 +1061,32 @@ fn grow(buf: &mut Vec<f32>, len: usize) {
     }
 }
 
-/// Train the same one-layer model full-batch over `compose_all` — the
+/// Train the same L-layer model full-batch over `compose_all` — the
 /// reference trainer the minibatch path is pinned against, and the only
-/// host path that materializes the full `n × d` matrix.
+/// host path that materializes the full `n × dim` activation matrices.
 ///
-/// In the oracle configuration ([`SamplerConfig::oracle`]) the minibatch
-/// trainer reproduces this loss trajectory within 1e-5 per epoch; the
-/// gradient scatter here deliberately walks nodes in the same order as
-/// the oracle block (train seeds in split order, then discovered
-/// neighbors) so the two paths agree to float associativity.
+/// In the oracle configuration ([`SamplerConfig::oracle`] with the same
+/// `layers`) the minibatch trainer reproduces this loss trajectory
+/// within 1e-5 per epoch: the forward values per row are independent of
+/// iteration order, and every shared accumulator here (loss sum, head
+/// gradients, back-signal scatters, embedding scatter) deliberately
+/// walks nodes in the oracle multi-hop block's per-hop row order —
+/// train seeds in split order, then each hop's frontier in discovery
+/// order — so the two paths agree to float associativity.
 pub fn train_full_batch(
     ds: &Dataset,
     plan: &EmbeddingPlan,
     opts: &MinibatchOptions,
+    layers: usize,
 ) -> Result<MinibatchOutcome> {
     if plan.dhe.is_some() {
         bail!("full-batch host training does not support DHE (no embedding tables to train)");
+    }
+    if layers == 0 {
+        bail!("at least one SAGE layer required");
+    }
+    if layers > 1 && opts.hidden == 0 {
+        bail!("hidden width must be >= 1 for a {layers}-layer head");
     }
     let n = plan.n;
     let d = plan.d;
@@ -892,23 +1094,62 @@ pub fn train_full_batch(
     if n != ds.graph.num_nodes() {
         bail!("plan is for n = {} but dataset has {} nodes", n, ds.graph.num_nodes());
     }
-    let mut params = init_host_params(plan, classes, opts.seed);
+    let head = head_param_names(layers);
+    let mut params = init_host_params(plan, classes, layers, opts.hidden, opts.seed);
     if opts.verify_compose {
         compose::self_check(plan, &params, 1e-5)
             .map_err(|msg| anyhow!("compose engine self-check failed: {msg}"))?;
     }
     let engine = ComposeEngine::new(plan);
     let mut opt = Optimizer::new(opts.optimizer, opts.lr);
-    let mut grads = make_grad_buffers(plan, classes);
+    let mut grads = make_grad_buffers(plan, classes, layers, opts.hidden);
     let train = &ds.splits.train;
-    let mut v = vec![0f32; n * d]; // the matrix the minibatch path never builds
-    let mut dv = vec![0f32; n * d];
-    let mut is_touched = vec![false; n];
-    let mut touched: Vec<u32> = Vec::with_capacity(train.len());
-    let mut nbar = vec![0f32; d];
-    let mut dn = vec![0f32; d];
-    let mut logits = vec![0f32; classes];
-    let mut glog = vec![0f32; classes];
+
+    // Oracle row orders, one list per hop depth: order[0] is the train
+    // split, order[l + 1] appends the nodes first discovered at hop
+    // l + 1 (scanning the previous list in order, each adjacency in CSR
+    // order) — exactly the per-hop node order of the all-fanout
+    // multi-hop block, which is what keeps every accumulation below in
+    // the minibatch oracle's float order.
+    let mut order: Vec<Vec<u32>> = Vec::with_capacity(layers + 1);
+    {
+        let mut seen = vec![false; n];
+        let first: Vec<u32> = train.to_vec();
+        for &u in &first {
+            seen[u as usize] = true;
+        }
+        order.push(first);
+        for l in 0..layers {
+            let mut nxt = order[l].clone();
+            for &u in &order[l] {
+                for &v in ds.graph.neighbors(u) {
+                    if !seen[v as usize] {
+                        seen[v as usize] = true;
+                        nxt.push(v);
+                    }
+                }
+            }
+            order.push(nxt);
+        }
+    }
+
+    // dense per-level buffers: level 0 is the composed matrix the
+    // minibatch path never builds, level j is layer j-1's output
+    let level_dim = |lvl: usize| -> usize {
+        if lvl == 0 {
+            d
+        } else if lvl == layers {
+            classes
+        } else {
+            opts.hidden
+        }
+    };
+    let mut h: Vec<Vec<f32>> = (0..=layers).map(|lvl| vec![0f32; n * level_dim(lvl)]).collect();
+    let mut dh: Vec<Vec<f32>> = (0..=layers).map(|lvl| vec![0f32; n * level_dim(lvl)]).collect();
+    // per-layer neighbor means, filled by the forward pass and reused
+    // by the W_neigh-gradient loop (same memory class as `h`)
+    let mut nbars: Vec<Vec<f32>> = (0..layers).map(|lvl| vec![0f32; n * level_dim(lvl)]).collect();
+    let mut dn = vec![0f32; d.max(opts.hidden)];
     let gscale = match ds.spec.task {
         TaskKind::MultiClass => 1.0 / train.len() as f32,
         TaskKind::MultiLabel => 1.0 / (train.len() * classes) as f32,
@@ -918,63 +1159,109 @@ pub fn train_full_batch(
     let mut epoch_ns = Vec::with_capacity(opts.epochs);
     for epoch in 0..opts.epochs {
         let e0 = Instant::now();
-        engine.compose_all_into(&params, &mut v);
-        // seeds first (split order), then frontier in discovery order —
-        // the oracle block's exact row order.
-        for &i in train {
-            is_touched[i as usize] = true;
-            touched.push(i);
-        }
-        let w_self = params.get("head_w_self");
-        let w_neigh = params.get("head_w_neigh");
-        let bias = params.get("head_b");
+        engine.compose_all_into(&params, &mut h[0]);
+        forward_dense(ds, &params, &head, d, classes, opts.hidden, layers, &mut h, &mut nbars);
+
+        // ---- loss + dL/dlogits over train seeds (split order) ----
         let mut loss_sum = 0f64;
-        for &i in train {
-            let iu = i as usize;
-            let xs = &v[iu * d..(iu + 1) * d];
-            let nbs = ds.graph.neighbors(i);
-            mean_rows(&mut nbar, &v, nbs);
-            head_logits_row(xs, &nbar, w_self, w_neigh, bias, &mut logits);
-            loss_sum += loss_and_grad_row(ds.spec.task, &ds.labels, iu, &logits, &mut glog, gscale);
-            let gb = grads.get_mut("head_w_self").expect("head grads");
-            for (a, &xa) in xs.iter().enumerate() {
-                gb.add_row(a, xa, &glog);
+        {
+            let top = &h[layers];
+            let dtop = &mut dh[layers];
+            let task = ds.spec.task;
+            for &i in train {
+                let iu = i as usize;
+                let lrow = &top[iu * classes..(iu + 1) * classes];
+                let grow_row = &mut dtop[iu * classes..(iu + 1) * classes];
+                loss_sum += loss_and_grad_row(task, &ds.labels, iu, lrow, grow_row, gscale);
             }
-            let gb = grads.get_mut("head_w_neigh").expect("head grads");
-            for (a, &na) in nbar.iter().enumerate() {
-                gb.add_row(a, na, &glog);
-            }
-            grads.get_mut("head_b").expect("head grads").add_row(0, 1.0, &glog);
-            for a in 0..d {
-                let ws = &w_self[a * classes..(a + 1) * classes];
-                let wn = &w_neigh[a * classes..(a + 1) * classes];
-                let mut acc_s = 0f32;
-                let mut acc_n = 0f32;
-                for ((&gj, wsj), wnj) in glog.iter().zip(ws).zip(wn) {
-                    acc_s += gj * wsj;
-                    acc_n += gj * wnj;
-                }
-                dv[iu * d + a] += acc_s;
-                dn[a] = acc_n;
-            }
-            if !nbs.is_empty() {
-                let inv = 1.0 / nbs.len() as f32;
-                for &u in nbs {
-                    let uu = u as usize;
-                    if !is_touched[uu] {
-                        is_touched[uu] = true;
-                        touched.push(u);
+        }
+
+        // ---- backward, layer by layer, in oracle row order ----
+        for j in (0..layers).rev() {
+            let (din, dout) = layer_dims(d, classes, opts.hidden, layers, j);
+            let seeds = &order[layers - 1 - j];
+            let (dlo, dhi) = dh.split_at_mut(j + 1);
+            let g_out = &mut dhi[0];
+            if j + 1 < layers {
+                // ReLU mask on exactly the rows the minibatch step masks
+                let act = &h[j + 1];
+                for &u in seeds {
+                    let base = u as usize * dout;
+                    for (gv, &a) in
+                        g_out[base..base + dout].iter_mut().zip(&act[base..base + dout])
+                    {
+                        if a <= 0.0 {
+                            *gv = 0.0;
+                        }
                     }
-                    let dst = &mut dv[uu * d..(uu + 1) * d];
-                    for (o, s) in dst.iter_mut().zip(&dn) {
-                        *o += inv * s;
+                }
+            }
+            let g_out: &[f32] = g_out;
+            {
+                let input = &h[j];
+                let gb = grads.get_mut(&head[j].0).expect("head w_self grads");
+                for &u in seeds {
+                    let uu = u as usize;
+                    let grow_row = &g_out[uu * dout..(uu + 1) * dout];
+                    let xs = &input[uu * din..(uu + 1) * din];
+                    for (a, &xa) in xs.iter().enumerate() {
+                        gb.add_row(a, xa, grow_row);
+                    }
+                }
+                let gb = grads.get_mut(&head[j].1).expect("head w_neigh grads");
+                let nbar = &nbars[j];
+                for &u in seeds {
+                    let uu = u as usize;
+                    let grow_row = &g_out[uu * dout..(uu + 1) * dout];
+                    let nb = &nbar[uu * din..(uu + 1) * din];
+                    for (a, &na) in nb.iter().enumerate() {
+                        gb.add_row(a, na, grow_row);
+                    }
+                }
+                let gb = grads.get_mut(&head[j].2).expect("head bias grads");
+                for &u in seeds {
+                    let uu = u as usize;
+                    gb.add_row(0, 1.0, &g_out[uu * dout..(uu + 1) * dout]);
+                }
+            }
+            {
+                let dh_in = &mut dlo[j];
+                let w_self = params.get(&head[j].0);
+                let w_neigh = params.get(&head[j].1);
+                for &u in seeds {
+                    let uu = u as usize;
+                    let grow_row = &g_out[uu * dout..(uu + 1) * dout];
+                    for a in 0..din {
+                        let ws = &w_self[a * dout..(a + 1) * dout];
+                        let wn = &w_neigh[a * dout..(a + 1) * dout];
+                        let mut acc_s = 0f32;
+                        let mut acc_n = 0f32;
+                        for ((&gj, wsj), wnj) in grow_row.iter().zip(ws).zip(wn) {
+                            acc_s += gj * wsj;
+                            acc_n += gj * wnj;
+                        }
+                        dh_in[uu * din + a] += acc_s;
+                        dn[a] = acc_n;
+                    }
+                    let nbs = ds.graph.neighbors(u);
+                    if !nbs.is_empty() {
+                        let inv = 1.0 / nbs.len() as f32;
+                        for &v in nbs {
+                            let vu = v as usize;
+                            let dst = &mut dh_in[vu * din..(vu + 1) * din];
+                            for (o, sig) in dst.iter_mut().zip(&dn[..din]) {
+                                *o += inv * sig;
+                            }
+                        }
                     }
                 }
             }
         }
-        for &u in &touched {
+
+        // ---- embedding scatter (outermost oracle order) ----
+        for &u in &order[layers] {
             let uu = u as usize;
-            let gv = &dv[uu * d..(uu + 1) * d];
+            let gv = &dh[0][uu * d..(uu + 1) * d];
             scatter_embedding_grad(plan, &params, uu, gv, &mut grads);
         }
         opt.begin_step();
@@ -982,12 +1269,9 @@ pub fn train_full_batch(
             opt.apply(name, params.get_mut(name), gb);
             gb.clear();
         }
-        for &u in &touched {
-            let uu = u as usize;
-            dv[uu * d..(uu + 1) * d].fill(0.0);
-            is_touched[uu] = false;
+        for buf in dh.iter_mut() {
+            buf.fill(0.0);
         }
-        touched.clear();
         let loss = loss_sum / train.len() as f64;
         if !loss.is_finite() {
             bail!("non-finite training loss at epoch {epoch}");
@@ -1000,27 +1284,17 @@ pub fn train_full_batch(
     }
 
     // ---- final full-matrix evaluation ----
-    engine.compose_all_into(&params, &mut v);
-    let mut scores = vec![0f32; n * classes];
-    {
-        let w_self = params.get("head_w_self");
-        let w_neigh = params.get("head_w_neigh");
-        let bias = params.get("head_b");
-        for i in 0..n {
-            let xs = &v[i * d..(i + 1) * d];
-            mean_rows(&mut nbar, &v, ds.graph.neighbors(i as u32));
-            let out = &mut scores[i * classes..(i + 1) * classes];
-            head_logits_row(xs, &nbar, w_self, w_neigh, bias, out);
-        }
-    }
+    engine.compose_all_into(&params, &mut h[0]);
+    forward_dense(ds, &params, &head, d, classes, opts.hidden, layers, &mut h, &mut nbars);
+    let scores = &h[layers];
     let (val_metric, test_metric) = match ds.spec.task {
         TaskKind::MultiClass => (
-            accuracy(&scores, classes, &ds.labels, &ds.splits.val),
-            accuracy(&scores, classes, &ds.labels, &ds.splits.test),
+            accuracy(scores, classes, &ds.labels, &ds.splits.val),
+            accuracy(scores, classes, &ds.labels, &ds.splits.test),
         ),
         TaskKind::MultiLabel => (
-            mean_roc_auc(&scores, classes, &ds.labels, &ds.splits.val),
-            mean_roc_auc(&scores, classes, &ds.labels, &ds.splits.test),
+            mean_roc_auc(scores, classes, &ds.labels, &ds.splits.val),
+            mean_roc_auc(scores, classes, &ds.labels, &ds.splits.test),
         ),
     };
     Ok(MinibatchOutcome {
@@ -1033,6 +1307,54 @@ pub fn train_full_batch(
         batches_per_epoch: 1,
         wall: t0.elapsed(),
     })
+}
+
+/// Dense L-layer SAGE forward over every node: `h[0]` must hold the
+/// composed `n × d` matrix; fills `h[1..=layers]` and the per-layer
+/// neighbor-mean matrices `nbars[j]` (`n × din_j`, reused by the
+/// backward pass's `W_neigh` gradients). Per-row values are
+/// independent of iteration order, so this matches the minibatch
+/// forward bit for bit on shared rows.
+#[allow(clippy::too_many_arguments)]
+fn forward_dense(
+    ds: &Dataset,
+    params: &ParamStore,
+    head: &[(String, String, String)],
+    d: usize,
+    classes: usize,
+    hidden: usize,
+    layers: usize,
+    h: &mut [Vec<f32>],
+    nbars: &mut [Vec<f32>],
+) {
+    let n = ds.graph.num_nodes();
+    for j in 0..layers {
+        let (din, dout) = layer_dims(d, classes, hidden, layers, j);
+        let (hlo, hhi) = h.split_at_mut(j + 1);
+        let input = &hlo[j];
+        let out = &mut hhi[0];
+        let nbar = &mut nbars[j];
+        let w_self = params.get(&head[j].0);
+        let w_neigh = params.get(&head[j].1);
+        let bias = params.get(&head[j].2);
+        for i in 0..n {
+            let nb = &mut nbar[i * din..(i + 1) * din];
+            mean_rows(nb, input, ds.graph.neighbors(i as u32));
+            sage_affine_row(
+                &input[i * din..(i + 1) * din],
+                nb,
+                w_self,
+                w_neigh,
+                bias,
+                &mut out[i * dout..(i + 1) * dout],
+            );
+            if j + 1 < layers {
+                for v in out[i * dout..(i + 1) * dout].iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+    }
 }
 
 /// Startup compose verification that respects the minibatch memory
@@ -1059,31 +1381,50 @@ fn verify_compose_bounded(plan: &EmbeddingPlan, params: &ParamStore) -> Result<(
     Ok(())
 }
 
-/// Embedding tables (via `embedding::init_params`) plus the one-layer
-/// SAGE head (`head_w_self`/`head_w_neigh` uniform ±1/√d, `head_b`
-/// zero), deterministically from `seed`.
-fn init_host_params(plan: &EmbeddingPlan, classes: usize, seed: u64) -> ParamStore {
+/// Embedding tables (via `embedding::init_params`) plus the L-layer
+/// SAGE head: per layer, `W_self`/`W_neigh` uniform ±1/√(layer input
+/// dim) and a zero bias, drawn in layer order from one stream keyed by
+/// `seed` — so a one-layer head's draws are exactly the pre-multi-hop
+/// trainer's.
+fn init_host_params(
+    plan: &EmbeddingPlan,
+    classes: usize,
+    layers: usize,
+    hidden: usize,
+    seed: u64,
+) -> ParamStore {
     let mut store = init_params(plan, seed);
-    let d = plan.d;
     let mut rng = Rng::seed_from_u64(mix_seed(&[seed, 0x6EAD]));
-    let a = 1.0 / (d as f32).sqrt();
-    let w_self: Vec<f32> = (0..d * classes).map(|_| rng.gen_f32_range(-a, a)).collect();
-    let w_neigh: Vec<f32> = (0..d * classes).map(|_| rng.gen_f32_range(-a, a)).collect();
-    store.insert("head_w_self", vec![d, classes], w_self);
-    store.insert("head_w_neigh", vec![d, classes], w_neigh);
-    store.insert("head_b", vec![1, classes], vec![0.0; classes]);
+    for (l, (wsn, wnn, bn)) in head_param_names(layers).iter().enumerate() {
+        let (din, dout) = layer_dims(plan.d, classes, hidden, layers, l);
+        let a = 1.0 / (din as f32).sqrt();
+        let w_self: Vec<f32> = (0..din * dout).map(|_| rng.gen_f32_range(-a, a)).collect();
+        let w_neigh: Vec<f32> = (0..din * dout).map(|_| rng.gen_f32_range(-a, a)).collect();
+        store.insert(wsn, vec![din, dout], w_self);
+        store.insert(wnn, vec![din, dout], w_neigh);
+        store.insert(bn, vec![1, dout], vec![0.0; dout]);
+    }
     store
 }
 
-/// One [`GradBuffer`] per trainable table (embedding tables + head).
-fn make_grad_buffers(plan: &EmbeddingPlan, classes: usize) -> BTreeMap<String, GradBuffer> {
+/// One [`GradBuffer`] per trainable table (embedding tables + the
+/// L-layer head).
+fn make_grad_buffers(
+    plan: &EmbeddingPlan,
+    classes: usize,
+    layers: usize,
+    hidden: usize,
+) -> BTreeMap<String, GradBuffer> {
     let mut grads = BTreeMap::new();
     for t in plan.param_shapes() {
         grads.insert(t.name.clone(), GradBuffer::new(t.rows, t.cols));
     }
-    grads.insert("head_w_self".into(), GradBuffer::new(plan.d, classes));
-    grads.insert("head_w_neigh".into(), GradBuffer::new(plan.d, classes));
-    grads.insert("head_b".into(), GradBuffer::new(1, classes));
+    for (l, (wsn, wnn, bn)) in head_param_names(layers).iter().enumerate() {
+        let (din, dout) = layer_dims(plan.d, classes, hidden, layers, l);
+        grads.insert(wsn.clone(), GradBuffer::new(din, dout));
+        grads.insert(wnn.clone(), GradBuffer::new(din, dout));
+        grads.insert(bn.clone(), GradBuffer::new(1, dout));
+    }
     grads
 }
 
@@ -1109,9 +1450,10 @@ fn mean_rows(dst: &mut [f32], mat: &[f32], rows: &[u32]) {
     }
 }
 
-/// `out = bias + W_self^T·xs + W_neigh^T·nbar` for one seed
-/// (`W ∈ R^{d×classes}` row-major).
-fn head_logits_row(
+/// `out = bias + W_self^T·xs + W_neigh^T·nbar` for one row of one SAGE
+/// layer (`W ∈ R^{din×dout}` row-major; `dout = out.len()`). Shared by
+/// every forward path so affine bits can never diverge between them.
+fn sage_affine_row(
     xs: &[f32],
     nbar: &[f32],
     w_self: &[f32],
@@ -1119,11 +1461,11 @@ fn head_logits_row(
     bias: &[f32],
     out: &mut [f32],
 ) {
-    let classes = out.len();
+    let dout = out.len();
     out.copy_from_slice(bias);
     for (a, (&xa, &na)) in xs.iter().zip(nbar).enumerate() {
-        let ws = &w_self[a * classes..(a + 1) * classes];
-        let wn = &w_neigh[a * classes..(a + 1) * classes];
+        let ws = &w_self[a * dout..(a + 1) * dout];
+        let wn = &w_neigh[a * dout..(a + 1) * dout];
         for ((o, wsj), wnj) in out.iter_mut().zip(ws).zip(wn) {
             *o += xa * wsj + na * wnj;
         }
@@ -1178,8 +1520,9 @@ fn loss_and_grad_row(
 /// Backpropagate one node's `dL/dv` row into its embedding tables
 /// (the compose backward): position levels get the leading `d_j`
 /// coordinates (Eq. 11's zero-extension), the node-specific table gets
-/// `y_t · gv` per hash, and learned importance weights get
-/// `⟨X[idx_t], gv⟩` (Eq. 12/13).
+/// `y_t · gv` per hash (indices read from the plan's node-major
+/// layout), and learned importance weights get `⟨X[idx_t], gv⟩`
+/// (Eq. 12/13).
 fn scatter_embedding_grad(
     plan: &EmbeddingPlan,
     params: &ParamStore,
@@ -1195,12 +1538,12 @@ fn scatter_embedding_grad(
         }
     }
     if let Some(nx) = &plan.node {
-        let h = nx.indices.len();
+        let h = nx.h;
         let d = plan.d;
         let x = params.get(&nx.table.name);
         let y = nx.learned_weights.then(|| params.get("node_y"));
-        for t in 0..h {
-            let row = nx.indices[t][node] as usize;
+        for (t, &row) in nx.node_major[node * h..(node + 1) * h].iter().enumerate() {
+            let row = row as usize;
             let w = y.map_or(1.0, |y| y[node * h + t]);
             grads.get_mut(&nx.table.name).expect("node_x grads").add_row(row, w, gv);
             if nx.learned_weights {
@@ -1217,6 +1560,7 @@ mod tests {
     use super::*;
     use crate::data::spec;
     use crate::embedding::EmbeddingMethod;
+    use crate::sampler::Fanout;
 
     fn tiny_dataset() -> Dataset {
         let mut s = spec("synth-arxiv").unwrap();
@@ -1233,7 +1577,7 @@ mod tests {
         let plan = EmbeddingPlan::build(ds.graph.num_nodes(), 16, &method, None, 0);
         let err = MinibatchTrainer::new(&ds, &plan, SamplerConfig::default(), Default::default());
         assert!(err.is_err());
-        assert!(train_full_batch(&ds, &plan, &MinibatchOptions::default()).is_err());
+        assert!(train_full_batch(&ds, &plan, &MinibatchOptions::default(), 1).is_err());
     }
 
     #[test]
@@ -1246,13 +1590,23 @@ mod tests {
             None,
             1,
         );
-        let p = init_host_params(&plan, ds.spec.classes, 7);
+        let p = init_host_params(&plan, ds.spec.classes, 1, 64, 7);
         assert_eq!(p.shape("head_w_self"), &[16, ds.spec.classes]);
         assert_eq!(p.shape("head_w_neigh"), &[16, ds.spec.classes]);
         assert!(p.get("head_b").iter().all(|&b| b == 0.0));
         // deterministic per seed
-        let q = init_host_params(&plan, ds.spec.classes, 7);
+        let q = init_host_params(&plan, ds.spec.classes, 1, 64, 7);
         assert_eq!(p.get("head_w_self"), q.get("head_w_self"));
+        // a 2-layer head gets per-layer names and a hidden mid width
+        let deep = init_host_params(&plan, ds.spec.classes, 2, 24, 7);
+        assert_eq!(deep.shape("head0_w_self"), &[16, 24]);
+        assert_eq!(deep.shape("head1_w_self"), &[24, ds.spec.classes]);
+        assert_eq!(deep.shape("head1_b"), &[1, ds.spec.classes]);
+        // layer 0's draws come first from the same stream, so they
+        // cannot depend on the deeper layers' existence when the input
+        // dim matches
+        assert_eq!(layer_dims(16, ds.spec.classes, 24, 2, 0), (16, 24));
+        assert_eq!(layer_dims(16, ds.spec.classes, 24, 2, 1), (24, ds.spec.classes));
     }
 
     #[test]
@@ -1265,14 +1619,39 @@ mod tests {
             None,
             1,
         );
-        let cfg = SamplerConfig { batch_size: 64, fanout: Fanout::Max(4), shuffle: true };
+        let cfg = SamplerConfig { batch_size: 64, fanouts: Fanout::Max(4).into(), shuffle: true };
         let opts = MinibatchOptions { epochs: 2, ..Default::default() };
         let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        assert_eq!(tr.layers(), 1);
         let out = tr.train().unwrap();
         assert_eq!(out.losses.len(), 2);
         assert!(out.losses.iter().all(|l| l.is_finite()));
         assert!(out.peak_compose_rows < ds.graph.num_nodes());
         assert!((0.0..=1.0).contains(&out.test_metric));
         assert!(out.row().contains("peak_rows"));
+    }
+
+    #[test]
+    fn two_layer_head_trains_with_finite_loss() {
+        let ds = tiny_dataset();
+        let plan = EmbeddingPlan::build(
+            ds.graph.num_nodes(),
+            16,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            3,
+        );
+        let cfg = SamplerConfig {
+            batch_size: 64,
+            fanouts: Fanouts::parse("4,3").unwrap(),
+            shuffle: true,
+        };
+        let opts = MinibatchOptions { epochs: 2, hidden: 16, ..Default::default() };
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        assert_eq!(tr.layers(), 2);
+        let out = tr.train().unwrap();
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        assert!(out.peak_compose_rows < ds.graph.num_nodes());
+        assert!((0.0..=1.0).contains(&out.test_metric));
     }
 }

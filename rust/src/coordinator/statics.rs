@@ -27,8 +27,10 @@ pub fn build_statics(
         out.push(("z".to_string(), HostTensor::I32(z, vec![pos.z.len(), n])));
     }
     if let Some(node) = &plan.node {
+        // hash-major h × n, transposed from the plan's node-major
+        // layout at export time (the ABI shape is unchanged)
         let idx = plan.node_indices_i32().unwrap();
-        out.push(("node_idx".to_string(), HostTensor::I32(idx, vec![node.indices.len(), n])));
+        out.push(("node_idx".to_string(), HostTensor::I32(idx, vec![node.h, n])));
     }
     if let Some(dhe) = &plan.dhe {
         out.push((

@@ -58,7 +58,7 @@ impl<'a> ResolvedPlan<'a> {
             }
         }
         let node = plan.node.as_ref().map(|nx| NodeView {
-            h: nx.indices.len(),
+            h: nx.h,
             table: params.get(&nx.table.name),
             idx: &nx.node_major,
             y: nx.learned_weights.then(|| params.get("node_y")),

@@ -45,35 +45,43 @@ pub struct PositionPlan {
 pub struct NodePlan {
     /// The pooled table `X` (rows × d).
     pub table: TableShape,
-    /// `indices[t][i]` = row of X used by node i under hash t.
-    pub indices: Vec<Vec<u32>>,
-    /// The same hash indices in node-major layout
-    /// (`node_major[i * h + t] == indices[t][i]`), built once at plan
-    /// time: one node's `h` rows sit adjacent, so per-node gathers (the
-    /// compose engine's hot loop) walk this array sequentially instead
-    /// of striding across `h` separate arrays. This deliberately
-    /// duplicates `indices` (`n·h` u32 each); the hash-major copy only
-    /// feeds the scalar oracle and the HLO export today — consolidating
-    /// those onto this layout (and dropping `indices`) is the noted
-    /// follow-up in ROADMAP when the AOT ABI is next touched.
+    /// Number of hash functions `h` (row count of the conceptual
+    /// hash-major index matrix; also `node_y`'s column count when
+    /// `learned_weights` is set).
+    pub h: usize,
+    /// The hash indices, node-major — **the one and only index layout
+    /// in the plan** (the former hash-major `indices` duplicate was
+    /// dropped; this halves plan index memory at large `n`).
+    ///
+    /// Layout contract: `node_major[i * h + t]` = row of `X` used by
+    /// node `i` under hash `t`, for `i < n`, `t < h`. One node's `h`
+    /// entries are adjacent, so per-node gathers (the compose engine's
+    /// hot loop, the trainers' gradient scatter, the scalar oracle)
+    /// walk the array sequentially; hash-major consumers (the `h × n`
+    /// HLO input built by
+    /// [`node_indices_i32`](EmbeddingPlan::node_indices_i32)) transpose
+    /// on export, which runs once per AOT request, never per step.
     pub node_major: Vec<u32>,
     /// Learn per-node importance weights `Y ∈ R^{n×h}`? (else `y ≡ 1`).
     pub learned_weights: bool,
 }
 
 impl NodePlan {
-    /// Build a node plan, deriving the node-major index layout from the
-    /// hash-major `indices`.
+    /// Build a node plan from hash-major `indices` (`indices[t][i]` =
+    /// row of X for node `i` under hash `t` — the natural layout hash
+    /// builders produce), converting once to the node-major layout the
+    /// plan stores.
     fn new(table: TableShape, indices: Vec<Vec<u32>>, learned_weights: bool) -> Self {
         let h = indices.len();
         let n = indices.first().map_or(0, Vec::len);
         let mut node_major = vec![0u32; n * h];
         for (t, idx) in indices.iter().enumerate() {
+            assert_eq!(idx.len(), n, "hash {t} has {} entries, expected {n}", idx.len());
             for (i, &row) in idx.iter().enumerate() {
                 node_major[i * h + t] = row;
             }
         }
-        NodePlan { table, indices, node_major, learned_weights }
+        NodePlan { table, h, node_major, learned_weights }
     }
 }
 
@@ -271,11 +279,7 @@ impl EmbeddingPlan {
         if let Some(nx) = &self.node {
             out.push(nx.table.clone());
             if nx.learned_weights {
-                out.push(TableShape {
-                    name: "node_y".into(),
-                    rows: self.n,
-                    cols: nx.indices.len(),
-                });
+                out.push(TableShape { name: "node_y".into(), rows: self.n, cols: nx.h });
             }
         }
         if let Some(dhe) = &self.dhe {
@@ -301,10 +305,21 @@ impl EmbeddingPlan {
         1.0 - self.num_params() as f64 / self.full_size() as f64
     }
 
-    /// Hash-index arrays flattened `h × n` row-major (HLO input), if any.
+    /// Hash-index arrays flattened `h × n` row-major (HLO input), if
+    /// any. The AOT ABI is hash-major (`out[t * n + i]` = node `i`'s
+    /// row under hash `t`), so this transposes the plan's node-major
+    /// layout on export — a once-per-AOT-request cost.
     pub fn node_indices_i32(&self) -> Option<Vec<i32>> {
         self.node.as_ref().map(|nx| {
-            nx.indices.iter().flat_map(|row| row.iter().map(|&x| x as i32)).collect()
+            let h = nx.h;
+            let n = self.n;
+            let mut out = vec![0i32; n * h];
+            for i in 0..n {
+                for t in 0..h {
+                    out[t * n + i] = nx.node_major[i * h + t] as i32;
+                }
+            }
+            out
         })
     }
 
@@ -393,7 +408,7 @@ mod tests {
         assert_eq!(nx.table.rows, 4 * c);
         for t in 0..2 {
             for i in 0..600 {
-                let idx = nx.indices[t][i] as usize;
+                let idx = nx.node_major[i * nx.h + t] as usize;
                 let part = h.z[0][i] as usize;
                 assert!(idx >= part * c && idx < (part + 1) * c, "node {i} escaped its pool");
             }
@@ -401,19 +416,23 @@ mod tests {
     }
 
     #[test]
-    fn node_major_layout_mirrors_hash_major_indices() {
+    fn node_major_layout_and_hlo_export_agree() {
         for method in [
             EmbeddingMethod::Full,
             EmbeddingMethod::HashEmb { buckets: 30, h: 3 },
             EmbeddingMethod::Bloom { buckets: 17, h: 2 },
         ] {
-            let p = EmbeddingPlan::build(200, 8, &method, None, 9);
+            let n = 200;
+            let p = EmbeddingPlan::build(n, 8, &method, None, 9);
             let nx = p.node.as_ref().unwrap();
-            let h = nx.indices.len();
-            assert_eq!(nx.node_major.len(), 200 * h, "{}", method.name());
-            for t in 0..h {
-                for i in 0..200 {
-                    assert_eq!(nx.node_major[i * h + t], nx.indices[t][i]);
+            assert_eq!(nx.node_major.len(), n * nx.h, "{}", method.name());
+            assert!(nx.node_major.iter().all(|&r| (r as usize) < nx.table.rows));
+            // the h × n HLO export is the exact transpose of node_major
+            let exported = p.node_indices_i32().unwrap();
+            assert_eq!(exported.len(), n * nx.h);
+            for t in 0..nx.h {
+                for i in 0..n {
+                    assert_eq!(exported[t * n + i], nx.node_major[i * nx.h + t] as i32);
                 }
             }
         }

@@ -102,14 +102,17 @@ pub fn compose_embeddings(plan: &EmbeddingPlan, params: &ParamStore) -> Vec<f32>
         }
     }
 
-    // node-specific: v[i] += Σ_t y[i][t] · X[idx_t(i)]
+    // node-specific: v[i] += Σ_t y[i][t] · X[idx_t(i)], reading the
+    // plan's node-major index layout (node i's h rows are adjacent at
+    // `node_major[i * h..(i + 1) * h]` — the same walk the engine does,
+    // with the same i-outer / t-inner accumulation order)
     if let Some(node) = &plan.node {
         let x = params.get(&node.table.name);
-        let h = node.indices.len();
+        let h = node.h;
         let y: Option<&[f32]> = node.learned_weights.then(|| params.get("node_y"));
         for i in 0..n {
-            for t in 0..h {
-                let row = node.indices[t][i] as usize;
+            for (t, &row) in node.node_major[i * h..(i + 1) * h].iter().enumerate() {
+                let row = row as usize;
                 debug_assert!(row < node.table.rows);
                 let w = y.map_or(1.0, |y| y[i * h + t]);
                 let src = &x[row * d..(row + 1) * d];
@@ -235,7 +238,7 @@ mod tests {
         let v2 = compose_embeddings(&plan, &params);
         let node = plan.node.as_ref().unwrap();
         let x = params.get("node_x");
-        let idx = node.indices[1][3] as usize;
+        let idx = node.node_major[3 * node.h + 1] as usize;
         for c in 0..4 {
             let expect = v1[3 * 4 + c] - x[idx * 4 + c];
             assert!((v2[3 * 4 + c] - expect).abs() < 1e-6);
@@ -252,7 +255,7 @@ mod tests {
         let node = plan.node.as_ref().unwrap();
         let x = params.get("node_x");
         for i in 0..n {
-            let (r0, r1) = (node.indices[0][i] as usize, node.indices[1][i] as usize);
+            let (r0, r1) = (node.node_major[i * 2] as usize, node.node_major[i * 2 + 1] as usize);
             for c in 0..4 {
                 let expect = x[r0 * 4 + c] + x[r1 * 4 + c];
                 assert!((v[i * 4 + c] - expect).abs() < 1e-6);

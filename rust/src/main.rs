@@ -15,14 +15,16 @@
 //!   the host-side compose engine (reference vs parallel vs batch paths);
 //!   runs without PJRT artifacts.
 //! * `train-minibatch [--experiment NAME | --dataset D --method M]
-//!   [--batch B] [--fanout F|all] [--epochs N] [--lr LR]
-//!   [--optimizer sgd|adam] [--no-shuffle] [--seed S] [--serial]
-//!   [--prefetch DEPTH] [--json]` — host-side neighbor-sampled
-//!   minibatch training on the compose engine; runs without PJRT
-//!   artifacts and emits a JSON bench record. The pipelined engine
-//!   (prefetched sampling + parallel step) is the default; `--serial`
-//!   selects the single-threaded oracle path (bit-identical losses,
-//!   slower wall clock).
+//!   [--batch B] [--fanout F|all | --fanouts F1,F2,..] [--hidden W]
+//!   [--epochs N] [--lr LR] [--optimizer sgd|adam] [--no-shuffle]
+//!   [--seed S] [--serial] [--prefetch DEPTH] [--json]` — host-side
+//!   neighbor-sampled minibatch training on the compose engine; runs
+//!   without PJRT artifacts and emits a JSON bench record. The fanout
+//!   list's length is the SAGE head's depth (`--fanouts 10,5` = a
+//!   2-layer head over 2-hop blocks; `--hidden` sets its intermediate
+//!   width). The pipelined engine (prefetched sampling + parallel
+//!   step) is the default; `--serial` selects the single-threaded
+//!   oracle path (bit-identical losses, slower wall clock).
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
 //!   benchmark the partitioner pipeline (scalar vs parallel matching,
 //!   reference vs CSR contraction, end-to-end partition, hierarchy);
@@ -43,7 +45,7 @@ use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
 use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
 use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
 use poshashemb::runtime::{Manifest, RuntimeClient};
-use poshashemb::sampler::{Fanout, SamplerConfig};
+use poshashemb::sampler::{Fanout, Fanouts, SamplerConfig};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -109,7 +111,8 @@ fn print_help() {
          partition --dataset D --k K [--levels L]   run the multilevel partitioner\n\
          train --experiment NAME [--seed S] [--epochs N] [--verbose]\n\
          train-minibatch [--experiment NAME | --dataset D --method M] [--batch B]\n\
-                         [--fanout F|all] [--epochs N] [--lr LR] [--optimizer sgd|adam]\n\
+                         [--fanout F|all | --fanouts F1,F2,..] [--hidden W]\n\
+                         [--epochs N] [--lr LR] [--optimizer sgd|adam]\n\
                          [--no-shuffle] [--seed S] [--serial] [--prefetch DEPTH]\n\
                          [--verbose] [--json]\n\
          experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table\n\
@@ -293,8 +296,20 @@ fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
             bail!("--batch must be >= 1");
         }
     }
+    if flags.contains_key("fanout") && flags.contains_key("fanouts") {
+        bail!("--fanouts already sets every hop's fanout; drop --fanout");
+    }
     if let Some(f) = flags.get("fanout") {
-        cfg.fanout = Fanout::parse(f).map_err(|e| anyhow!(e))?;
+        cfg.fanouts = Fanouts::single(Fanout::parse(f).map_err(|e| anyhow!(e))?);
+    }
+    if let Some(f) = flags.get("fanouts") {
+        cfg.fanouts = Fanouts::parse(f).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(w) = flags.get("hidden") {
+        opts.hidden = w.parse()?;
+        if opts.hidden == 0 {
+            bail!("--hidden must be >= 1");
+        }
     }
     if flags.contains_key("no-shuffle") {
         cfg.shuffle = false;
@@ -324,20 +339,21 @@ fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
     }
     opts.verbose = flags.contains_key("verbose");
     eprintln!(
-        "minibatch train: {label} n={} d={} method={} batch={} fanout={} epochs={} {} lr={} \
-         {} prefetch={}",
+        "minibatch train: {label} n={} d={} method={} batch={} fanouts={} layers={} epochs={} \
+         {} lr={} {} prefetch={}",
         plan.n,
         plan.d,
         plan.method.name(),
         cfg.batch_size,
-        cfg.fanout,
+        cfg.fanouts,
+        cfg.fanouts.layers(),
         opts.epochs,
         opts.optimizer.as_str(),
         opts.lr,
         if opts.parallel { "pipelined" } else { "serial" },
         opts.prefetch
     );
-    let record = bench_minibatch(&dsname, &ds, &plan, cfg, &opts)?;
+    let record = bench_minibatch(&dsname, &ds, &plan, &cfg, &opts)?;
     if flags.contains_key("json") {
         println!("{}", serde_json::to_string_pretty(&record)?);
     } else {

@@ -10,24 +10,33 @@
 //! plus a bounded sampled neighborhood — and composes only those rows.
 //!
 //! **Determinism invariant.** Every random draw is keyed by
-//! [`mix_seed`] over `(stream seed, epoch, batch, node)` and realized
-//! with the crate's own [`Rng`](crate::util::rng::Rng), so a run is
-//! reproducible bit-for-bit at any rayon thread count and regardless of
-//! scheduling: the same `(seed, epoch, batch)` always yields the same
-//! batches and the same sampled blocks. `rust/tests/minibatch.rs` pins
-//! this at 1 vs 4 threads.
+//! [`mix_seed`] over `(stream seed, epoch, batch, layer, node)` — hop 0
+//! uses the caller's stream seed verbatim, each deeper hop re-keys its
+//! own stream — and realized with the crate's own
+//! [`Rng`](crate::util::rng::Rng), so a run is reproducible bit-for-bit
+//! at any rayon thread count and regardless of scheduling: the same
+//! `(seed, epoch, batch)` always yields the same batches and the same
+//! sampled blocks, single- or multi-hop. `rust/tests/minibatch.rs` and
+//! `rust/tests/multihop.rs` pin this at 1 vs 4 threads.
 //!
-//! **Oracle configuration.** [`SamplerConfig::oracle`] (fanout = ∞, one
-//! batch = every train node, no shuffle) makes the minibatch data path
-//! mathematically identical to full-batch training — the equivalence the
-//! minibatch trainer is tested against.
+//! **Multi-hop blocks.** Deeper GNN heads need deeper neighborhoods:
+//! [`NeighborSampler::sample_multi_into`] chains one [`SampledBlock`]
+//! per hop into a [`MultiHopBlock`], outer-to-inner — hop 0 is the
+//! output layer's topology over the batch seeds, and each next hop
+//! takes the previous hop's full node list as its seeds, so the last
+//! hop's `nodes` is the complete set of rows a step composes.
+//!
+//! **Oracle configuration.** [`SamplerConfig::oracle`] (every fanout =
+//! ∞, one batch = every train node, no shuffle) makes the minibatch
+//! data path mathematically identical to full-batch training — the
+//! equivalence the minibatch trainer is tested against.
 
 mod batcher;
 mod neighbor;
 mod prefetch;
 
 pub use batcher::SeedBatcher;
-pub use neighbor::{NeighborSampler, SampledBlock};
+pub use neighbor::{MultiHopBlock, NeighborSampler, SampledBlock};
 pub use prefetch::BlockPrefetcher;
 
 /// Per-seed neighbor cap for one sampled hop.
@@ -69,14 +78,91 @@ impl std::fmt::Display for Fanout {
     }
 }
 
+/// Per-layer fanouts for multi-hop sampling: entry `l` caps hop `l`
+/// (hop 0 is the seeds' direct neighborhood and feeds the head's
+/// **last** SAGE layer, so `Fanouts::parse("10,5")` samples 10 direct
+/// neighbors per seed and 5 neighbors per frontier node). The number
+/// of entries is the number of sampled hops and therefore the SAGE
+/// head's depth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fanouts(Vec<Fanout>);
+
+impl Fanouts {
+    /// Fanouts from an explicit per-hop list (must be non-empty).
+    pub fn new(fanouts: Vec<Fanout>) -> Self {
+        assert!(!fanouts.is_empty(), "at least one fanout layer required");
+        Fanouts(fanouts)
+    }
+
+    /// Single-hop fanouts (the classic one-layer configuration).
+    pub fn single(fanout: Fanout) -> Self {
+        Fanouts(vec![fanout])
+    }
+
+    /// `layers` unbounded hops — the full-neighborhood configuration
+    /// evaluation and the full-batch-equivalence oracle use.
+    pub fn all(layers: usize) -> Self {
+        Fanouts(vec![Fanout::All; layers.max(1)])
+    }
+
+    /// Number of sampled hops (= SAGE head depth).
+    pub fn layers(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Fanout of hop `l`.
+    pub fn get(&self, l: usize) -> Fanout {
+        self.0[l]
+    }
+
+    /// The per-hop fanouts as a slice.
+    pub fn as_slice(&self) -> &[Fanout] {
+        &self.0
+    }
+
+    /// Per-hop caps as options (`None` = unbounded), for bench records.
+    pub fn limits(&self) -> Vec<Option<usize>> {
+        self.0.iter().map(|f| f.limit()).collect()
+    }
+
+    /// Parse a CLI-style comma-separated list, e.g. `10,5` or `all,8`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let v: Result<Vec<Fanout>, String> = s.split(',').map(Fanout::parse).collect();
+        let v = v?;
+        if v.is_empty() {
+            return Err("empty fanout list".to_string());
+        }
+        Ok(Fanouts(v))
+    }
+}
+
+impl From<Fanout> for Fanouts {
+    fn from(f: Fanout) -> Self {
+        Fanouts::single(f)
+    }
+}
+
+impl std::fmt::Display for Fanouts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (l, fan) in self.0.iter().enumerate() {
+            if l > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{fan}")?;
+        }
+        Ok(())
+    }
+}
+
 /// Sampling knobs for minibatch training (carried on
 /// [`Experiment`](crate::config::Experiment); CLI flags override).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SamplerConfig {
     /// Seed nodes per batch.
     pub batch_size: usize,
-    /// Neighbor fanout per seed.
-    pub fanout: Fanout,
+    /// Per-hop neighbor fanouts; the list length is the number of
+    /// sampled hops and the SAGE head's layer count.
+    pub fanouts: Fanouts,
     /// Reshuffle the seed order every epoch (disable for oracle-parity
     /// runs, where batch order must match the full-batch split order).
     pub shuffle: bool,
@@ -84,17 +170,22 @@ pub struct SamplerConfig {
 
 impl Default for SamplerConfig {
     fn default() -> Self {
-        SamplerConfig { batch_size: 512, fanout: Fanout::Max(10), shuffle: true }
+        SamplerConfig { batch_size: 512, fanouts: Fanouts::single(Fanout::Max(10)), shuffle: true }
     }
 }
 
 impl SamplerConfig {
     /// The full-batch-equivalence oracle configuration: one batch holding
-    /// all `num_train` seeds, every neighbor taken, no epoch shuffle.
-    /// With these knobs the minibatch trainer computes the same epoch
-    /// update as the full-batch trainer (tested to 1e-5 per epoch).
-    pub fn oracle(num_train: usize) -> Self {
-        SamplerConfig { batch_size: num_train.max(1), fanout: Fanout::All, shuffle: false }
+    /// all `num_train` seeds, every neighbor taken at every hop, no
+    /// epoch shuffle. With these knobs the `layers`-deep minibatch
+    /// trainer computes the same epoch update as the `layers`-deep
+    /// full-batch trainer (tested to 1e-5 per epoch).
+    pub fn oracle(num_train: usize, layers: usize) -> Self {
+        SamplerConfig {
+            batch_size: num_train.max(1),
+            fanouts: Fanouts::all(layers),
+            shuffle: false,
+        }
     }
 }
 
@@ -139,11 +230,36 @@ mod tests {
 
     #[test]
     fn oracle_config_shape() {
-        let c = SamplerConfig::oracle(123);
+        let c = SamplerConfig::oracle(123, 2);
         assert_eq!(c.batch_size, 123);
-        assert_eq!(c.fanout, Fanout::All);
+        assert_eq!(c.fanouts, Fanouts::all(2));
+        assert_eq!(c.fanouts.layers(), 2);
         assert!(!c.shuffle);
-        // degenerate split still yields a usable config
-        assert_eq!(SamplerConfig::oracle(0).batch_size, 1);
+        // degenerate inputs still yield a usable config
+        let degenerate = SamplerConfig::oracle(0, 0);
+        assert_eq!(degenerate.batch_size, 1);
+        assert_eq!(degenerate.fanouts.layers(), 1);
+    }
+
+    #[test]
+    fn fanouts_parse_display_roundtrip() {
+        let f = Fanouts::parse("10,5").unwrap();
+        assert_eq!(f.layers(), 2);
+        assert_eq!(f.get(0), Fanout::Max(10));
+        assert_eq!(f.get(1), Fanout::Max(5));
+        assert_eq!(f.limits(), vec![Some(10), Some(5)]);
+        assert_eq!(f.to_string(), "10,5");
+        let mixed = Fanouts::parse("all,8").unwrap();
+        assert_eq!(mixed.get(0), Fanout::All);
+        assert_eq!(mixed.to_string(), "all,8");
+        assert!(Fanouts::parse("10,x").is_err());
+        assert_eq!(Fanouts::from(Fanout::Max(3)), Fanouts::single(Fanout::Max(3)));
+        assert_eq!(Fanouts::all(3).as_slice(), &[Fanout::All; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one fanout")]
+    fn empty_fanout_list_rejected() {
+        Fanouts::new(Vec::new());
     }
 }

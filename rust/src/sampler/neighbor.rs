@@ -1,8 +1,18 @@
-//! Fanout-bounded uniform neighbor sampling on CSR graphs.
+//! Fanout-bounded uniform neighbor sampling on CSR graphs: one-hop
+//! [`SampledBlock`]s and their multi-hop chaining into
+//! [`MultiHopBlock`]s for deep SAGE heads.
 
-use super::{mix_seed, Fanout};
+use super::{mix_seed, Fanout, Fanouts};
 use crate::graph::CsrGraph;
 use crate::util::rng::Rng;
+
+/// Stream-seed domain tag for hops beyond the first: hop `l > 0` draws
+/// from `mix_seed(seed, HOP_STREAM_TAG, l)`, so every layer has an
+/// independent per-`(seed, epoch, batch, layer, node)` RNG stream while
+/// hop 0 keeps the caller's stream verbatim — which is what makes a
+/// one-hop multi-hop block bit-identical to the classic single-hop
+/// sampler (`rust/tests/multihop.rs`).
+const HOP_STREAM_TAG: u64 = 0x4A7_E5;
 
 /// One sampled computation block: the node rows a minibatch step
 /// composes, plus the seed → sampled-neighbor topology over those rows.
@@ -41,45 +51,118 @@ impl SampledBlock {
     }
 }
 
-/// Uniform neighbor sampler over a [`CsrGraph`], bounded by a [`Fanout`].
+/// A chain of per-hop [`SampledBlock`]s for an L-layer SAGE head,
+/// sampled outer-to-inner.
+///
+/// Layout invariants (pinned by `rust/tests/multihop.rs`):
+/// * `hops[0]` is the **output layer's** topology: its seeds are the
+///   batch's seed nodes.
+/// * `hops[l + 1]`'s seeds are exactly `hops[l].nodes` — same ids, same
+///   order — so `hops[l].nodes` is always a prefix of
+///   `hops[l + 1].nodes`, and `hops[l]`'s local row indices are valid
+///   row indices into every deeper hop's feature matrix.
+/// * The **last** hop's `nodes` is the complete set of rows a step
+///   composes ([`num_rows`](MultiHopBlock::num_rows) ×`d` is the peak
+///   compose allocation).
+///
+/// Forward pass mapping for an `L`-layer head: SAGE layer `j`
+/// (`j = 0` reads the composed embeddings) aggregates with the topology
+/// of `hops[L - 1 - j]`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MultiHopBlock {
+    /// Per-hop blocks, outer-to-inner as sampled (see type docs).
+    pub hops: Vec<SampledBlock>,
+}
+
+impl MultiHopBlock {
+    /// Number of sampled hops (= SAGE head depth).
+    pub fn num_hops(&self) -> usize {
+        self.hops.len()
+    }
+
+    /// The batch's seed-node count (loss rows).
+    pub fn num_seeds(&self) -> usize {
+        self.hops.first().map_or(0, |b| b.num_seeds)
+    }
+
+    /// Total rows to compose: the outermost (last) hop's node count.
+    pub fn num_rows(&self) -> usize {
+        self.hops.last().map_or(0, SampledBlock::num_rows)
+    }
+
+    /// The outermost hop — the block whose `nodes` a step composes.
+    pub fn outer(&self) -> &SampledBlock {
+        self.hops.last().expect("empty MultiHopBlock")
+    }
+
+    /// The hop-`l` block (0 = seeds' direct neighborhood).
+    pub fn hop(&self, l: usize) -> &SampledBlock {
+        &self.hops[l]
+    }
+}
+
+/// Uniform neighbor sampler over a [`CsrGraph`], bounded per hop by a
+/// [`Fanout`].
 ///
 /// Seeds with degree ≤ fanout keep their whole neighborhood (in
 /// adjacency order); larger neighborhoods are sampled without
 /// replacement by a partial Fisher–Yates draw whose RNG is keyed by
-/// `(stream seed, epoch, batch, node)` via [`mix_seed`] — so every block
-/// is reproducible at any thread count, and resampling the same batch
-/// coordinates always returns the same block.
+/// `(hop stream seed, epoch, batch, node)` via [`mix_seed`] — hop 0's
+/// stream is the constructor's `seed` verbatim, deeper hops re-key
+/// with a domain tag — so every block is reproducible at any thread
+/// count, and resampling the same batch coordinates always returns the
+/// same (multi-hop) block.
 ///
 /// The sampler owns a `global → local` scratch array (`u32::MAX` =
-/// absent, restored after every call), so block construction does no
-/// hashing and allocates only the block itself.
+/// absent, restored after every call), shared across hops, so block
+/// construction does no hashing and allocates only the block itself.
 pub struct NeighborSampler<'g> {
     graph: &'g CsrGraph,
-    fanout: Fanout,
-    seed: u64,
+    /// Per-hop (fanout, stream seed).
+    hops: Vec<(Fanout, u64)>,
     node_to_local: Vec<u32>,
     pick: Vec<u32>,
 }
 
 impl<'g> NeighborSampler<'g> {
-    /// Sampler over `graph` with the given fanout; `seed` keys all draws.
+    /// Single-hop sampler over `graph`; `seed` keys all draws.
     pub fn new(graph: &'g CsrGraph, fanout: Fanout, seed: u64) -> Self {
+        Self::multi_hop(graph, &Fanouts::single(fanout), seed)
+    }
+
+    /// Multi-hop sampler: one chained hop per [`Fanouts`] entry. Hop 0
+    /// draws from `seed`'s stream exactly as a single-hop sampler
+    /// would; hop `l > 0` draws from an independent re-keyed stream.
+    pub fn multi_hop(graph: &'g CsrGraph, fanouts: &Fanouts, seed: u64) -> Self {
+        let hops = fanouts
+            .as_slice()
+            .iter()
+            .enumerate()
+            .map(|(l, &f)| match l {
+                0 => (f, seed),
+                _ => (f, mix_seed(&[seed, HOP_STREAM_TAG, l as u64])),
+            })
+            .collect();
         NeighborSampler {
             graph,
-            fanout,
-            seed,
+            hops,
             node_to_local: vec![u32::MAX; graph.num_nodes()],
             pick: Vec::new(),
         }
     }
 
-    /// The configured fanout.
+    /// The hop-0 fanout.
     pub fn fanout(&self) -> Fanout {
-        self.fanout
+        self.hops[0].0
     }
 
-    /// Sample the one-hop block for `seeds` (distinct ids) at batch
-    /// coordinates `(epoch, batch)`. Deterministic per
+    /// Number of sampled hops per multi-hop block.
+    pub fn num_hops(&self) -> usize {
+        self.hops.len()
+    }
+
+    /// Sample the one-hop (hop 0) block for `seeds` (distinct ids) at
+    /// batch coordinates `(epoch, batch)`. Deterministic per
     /// `(sampler seed, epoch, batch)`; seed order is preserved.
     pub fn sample_block(&mut self, seeds: &[u32], epoch: usize, batch: usize) -> SampledBlock {
         let mut block = SampledBlock::default();
@@ -99,6 +182,59 @@ impl<'g> NeighborSampler<'g> {
         batch: usize,
         block: &mut SampledBlock,
     ) {
+        self.sample_hop_into(0, seeds, epoch, batch, block);
+    }
+
+    /// Sample the full hop chain for `seeds` at `(epoch, batch)` —
+    /// allocating convenience over
+    /// [`sample_multi_into`](NeighborSampler::sample_multi_into).
+    pub fn sample_multi(&mut self, seeds: &[u32], epoch: usize, batch: usize) -> MultiHopBlock {
+        let mut mhb = MultiHopBlock::default();
+        self.sample_multi_into(seeds, epoch, batch, &mut mhb);
+        mhb
+    }
+
+    /// Sample the full hop chain into a caller-owned [`MultiHopBlock`],
+    /// reusing its per-hop vectors' capacity. Hop 0 samples around
+    /// `seeds`; hop `l + 1` samples around hop `l`'s complete node list
+    /// (so each hop's nodes form a prefix of the next hop's). The
+    /// result is a pure function of `(sampler seed, epoch, batch)`.
+    pub fn sample_multi_into(
+        &mut self,
+        seeds: &[u32],
+        epoch: usize,
+        batch: usize,
+        mhb: &mut MultiHopBlock,
+    ) {
+        let hops = self.hops.len();
+        mhb.hops.truncate(hops);
+        mhb.hops.resize_with(hops, SampledBlock::default);
+        for l in 0..hops {
+            // split so hop l - 1's nodes (this hop's seeds) and hop l's
+            // output block can be borrowed at once
+            let (done, rest) = mhb.hops.split_at_mut(l);
+            let block = &mut rest[0];
+            match done.last() {
+                None => self.sample_hop_into(l, seeds, epoch, batch, block),
+                Some(prev) => {
+                    let prev_nodes: &[u32] = &prev.nodes;
+                    self.sample_hop_into(l, prev_nodes, epoch, batch, block);
+                }
+            }
+        }
+    }
+
+    /// One hop's sampling kernel: hop `hop`'s (fanout, stream) applied
+    /// to `seeds`, writing `block`.
+    fn sample_hop_into(
+        &mut self,
+        hop: usize,
+        seeds: &[u32],
+        epoch: usize,
+        batch: usize,
+        block: &mut SampledBlock,
+    ) {
+        let (fanout, stream) = self.hops[hop];
         let n = self.graph.num_nodes() as u32;
         let nodes = &mut block.nodes;
         nodes.clear();
@@ -120,13 +256,14 @@ impl<'g> NeighborSampler<'g> {
             // `sampled` selects the indirection: the common no-sampling
             // path (degree ≤ fanout, or Fanout::All) walks `adj`
             // directly and never touches the `pick` scratch
-            let (take, sampled) = match self.fanout.limit() {
+            let (take, sampled) = match fanout.limit() {
                 Some(f) if adj.len() > f => {
                     // partial Fisher–Yates over adjacency positions; the
-                    // per-(seed, epoch, batch, node) stream makes the
-                    // draw independent of scheduling and batch layout
+                    // per-(seed, epoch, batch, layer, node) stream makes
+                    // the draw independent of scheduling, batch layout
+                    // and hop structure
                     let mut rng = Rng::seed_from_u64(mix_seed(&[
-                        self.seed,
+                        stream,
                         epoch as u64,
                         batch as u64,
                         s as u64,
@@ -230,5 +367,51 @@ mod tests {
     fn duplicate_seeds_rejected() {
         let g = path_graph(3);
         NeighborSampler::new(&g, Fanout::All, 0).sample_block(&[1, 1], 0, 0);
+    }
+
+    #[test]
+    fn single_hop_multi_block_matches_sample_block_bits() {
+        let g = path_graph(9);
+        let seeds = [2u32, 5, 8];
+        let mut a = NeighborSampler::new(&g, Fanout::Max(1), 3);
+        let mut b = NeighborSampler::multi_hop(&g, &Fanouts::single(Fanout::Max(1)), 3);
+        let single = a.sample_block(&seeds, 4, 2);
+        let multi = b.sample_multi(&seeds, 4, 2);
+        assert_eq!(multi.num_hops(), 1);
+        assert_eq!(multi.hops[0], single);
+        assert_eq!(multi.num_seeds(), 3);
+        assert_eq!(multi.num_rows(), single.num_rows());
+    }
+
+    #[test]
+    fn multi_hop_chains_each_hop_on_the_previous_nodes() {
+        let g = path_graph(12);
+        let fanouts = Fanouts::parse("2,2").unwrap();
+        let mut s = NeighborSampler::multi_hop(&g, &fanouts, 7);
+        let mhb = s.sample_multi(&[0, 6], 1, 0);
+        assert_eq!(mhb.num_hops(), 2);
+        // hop l's nodes are a prefix of hop l+1's, in the same order
+        let h0 = &mhb.hops[0];
+        let h1 = &mhb.hops[1];
+        assert_eq!(h1.num_seeds, h0.num_rows());
+        assert_eq!(&h1.nodes[..h0.nodes.len()], &h0.nodes[..]);
+        assert_eq!(mhb.outer().nodes, h1.nodes);
+        // resampling the same coordinates reproduces the chain exactly
+        assert_eq!(mhb, s.sample_multi(&[0, 6], 1, 0));
+        // recycled multi-hop blocks resample identically
+        let mut reused = s.sample_multi(&[3], 9, 9);
+        s.sample_multi_into(&[0, 6], 1, 0, &mut reused);
+        assert_eq!(mhb, reused);
+    }
+
+    #[test]
+    fn multi_hop_block_shrinks_when_sampler_has_fewer_hops() {
+        let g = path_graph(6);
+        let mut deep = NeighborSampler::multi_hop(&g, &Fanouts::parse("1,1,1").unwrap(), 0);
+        let mut shallow = NeighborSampler::new(&g, Fanout::Max(1), 0);
+        let mut mhb = deep.sample_multi(&[2], 0, 0);
+        assert_eq!(mhb.num_hops(), 3);
+        shallow.sample_multi_into(&[2], 0, 0, &mut mhb);
+        assert_eq!(mhb.num_hops(), 1);
     }
 }

@@ -3,22 +3,22 @@
 //!
 //! The prefetcher runs a dedicated sampler thread (a plain scoped OS
 //! thread — rayon's pool stays free for the compute phases) that walks
-//! the epoch/batch schedule in order and pushes each [`SampledBlock`]
+//! the epoch/batch schedule in order and pushes each [`MultiHopBlock`]
 //! through a fixed-capacity channel. Because every draw is keyed per
-//! `(stream seed, epoch, batch, node)` ([`mix_seed`](super::mix_seed)),
-//! sampling ahead of the trainer **cannot** change what any block
-//! contains; because the channel is ordered and single-producer /
-//! single-consumer, the trainer receives blocks in exactly the serial
-//! loop's batch order. The only observable difference from sampling
-//! inline is wall time.
+//! `(hop stream seed, epoch, batch, node)`
+//! ([`mix_seed`](super::mix_seed)), sampling ahead of the trainer
+//! **cannot** change what any block contains; because the channel is
+//! ordered and single-producer / single-consumer, the trainer receives
+//! blocks in exactly the serial loop's batch order. The only observable
+//! difference from sampling inline is wall time.
 //!
 //! Blocks the trainer has finished stepping flow back through an
 //! unbounded return channel and are reused via
-//! [`NeighborSampler::sample_block_into`], so steady-state sampling is
+//! [`NeighborSampler::sample_multi_into`], so steady-state sampling is
 //! allocation-free: after the first `depth + in-flight` blocks, every
-//! batch recycles an earlier batch's vectors.
+//! batch recycles an earlier batch's per-hop vectors.
 
-use super::{Fanout, NeighborSampler, SampledBlock, SeedBatcher};
+use super::{Fanouts, MultiHopBlock, NeighborSampler, SeedBatcher};
 use crate::graph::CsrGraph;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::thread::Scope;
@@ -30,8 +30,8 @@ use std::thread::Scope;
 /// ends (it exits on its own once all blocks are delivered, or as soon
 /// as the receiver is dropped mid-run).
 pub struct BlockPrefetcher {
-    rx: Receiver<SampledBlock>,
-    pool: Sender<SampledBlock>,
+    rx: Receiver<MultiHopBlock>,
+    pool: Sender<MultiHopBlock>,
 }
 
 impl BlockPrefetcher {
@@ -41,27 +41,27 @@ impl BlockPrefetcher {
     /// `depth` bounds how many sampled blocks may sit ready ahead of
     /// the trainer (clamped to ≥ 1; 2 is classic double buffering).
     /// `stream_seed` must be the same sampler stream seed a serial run
-    /// would use — the blocks are then bit-identical to serial
-    /// sampling.
+    /// would use — the blocks are then bit-identical to inline
+    /// sampling, at any hop count.
     pub fn spawn<'scope, 'env>(
         scope: &'scope Scope<'scope, 'env>,
         graph: &'env CsrGraph,
         batcher: SeedBatcher,
-        fanout: Fanout,
+        fanouts: Fanouts,
         stream_seed: u64,
         epochs: usize,
         depth: usize,
     ) -> BlockPrefetcher {
-        let (tx, rx) = sync_channel::<SampledBlock>(depth.max(1));
-        let (pool_tx, pool_rx) = channel::<SampledBlock>();
+        let (tx, rx) = sync_channel::<MultiHopBlock>(depth.max(1));
+        let (pool_tx, pool_rx) = channel::<MultiHopBlock>();
         scope.spawn(move || {
-            let mut sampler = NeighborSampler::new(graph, fanout, stream_seed);
+            let mut sampler = NeighborSampler::multi_hop(graph, &fanouts, stream_seed);
             for epoch in 0..epochs {
                 let batches = batcher.epoch_batches(epoch);
                 for (bi, seeds) in batches.iter().enumerate() {
                     // recycle a stepped block's buffers when one is back
                     let mut block = pool_rx.try_recv().unwrap_or_default();
-                    sampler.sample_block_into(seeds, epoch, bi, &mut block);
+                    sampler.sample_multi_into(seeds, epoch, bi, &mut block);
                     if tx.send(block).is_err() {
                         // trainer dropped the stream (error mid-run):
                         // stop sampling and let the scope join us
@@ -76,14 +76,14 @@ impl BlockPrefetcher {
     /// Receive the next block, in `(epoch, batch)` order. `Err` only if
     /// the sampler thread stopped early (it never does on its own — a
     /// panic over there surfaces when the enclosing scope joins).
-    pub fn recv(&self) -> Result<SampledBlock, std::sync::mpsc::RecvError> {
+    pub fn recv(&self) -> Result<MultiHopBlock, std::sync::mpsc::RecvError> {
         self.rx.recv()
     }
 
     /// Hand a stepped block's buffers back for reuse. Never fails: the
     /// prefetcher owns both channel ends' lifetimes within one scope,
     /// and a sampler thread that already exited simply ignores the pool.
-    pub fn recycle(&self, block: SampledBlock) {
+    pub fn recycle(&self, block: MultiHopBlock) {
         let _ = self.pool.send(block);
     }
 }
@@ -92,6 +92,7 @@ impl BlockPrefetcher {
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
+    use crate::sampler::Fanout;
 
     fn ring(n: usize) -> CsrGraph {
         let mut b = GraphBuilder::new(n);
@@ -106,27 +107,30 @@ mod tests {
         let g = ring(64);
         let ids: Vec<u32> = (0..64).collect();
         let batcher = SeedBatcher::new(&ids, 10, true, 77);
-        let (epochs, fanout, seed) = (3, Fanout::Max(1), 5u64);
-        // inline reference: the serial trainer's sampling loop
-        let mut inline = Vec::new();
-        let mut sampler = NeighborSampler::new(&g, fanout, seed);
-        for epoch in 0..epochs {
-            for (bi, seeds) in batcher.epoch_batches(epoch).iter().enumerate() {
-                inline.push(sampler.sample_block(seeds, epoch, bi));
-            }
-        }
-        for depth in [1usize, 2, 7] {
-            let mut streamed = Vec::new();
-            let b = batcher.clone();
-            std::thread::scope(|scope| {
-                let pf = BlockPrefetcher::spawn(scope, &g, b, fanout, seed, epochs, depth);
-                for _ in 0..inline.len() {
-                    let block = pf.recv().expect("sampler thread alive");
-                    streamed.push(block.clone());
-                    pf.recycle(block); // exercise the buffer pool
+        let (epochs, seed) = (3, 5u64);
+        for fanouts in [Fanouts::single(Fanout::Max(1)), Fanouts::parse("2,1").unwrap()] {
+            // inline reference: the serial trainer's sampling loop
+            let mut inline = Vec::new();
+            let mut sampler = NeighborSampler::multi_hop(&g, &fanouts, seed);
+            for epoch in 0..epochs {
+                for (bi, seeds) in batcher.epoch_batches(epoch).iter().enumerate() {
+                    inline.push(sampler.sample_multi(seeds, epoch, bi));
                 }
-            });
-            assert_eq!(inline, streamed, "depth {depth}");
+            }
+            for depth in [1usize, 2, 7] {
+                let mut streamed = Vec::new();
+                let b = batcher.clone();
+                let f = fanouts.clone();
+                std::thread::scope(|scope| {
+                    let pf = BlockPrefetcher::spawn(scope, &g, b, f, seed, epochs, depth);
+                    for _ in 0..inline.len() {
+                        let block = pf.recv().expect("sampler thread alive");
+                        streamed.push(block.clone());
+                        pf.recycle(block); // exercise the buffer pool
+                    }
+                });
+                assert_eq!(inline, streamed, "depth {depth}, fanouts {fanouts}");
+            }
         }
     }
 
@@ -136,9 +140,9 @@ mod tests {
         let ids: Vec<u32> = (0..32).collect();
         let batcher = SeedBatcher::new(&ids, 4, false, 0);
         std::thread::scope(|scope| {
-            let pf = BlockPrefetcher::spawn(scope, &g, batcher, Fanout::All, 1, 50, 2);
+            let pf = BlockPrefetcher::spawn(scope, &g, batcher, Fanouts::all(2), 1, 50, 2);
             let first = pf.recv().expect("first block");
-            assert_eq!(first.num_seeds, 4);
+            assert_eq!(first.num_seeds(), 4);
             drop(pf); // scope must still join without hanging
         });
     }

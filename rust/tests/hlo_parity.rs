@@ -122,7 +122,7 @@ fn rust_reference_composition_agrees_with_itself_across_layout() {
     let pos = plan.position.as_ref().unwrap();
     let node = plan.node.as_ref().unwrap();
     let y = store.get("node_y");
-    let h = node.indices.len();
+    let h = node.h;
     for i in [0usize, 17, 1234, plan.n - 1] {
         for c in 0..d {
             let mut expect = 0f32;
@@ -132,7 +132,7 @@ fn rust_reference_composition_agrees_with_itself_across_layout() {
                 }
             }
             for t in 0..h {
-                let row = node.indices[t][i] as usize;
+                let row = node.node_major[i * h + t] as usize;
                 expect += y[i * h + t] * store.get("node_x")[row * d + c];
             }
             assert!((v[i * d + c] - expect).abs() < 1e-5, "node {i} dim {c}");

@@ -136,8 +136,8 @@ proptest! {
             seed,
             ..Default::default()
         };
-        let full = train_full_batch(&ds, &plan, &opts).unwrap();
-        let cfg = SamplerConfig::oracle(ds.splits.train.len());
+        let full = train_full_batch(&ds, &plan, &opts, 1).unwrap();
+        let cfg = SamplerConfig::oracle(ds.splits.train.len(), 1);
         let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
         let mini = tr.train().unwrap();
         prop_assert_eq!(mini.losses.len(), full.losses.len());
@@ -166,8 +166,8 @@ fn oracle_parity_holds_with_adam_and_position_tables() {
         seed: 11,
         ..Default::default()
     };
-    let full = train_full_batch(&ds, &plan, &opts).unwrap();
-    let cfg = SamplerConfig::oracle(ds.splits.train.len());
+    let full = train_full_batch(&ds, &plan, &opts, 1).unwrap();
+    let cfg = SamplerConfig::oracle(ds.splits.train.len(), 1);
     let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
     let mini = tr.train().unwrap();
     for (e, (a, b)) in mini.losses.iter().zip(&full.losses).enumerate() {
@@ -193,7 +193,8 @@ fn trainer_never_composes_a_full_matrix() {
         5,
     );
     let (batch, fanout) = (64, 4);
-    let cfg = SamplerConfig { batch_size: batch, fanout: Fanout::Max(fanout), shuffle: true };
+    let cfg =
+        SamplerConfig { batch_size: batch, fanouts: Fanout::Max(fanout).into(), shuffle: true };
     let opts = MinibatchOptions { epochs: 3, seed: 5, ..Default::default() };
     let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
     let out = tr.train().unwrap();
@@ -214,10 +215,10 @@ fn training_is_bit_identical_across_thread_counts() {
     let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 2));
     let method = EmbeddingMethod::PosHashEmbInter { levels: 2, buckets: 60, h: 2 };
     let plan = EmbeddingPlan::build(700, 16, &method, Some(&hier), 3);
-    let cfg = SamplerConfig { batch_size: 96, fanout: Fanout::Max(5), shuffle: true };
+    let cfg = SamplerConfig { batch_size: 96, fanouts: Fanout::Max(5).into(), shuffle: true };
     let run = || {
         let opts = MinibatchOptions { epochs: 4, seed: 9, ..Default::default() };
-        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg.clone(), opts).unwrap();
         tr.train().unwrap().losses
     };
     let l1 = in_pool(1, run);
@@ -231,7 +232,7 @@ fn minibatch_training_reduces_loss_and_scores_sanely() {
     let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(5, 3));
     let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 8, h: 2 };
     let plan = EmbeddingPlan::build(1200, 16, &method, Some(&hier), 1);
-    let cfg = SamplerConfig { batch_size: 128, fanout: Fanout::Max(8), shuffle: true };
+    let cfg = SamplerConfig { batch_size: 128, fanouts: Fanout::Max(8).into(), shuffle: true };
     let opts = MinibatchOptions { epochs: 15, lr: 0.02, seed: 1, ..Default::default() };
     let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
     let out = tr.train().unwrap();
@@ -256,7 +257,7 @@ fn multilabel_task_trains_with_finite_decreasing_loss() {
         None,
         2,
     );
-    let cfg = SamplerConfig { batch_size: 96, fanout: Fanout::Max(6), shuffle: true };
+    let cfg = SamplerConfig { batch_size: 96, fanouts: Fanout::Max(6).into(), shuffle: true };
     let opts = MinibatchOptions { epochs: 10, lr: 0.02, seed: 2, ..Default::default() };
     let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
     let out = tr.train().unwrap();

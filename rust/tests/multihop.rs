@@ -1,0 +1,512 @@
+//! Multi-hop sampling + deep-SAGE-head validation: (a) one-hop
+//! multi-hop blocks are bit-identical to the classic single-hop
+//! sampler, and the L = 1 trainer reproduces the legacy one-layer
+//! trainer's loss trajectory **bit for bit** (pinned against a
+//! test-local replica of that loop); (b) per-layer fanout bounds and
+//! the hop-chaining prefix invariant hold; (c) at L = 2 the pipelined
+//! engine reproduces the serial oracle exactly at 1 and 4 rayon
+//! threads for SGD and Adam, across prefetch depths; (d) the all-∞
+//! L-layer oracle configuration matches the L-layer full-batch trainer
+//! within 1e-5 per epoch.
+//!
+//! Thread counts are varied with dedicated `rayon::ThreadPool`s rather
+//! than `RAYON_NUM_THREADS` (the global pool is process-wide and the
+//! test runner is itself parallel).
+
+use poshashemb::coordinator::{
+    train_full_batch, MinibatchOptions, MinibatchTrainer, OptimizerKind,
+};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{ComposeEngine, EmbeddingMethod, EmbeddingPlan};
+use poshashemb::graph::{planted_partition, CsrGraph, PlantedPartitionConfig};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{
+    mix_seed, Fanout, Fanouts, NeighborSampler, SamplerConfig, SeedBatcher,
+};
+use poshashemb::util::rng::Rng;
+use proptest::prelude::*;
+
+fn sbm(n: usize, communities: usize, intra: f64, inter: f64, seed: u64) -> CsrGraph {
+    planted_partition(&PlantedPartitionConfig {
+        n,
+        communities,
+        intra_degree: intra,
+        inter_degree: inter,
+        seed,
+        ..Default::default()
+    })
+    .0
+}
+
+fn in_pool<T: Send>(threads: usize, f: impl FnOnce() -> T + Send) -> T {
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("thread pool")
+        .install(f)
+}
+
+/// Shrunk synth-arxiv analog (same generator/splits as the seed tests).
+fn small_dataset(n: usize, d: usize) -> Dataset {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    Dataset::generate(&s)
+}
+
+fn distinct_seeds(n: usize, count: usize, seed: u64) -> Vec<u32> {
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    Rng::seed_from_u64(seed).shuffle(&mut ids);
+    ids.truncate(count.clamp(1, n));
+    ids
+}
+
+/// Loss trajectory of one minibatch run under the given knobs.
+fn run_losses(
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    cfg: &SamplerConfig,
+    optimizer: OptimizerKind,
+    parallel: bool,
+    prefetch: usize,
+) -> Vec<f64> {
+    let opts = MinibatchOptions {
+        epochs: 4,
+        lr: 0.03,
+        optimizer,
+        seed: 7,
+        parallel,
+        prefetch,
+        hidden: 16,
+        ..Default::default()
+    };
+    let mut tr = MinibatchTrainer::new(ds, plan, cfg.clone(), opts).unwrap();
+    tr.train().unwrap().losses
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(12))]
+
+    #[test]
+    fn one_hop_multi_blocks_match_single_hop_sampler_bits(
+        n in 80usize..500,
+        fanout in 1usize..7,
+        seed in any::<u64>(),
+    ) {
+        // the L=1 data path must be the pre-multi-hop data path, bit
+        // for bit: hop 0 keeps the caller's RNG stream verbatim
+        let g = sbm(n, 4, 7.0, 1.5, seed);
+        let seeds = distinct_seeds(n, n / 5, seed ^ 0xAB);
+        let fans = Fanouts::single(Fanout::Max(fanout));
+        let single =
+            NeighborSampler::new(&g, Fanout::Max(fanout), seed).sample_block(&seeds, 3, 2);
+        let multi = NeighborSampler::multi_hop(&g, &fans, seed).sample_multi(&seeds, 3, 2);
+        prop_assert_eq!(multi.num_hops(), 1);
+        prop_assert_eq!(&multi.hops[0], &single);
+    }
+
+    #[test]
+    fn per_layer_fanout_bounds_and_chaining_hold(
+        n in 100usize..500,
+        f0 in 1usize..6,
+        f1 in 1usize..6,
+        seed in any::<u64>(),
+    ) {
+        let g = sbm(n, 5, 8.0, 2.0, seed);
+        let seeds = distinct_seeds(n, 30, seed ^ 0xC0);
+        let fanouts = Fanouts::new(vec![Fanout::Max(f0), Fanout::Max(f1)]);
+        let mut sampler = NeighborSampler::multi_hop(&g, &fanouts, seed);
+        let mhb = sampler.sample_multi(&seeds, 1, 4);
+        prop_assert_eq!(mhb.num_hops(), 2);
+        // hop 0: seed prefix + per-seed fanout bound
+        let h0 = mhb.hop(0);
+        prop_assert_eq!(&h0.nodes[..seeds.len()], &seeds[..]);
+        for (si, &s) in seeds.iter().enumerate() {
+            prop_assert_eq!(h0.neighbors_of(si).len(), g.degree(s).min(f0), "hop 0 seed {}", s);
+        }
+        // hop 1: seeded by hop 0's full node list, same order
+        let h1 = mhb.hop(1);
+        prop_assert_eq!(h1.num_seeds, h0.num_rows());
+        prop_assert_eq!(&h1.nodes[..h0.nodes.len()], &h0.nodes[..]);
+        for (si, &s) in h0.nodes.iter().enumerate() {
+            prop_assert_eq!(h1.neighbors_of(si).len(), g.degree(s).min(f1), "hop 1 seed {}", s);
+        }
+        // every hop's rows are unique global ids
+        for hop in &mhb.hops {
+            let mut ids: Vec<u32> = hop.nodes.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            prop_assert_eq!(ids.len(), hop.nodes.len(), "duplicate rows in a hop");
+        }
+        // deterministic per coordinates at any thread count
+        let again = in_pool(4, move || {
+            NeighborSampler::multi_hop(&g, &fanouts, seed).sample_multi(&seeds, 1, 4)
+        });
+        prop_assert_eq!(mhb, again);
+    }
+}
+
+/// A test-local replica of the legacy (pre-multi-hop) one-layer
+/// minibatch trainer: same seed streams, same init draws, same
+/// per-element accumulation orders, dense SGD apply (bit-identical to
+/// the sparse apply because untouched gradients are exactly 0.0).
+/// Bloom keeps it honest and small: one node table, no learned y, no
+/// position levels.
+#[allow(clippy::too_many_arguments)]
+fn legacy_single_hop_losses(
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    batch: usize,
+    fanout: usize,
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> Vec<f64> {
+    let d = plan.d;
+    let classes = ds.spec.classes;
+    let node = plan.node.as_ref().expect("node plan");
+    let h = node.h;
+    let buckets = node.table.rows;
+    assert!(!node.learned_weights && plan.position.is_none(), "use Bloom for this oracle");
+
+    // ---- parameter init: embedding tables + the legacy head draws ----
+    let mut store = poshashemb::embedding::init_params(plan, seed);
+    let mut rng = Rng::seed_from_u64(mix_seed(&[seed, 0x6EAD]));
+    let a = 1.0 / (d as f32).sqrt();
+    let mut w_self: Vec<f32> = (0..d * classes).map(|_| rng.gen_f32_range(-a, a)).collect();
+    let mut w_neigh: Vec<f32> = (0..d * classes).map(|_| rng.gen_f32_range(-a, a)).collect();
+    let mut bias = vec![0f32; classes];
+
+    // ---- the legacy seed streams ----
+    let batcher = SeedBatcher::new(&ds.splits.train, batch, true, mix_seed(&[seed, 0x5EED5]));
+    let mut sampler =
+        NeighborSampler::new(&ds.graph, Fanout::Max(fanout), mix_seed(&[seed, 0x54AFF]));
+    let engine = ComposeEngine::new(plan);
+
+    // dense gradient accumulators (zero entries update by -lr·0 = no-op)
+    let mut gw_self = vec![0f32; d * classes];
+    let mut gw_neigh = vec![0f32; d * classes];
+    let mut gbias = vec![0f32; classes];
+    let mut gx = vec![0f32; buckets * d];
+    let mut losses = Vec::with_capacity(epochs);
+    for epoch in 0..epochs {
+        let mut loss_sum = 0f64;
+        let mut seen = 0usize;
+        for (bi, seeds) in batcher.epoch_batches(epoch).iter().enumerate() {
+            let block = sampler.sample_block(seeds, epoch, bi);
+            let s = block.num_seeds;
+            let rows = block.num_rows();
+            let x = engine.compose_batch(&store, &block.nodes);
+            // forward: neighbor means + logits, legacy accumulation order
+            let mut nbar = vec![0f32; s * d];
+            for si in 0..s {
+                let dst = &mut nbar[si * d..(si + 1) * d];
+                let nbs = block.neighbors_of(si);
+                for &r in nbs {
+                    for (o, v) in dst.iter_mut().zip(&x[r as usize * d..(r as usize + 1) * d]) {
+                        *o += v;
+                    }
+                }
+                if !nbs.is_empty() {
+                    let inv = 1.0 / nbs.len() as f32;
+                    for o in dst.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            }
+            let mut logits = vec![0f32; s * classes];
+            for si in 0..s {
+                let out = &mut logits[si * classes..(si + 1) * classes];
+                out.copy_from_slice(&bias);
+                let xs = &x[si * d..(si + 1) * d];
+                let nb = &nbar[si * d..(si + 1) * d];
+                for (aa, (&xa, &na)) in xs.iter().zip(nb).enumerate() {
+                    let ws = &w_self[aa * classes..(aa + 1) * classes];
+                    let wn = &w_neigh[aa * classes..(aa + 1) * classes];
+                    for ((o, wsj), wnj) in out.iter_mut().zip(ws).zip(wn) {
+                        *o += xa * wsj + na * wnj;
+                    }
+                }
+            }
+            // loss + dL/dlogits (softmax CE, mean over the batch seeds);
+            // per-seed losses sum into a per-batch accumulator first,
+            // exactly like the trainer's step → epoch association
+            let gscale = 1.0 / s as f32;
+            let mut glog = vec![0f32; s * classes];
+            let mut batch_loss = 0f64;
+            for si in 0..s {
+                let node_id = block.nodes[si] as usize;
+                let label = ds.labels[node_id] as usize;
+                let lrow = &logits[si * classes..(si + 1) * classes];
+                let grow = &mut glog[si * classes..(si + 1) * classes];
+                let max = lrow.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let mut sum = 0f32;
+                for (g, &v) in grow.iter_mut().zip(lrow) {
+                    let e = (v - max).exp();
+                    *g = e;
+                    sum += e;
+                }
+                let inv = gscale / sum;
+                for g in grow.iter_mut() {
+                    *g *= inv;
+                }
+                grow[label] -= gscale;
+                batch_loss += ((max + sum.ln()) - lrow[label]) as f64;
+            }
+            loss_sum += batch_loss;
+            // head gradients in the legacy order: W_self, W_neigh, bias
+            for si in 0..s {
+                let g = &glog[si * classes..(si + 1) * classes];
+                let xs = &x[si * d..(si + 1) * d];
+                for (aa, &xa) in xs.iter().enumerate() {
+                    for (o, &gj) in gw_self[aa * classes..(aa + 1) * classes].iter_mut().zip(g) {
+                        *o += xa * gj;
+                    }
+                }
+            }
+            for si in 0..s {
+                let g = &glog[si * classes..(si + 1) * classes];
+                let nb = &nbar[si * d..(si + 1) * d];
+                for (aa, &na) in nb.iter().enumerate() {
+                    for (o, &gj) in gw_neigh[aa * classes..(aa + 1) * classes].iter_mut().zip(g) {
+                        *o += na * gj;
+                    }
+                }
+            }
+            for si in 0..s {
+                let g = &glog[si * classes..(si + 1) * classes];
+                for (o, &gj) in gbias.iter_mut().zip(g) {
+                    *o += gj;
+                }
+            }
+            // dL/dv per block row (self add at the seed's position, then
+            // the per-seed neighbor scatter)
+            let mut dx = vec![0f32; rows * d];
+            let mut dn = vec![0f32; d];
+            for si in 0..s {
+                let g = &glog[si * classes..(si + 1) * classes];
+                for aa in 0..d {
+                    let ws = &w_self[aa * classes..(aa + 1) * classes];
+                    let wn = &w_neigh[aa * classes..(aa + 1) * classes];
+                    let mut acc_s = 0f32;
+                    let mut acc_n = 0f32;
+                    for ((&gj, wsj), wnj) in g.iter().zip(ws).zip(wn) {
+                        acc_s += gj * wsj;
+                        acc_n += gj * wnj;
+                    }
+                    dx[si * d + aa] += acc_s;
+                    dn[aa] = acc_n;
+                }
+                let nbs = block.neighbors_of(si);
+                if !nbs.is_empty() {
+                    let inv = 1.0 / nbs.len() as f32;
+                    for &r in nbs {
+                        let dst = &mut dx[r as usize * d..(r as usize + 1) * d];
+                        for (o, v) in dst.iter_mut().zip(&dn) {
+                            *o += inv * v;
+                        }
+                    }
+                }
+            }
+            // embedding scatter (block-row order; Bloom: weight 1 per hash)
+            for (r, &nid) in block.nodes.iter().enumerate() {
+                let gv = &dx[r * d..(r + 1) * d];
+                for t in 0..h {
+                    let row = node.node_major[nid as usize * h + t] as usize;
+                    for (o, &v) in gx[row * d..(row + 1) * d].iter_mut().zip(gv) {
+                        *o += v;
+                    }
+                }
+            }
+            // dense SGD apply + gradient reset
+            let xt = store.get_mut(&node.table.name);
+            for (w, g) in xt.iter_mut().zip(&gx) {
+                *w -= lr * g;
+            }
+            for (w, g) in w_self.iter_mut().zip(&gw_self) {
+                *w -= lr * g;
+            }
+            for (w, g) in w_neigh.iter_mut().zip(&gw_neigh) {
+                *w -= lr * g;
+            }
+            for (w, g) in bias.iter_mut().zip(&gbias) {
+                *w -= lr * g;
+            }
+            gx.fill(0.0);
+            gw_self.fill(0.0);
+            gw_neigh.fill(0.0);
+            gbias.fill(0.0);
+            seen += s;
+        }
+        losses.push(loss_sum / seen as f64);
+    }
+    losses
+}
+
+#[test]
+fn l1_trainer_reproduces_the_legacy_single_hop_trainer_bit_for_bit() {
+    let ds = small_dataset(360, 16);
+    let method = EmbeddingMethod::Bloom { buckets: 48, h: 2 };
+    let plan = EmbeddingPlan::build(360, 16, &method, None, 5);
+    let (batch, fanout, epochs, lr, seed) = (48usize, 4usize, 3usize, 0.05f32, 11u64);
+    let legacy = legacy_single_hop_losses(&ds, &plan, batch, fanout, epochs, lr, seed);
+    let cfg =
+        SamplerConfig { batch_size: batch, fanouts: Fanout::Max(fanout).into(), shuffle: true };
+    let opts = MinibatchOptions {
+        epochs,
+        lr,
+        optimizer: OptimizerKind::Sgd,
+        seed,
+        parallel: false,
+        prefetch: 0,
+        ..Default::default()
+    };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg.clone(), opts.clone()).unwrap();
+    let serial = tr.train().unwrap().losses;
+    assert_eq!(serial, legacy, "generalized L=1 serial trainer drifted from the legacy loop");
+    // and the pipelined engine reproduces the same bits
+    let piped_opts = MinibatchOptions { parallel: true, prefetch: 2, ..opts };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, piped_opts).unwrap();
+    let piped = tr.train().unwrap().losses;
+    assert_eq!(piped, legacy, "pipelined L=1 trainer drifted from the legacy loop");
+}
+
+#[test]
+fn two_layer_pipelined_is_bit_identical_to_its_serial_oracle_at_1_and_4_threads() {
+    // the acceptance pin: L=2 pipelined (prefetch + parallel step) must
+    // reproduce the L=2 serial oracle EXACTLY, for SGD and Adam.
+    let ds = small_dataset(500, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 3));
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 5, h: 2 };
+    let plan = EmbeddingPlan::build(500, 16, &method, Some(&hier), 3);
+    let cfg =
+        SamplerConfig { batch_size: 72, fanouts: Fanouts::parse("5,3").unwrap(), shuffle: true };
+    for optimizer in [OptimizerKind::Sgd, OptimizerKind::Adam] {
+        let serial = run_losses(&ds, &plan, &cfg, optimizer, false, 0);
+        let piped1 = in_pool(1, || run_losses(&ds, &plan, &cfg, optimizer, true, 2));
+        let piped4 = in_pool(4, || run_losses(&ds, &plan, &cfg, optimizer, true, 2));
+        assert_eq!(piped1, serial, "{:?}: 1-thread pipelined vs serial", optimizer);
+        assert_eq!(piped4, serial, "{:?}: 4-thread pipelined vs serial", optimizer);
+    }
+}
+
+#[test]
+fn two_layer_prefetch_depth_does_not_change_the_trajectory() {
+    let ds = small_dataset(400, 16);
+    let plan =
+        EmbeddingPlan::build(400, 16, &EmbeddingMethod::HashEmb { buckets: 48, h: 2 }, None, 1);
+    let cfg =
+        SamplerConfig { batch_size: 56, fanouts: Fanouts::parse("4,2").unwrap(), shuffle: true };
+    let baseline = run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, 0);
+    for depth in [1usize, 2, 8] {
+        let got = run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, depth);
+        assert_eq!(got, baseline, "prefetch depth {depth}");
+    }
+}
+
+#[test]
+fn all_fanout_two_layer_minibatch_matches_full_batch_trajectory() {
+    // acceptance: all fanouts = ∞, L layers reproduces an L-layer
+    // full-batch trajectory within 1e-5 per epoch, for SGD and Adam.
+    let ds = small_dataset(450, 16);
+    let plan = EmbeddingPlan::build(
+        450,
+        16,
+        &EmbeddingMethod::HashEmb { buckets: 56, h: 2 },
+        None,
+        9,
+    );
+    for optimizer in [OptimizerKind::Sgd, OptimizerKind::Adam] {
+        let opts = MinibatchOptions {
+            epochs: 4,
+            lr: 0.02,
+            optimizer,
+            seed: 9,
+            hidden: 16,
+            ..Default::default()
+        };
+        let full = train_full_batch(&ds, &plan, &opts, 2).unwrap();
+        let cfg = SamplerConfig::oracle(ds.splits.train.len(), 2);
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        let mini = tr.train().unwrap();
+        assert_eq!(mini.losses.len(), full.losses.len());
+        for (e, (m, f)) in mini.losses.iter().zip(&full.losses).enumerate() {
+            assert!(
+                (m - f).abs() <= 1e-5,
+                "{optimizer:?} epoch {e}: minibatch {m} vs full-batch {f}"
+            );
+        }
+        // the same data path also yields (near-)identical final metrics
+        assert!((mini.val_metric - full.val_metric).abs() <= 0.02, "{optimizer:?}");
+        assert!((mini.test_metric - full.test_metric).abs() <= 0.02, "{optimizer:?}");
+    }
+}
+
+#[test]
+fn all_fanout_three_layer_minibatch_matches_full_batch_trajectory() {
+    let ds = small_dataset(300, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(3, 2));
+    let method = EmbeddingMethod::PosHashEmbInter { levels: 2, buckets: 30, h: 2 };
+    let plan = EmbeddingPlan::build(300, 16, &method, Some(&hier), 2);
+    let opts = MinibatchOptions {
+        epochs: 3,
+        lr: 0.05,
+        optimizer: OptimizerKind::Sgd,
+        seed: 4,
+        hidden: 8,
+        ..Default::default()
+    };
+    let full = train_full_batch(&ds, &plan, &opts, 3).unwrap();
+    let cfg = SamplerConfig::oracle(ds.splits.train.len(), 3);
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+    let mini = tr.train().unwrap();
+    for (e, (m, f)) in mini.losses.iter().zip(&full.losses).enumerate() {
+        assert!((m - f).abs() <= 1e-5, "epoch {e}: minibatch {m} vs full-batch {f}");
+    }
+}
+
+#[test]
+fn two_layer_training_is_bit_identical_across_thread_counts() {
+    let ds = small_dataset(420, 16);
+    let plan = EmbeddingPlan::build(
+        420,
+        16,
+        &EmbeddingMethod::HashEmb { buckets: 48, h: 2 },
+        None,
+        6,
+    );
+    let cfg =
+        SamplerConfig { batch_size: 64, fanouts: Fanouts::parse("6,3").unwrap(), shuffle: true };
+    let l1 = in_pool(1, || run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, 2));
+    let l4 = in_pool(4, || run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, 2));
+    assert_eq!(l1, l4, "L=2 losses diverge across thread counts");
+}
+
+#[test]
+fn deep_head_peak_rows_respect_the_multi_hop_bound() {
+    // peak compose rows for L hops is bounded by batch·Π(fanout_l + 1)
+    // and must stay below n for small batches
+    let n = 1500;
+    let ds = small_dataset(n, 16);
+    let plan =
+        EmbeddingPlan::build(n, 16, &EmbeddingMethod::HashEmb { buckets: 96, h: 2 }, None, 5);
+    let (batch, f0, f1) = (32usize, 4usize, 3usize);
+    let cfg = SamplerConfig {
+        batch_size: batch,
+        fanouts: Fanouts::new(vec![Fanout::Max(f0), Fanout::Max(f1)]),
+        shuffle: true,
+    };
+    let opts = MinibatchOptions { epochs: 2, seed: 5, hidden: 16, ..Default::default() };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+    let out = tr.train().unwrap();
+    assert!(out.peak_compose_rows >= batch);
+    assert!(
+        out.peak_compose_rows <= batch * (f0 + 1) * (f1 + 1),
+        "peak {} exceeds batch·Π(fanout+1) = {}",
+        out.peak_compose_rows,
+        batch * (f0 + 1) * (f1 + 1)
+    );
+    assert!(out.peak_compose_rows < n, "deep head composed the full matrix");
+    assert!(out.losses.iter().all(|l| l.is_finite()));
+}

@@ -38,7 +38,7 @@ fn small_dataset(n: usize, d: usize) -> Dataset {
 fn run_losses(
     ds: &Dataset,
     plan: &EmbeddingPlan,
-    cfg: SamplerConfig,
+    cfg: &SamplerConfig,
     optimizer: OptimizerKind,
     parallel: bool,
     prefetch: usize,
@@ -50,9 +50,10 @@ fn run_losses(
         seed: 7,
         parallel,
         prefetch,
+        hidden: 16,
         ..Default::default()
     };
-    let mut tr = MinibatchTrainer::new(ds, plan, cfg, opts).unwrap();
+    let mut tr = MinibatchTrainer::new(ds, plan, cfg.clone(), opts).unwrap();
     tr.train().unwrap().losses
 }
 
@@ -108,11 +109,12 @@ proptest! {
         let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 3));
         let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 5, h: 2 };
         let plan = EmbeddingPlan::build(n, 16, &method, Some(&hier), 3);
-        let cfg = SamplerConfig { batch_size: batch, fanout: Fanout::Max(fanout), shuffle: true };
+        let cfg =
+            SamplerConfig { batch_size: batch, fanouts: Fanout::Max(fanout).into(), shuffle: true };
         let optimizer = if adam { OptimizerKind::Adam } else { OptimizerKind::Sgd };
-        let serial = run_losses(&ds, &plan, cfg, optimizer, false, 0);
-        let piped1 = in_pool(1, || run_losses(&ds, &plan, cfg, optimizer, true, 2));
-        let piped4 = in_pool(4, || run_losses(&ds, &plan, cfg, optimizer, true, 2));
+        let serial = run_losses(&ds, &plan, &cfg, optimizer, false, 0);
+        let piped1 = in_pool(1, || run_losses(&ds, &plan, &cfg, optimizer, true, 2));
+        let piped4 = in_pool(4, || run_losses(&ds, &plan, &cfg, optimizer, true, 2));
         prop_assert_eq!(&piped1, &serial, "1-thread pipelined vs serial");
         prop_assert_eq!(&piped4, &serial, "4-thread pipelined vs serial");
     }
@@ -123,10 +125,10 @@ fn prefetch_depth_does_not_change_the_trajectory() {
     let ds = small_dataset(500, 16);
     let method = EmbeddingMethod::HashEmb { buckets: 64, h: 2 };
     let plan = EmbeddingPlan::build(500, 16, &method, None, 1);
-    let cfg = SamplerConfig { batch_size: 64, fanout: Fanout::Max(4), shuffle: true };
-    let baseline = run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, 0);
+    let cfg = SamplerConfig { batch_size: 64, fanouts: Fanout::Max(4).into(), shuffle: true };
+    let baseline = run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, 0);
     for depth in [1usize, 2, 8] {
-        let got = run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, depth);
+        let got = run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, depth);
         assert_eq!(got, baseline, "prefetch depth {depth}");
     }
 }
@@ -139,9 +141,9 @@ fn parallel_trainer_is_bit_identical_across_thread_counts_with_head_tables() {
     let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 2));
     let method = EmbeddingMethod::PosHashEmbInter { levels: 2, buckets: 48, h: 2 };
     let plan = EmbeddingPlan::build(650, 16, &method, Some(&hier), 5);
-    let cfg = SamplerConfig { batch_size: 96, fanout: Fanout::Max(6), shuffle: true };
-    let l1 = in_pool(1, || run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, 2));
-    let l4 = in_pool(4, || run_losses(&ds, &plan, cfg, OptimizerKind::Adam, true, 2));
+    let cfg = SamplerConfig { batch_size: 96, fanouts: Fanout::Max(6).into(), shuffle: true };
+    let l1 = in_pool(1, || run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, 2));
+    let l4 = in_pool(4, || run_losses(&ds, &plan, &cfg, OptimizerKind::Adam, true, 2));
     assert_eq!(l1, l4);
 }
 
@@ -151,8 +153,8 @@ fn full_embedding_method_trains_identically_serial_and_pipelined() {
     // the node-major gather layout must not disturb it either.
     let ds = small_dataset(400, 16);
     let plan = EmbeddingPlan::build(400, 16, &EmbeddingMethod::Full, None, 2);
-    let cfg = SamplerConfig { batch_size: 80, fanout: Fanout::Max(5), shuffle: true };
-    let serial = run_losses(&ds, &plan, cfg, OptimizerKind::Sgd, false, 0);
-    let piped = in_pool(4, || run_losses(&ds, &plan, cfg, OptimizerKind::Sgd, true, 2));
+    let cfg = SamplerConfig { batch_size: 80, fanouts: Fanout::Max(5).into(), shuffle: true };
+    let serial = run_losses(&ds, &plan, &cfg, OptimizerKind::Sgd, false, 0);
+    let piped = in_pool(4, || run_losses(&ds, &plan, &cfg, OptimizerKind::Sgd, true, 2));
     assert_eq!(piped, serial);
 }
