@@ -16,7 +16,7 @@ candidate measured on CI hardware; from then on the gate is live.
 
 Modes:
     compare      --baseline B --compose C --partition P --minibatch M
-                 --out CANDIDATE [--tolerance 0.25]
+                 [--serve S] --out CANDIDATE [--tolerance 0.25]
     is-bootstrap --baseline B      (exit 0 iff the baseline is bootstrap)
 """
 
@@ -31,8 +31,8 @@ def load(path):
         return json.load(f)
 
 
-def key_metrics(compose, partition, minibatch):
-    """Flatten the three record files into {key: throughput} pairs."""
+def key_metrics(compose, partition, minibatch, serve):
+    """Flatten the record files into {key: throughput} pairs."""
     metrics = {}
     for r in compose:
         metrics[f"compose/{r['method']}/{r['path']}"] = r["elements_per_sec"]
@@ -40,6 +40,10 @@ def key_metrics(compose, partition, minibatch):
         metrics[f"partition/{r['stage']}"] = r["edges_per_sec"]
     r = minibatch
     metrics[f"minibatch/{r['dataset']}/{r['method']}/b{r['batch_size']}"] = r["nodes_per_sec"]
+    if serve is not None:
+        r = serve
+        metrics[f"serve/{r['dataset']}/{r['method']}/cache{r['cache_rows']}"] = (
+            r["queries_per_sec"])
     return metrics
 
 
@@ -48,8 +52,9 @@ def cmd_compare(args):
     compose = load(args.compose)
     partition = load(args.partition)
     minibatch = load(args.minibatch)
+    serve = load(args.serve) if args.serve else None
 
-    fresh = key_metrics(compose, partition, minibatch)
+    fresh = key_metrics(compose, partition, minibatch, serve)
     candidate = {
         "bootstrap": False,
         "git_sha": os.environ.get("GITHUB_SHA", "unknown"),
@@ -59,6 +64,7 @@ def cmd_compare(args):
             "compose": compose,
             "partition": partition,
             "minibatch": minibatch,
+            "serve": serve,
         },
     }
     with open(args.out, "w") as f:
@@ -120,6 +126,8 @@ def main():
     cmp_p.add_argument("--compose", required=True)
     cmp_p.add_argument("--partition", required=True)
     cmp_p.add_argument("--minibatch", required=True)
+    cmp_p.add_argument("--serve", default=None,
+                       help="serve-bench record JSON (optional)")
     cmp_p.add_argument("--out", required=True)
     cmp_p.add_argument("--tolerance", type=float, default=0.25)
     cmp_p.set_defaults(func=cmd_compare)

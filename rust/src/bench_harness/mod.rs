@@ -216,11 +216,38 @@ fn bench_threads() -> usize {
 /// The commit the record was produced at: `GITHUB_SHA` in CI (or a
 /// `GIT_SHA` override), `"unknown"` when run outside CI — so the
 /// per-commit throughput trajectory in the uploaded artifacts is
-/// self-describing.
-fn bench_git_sha() -> String {
+/// self-describing. Model-artifact manifests reuse the same convention.
+pub fn bench_git_sha() -> String {
     std::env::var("GITHUB_SHA")
         .or_else(|_| std::env::var("GIT_SHA"))
         .unwrap_or_else(|_| "unknown".to_string())
+}
+
+/// Fields every bench record carries — the one envelope
+/// `ci/bench_baseline.py` and the uploaded-artifact consumers read
+/// uniformly. Embedded into each record via `#[serde(flatten)]` so the
+/// JSON stays flat and the pre-envelope key names are preserved
+/// (pinned by `record_json_envelopes_are_stable`).
+#[derive(Debug, Clone, Serialize)]
+pub struct RecordMeta {
+    /// Record schema tag (`"<kind>-bench/v1"`) so mixed artifact files
+    /// can be classified without guessing from field names.
+    pub schema: String,
+    /// Rayon worker threads available to the run.
+    pub threads: usize,
+    /// Commit the record was produced at (`GITHUB_SHA`, or "unknown").
+    pub git_sha: String,
+}
+
+impl RecordMeta {
+    /// Capture the environment for a record of the given schema tag.
+    pub fn capture(schema: &str) -> Self {
+        RecordMeta {
+            schema: schema.to_string(),
+            threads: bench_threads(),
+            git_sha: bench_git_sha(),
+        }
+    }
 }
 
 /// One measured compose path, serializable for CI smoke artifacts.
@@ -249,10 +276,9 @@ pub struct ComposeBenchRecord {
     /// Mean-time ratio vs the reference path, normalized per row
     /// (so the batch path is comparable). `None` for the reference row.
     pub speedup_vs_reference: Option<f64>,
-    /// Rayon worker threads available to the run.
-    pub threads: usize,
-    /// Commit the record was produced at (`GITHUB_SHA`, or "unknown").
-    pub git_sha: String,
+    /// Shared record envelope (schema/threads/git_sha), flattened.
+    #[serde(flatten)]
+    pub meta: RecordMeta,
 }
 
 impl ComposeBenchRecord {
@@ -270,8 +296,7 @@ impl ComposeBenchRecord {
             p95_ns: r.p95.as_nanos() as u64,
             elements_per_sec: elements / r.mean.as_secs_f64(),
             speedup_vs_reference: None,
-            threads: bench_threads(),
-            git_sha: bench_git_sha(),
+            meta: RecordMeta::capture("compose-bench/v1"),
         }
     }
 
@@ -356,10 +381,9 @@ pub struct PartitionBenchRecord {
     pub speedup_vs_reference: Option<f64>,
     /// Weighted edge cut (end-to-end partition stages only).
     pub edge_cut: Option<f64>,
-    /// Rayon worker threads available to the run.
-    pub threads: usize,
-    /// Commit the record was produced at (`GITHUB_SHA`, or "unknown").
-    pub git_sha: String,
+    /// Shared record envelope (schema/threads/git_sha), flattened.
+    #[serde(flatten)]
+    pub meta: RecordMeta,
 }
 
 impl PartitionBenchRecord {
@@ -376,8 +400,7 @@ impl PartitionBenchRecord {
             edges_per_sec: g.num_edges() as f64 / r.mean.as_secs_f64().max(1e-12),
             speedup_vs_reference: None,
             edge_cut: None,
-            threads: bench_threads(),
-            git_sha: bench_git_sha(),
+            meta: RecordMeta::capture("partition-bench/v1"),
         }
     }
 
@@ -534,10 +557,9 @@ pub struct MinibatchBenchRecord {
     pub parallel: bool,
     /// Prefetch depth the run used (0 = inline sampling).
     pub prefetch: usize,
-    /// Rayon worker threads available to the run.
-    pub threads: usize,
-    /// Commit the record was produced at (`GITHUB_SHA`, or "unknown").
-    pub git_sha: String,
+    /// Shared record envelope (schema/threads/git_sha), flattened.
+    #[serde(flatten)]
+    pub meta: RecordMeta,
 }
 
 impl MinibatchBenchRecord {
@@ -610,8 +632,177 @@ pub fn bench_minibatch(
         test_metric: out.test_metric,
         parallel: opts.parallel,
         prefetch: opts.prefetch,
-        threads: bench_threads(),
-        git_sha: bench_git_sha(),
+        meta: RecordMeta::capture("minibatch-bench/v1"),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Serve-path benchmarking (model artifact + query engine, no PJRT)
+// ---------------------------------------------------------------------
+
+/// Knobs for the synthetic serve load driver.
+#[derive(Debug, Clone)]
+pub struct ServeBenchOptions {
+    /// Total queries to issue (clamped down under `BENCH_QUICK=1`).
+    pub queries: usize,
+    /// Node ids per `embed` call (one latency sample per call).
+    pub batch: usize,
+    /// Zipf exponent of the query-id distribution (s=0 ⇒ uniform).
+    pub zipf_s: f64,
+    /// Seed for the query stream and the rank→node permutation.
+    pub seed: u64,
+}
+
+impl Default for ServeBenchOptions {
+    fn default() -> Self {
+        ServeBenchOptions { queries: 1_000_000, batch: 64, zipf_s: 0.99, seed: 0x5EB7E }
+    }
+}
+
+/// One measured serve-load run, serializable for the CI `serve-bench`
+/// artifact.
+#[derive(Debug, Clone, Serialize)]
+pub struct ServeBenchRecord {
+    /// Method display name (paper table naming).
+    pub method: String,
+    /// Round-trippable method tag (the manifest's `method` string).
+    pub method_tag: String,
+    /// Dataset the artifact was trained on.
+    pub dataset: String,
+    /// Nodes in the graph.
+    pub n: usize,
+    /// Embedding dimension.
+    pub d: usize,
+    /// Queries issued.
+    pub queries: usize,
+    /// Node ids per `embed` call.
+    pub batch: usize,
+    /// Hot-node LRU cache capacity in embedding rows.
+    pub cache_rows: usize,
+    /// Zipf exponent of the query stream.
+    pub zipf_s: f64,
+    /// Mean per-call latency in nanoseconds.
+    pub mean_ns: u64,
+    /// Median per-call latency in nanoseconds.
+    pub p50_ns: u64,
+    /// 99th-percentile per-call latency in nanoseconds.
+    pub p99_ns: u64,
+    /// Node embeddings served per second.
+    pub queries_per_sec: f64,
+    /// Fraction of queried ids answered from the LRU cache.
+    pub cache_hit_rate: f64,
+    /// Bytes of learned embedding-table sections resident in the
+    /// engine (position tables + node tables; the paper's metric).
+    pub resident_table_bytes: usize,
+    /// Bytes of static index sections (level assignments, hash maps).
+    pub resident_index_bytes: usize,
+    /// Full-table baseline at equal dim: `n · d · 4` bytes.
+    pub full_table_bytes: usize,
+    /// `resident_table_bytes / full_table_bytes` (paper's 88–97%
+    /// reduction band ⇒ ratios of 0.03–0.12 at paper scale).
+    pub resident_ratio: f64,
+    /// Shared record envelope (schema/threads/git_sha), flattened.
+    #[serde(flatten)]
+    pub meta: RecordMeta,
+}
+
+impl ServeBenchRecord {
+    /// Human-readable report line.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<26} q={:<8} batch={:<4} p50 {:>9.3?} p99 {:>9.3?} ({:>10.0} q/s) \
+             hit={:.1}% resident {}/{} ({:.1}%)",
+            self.method,
+            self.queries,
+            self.batch,
+            std::time::Duration::from_nanos(self.p50_ns),
+            std::time::Duration::from_nanos(self.p99_ns),
+            self.queries_per_sec,
+            self.cache_hit_rate * 100.0,
+            short(self.resident_table_bytes),
+            short(self.full_table_bytes),
+            self.resident_ratio * 100.0
+        )
+    }
+}
+
+/// Drive a loaded [`crate::serve::ServeEngine`] with a synthetic
+/// Zipfian query stream and record latency percentiles, QPS, cache hit
+/// rate and resident-memory footprint vs the Full-table baseline.
+///
+/// The Zipf(s) rank distribution is mapped onto node ids through a
+/// seeded permutation so the hot set is spread across the id space
+/// (adjacent ids sharing partitions would otherwise flatter the cache).
+pub fn bench_serve(
+    engine: &mut crate::serve::ServeEngine,
+    opts: &ServeBenchOptions,
+) -> Result<ServeBenchRecord> {
+    let n = engine.n();
+    let batch = opts.batch.clamp(1, n);
+    let mut queries = opts.queries.max(batch);
+    if crate::util::bench::quick() {
+        queries = queries.min(20_000);
+    }
+    let calls = queries.div_ceil(batch);
+    queries = calls * batch;
+
+    // Zipf(s) over ranks 1..=n via inverse-CDF binary search.
+    let mut cdf = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    for rank in 0..n {
+        total += 1.0 / ((rank + 1) as f64).powf(opts.zipf_s);
+        cdf.push(total);
+    }
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let mut rank_to_node: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut rank_to_node);
+
+    engine.reset_cache_stats();
+    let mut ids = vec![0u32; batch];
+    let mut lat_ns = Vec::with_capacity(calls);
+    let started = std::time::Instant::now();
+    for _ in 0..calls {
+        for id in ids.iter_mut() {
+            let u = rng.gen_f64() * total;
+            let rank = cdf.partition_point(|&c| c < u).min(n - 1);
+            *id = rank_to_node[rank];
+        }
+        let t0 = std::time::Instant::now();
+        black_box(engine.embed(&ids)?);
+        lat_ns.push(t0.elapsed().as_nanos() as u64);
+    }
+    let wall = started.elapsed().as_secs_f64().max(1e-12);
+
+    lat_ns.sort_unstable();
+    let mean_ns = (lat_ns.iter().sum::<u64>() / lat_ns.len() as u64).max(1);
+    let p50 = lat_ns[lat_ns.len() / 2];
+    let p99 = lat_ns[(lat_ns.len() * 99 / 100).min(lat_ns.len() - 1)];
+    let (hits, misses) = engine.cache_stats();
+    let looked_up = (hits + misses).max(1);
+
+    let resident_table_bytes = engine.resident_table_bytes();
+    let full_table_bytes = engine.full_table_bytes();
+    let m = engine.manifest();
+    Ok(ServeBenchRecord {
+        method: m.method_name.clone(),
+        method_tag: m.method.clone(),
+        dataset: m.dataset.clone(),
+        n,
+        d: engine.d(),
+        queries,
+        batch,
+        cache_rows: engine.cache_rows(),
+        zipf_s: opts.zipf_s,
+        mean_ns,
+        p50_ns: p50,
+        p99_ns: p99,
+        queries_per_sec: queries as f64 / wall,
+        cache_hit_rate: hits as f64 / looked_up as f64,
+        resident_table_bytes,
+        resident_index_bytes: engine.resident_index_bytes(),
+        full_table_bytes,
+        resident_ratio: resident_table_bytes as f64 / full_table_bytes.max(1) as f64,
+        meta: RecordMeta::capture("serve-bench/v1"),
     })
 }
 
@@ -639,10 +830,11 @@ mod tests {
         assert_eq!(recs[2].path, "batch");
         assert_eq!(recs[2].rows, 64);
         assert!(recs[1].speedup_vs_reference.is_some());
-        assert!(recs.iter().all(|r| r.threads >= 1));
+        assert!(recs.iter().all(|r| r.meta.threads >= 1));
         let json = serde_json::to_string(&recs).unwrap();
         assert!(json.contains("\"elements_per_sec\""), "json: {json}");
         assert!(json.contains("\"threads\"") && json.contains("\"git_sha\""), "json: {json}");
+        assert!(json.contains("\"schema\":\"compose-bench/v1\""), "json: {json}");
         for r in &recs {
             assert!(r.row().contains("elem/s"));
         }
@@ -712,7 +904,7 @@ mod tests {
         assert!(rec.peak_compose_rows < spec.n);
         assert!(rec.final_loss.is_finite());
         assert!(rec.parallel && rec.prefetch > 0, "pipelined engine is the default");
-        assert!(rec.threads >= 1);
+        assert!(rec.meta.threads >= 1);
         let json = serde_json::to_string(&rec).unwrap();
         assert!(json.contains("\"nodes_per_sec\""), "json: {json}");
         assert!(json.contains("\"layers\"") && json.contains("\"fanouts\""), "json: {json}");
@@ -750,5 +942,189 @@ mod tests {
         assert_eq!(rec.fanout, Some(4), "legacy scalar is the hop-0 fanout");
         assert!(rec.nodes_per_sec > 0.0);
         assert!(rec.row().contains("L=2"));
+    }
+
+    /// Pins the exact JSON key set of every record type: the
+    /// `RecordMeta` flatten must keep the pre-envelope field names
+    /// (`threads`, `git_sha`) unchanged for `ci/bench_baseline.py` and
+    /// the uploaded-artifact consumers.
+    #[test]
+    fn record_json_envelopes_are_stable() {
+        fn sorted_keys(v: &serde_json::Value) -> Vec<String> {
+            let mut k: Vec<String> = v.as_object().unwrap().keys().cloned().collect();
+            k.sort();
+            k
+        }
+        fn expect(mut want: Vec<&str>) -> Vec<&str> {
+            want.extend(["schema", "threads", "git_sha"]);
+            want.sort_unstable();
+            want
+        }
+        let meta = RecordMeta::capture("x/v1");
+
+        let c = ComposeBenchRecord {
+            method: "m".into(),
+            path: "p".into(),
+            n: 1,
+            d: 1,
+            rows: 1,
+            iters: 1,
+            mean_ns: 1,
+            p50_ns: 1,
+            p95_ns: 1,
+            elements_per_sec: 1.0,
+            speedup_vs_reference: None,
+            meta: meta.clone(),
+        };
+        let v = serde_json::to_value(&c).unwrap();
+        assert_eq!(v["schema"], "x/v1");
+        assert_eq!(
+            sorted_keys(&v),
+            expect(vec![
+                "method",
+                "path",
+                "n",
+                "d",
+                "rows",
+                "iters",
+                "mean_ns",
+                "p50_ns",
+                "p95_ns",
+                "elements_per_sec",
+                "speedup_vs_reference",
+            ])
+        );
+
+        let p = PartitionBenchRecord {
+            stage: "s".into(),
+            n: 1,
+            edges: 1,
+            k: 1,
+            iters: 1,
+            mean_ns: 1,
+            p50_ns: 1,
+            p95_ns: 1,
+            edges_per_sec: 1.0,
+            speedup_vs_reference: None,
+            edge_cut: None,
+            meta: meta.clone(),
+        };
+        assert_eq!(
+            sorted_keys(&serde_json::to_value(&p).unwrap()),
+            expect(vec![
+                "stage",
+                "n",
+                "edges",
+                "k",
+                "iters",
+                "mean_ns",
+                "p50_ns",
+                "p95_ns",
+                "edges_per_sec",
+                "speedup_vs_reference",
+                "edge_cut",
+            ])
+        );
+
+        let m = MinibatchBenchRecord {
+            dataset: "d".into(),
+            method: "m".into(),
+            n: 1,
+            d: 1,
+            batch_size: 1,
+            fanout: None,
+            fanouts: vec![None],
+            layers: 1,
+            epochs: 1,
+            batches_per_epoch: 1,
+            seeds_per_epoch: 1,
+            peak_compose_rows: 1,
+            mean_epoch_ns: 1,
+            p50_epoch_ns: 1,
+            p95_epoch_ns: 1,
+            nodes_per_sec: 1.0,
+            batches_per_sec: 1.0,
+            first_loss: 0.0,
+            final_loss: 0.0,
+            val_metric: 0.0,
+            test_metric: 0.0,
+            parallel: true,
+            prefetch: 1,
+            meta: meta.clone(),
+        };
+        assert_eq!(
+            sorted_keys(&serde_json::to_value(&m).unwrap()),
+            expect(vec![
+                "dataset",
+                "method",
+                "n",
+                "d",
+                "batch_size",
+                "fanout",
+                "fanouts",
+                "layers",
+                "epochs",
+                "batches_per_epoch",
+                "seeds_per_epoch",
+                "peak_compose_rows",
+                "mean_epoch_ns",
+                "p50_epoch_ns",
+                "p95_epoch_ns",
+                "nodes_per_sec",
+                "batches_per_sec",
+                "first_loss",
+                "final_loss",
+                "val_metric",
+                "test_metric",
+                "parallel",
+                "prefetch",
+            ])
+        );
+
+        let s = ServeBenchRecord {
+            method: "m".into(),
+            method_tag: "full".into(),
+            dataset: "d".into(),
+            n: 1,
+            d: 1,
+            queries: 1,
+            batch: 1,
+            cache_rows: 1,
+            zipf_s: 1.0,
+            mean_ns: 1,
+            p50_ns: 1,
+            p99_ns: 1,
+            queries_per_sec: 1.0,
+            cache_hit_rate: 0.5,
+            resident_table_bytes: 1,
+            resident_index_bytes: 1,
+            full_table_bytes: 1,
+            resident_ratio: 1.0,
+            meta,
+        };
+        assert_eq!(
+            sorted_keys(&serde_json::to_value(&s).unwrap()),
+            expect(vec![
+                "method",
+                "method_tag",
+                "dataset",
+                "n",
+                "d",
+                "queries",
+                "batch",
+                "cache_rows",
+                "zipf_s",
+                "mean_ns",
+                "p50_ns",
+                "p99_ns",
+                "queries_per_sec",
+                "cache_hit_rate",
+                "resident_table_bytes",
+                "resident_index_bytes",
+                "full_table_bytes",
+                "resident_ratio",
+            ])
+        );
+        assert!(s.row().contains("q/s"));
     }
 }

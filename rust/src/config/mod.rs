@@ -8,7 +8,11 @@
 //! benches, the trainer and the AOT layer agree by construction.
 
 use crate::data::{self, Dataset, TaskKind};
-use crate::embedding::{budget_for_fraction, EmbeddingMethod, EmbeddingPlan, PosBudget};
+use crate::embedding::{budget_for_fraction, EmbeddingMethod, EmbeddingPlan, MethodSpec, PosBudget};
+
+// Scale-derived paper defaults now live beside the `MethodSpec` parser;
+// re-exported here so existing `config::default_k` callers keep working.
+pub use crate::embedding::{default_c, default_k};
 use crate::partition::{Hierarchy, HierarchyConfig};
 use crate::sampler::SamplerConfig;
 use crate::util::json::Json;
@@ -100,25 +104,6 @@ fn ds_tag(dataset: &str) -> &'static str {
     }
 }
 
-/// Paper default k. Eq. 8 says `k = n^alpha` with alpha = 1/4 — but n
-/// there is the ORIGINAL OGB node count. Since the synthetic analogs are
-/// scaled down, we keep the paper's realized k values (arxiv 21,
-/// products 40, proteins 19) so the partitions-per-class regime matches
-/// the paper's; the alpha sweep (Fig. 3) still scales with the synth n.
-pub fn default_k(n: usize) -> usize {
-    match n {
-        6_000 => 21,     // 169,343^(1/4)
-        12_000 => 40,    // 2,449,029^(1/4)
-        4_000 => 19,     // 132,534^(1/4)
-        _ => (n as f64).powf(ALPHA).ceil() as usize,
-    }
-}
-
-/// Paper default `c = ⌈sqrt(n/k)⌉`, `b = c·k` (§IV-D).
-pub fn default_c(n: usize, k: usize) -> usize {
-    ((n as f64 / k as f64).sqrt()).ceil() as usize
-}
-
 /// Build one experiment with defaults.
 fn exp(
     dataset: &'static str,
@@ -149,59 +134,32 @@ pub fn full_grid() -> Vec<Experiment> {
         let spec = data::spec(dataset).unwrap();
         let n = spec.n;
         let k = default_k(n);
-        let c = default_c(n, k);
-        let b = c * k;
+        // t3/t4/t5 entries go through the shared tag parser so the grid
+        // can never drift from what `--method <tag>` builds on the CLI.
+        let parse = |tag: &str| {
+            MethodSpec::parse(tag)
+                .unwrap_or_else(|e| panic!("grid tag '{tag}': {e}"))
+                .resolve(n)
+                .unwrap_or_else(|e| panic!("grid tag '{tag}' at n={n}: {e}"))
+        };
         for model in model_pairs(dataset) {
             // --- Table III / IV ------------------------------------------------
-            out.push(exp(dataset, model, "full", EmbeddingMethod::Full, k, "t3"));
-            let posemb1 = EmbeddingMethod::PosEmb { levels: 1 };
-            out.push(exp(dataset, model, "posemb1", posemb1, k, "t3"));
-            out.push(exp(
-                dataset,
-                model,
-                "randompart",
-                EmbeddingMethod::RandomPart { parts: k },
-                k,
-                "t3",
-            ));
-            out.push(exp(
-                dataset,
-                model,
-                "posfullemb1",
-                EmbeddingMethod::PosFullEmb { levels: 1 },
-                k,
-                "t3",
-            ));
-            let posemb2 = EmbeddingMethod::PosEmb { levels: 2 };
-            out.push(exp(dataset, model, "posemb2", posemb2, k, "t4"));
-            let posemb3 = EmbeddingMethod::PosEmb { levels: 3 };
-            out.push(exp(dataset, model, "posemb3", posemb3, k, "t4"));
-            // --- Table V -------------------------------------------------------
-            out.push(exp(
-                dataset,
-                model,
-                "posfullemb3",
-                EmbeddingMethod::PosFullEmb { levels: 3 },
-                k,
-                "t5",
-            ));
-            for h in [1usize, 2] {
-                out.push(exp(
-                    dataset,
-                    model,
-                    &format!("inter_h{h}"),
-                    EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: b, h },
-                    k,
-                    "t5",
-                ));
-                out.push(exp(
-                    dataset,
-                    model,
-                    &format!("intra_h{h}"),
-                    EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h },
-                    k,
-                    "t5",
-                ));
+            for (name, tag, group) in [
+                ("full", "full", "t3"),
+                ("posemb1", "posemb1", "t3"),
+                ("randompart", "randompart", "t3"),
+                ("posfullemb1", "posfullemb(levels=1)", "t3"),
+                ("posemb2", "posemb2", "t4"),
+                ("posemb3", "posemb3", "t4"),
+                // --- Table V ---------------------------------------------------
+                ("posfullemb3", "posfullemb(levels=3)", "t5"),
+                ("inter_h1", "inter(h=1)", "t5"),
+                ("inter_h2", "inter(h=2)", "t5"),
+                ("intra_h1", "intra(h=1)", "t5"),
+                ("intra_h2", "intra(h=2)", "t5"),
+            ] {
+                let r = parse(tag);
+                out.push(exp(dataset, model, name, r.method, r.k, group));
             }
             // --- Figure 3: alpha sweep (PosEmb 1-level) ------------------------
             for (num, den) in [(1u32, 8u32), (2, 8), (3, 8), (4, 8), (6, 8)] {

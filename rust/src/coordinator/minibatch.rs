@@ -115,6 +115,9 @@ pub struct MinibatchOptions {
     /// Hidden width of the SAGE head's intermediate layers (unused by
     /// one-layer heads, whose single layer maps `d → classes`).
     pub hidden: usize,
+    /// Write a versioned model artifact (tables + plan indices + graph,
+    /// see [`crate::serve`]) to this directory after training.
+    pub save_model: Option<std::path::PathBuf>,
 }
 
 impl Default for MinibatchOptions {
@@ -129,6 +132,7 @@ impl Default for MinibatchOptions {
             parallel: true,
             prefetch: 2,
             hidden: 64,
+            save_model: None,
         }
     }
 }
@@ -177,7 +181,7 @@ impl MinibatchOutcome {
 /// heads keep the legacy names (`head_w_self`/`head_w_neigh`/`head_b`),
 /// so pre-multi-hop runs, tests and tooling are untouched; deeper heads
 /// use `head{l}_*`.
-fn head_param_names(layers: usize) -> Vec<(String, String, String)> {
+pub(crate) fn head_param_names(layers: usize) -> Vec<(String, String, String)> {
     (0..layers)
         .map(|l| {
             if layers == 1 {
@@ -192,7 +196,13 @@ fn head_param_names(layers: usize) -> Vec<(String, String, String)> {
 /// `(input, output)` dimensions of SAGE layer `j` in an `layers`-deep
 /// head: the first layer reads the composed `d`-dim embeddings, the
 /// last emits `classes` logits, everything between is `hidden` wide.
-fn layer_dims(d: usize, classes: usize, hidden: usize, layers: usize, j: usize) -> (usize, usize) {
+pub(crate) fn layer_dims(
+    d: usize,
+    classes: usize,
+    hidden: usize,
+    layers: usize,
+    j: usize,
+) -> (usize, usize) {
     let din = if j == 0 { d } else { hidden };
     let dout = if j + 1 == layers { classes } else { hidden };
     (din, dout)
@@ -343,6 +353,22 @@ impl<'a> MinibatchTrainer<'a> {
         self.peak_compose_rows
     }
 
+    /// Serialize the current parameters (tables + head), the plan's
+    /// static indices and the graph into a versioned model artifact at
+    /// `dir` (see [`crate::serve`]). Callable at any point;
+    /// [`train`](MinibatchTrainer::train) invokes it automatically
+    /// when `opts.save_model` is set.
+    pub fn save_artifact(&self, dir: &std::path::Path) -> Result<crate::serve::ModelManifest> {
+        crate::serve::save_artifact(
+            dir,
+            self.ds,
+            self.engine.plan(),
+            &self.params,
+            self.layers,
+            self.opts.hidden,
+        )
+    }
+
     /// Compose one sampled multi-hop block and step on it: the shared
     /// body of the inline and prefetched epoch loops. Returns the
     /// block's summed per-seed loss.
@@ -450,6 +476,9 @@ impl<'a> MinibatchTrainer<'a> {
         let ds = self.ds;
         let val_metric = self.evaluate(&ds.splits.val)?;
         let test_metric = self.evaluate(&ds.splits.test)?;
+        if let Some(dir) = self.opts.save_model.clone() {
+            self.save_artifact(&dir)?;
+        }
         Ok(MinibatchOutcome {
             losses,
             epoch_ns,
@@ -1297,6 +1326,9 @@ pub fn train_full_batch(
             mean_roc_auc(scores, classes, &ds.labels, &ds.splits.test),
         ),
     };
+    if let Some(dir) = &opts.save_model {
+        crate::serve::save_artifact(dir, ds, plan, &params, layers, opts.hidden)?;
+    }
     Ok(MinibatchOutcome {
         losses,
         epoch_ns,
@@ -1433,7 +1465,7 @@ fn make_grad_buffers(
 /// Sums in `rows` order — both trainers and both eval paths share this
 /// one implementation, so aggregation bits can never diverge between
 /// them (the oracle-parity contract leans on that).
-fn mean_rows(dst: &mut [f32], mat: &[f32], rows: &[u32]) {
+pub(crate) fn mean_rows(dst: &mut [f32], mat: &[f32], rows: &[u32]) {
     let d = dst.len();
     dst.fill(0.0);
     for &r in rows {
@@ -1453,7 +1485,7 @@ fn mean_rows(dst: &mut [f32], mat: &[f32], rows: &[u32]) {
 /// `out = bias + W_self^T·xs + W_neigh^T·nbar` for one row of one SAGE
 /// layer (`W ∈ R^{din×dout}` row-major; `dout = out.len()`). Shared by
 /// every forward path so affine bits can never diverge between them.
-fn sage_affine_row(
+pub(crate) fn sage_affine_row(
     xs: &[f32],
     nbar: &[f32],
     w_self: &[f32],

@@ -27,6 +27,9 @@ mod statics;
 mod trainer;
 
 pub use minibatch::{train_full_batch, MinibatchOptions, MinibatchOutcome, MinibatchTrainer};
+// shared with the serving path (`crate::serve`), so a served forward
+// can never drift from the trainers' evaluation forward
+pub(crate) use minibatch::{head_param_names, layer_dims, mean_rows, sage_affine_row};
 pub use optim::{GradBuffer, GradShard, Optimizer, OptimizerKind};
 pub use params::{gnn_param_shapes, init_full_params};
 pub use statics::build_statics;

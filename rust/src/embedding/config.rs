@@ -1,4 +1,11 @@
-//! Embedding method configuration.
+//! Embedding method configuration: the [`EmbeddingMethod`] enum, the
+//! paper's scale-derived defaults (`k`, `c`, `b`), and the one tag
+//! parser ([`MethodSpec`]) shared by the CLI, the experiment grid, the
+//! bench harness and the serve path.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
 
 /// All embedding-layer methods evaluated in the paper.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -85,6 +92,25 @@ pub enum MethodFamily {
 }
 
 impl EmbeddingMethod {
+    /// Every tag accepted by the [`MethodSpec`] parser (and thus the
+    /// CLI `--method` flag). `posemb1`/`posemb2`/`posemb3` are aliases
+    /// for `posemb(levels=...)`.
+    pub const VARIANTS: &[&str] = &[
+        "full",
+        "hashtrick",
+        "bloom",
+        "hashemb",
+        "dhe",
+        "posemb",
+        "posemb1",
+        "posemb2",
+        "posemb3",
+        "randompart",
+        "posfullemb",
+        "inter",
+        "intra",
+    ];
+
     /// Short display name matching the paper's tables.
     pub fn name(&self) -> String {
         match self {
@@ -150,6 +176,237 @@ impl EmbeddingMethod {
     }
 }
 
+impl fmt::Display for EmbeddingMethod {
+    /// Fully explicit tag form, round-trippable through [`FromStr`]
+    /// (e.g. `intra(levels=3,c=90,h=2)`). Model-artifact manifests
+    /// store this string so the serve path can re-parse the method
+    /// without knowing the node count.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EmbeddingMethod::Full => write!(f, "full"),
+            EmbeddingMethod::HashTrick { buckets } => write!(f, "hashtrick(b={buckets})"),
+            EmbeddingMethod::Bloom { buckets, h } => write!(f, "bloom(b={buckets},h={h})"),
+            EmbeddingMethod::HashEmb { buckets, h } => write!(f, "hashemb(b={buckets},h={h})"),
+            EmbeddingMethod::Dhe { encoding_dim, hidden, layers } => {
+                write!(f, "dhe(e={encoding_dim},w={hidden},l={layers})")
+            }
+            EmbeddingMethod::PosEmb { levels } => write!(f, "posemb(levels={levels})"),
+            EmbeddingMethod::RandomPart { parts } => write!(f, "randompart(parts={parts})"),
+            EmbeddingMethod::PosFullEmb { levels } => write!(f, "posfullemb(levels={levels})"),
+            EmbeddingMethod::PosHashEmbInter { levels, buckets, h } => {
+                write!(f, "inter(levels={levels},b={buckets},h={h})")
+            }
+            EmbeddingMethod::PosHashEmbIntra { levels, compression, h } => {
+                write!(f, "intra(levels={levels},c={compression},h={h})")
+            }
+        }
+    }
+}
+
+/// Paper default `k` (Eq. 8: `k = n^alpha`, alpha = 1/4) — but `n`
+/// there is the ORIGINAL OGB node count. The scaled-down synthetic
+/// analogs keep the paper's realized k values (arxiv 21, products 40,
+/// proteins 19) so the partitions-per-class regime matches the paper's;
+/// every other size uses the formula directly.
+pub fn default_k(n: usize) -> usize {
+    match n {
+        6_000 => 21,     // 169,343^(1/4)
+        12_000 => 40,    // 2,449,029^(1/4)
+        4_000 => 19,     // 132,534^(1/4)
+        _ => (n as f64).powf(0.25).ceil() as usize,
+    }
+}
+
+/// Paper default `c = ⌈sqrt(n/k)⌉`; the Inter pool is `b = c·k` (§IV-D).
+pub fn default_c(n: usize, k: usize) -> usize {
+    ((n as f64 / k as f64).sqrt()).ceil() as usize
+}
+
+/// Error from parsing a method tag or resolving its parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MethodParseError(String);
+
+impl fmt::Display for MethodParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MethodParseError {}
+
+fn perr(msg: impl Into<String>) -> MethodParseError {
+    MethodParseError(msg.into())
+}
+
+/// Parameter keys each tag accepts in the `tag(key=val,...)` form.
+fn allowed_keys(tag: &str) -> &'static [&'static str] {
+    match tag {
+        "hashtrick" => &["b", "k"],
+        "bloom" | "hashemb" => &["b", "h", "k"],
+        "dhe" => &["e", "w", "l"],
+        "posemb" | "posemb1" | "posemb2" | "posemb3" | "posfullemb" => &["levels", "k"],
+        "randompart" => &["parts", "k"],
+        "inter" => &["levels", "b", "h", "k"],
+        "intra" => &["levels", "c", "h", "k"],
+        _ => &[],
+    }
+}
+
+/// A parsed-but-unresolved method tag: `tag` or `tag(key=val,...)`.
+///
+/// Scale-dependent defaults (hierarchy branching `k`, compression `c`,
+/// bucket count `b`) are filled in by [`MethodSpec::resolve`] once the
+/// node count is known; explicit `key=val` parameters always win. This
+/// is the single parser behind the CLI `--method` flag, the experiment
+/// grid, the bench harness and the serve path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MethodSpec {
+    tag: String,
+    params: BTreeMap<String, usize>,
+}
+
+/// A method resolved at a concrete node count, plus the hierarchy
+/// branching factor `k` that position-family methods partition with.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResolvedMethod {
+    /// The concrete method configuration.
+    pub method: EmbeddingMethod,
+    /// Hierarchy branching factor (used when `method.needs_hierarchy()`).
+    pub k: usize,
+}
+
+impl FromStr for MethodSpec {
+    type Err = MethodParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        let (tag, inner) = match s.find('(') {
+            Some(i) => {
+                let Some(inner) = s[i + 1..].strip_suffix(')') else {
+                    return Err(perr(format!("method '{s}': missing closing ')'")));
+                };
+                (&s[..i], inner)
+            }
+            None => (s, ""),
+        };
+        if !EmbeddingMethod::VARIANTS.contains(&tag) {
+            return Err(perr(format!(
+                "unknown method '{tag}' (valid: {})",
+                EmbeddingMethod::VARIANTS.join(", ")
+            )));
+        }
+        let allowed = allowed_keys(tag);
+        let mut params = BTreeMap::new();
+        for kv in inner.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, val)) = kv.split_once('=') else {
+                return Err(perr(format!("method '{tag}': expected key=value, got '{kv}'")));
+            };
+            let (key, val) = (key.trim(), val.trim());
+            if !allowed.contains(&key) {
+                return Err(if allowed.is_empty() {
+                    perr(format!("method '{tag}' takes no parameters, got '{key}'"))
+                } else {
+                    perr(format!(
+                        "method '{tag}': unknown parameter '{key}' (allowed: {})",
+                        allowed.join(", ")
+                    ))
+                });
+            }
+            let v: usize = val.parse().map_err(|_| {
+                perr(format!("method '{tag}': '{key}' must be an integer, got '{val}'"))
+            })?;
+            if v == 0 {
+                return Err(perr(format!("method '{tag}': parameter '{key}' must be positive")));
+            }
+            params.insert(key.to_string(), v);
+        }
+        Ok(MethodSpec { tag: tag.to_string(), params })
+    }
+}
+
+impl MethodSpec {
+    /// Convenience alias for [`str::parse`].
+    pub fn parse(s: &str) -> Result<Self, MethodParseError> {
+        s.parse()
+    }
+
+    /// The bare tag this spec was parsed from.
+    pub fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    fn get(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+
+    fn levels_default(&self) -> usize {
+        match self.tag.as_str() {
+            "posemb1" => 1,
+            "posemb2" => 2,
+            _ => 3,
+        }
+    }
+
+    /// Resolve scale-dependent defaults at node count `n` (paper §IV-D:
+    /// `k = default_k(n)`, `c = ⌈sqrt(n/k)⌉`, `b = c·k`, `h = 2`).
+    pub fn resolve(&self, n: usize) -> Result<ResolvedMethod, MethodParseError> {
+        let k = self.get("k").unwrap_or_else(|| default_k(n));
+        let c = self.get("c").unwrap_or_else(|| default_c(n, k));
+        let b = self.get("b").unwrap_or(c * k);
+        let h = self.get("h").unwrap_or(2);
+        let levels = self.get("levels").unwrap_or_else(|| self.levels_default());
+        let method = match self.tag.as_str() {
+            "full" => EmbeddingMethod::Full,
+            "hashtrick" => EmbeddingMethod::HashTrick { buckets: b },
+            "bloom" => EmbeddingMethod::Bloom { buckets: b, h },
+            "hashemb" => EmbeddingMethod::HashEmb { buckets: b, h },
+            "dhe" => EmbeddingMethod::Dhe {
+                encoding_dim: self.get("e").unwrap_or(32),
+                hidden: self.get("w").unwrap_or(64),
+                layers: self.get("l").unwrap_or(1),
+            },
+            "posemb" | "posemb1" | "posemb2" | "posemb3" => EmbeddingMethod::PosEmb { levels },
+            "randompart" => EmbeddingMethod::RandomPart { parts: self.get("parts").unwrap_or(k) },
+            "posfullemb" => EmbeddingMethod::PosFullEmb { levels },
+            "inter" => EmbeddingMethod::PosHashEmbInter { levels, buckets: b, h },
+            "intra" => EmbeddingMethod::PosHashEmbIntra { levels, compression: c, h },
+            other => return Err(perr(format!("unknown method '{other}'"))),
+        };
+        Ok(ResolvedMethod { method, k })
+    }
+}
+
+impl FromStr for EmbeddingMethod {
+    type Err = MethodParseError;
+
+    /// Parse the explicit form printed by [`fmt::Display`]
+    /// (e.g. `intra(levels=3,c=90,h=2)`), or a bare tag when every
+    /// parameter has a scale-free default (`full`, `posemb3`, `dhe`).
+    /// Bare tags whose defaults depend on the node count (`hashtrick`,
+    /// `inter`, ...) must go through [`MethodSpec::resolve`] instead.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let spec: MethodSpec = s.parse()?;
+        let needs: &[&str] = match spec.tag.as_str() {
+            "hashtrick" | "bloom" | "hashemb" | "inter" => &["b"],
+            "intra" => &["c"],
+            "randompart" => &["parts"],
+            _ => &[],
+        };
+        for key in needs {
+            if spec.get(key).is_none() {
+                return Err(perr(format!(
+                    "method '{}' needs '{key}=' to parse without a node count \
+                     (e.g. '{}({key}=64)'); or resolve a MethodSpec at a known n",
+                    spec.tag, spec.tag
+                )));
+            }
+        }
+        // Every scale-dependent value is explicit (checked above), so
+        // the node count passed to resolve() is never consulted.
+        Ok(spec.resolve(1)?.method)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,5 +442,86 @@ mod tests {
         assert!(!EmbeddingMethod::RandomPart { parts: 8 }.needs_hierarchy());
         assert!(EmbeddingMethod::PosEmb { levels: 2 }.needs_hierarchy());
         assert_eq!(EmbeddingMethod::RandomPart { parts: 8 }.levels(), 1);
+    }
+
+    #[test]
+    fn display_fromstr_round_trips_every_variant() {
+        let methods = [
+            EmbeddingMethod::Full,
+            EmbeddingMethod::HashTrick { buckets: 357 },
+            EmbeddingMethod::Bloom { buckets: 357, h: 2 },
+            EmbeddingMethod::HashEmb { buckets: 357, h: 3 },
+            EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 64, layers: 2 },
+            EmbeddingMethod::PosEmb { levels: 2 },
+            EmbeddingMethod::RandomPart { parts: 21 },
+            EmbeddingMethod::PosFullEmb { levels: 3 },
+            EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: 234, h: 2 },
+            EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 17, h: 2 },
+        ];
+        for m in methods {
+            let s = m.to_string();
+            let back: EmbeddingMethod = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(back, m, "round trip failed for {s}");
+        }
+    }
+
+    #[test]
+    fn bare_tags_resolve_to_paper_defaults() {
+        // n=6000 (synth-arxiv): k=21, c=⌈sqrt(6000/21)⌉=17, b=357
+        let r = MethodSpec::parse("intra").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.k, 21);
+        assert_eq!(
+            r.method,
+            EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 17, h: 2 }
+        );
+        let r = MethodSpec::parse("inter").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: 357, h: 2 });
+        let r = MethodSpec::parse("posemb1").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::PosEmb { levels: 1 });
+        let r = MethodSpec::parse("randompart").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::RandomPart { parts: 21 });
+        let r = MethodSpec::parse("full").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::Full);
+        let r = MethodSpec::parse("dhe").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 64, layers: 1 });
+    }
+
+    #[test]
+    fn explicit_params_override_scale_defaults() {
+        // k=9 forces the paper-formula regime at synth scale:
+        // c=⌈sqrt(6000/9)⌉=26, b=c*k=234
+        let r = MethodSpec::parse("inter(k=9,h=1)").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.k, 9);
+        assert_eq!(r.method, EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: 234, h: 1 });
+        let r = MethodSpec::parse("hashtrick(b=100)").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::HashTrick { buckets: 100 });
+    }
+
+    #[test]
+    fn unknown_tag_error_lists_variants() {
+        let e = MethodSpec::parse("fulll").unwrap_err().to_string();
+        assert!(e.contains("unknown method 'fulll'"), "{e}");
+        for tag in EmbeddingMethod::VARIANTS {
+            assert!(e.contains(tag), "error should list '{tag}': {e}");
+        }
+    }
+
+    #[test]
+    fn malformed_params_rejected() {
+        assert!(MethodSpec::parse("intra(c=17").is_err()); // missing ')'
+        assert!(MethodSpec::parse("intra(z=3)").is_err()); // unknown key
+        assert!(MethodSpec::parse("full(b=3)").is_err()); // takes no params
+        assert!(MethodSpec::parse("intra(c=abc)").is_err()); // non-integer
+        assert!(MethodSpec::parse("intra(c=0)").is_err()); // zero
+        let e = "inter".parse::<EmbeddingMethod>().unwrap_err().to_string();
+        assert!(e.contains("needs 'b='"), "{e}");
+    }
+
+    #[test]
+    fn default_scale_matches_registered_datasets() {
+        assert_eq!(default_k(6_000), 21);
+        assert_eq!(default_k(12_000), 40);
+        assert_eq!(default_k(4_000), 19);
+        assert_eq!(default_c(6_000, 21), 17);
     }
 }

@@ -43,7 +43,10 @@ mod plan;
 mod reference;
 
 pub use compose::{ComposeEngine, ComposeOptions, PreparedCompose};
-pub use config::{EmbeddingMethod, MethodFamily};
+pub use config::{
+    default_c, default_k, EmbeddingMethod, MethodFamily, MethodParseError, MethodSpec,
+    ResolvedMethod,
+};
 pub use memory::{budget_for_fraction, BudgetedMethods, MemoryReport, PosBudget};
 pub use plan::{DhePlan, EmbeddingPlan, NodePlan, PositionPlan, TableShape};
 pub use reference::{compose_embeddings, init_params, ParamStore};

@@ -36,4 +36,5 @@ pub mod metrics;
 pub mod partition;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;

@@ -14,40 +14,51 @@
 //! * `compose --dataset D [--method M] [--batch B] [--json]` — benchmark
 //!   the host-side compose engine (reference vs parallel vs batch paths);
 //!   runs without PJRT artifacts.
-//! * `train-minibatch [--experiment NAME | --dataset D --method M]
-//!   [--batch B] [--fanout F|all | --fanouts F1,F2,..] [--hidden W]
-//!   [--epochs N] [--lr LR] [--optimizer sgd|adam] [--no-shuffle]
-//!   [--seed S] [--serial] [--prefetch DEPTH] [--json]` — host-side
-//!   neighbor-sampled minibatch training on the compose engine; runs
-//!   without PJRT artifacts and emits a JSON bench record. The fanout
-//!   list's length is the SAGE head's depth (`--fanouts 10,5` = a
-//!   2-layer head over 2-hop blocks; `--hidden` sets its intermediate
-//!   width). The pipelined engine (prefetched sampling + parallel
-//!   step) is the default; `--serial` selects the single-threaded
-//!   oracle path (bit-identical losses, slower wall clock).
+//! * `train-minibatch [...]` — host-side neighbor-sampled minibatch
+//!   training on the compose engine; runs without PJRT artifacts, emits
+//!   a JSON bench record, and with `--save-model DIR` writes a
+//!   versioned model artifact (see `docs/ARCHITECTURE.md`, serving
+//!   path). The fanout list's length is the SAGE head's depth
+//!   (`--fanouts 10,5` = a 2-layer head over 2-hop blocks; `--hidden`
+//!   sets its intermediate width). The pipelined engine is the
+//!   default; `--serial` selects the single-threaded oracle path.
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
-//!   benchmark the partitioner pipeline (scalar vs parallel matching,
-//!   reference vs CSR contraction, end-to-end partition, hierarchy);
-//!   defaults to the acceptance SBM (n = 50k, 32 communities).
+//!   benchmark the partitioner pipeline; defaults to the acceptance
+//!   SBM (n = 50k, 32 communities).
+//! * `serve-bench --model DIR [--queries N] [--batch B]
+//!   [--cache-rows R] [--zipf S] [--seed S] [--json]` — open a saved
+//!   model artifact and drive it with a synthetic Zipfian query load
+//!   (latency percentiles, QPS, cache hit rate, resident bytes vs the
+//!   Full-table baseline).
 //!
-//! Argument parsing is hand-rolled (minimal-dependency build: no clap).
+//! Method tags (`--method`) are parsed by
+//! [`MethodSpec`](poshashemb::embedding::MethodSpec) — bare tags
+//! (`intra`, `inter`, `full`, ...) resolve scale parameters from the
+//! dataset size exactly as the experiment grid does, and explicit
+//! parameters override (`inter(k=9,h=1)`, `hashemb(b=500)`).
+//!
+//! Argument parsing is hand-rolled (minimal-dependency build: no
+//! clap): one static flag table per subcommand drives parsing,
+//! `--flag value` / `--flag=value` syntax, per-subcommand help
+//! (`poshashemb help <subcommand>`) and typo suggestions for unknown
+//! flags.
 
 use anyhow::{anyhow, bail, Result};
 use poshashemb::bench_harness::{
-    bench_compose, bench_minibatch, bench_partition, print_table, rows_from_outcomes, Harness,
+    bench_compose, bench_minibatch, bench_partition, bench_serve, print_table,
+    rows_from_outcomes, Harness, ServeBenchOptions,
 };
-use poshashemb::config::{
-    default_c, default_k, full_grid, materialize, smoke_grid, write_aot_request,
-};
+use poshashemb::config::{full_grid, materialize, smoke_grid, write_aot_request};
 use poshashemb::coordinator::{run_experiment, MinibatchOptions, OptimizerKind, TrainOptions};
 use poshashemb::data::{spec, Dataset, DATASET_NAMES};
-use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::embedding::{EmbeddingPlan, MethodSpec};
 use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
 use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
 use poshashemb::runtime::{Manifest, RuntimeClient};
 use poshashemb::sampler::{Fanout, Fanouts, SamplerConfig};
+use poshashemb::serve::ServeEngine;
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 fn main() {
     if let Err(e) = run() {
@@ -56,69 +67,333 @@ fn main() {
     }
 }
 
-/// Parse `--key value` / `--flag` style args after the subcommand.
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
-    let mut map = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        let key = args[i]
-            .strip_prefix("--")
-            .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
-        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-            map.insert(key.to_string(), args[i + 1].clone());
-            i += 2;
-        } else {
-            map.insert(key.to_string(), "true".to_string());
-            i += 1;
+// ---------------------------------------------------------------------
+// typed CLI argument layer
+// ---------------------------------------------------------------------
+
+/// Spec of one flag: boolean (`value: None`) or valued
+/// (`value: Some("PLACEHOLDER")`).
+struct FlagSpec {
+    name: &'static str,
+    value: Option<&'static str>,
+    help: &'static str,
+}
+
+/// One subcommand: its flag table drives parsing, validation and the
+/// generated help text — a flag that is not in the table does not
+/// parse.
+struct CommandSpec {
+    name: &'static str,
+    /// Optional positional word shown in usage (e.g. `report datasets`).
+    positional: Option<&'static str>,
+    about: &'static str,
+    flags: &'static [FlagSpec],
+}
+
+const fn flag(name: &'static str, value: Option<&'static str>, help: &'static str) -> FlagSpec {
+    FlagSpec { name, value, help }
+}
+
+static COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "report",
+        positional: Some("datasets"),
+        about: "dataset statistics (Table II)",
+        flags: &[],
+    },
+    CommandSpec {
+        name: "list",
+        positional: None,
+        about: "list experiment grid configs",
+        flags: &[flag("group", Some("G"), "only configs of group G (t3|t4|t5|f3|f4)")],
+    },
+    CommandSpec {
+        name: "gen-manifest",
+        positional: None,
+        about: "write the AOT compile request JSON",
+        flags: &[
+            flag("grid", Some("full|smoke"), "experiment grid to request (default full)"),
+            flag("out", Some("PATH"), "output path (default artifacts/manifest_request.json)"),
+        ],
+    },
+    CommandSpec {
+        name: "partition",
+        positional: None,
+        about: "run the multilevel partitioner",
+        flags: &[
+            flag("dataset", Some("D"), "dataset name (default synth-arxiv)"),
+            flag("k", Some("K"), "partitions per level (default 8)"),
+            flag("levels", Some("L"), "hierarchy levels; 1 = flat partition (default 1)"),
+        ],
+    },
+    CommandSpec {
+        name: "train",
+        positional: None,
+        about: "train one grid config via the PJRT runtime",
+        flags: &[
+            flag("experiment", Some("NAME"), "grid experiment name (see `poshashemb list`)"),
+            flag("seed", Some("S"), "random seed (default 0)"),
+            flag("epochs", Some("N"), "override the config's epoch count"),
+            flag("verbose", None, "per-epoch progress lines"),
+        ],
+    },
+    CommandSpec {
+        name: "train-minibatch",
+        positional: None,
+        about: "host-side neighbor-sampled minibatch training",
+        flags: &[
+            flag("experiment", Some("NAME"), "grid experiment name (fixes dataset + method)"),
+            flag("dataset", Some("D"), "dataset name (default synth-arxiv)"),
+            flag("method", Some("TAG"), "method tag, e.g. intra, inter(k=9,h=1) (default intra)"),
+            flag("batch", Some("B"), "seeds per minibatch"),
+            flag("fanout", Some("F|all"), "one-hop neighbor fanout"),
+            flag("fanouts", Some("F1,F2,.."), "per-hop fanouts; list length = head depth"),
+            flag("hidden", Some("W"), "hidden width of intermediate head layers"),
+            flag("epochs", Some("N"), "training epochs"),
+            flag("lr", Some("LR"), "learning rate"),
+            flag("optimizer", Some("sgd|adam"), "update rule (default adam)"),
+            flag("no-shuffle", None, "keep the train split in order each epoch"),
+            flag("seed", Some("S"), "random seed (default 0)"),
+            flag("serial", None, "single-threaded oracle path (bit-identical losses)"),
+            flag("prefetch", Some("DEPTH"), "sampled blocks prefetched ahead of the trainer"),
+            flag("save-model", Some("DIR"), "write a versioned model artifact after training"),
+            flag("verbose", None, "per-epoch progress lines"),
+            flag("json", None, "emit the bench record as JSON"),
+        ],
+    },
+    CommandSpec {
+        name: "experiment",
+        positional: None,
+        about: "regenerate a paper table/figure from artifacts",
+        flags: &[
+            flag("group", Some("G"), "table/figure group: t3|t4|t5|f3|f4"),
+            flag("dataset", Some("D"), "restrict to one dataset"),
+        ],
+    },
+    CommandSpec {
+        name: "compose",
+        positional: None,
+        about: "benchmark the host-side compose engine",
+        flags: &[
+            flag("dataset", Some("D"), "dataset name (default synth-arxiv)"),
+            flag("method", Some("TAG"), "method tag (default intra)"),
+            flag("batch", Some("B"), "rows per compose_batch call (default 1024)"),
+            flag("json", None, "emit bench records as JSON"),
+        ],
+    },
+    CommandSpec {
+        name: "partition-bench",
+        positional: None,
+        about: "benchmark the partitioner pipeline",
+        flags: &[
+            flag("dataset", Some("D"), "dataset name (default: acceptance SBM, n=50k)"),
+            flag("k", Some("K"), "partitions per level (default 32)"),
+            flag("levels", Some("L"), "hierarchy levels (default 3)"),
+            flag("seed", Some("S"), "random seed (default 1)"),
+            flag("json", None, "emit bench records as JSON"),
+        ],
+    },
+    CommandSpec {
+        name: "serve-bench",
+        positional: None,
+        about: "drive a saved model artifact with a Zipfian query load",
+        flags: &[
+            flag("model", Some("DIR"), "model artifact directory (from --save-model)"),
+            flag("queries", Some("N"), "total embed queries (default 1000000)"),
+            flag("batch", Some("B"), "node ids per embed call (default 64)"),
+            flag("cache-rows", Some("R"), "hot-node LRU capacity in rows (default 4096)"),
+            flag("zipf", Some("S"), "Zipf exponent of the query stream (default 0.99)"),
+            flag("seed", Some("S"), "query-stream seed"),
+            flag("json", None, "emit the bench record as JSON"),
+        ],
+    },
+];
+
+fn command_spec(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+/// Classic two-row Levenshtein distance (flag-typo suggestions).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur[j + 1] = (prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+fn unknown_flag_error(spec: &CommandSpec, key: &str) -> anyhow::Error {
+    let mut best: Option<(usize, &str)> = None;
+    for f in spec.flags {
+        let d = levenshtein(key, f.name);
+        if best.is_none_or(|(bd, _)| d < bd) {
+            best = Some((d, f.name));
         }
     }
-    Ok(map)
+    match best.filter(|&(d, _)| d <= 2) {
+        Some((_, name)) => {
+            anyhow!("unknown flag '--{key}' for {} (did you mean '--{name}'?)", spec.name)
+        }
+        None => {
+            anyhow!("unknown flag '--{key}' for {} (see `poshashemb help {}`)", spec.name, spec.name)
+        }
+    }
+}
+
+/// Parsed flags for one subcommand, validated against its
+/// [`CommandSpec`] table.
+struct CliArgs {
+    values: HashMap<&'static str, String>,
+}
+
+impl CliArgs {
+    /// Parse `--flag value` / `--flag=value` / boolean `--flag` tokens.
+    /// Unknown flags error with a nearest-name suggestion; valued flags
+    /// without a value, booleans given one, and repeated flags all
+    /// error.
+    fn parse(spec: &CommandSpec, args: &[String]) -> Result<CliArgs> {
+        let mut values: HashMap<&'static str, String> = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let tok = &args[i];
+            let body = tok.strip_prefix("--").ok_or_else(|| {
+                anyhow!("expected --flag, got '{tok}' (see `poshashemb help {}`)", spec.name)
+            })?;
+            let (key, inline) = match body.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (body, None),
+            };
+            let fs = spec
+                .flags
+                .iter()
+                .find(|f| f.name == key)
+                .ok_or_else(|| unknown_flag_error(spec, key))?;
+            let val = match (fs.value, inline) {
+                (Some(_), Some(v)) => {
+                    i += 1;
+                    v
+                }
+                (Some(ph), None) => {
+                    let v = args
+                        .get(i + 1)
+                        .filter(|v| !v.starts_with("--"))
+                        .ok_or_else(|| anyhow!("--{key} requires a value ({ph})"))?;
+                    i += 2;
+                    v.clone()
+                }
+                (None, Some(_)) => bail!("--{key} takes no value"),
+                (None, None) => {
+                    i += 1;
+                    "true".to_string()
+                }
+            };
+            if values.insert(fs.name, val).is_some() {
+                bail!("--{key} given more than once");
+            }
+        }
+        Ok(CliArgs { values })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    /// Parse a valued flag, wrapping parse failures with the flag name.
+    fn parse_as<T>(&self, name: &str) -> Result<Option<T>>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        self.get(name)
+            .map(|v| v.parse::<T>().map_err(|e| anyhow!("--{name} '{v}': {e}")))
+            .transpose()
+    }
 }
 
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let rest: Vec<String> = args.get(1..).unwrap_or(&[]).to_vec();
+    if matches!(cmd, "help" | "--help" | "-h") {
+        match rest.first().map(String::as_str) {
+            Some(sub) => match command_spec(sub) {
+                Some(spec) => print_command_help(spec),
+                None => bail!("unknown subcommand '{sub}' (see `poshashemb help`)"),
+            },
+            None => print_help(),
+        }
+        return Ok(());
+    }
+    // `datasets` is an alias for `report datasets`
+    let canonical = if cmd == "datasets" { "report" } else { cmd };
+    let spec = command_spec(canonical)
+        .ok_or_else(|| anyhow!("unknown subcommand '{cmd}' (see `poshashemb help`)"))?;
+    if rest.iter().any(|a| a == "--help" || a == "-h") {
+        print_command_help(spec);
+        return Ok(());
+    }
     // allow `report datasets` (positional) by skipping non-flag tokens
     let flag_args: Vec<String> =
         rest.iter().skip_while(|a| !a.starts_with("--")).cloned().collect();
-    let flags = parse_flags(&flag_args)?;
-    match cmd {
-        "report" | "datasets" => cmd_report(),
-        "list" => cmd_list(&flags),
-        "gen-manifest" => cmd_gen_manifest(&flags),
-        "partition" => cmd_partition(&flags),
-        "train" => cmd_train(&flags),
-        "train-minibatch" => cmd_train_minibatch(&flags),
-        "experiment" => cmd_experiment(&flags),
-        "compose" => cmd_compose(&flags),
-        "partition-bench" => cmd_partition_bench(&flags),
-        "help" | "--help" | "-h" => {
-            print_help();
-            Ok(())
-        }
+    let parsed = CliArgs::parse(spec, &flag_args)?;
+    match spec.name {
+        "report" => cmd_report(),
+        "list" => cmd_list(&parsed),
+        "gen-manifest" => cmd_gen_manifest(&parsed),
+        "partition" => cmd_partition(&parsed),
+        "train" => cmd_train(&parsed),
+        "train-minibatch" => cmd_train_minibatch(&parsed),
+        "experiment" => cmd_experiment(&parsed),
+        "compose" => cmd_compose(&parsed),
+        "partition-bench" => cmd_partition_bench(&parsed),
+        "serve-bench" => cmd_serve_bench(&parsed),
         other => bail!("unknown subcommand '{other}' (see `poshashemb help`)"),
     }
 }
 
 fn print_help() {
-    println!(
-        "poshashemb — Position-based Hash Embeddings for GNNs (paper reproduction)\n\n\
-         USAGE: poshashemb <subcommand> [--flags]\n\n\
-         report datasets                        dataset statistics (Table II)\n\
-         list [--group G]                       list experiment grid configs\n\
-         gen-manifest [--grid full|smoke]       write artifacts/manifest_request.json\n\
-         partition --dataset D --k K [--levels L]   run the multilevel partitioner\n\
-         train --experiment NAME [--seed S] [--epochs N] [--verbose]\n\
-         train-minibatch [--experiment NAME | --dataset D --method M] [--batch B]\n\
-                         [--fanout F|all | --fanouts F1,F2,..] [--hidden W]\n\
-                         [--epochs N] [--lr LR] [--optimizer sgd|adam]\n\
-                         [--no-shuffle] [--seed S] [--serial] [--prefetch DEPTH]\n\
-                         [--verbose] [--json]\n\
-         experiment --group t3|t4|t5|f3|f4 [--dataset D]   regenerate a paper table\n\
-         compose [--dataset D] [--method M] [--batch B] [--json]   bench the compose engine\n\
-         partition-bench [--dataset D] [--k K] [--levels L] [--json]   bench the partitioner"
-    );
+    println!("poshashemb — Position-based Hash Embeddings for GNNs (paper reproduction)\n");
+    println!("USAGE: poshashemb <subcommand> [--flags]\n");
+    for c in COMMANDS {
+        let label = match c.positional {
+            Some(p) => format!("{} {p}", c.name),
+            None => c.name.to_string(),
+        };
+        println!("  {label:<18} {}", c.about);
+    }
+    println!("\nRun `poshashemb help <subcommand>` for its flags.");
+}
+
+fn print_command_help(spec: &CommandSpec) {
+    let label = match spec.positional {
+        Some(p) => format!("{} {p}", spec.name),
+        None => spec.name.to_string(),
+    };
+    println!("poshashemb {label} — {}\n", spec.about);
+    if spec.flags.is_empty() {
+        println!("(no flags)");
+        return;
+    }
+    println!("FLAGS:");
+    for f in spec.flags {
+        let head = match f.value {
+            Some(ph) => format!("--{} {ph}", f.name),
+            None => format!("--{}", f.name),
+        };
+        println!("  {head:<26} {}", f.help);
+    }
 }
 
 fn cmd_report() -> Result<()> {
@@ -130,8 +405,8 @@ fn cmd_report() -> Result<()> {
     Ok(())
 }
 
-fn cmd_list(flags: &HashMap<String, String>) -> Result<()> {
-    let group = flags.get("group").map(String::as_str);
+fn cmd_list(args: &CliArgs) -> Result<()> {
+    let group = args.get("group");
     for e in full_grid() {
         if group.is_none_or(|g| e.group == g) {
             println!("{:<40} {:<6} {:<16} {}", e.name, e.group, e.dataset, e.method.name());
@@ -140,15 +415,15 @@ fn cmd_list(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_gen_manifest(flags: &HashMap<String, String>) -> Result<()> {
-    let grid = match flags.get("grid").map(String::as_str).unwrap_or("full") {
+fn cmd_gen_manifest(args: &CliArgs) -> Result<()> {
+    let grid = match args.get("grid").unwrap_or("full") {
         "full" => full_grid(),
         "smoke" => smoke_grid(),
         other => bail!("unknown grid '{other}'"),
     };
-    let out = flags
+    let out = args
         .get("out")
-        .cloned()
+        .map(str::to_string)
         .unwrap_or_else(|| "artifacts/manifest_request.json".to_string());
     std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
     write_aot_request(&grid, Path::new(&out))?;
@@ -156,12 +431,12 @@ fn cmd_gen_manifest(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
-    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
+fn cmd_partition(args: &CliArgs) -> Result<()> {
+    let dsname = args.get("dataset").unwrap_or("synth-arxiv");
     let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
     let ds = Dataset::generate(&sp);
-    let k: usize = flags.get("k").map(|v| v.parse()).transpose()?.unwrap_or(8);
-    let levels: usize = flags.get("levels").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let k: usize = args.parse_as("k")?.unwrap_or(8);
+    let levels: usize = args.parse_as("levels")?.unwrap_or(1);
     let t0 = std::time::Instant::now();
     if levels <= 1 {
         let p = partition(&ds.graph, &PartitionConfig::with_k(k));
@@ -187,16 +462,16 @@ fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
-    let name = flags.get("experiment").ok_or_else(|| anyhow!("--experiment NAME required"))?;
+fn cmd_train(args: &CliArgs) -> Result<()> {
+    let name = args.get("experiment").ok_or_else(|| anyhow!("--experiment NAME required"))?;
     let e = full_grid()
         .into_iter()
-        .find(|e| &e.name == name)
+        .find(|e| e.name == name)
         .ok_or_else(|| anyhow!("unknown experiment '{name}' (see `poshashemb list`)"))?;
-    let seed: u64 = flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(0);
-    let mut opts = TrainOptions { verbose: flags.contains_key("verbose"), ..Default::default() };
-    if let Some(ep) = flags.get("epochs") {
-        opts.epochs = Some(ep.parse()?);
+    let seed: u64 = args.parse_as("seed")?.unwrap_or(0);
+    let mut opts = TrainOptions { verbose: args.has("verbose"), ..Default::default() };
+    if let Some(ep) = args.parse_as("epochs")? {
+        opts.epochs = Some(ep);
     }
     let dir = std::env::var("POSHASH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let client = RuntimeClient::cpu()?;
@@ -206,56 +481,34 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// Resolve a CLI method tag to a concrete method at dataset scale
-/// (paper-default k / c / b derived from n, as in `config`).
-fn method_from_tag(tag: &str, n: usize) -> Result<EmbeddingMethod> {
-    let k = default_k(n);
-    let c = default_c(n, k);
-    let b = c * k;
-    Ok(match tag {
-        "full" => EmbeddingMethod::Full,
-        "hashtrick" => EmbeddingMethod::HashTrick { buckets: b },
-        "bloom" => EmbeddingMethod::Bloom { buckets: b, h: 2 },
-        "hashemb" => EmbeddingMethod::HashEmb { buckets: b, h: 2 },
-        "dhe" => EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 64, layers: 1 },
-        "posemb1" => EmbeddingMethod::PosEmb { levels: 1 },
-        "posemb3" => EmbeddingMethod::PosEmb { levels: 3 },
-        "randompart" => EmbeddingMethod::RandomPart { parts: k },
-        "posfullemb" => EmbeddingMethod::PosFullEmb { levels: 3 },
-        "inter" => EmbeddingMethod::PosHashEmbInter { levels: 3, buckets: b, h: 2 },
-        "intra" => EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: c, h: 2 },
-        other => bail!("unknown method '{other}' (see `poshashemb help`)"),
-    })
-}
-
 /// Materialize the (dataset, plan) for a CLI `(--dataset, --method)`
-/// pair at paper-default scale knobs (`default_k` / `default_c` via
-/// [`method_from_tag`]) — the shared front half of the `compose` and
-/// `train-minibatch` subcommands.
+/// pair — the shared front half of the `compose` and `train-minibatch`
+/// subcommands. The tag goes through [`MethodSpec`]: bare tags resolve
+/// paper-default scale knobs from `n` (exactly as the experiment grid
+/// does), explicit parameters like `inter(k=9,h=1)` override them.
 fn dataset_and_plan(dsname: &str, tag: &str, seed: u64) -> Result<(Dataset, EmbeddingPlan)> {
     let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
-    let method = method_from_tag(tag, sp.n)?;
+    let resolved = MethodSpec::parse(tag)?.resolve(sp.n)?;
     let ds = Dataset::generate(&sp);
-    let hier = if method.needs_hierarchy() {
-        let levels = method.levels().max(1);
-        let k = default_k(sp.n);
-        Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(k, levels)))
+    let hier = if resolved.method.needs_hierarchy() {
+        let levels = resolved.method.levels().max(1);
+        Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(resolved.k, levels)))
     } else {
         None
     };
-    let plan = EmbeddingPlan::build(sp.n, sp.d, &method, hier.as_ref(), seed);
+    let plan = EmbeddingPlan::build(sp.n, sp.d, &resolved.method, hier.as_ref(), seed);
     Ok((ds, plan))
 }
 
 /// Host-side compose-engine benchmark: no PJRT artifacts required.
-fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
-    let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
-    let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
-    let batch: usize = flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(1024);
+fn cmd_compose(args: &CliArgs) -> Result<()> {
+    let dsname = args.get("dataset").unwrap_or("synth-arxiv");
+    let tag = args.get("method").unwrap_or("intra");
+    let batch: usize = args.parse_as("batch")?.unwrap_or(1024);
     let (_ds, plan) = dataset_and_plan(dsname, tag, 0)?;
     eprintln!("compose bench: {dsname} n={} d={} method={}", plan.n, plan.d, plan.method.name());
     let records = bench_compose(&plan, batch);
-    if flags.contains_key("json") {
+    if args.has("json") {
         println!("{}", serde_json::to_string_pretty(&records)?);
     } else {
         for r in &records {
@@ -268,76 +521,79 @@ fn cmd_compose(flags: &HashMap<String, String>) -> Result<()> {
 /// Host-side neighbor-sampled minibatch training on the compose engine:
 /// no PJRT artifacts required. Defaults come from the experiment grid
 /// (`--experiment`) or from `SamplerConfig::default()`; flags override.
-fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
-    let seed: u64 = flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(0);
-    let exp_flag = flags.get("experiment");
-    if exp_flag.is_some() && (flags.contains_key("dataset") || flags.contains_key("method")) {
+fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
+    let seed: u64 = args.parse_as("seed")?.unwrap_or(0);
+    let exp_flag = args.get("experiment");
+    if exp_flag.is_some() && (args.has("dataset") || args.has("method")) {
         bail!("--experiment already fixes the dataset and method; drop --dataset/--method");
     }
     let (label, dsname, ds, plan, mut cfg, mut opts) = if let Some(name) = exp_flag {
         let e = full_grid()
             .into_iter()
-            .find(|e| &e.name == name)
+            .find(|e| e.name == name)
             .ok_or_else(|| anyhow!("unknown experiment '{name}' (see `poshashemb list`)"))?;
         let (ds, _hier, plan) = materialize(&e, seed);
         let opts =
             MinibatchOptions { epochs: e.epochs, lr: e.lr as f32, seed, ..Default::default() };
         (e.name.clone(), e.dataset.to_string(), ds, plan, e.sampling, opts)
     } else {
-        let dsname = flags.get("dataset").map(String::as_str).unwrap_or("synth-arxiv");
-        let tag = flags.get("method").map(String::as_str).unwrap_or("intra");
+        let dsname = args.get("dataset").unwrap_or("synth-arxiv");
+        let tag = args.get("method").unwrap_or("intra");
         let (ds, plan) = dataset_and_plan(dsname, tag, seed)?;
         let opts = MinibatchOptions { seed, ..Default::default() };
         (dsname.to_string(), dsname.to_string(), ds, plan, SamplerConfig::default(), opts)
     };
-    if let Some(b) = flags.get("batch") {
-        cfg.batch_size = b.parse()?;
+    if let Some(b) = args.parse_as("batch")? {
+        cfg.batch_size = b;
         if cfg.batch_size == 0 {
             bail!("--batch must be >= 1");
         }
     }
-    if flags.contains_key("fanout") && flags.contains_key("fanouts") {
+    if args.has("fanout") && args.has("fanouts") {
         bail!("--fanouts already sets every hop's fanout; drop --fanout");
     }
-    if let Some(f) = flags.get("fanout") {
+    if let Some(f) = args.get("fanout") {
         cfg.fanouts = Fanouts::single(Fanout::parse(f).map_err(|e| anyhow!(e))?);
     }
-    if let Some(f) = flags.get("fanouts") {
+    if let Some(f) = args.get("fanouts") {
         cfg.fanouts = Fanouts::parse(f).map_err(|e| anyhow!(e))?;
     }
-    if let Some(w) = flags.get("hidden") {
-        opts.hidden = w.parse()?;
+    if let Some(w) = args.parse_as("hidden")? {
+        opts.hidden = w;
         if opts.hidden == 0 {
             bail!("--hidden must be >= 1");
         }
     }
-    if flags.contains_key("no-shuffle") {
+    if args.has("no-shuffle") {
         cfg.shuffle = false;
     }
-    if let Some(e) = flags.get("epochs") {
-        opts.epochs = e.parse()?;
+    if let Some(e) = args.parse_as("epochs")? {
+        opts.epochs = e;
     }
-    if let Some(lr) = flags.get("lr") {
-        opts.lr = lr.parse()?;
+    if let Some(lr) = args.parse_as("lr")? {
+        opts.lr = lr;
         if !opts.lr.is_finite() || opts.lr <= 0.0 {
             bail!("--lr must be a positive number");
         }
     }
-    if let Some(o) = flags.get("optimizer") {
+    if let Some(o) = args.get("optimizer") {
         opts.optimizer = OptimizerKind::parse(o).map_err(|e| anyhow!(e))?;
     }
-    if flags.contains_key("serial") && flags.contains_key("prefetch") {
+    if args.has("serial") && args.has("prefetch") {
         bail!("--serial already disables prefetching; drop --prefetch");
     }
-    if flags.contains_key("serial") {
+    if args.has("serial") {
         // the single-threaded oracle path: same losses, no pipeline
         opts.parallel = false;
         opts.prefetch = 0;
     }
-    if let Some(p) = flags.get("prefetch") {
-        opts.prefetch = p.parse()?;
+    if let Some(p) = args.parse_as("prefetch")? {
+        opts.prefetch = p;
     }
-    opts.verbose = flags.contains_key("verbose");
+    if let Some(dir) = args.get("save-model") {
+        opts.save_model = Some(PathBuf::from(dir));
+    }
+    opts.verbose = args.has("verbose");
     eprintln!(
         "minibatch train: {label} n={} d={} method={} batch={} fanouts={} layers={} epochs={} \
          {} lr={} {} prefetch={}",
@@ -353,8 +609,12 @@ fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
         if opts.parallel { "pipelined" } else { "serial" },
         opts.prefetch
     );
+    let save_dir = opts.save_model.clone();
     let record = bench_minibatch(&dsname, &ds, &plan, &cfg, &opts)?;
-    if flags.contains_key("json") {
+    if let Some(dir) = save_dir {
+        eprintln!("saved model artifact to {}", dir.display());
+    }
+    if args.has("json") {
         println!("{}", serde_json::to_string_pretty(&record)?);
     } else {
         println!("{}", record.row());
@@ -365,11 +625,11 @@ fn cmd_train_minibatch(flags: &HashMap<String, String>) -> Result<()> {
 /// Partitioner pipeline benchmark: no PJRT artifacts required. Without
 /// `--dataset` it runs on the acceptance SBM graph (n = 50k, 32
 /// communities) that `cargo bench --bench partitioner` also uses.
-fn cmd_partition_bench(flags: &HashMap<String, String>) -> Result<()> {
-    let k: usize = flags.get("k").map(|v| v.parse()).transpose()?.unwrap_or(32);
-    let levels: usize = flags.get("levels").map(|v| v.parse()).transpose()?.unwrap_or(3);
-    let seed: u64 = flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
-    let (graph, label) = match flags.get("dataset").map(String::as_str) {
+fn cmd_partition_bench(args: &CliArgs) -> Result<()> {
+    let k: usize = args.parse_as("k")?.unwrap_or(32);
+    let levels: usize = args.parse_as("levels")?.unwrap_or(3);
+    let seed: u64 = args.parse_as("seed")?.unwrap_or(1);
+    let (graph, label) = match args.get("dataset") {
         Some(dsname) => {
             let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
             (Dataset::generate(&sp).graph, dsname.to_string())
@@ -392,7 +652,7 @@ fn cmd_partition_bench(flags: &HashMap<String, String>) -> Result<()> {
         graph.num_edges()
     );
     let records = bench_partition(&graph, k, levels, seed);
-    if flags.contains_key("json") {
+    if args.has("json") {
         println!("{}", serde_json::to_string_pretty(&records)?);
     } else {
         for r in &records {
@@ -402,10 +662,49 @@ fn cmd_partition_bench(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
-    let group = flags.get("group").ok_or_else(|| anyhow!("--group t3|t4|t5|f3|f4 required"))?;
+/// Open a saved model artifact and measure it under a synthetic
+/// Zipfian query load (see `crate::bench_harness::bench_serve`).
+fn cmd_serve_bench(args: &CliArgs) -> Result<()> {
+    let model = args.get("model").ok_or_else(|| anyhow!("--model DIR required"))?;
+    let cache_rows: usize = args.parse_as("cache-rows")?.unwrap_or(4096);
+    let mut opts = ServeBenchOptions::default();
+    if let Some(q) = args.parse_as("queries")? {
+        opts.queries = q;
+    }
+    if let Some(b) = args.parse_as("batch")? {
+        opts.batch = b;
+        if opts.batch == 0 {
+            bail!("--batch must be >= 1");
+        }
+    }
+    if let Some(s) = args.parse_as::<f64>("zipf")? {
+        if !s.is_finite() || s < 0.0 {
+            bail!("--zipf must be a finite non-negative exponent");
+        }
+        opts.zipf_s = s;
+    }
+    if let Some(s) = args.parse_as("seed")? {
+        opts.seed = s;
+    }
+    let mut engine = ServeEngine::open(Path::new(model), cache_rows)?;
+    let m = engine.manifest();
+    eprintln!(
+        "serve bench: {} method={} n={} d={} layers={} cache_rows={cache_rows}",
+        m.dataset, m.method, m.n, m.d, m.layers
+    );
+    let record = bench_serve(&mut engine, &opts)?;
+    if args.has("json") {
+        println!("{}", serde_json::to_string_pretty(&record)?);
+    } else {
+        println!("{}", record.row());
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &CliArgs) -> Result<()> {
+    let group = args.get("group").ok_or_else(|| anyhow!("--group t3|t4|t5|f3|f4 required"))?;
     let harness = Harness::from_env()?;
-    let exps = harness.group(group, flags.get("dataset").map(String::as_str));
+    let exps = harness.group(group, args.get("dataset"));
     if exps.is_empty() {
         bail!("no artifacts for group {group}; run `make artifacts` with the full grid");
     }

@@ -1,0 +1,462 @@
+//! Versioned on-disk model artifacts.
+//!
+//! An artifact is a directory: one `manifest.json` plus one raw
+//! little-endian binary file per *section*. Sections cover everything a
+//! serving process needs and nothing it does not:
+//!
+//! * every trained tensor of the [`ParamStore`] (embedding tables,
+//!   importance weights, SAGE head) as `f32` sections,
+//! * the plan's static index arrays (`z_0..z_{L-1}` level assignments,
+//!   the node-major hash index matrix) as `u32` sections,
+//! * the CSR graph (`indptr`/`indices`/`weights`/`vwgts`) so `classify`
+//!   and `topk_neighbors` can aggregate neighborhoods without the
+//!   training dataset.
+//!
+//! The manifest records, per section, the dtype, shape, byte length and
+//! an FNV-1a/64 checksum (see [`crate::util::checksum`]); the loader
+//! verifies all three and names the offending section on mismatch. A
+//! `format_version` gate makes future layout changes fail cleanly
+//! instead of mis-reading bytes, and the `method` field stores the
+//! round-trippable [`EmbeddingMethod`] display tag so the loader can
+//! rebuild the plan without knowing how the artifact was trained.
+//!
+//! DHE models are rejected at save time: DHE has no embedding tables
+//! (the host trainers refuse it for the same reason), so there is
+//! nothing for the serving path to memory-resident.
+
+use crate::bench_harness::bench_git_sha;
+use crate::data::{Dataset, TaskKind};
+use crate::embedding::{
+    EmbeddingMethod, EmbeddingPlan, NodePlan, ParamStore, PositionPlan, TableShape,
+};
+use crate::graph::CsrGraph;
+use crate::util::checksum::checksum_string;
+use anyhow::{anyhow, bail, Context, Result};
+use serde::{Deserialize, Serialize};
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+/// On-disk layout version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// The manifest `kind` discriminator (the HLO runtime has its own,
+/// unrelated artifact manifest — this tag keeps them unmistakable).
+pub const MODEL_KIND: &str = "poshashemb-model";
+
+/// Manifest file name inside an artifact directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// One binary section of a model artifact.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct SectionSpec {
+    /// Section name (tensor/index/graph-array name).
+    pub name: String,
+    /// File name inside the artifact directory.
+    pub file: String,
+    /// Element dtype: `"f32"`, `"u32"` or `"u64"` (little-endian).
+    pub dtype: String,
+    /// Logical shape; the element count is the product.
+    pub shape: Vec<usize>,
+    /// Exact file length in bytes.
+    pub bytes: usize,
+    /// Tagged checksum of the file bytes (`"fnv1a64:<hex>"`).
+    pub checksum: String,
+}
+
+/// The JSON manifest of a saved model artifact.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct ModelManifest {
+    /// Layout version; loaders bail on anything but [`FORMAT_VERSION`].
+    pub format_version: u32,
+    /// Always [`MODEL_KIND`].
+    pub kind: String,
+    /// Round-trippable method tag (parses back via
+    /// `EmbeddingMethod::from_str`, e.g. `inter(levels=3,b=234,h=1)`).
+    pub method: String,
+    /// Paper-style method display name (e.g. `PosHashEmb-Inter`).
+    pub method_name: String,
+    /// Dataset the model was trained on.
+    pub dataset: String,
+    /// Task kind: `"multiclass"` or `"multilabel"`.
+    pub task: String,
+    /// Number of nodes.
+    pub n: usize,
+    /// Embedding dimension.
+    pub d: usize,
+    /// Output classes (or binary tasks).
+    pub classes: usize,
+    /// SAGE head depth.
+    pub layers: usize,
+    /// Hidden width of intermediate head layers.
+    pub hidden: usize,
+    /// Position-hierarchy levels (0 when the method has no position
+    /// component).
+    pub levels: usize,
+    /// Producing build's git revision (same convention as bench
+    /// records).
+    pub git_sha: String,
+    /// All trained tensor names in canonical store order (embedding
+    /// tables first, then the head).
+    pub param_names: Vec<String>,
+    /// Every binary section, in write order.
+    pub sections: Vec<SectionSpec>,
+    /// Bytes of learned *embedding-table* sections (position + node
+    /// tables + importance weights — the paper's memory metric; head
+    /// parameters excluded).
+    pub resident_table_bytes: usize,
+    /// Bytes of static index sections (`z_*`, `node_major`).
+    pub resident_index_bytes: usize,
+    /// Full-table baseline at equal dim: `n · d · 4` bytes.
+    pub full_table_bytes: usize,
+}
+
+/// A fully verified, decoded artifact — what [`super::ServeEngine`]
+/// is built from.
+pub(crate) struct LoadedModel {
+    /// The parsed manifest.
+    pub manifest: ModelManifest,
+    /// Plan rebuilt from the manifest + index sections.
+    pub plan: EmbeddingPlan,
+    /// All trained tensors in canonical order.
+    pub params: ParamStore,
+    /// The serving graph.
+    pub graph: CsrGraph,
+}
+
+// ---------------------------------------------------------------------
+// little-endian byte codecs
+// ---------------------------------------------------------------------
+
+fn f32_to_le(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u32_to_le(v: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u64_to_le(v: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn le_to_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn le_to_u32(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn le_to_u64(b: &[u8]) -> Vec<u64> {
+    b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
+}
+
+/// Decoded section payload.
+pub(crate) enum SectionData {
+    /// f32 elements.
+    F32(Vec<f32>),
+    /// u32 elements.
+    U32(Vec<u32>),
+    /// u64 elements.
+    U64(Vec<u64>),
+}
+
+// ---------------------------------------------------------------------
+// save
+// ---------------------------------------------------------------------
+
+/// Serialize a trained model into the artifact directory `dir`
+/// (created if missing; existing section files are overwritten).
+///
+/// `params` must hold the plan's tables plus an `layers`-deep SAGE head
+/// as produced by the host trainers. Returns the written manifest.
+pub fn save_artifact(
+    dir: &Path,
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    params: &ParamStore,
+    layers: usize,
+    hidden: usize,
+) -> Result<ModelManifest> {
+    if plan.dhe.is_some() {
+        bail!("model artifacts do not support DHE (no embedding tables to serve)");
+    }
+    if plan.n != ds.graph.num_nodes() {
+        bail!("plan is for n = {} but dataset has {} nodes", plan.n, ds.graph.num_nodes());
+    }
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact directory {}", dir.display()))?;
+
+    // (name, bytes, dtype, shape) in write order
+    let mut raw: Vec<(String, Vec<u8>, &'static str, Vec<usize>)> = Vec::new();
+    for name in params.names() {
+        let shape = params.shape(name).to_vec();
+        raw.push((name.clone(), f32_to_le(params.get(name)), "f32", shape));
+    }
+    let mut levels = 0usize;
+    if let Some(pos) = &plan.position {
+        levels = pos.tables.len();
+        for (j, z) in pos.z.iter().enumerate() {
+            raw.push((format!("z_{j}"), u32_to_le(z), "u32", vec![z.len()]));
+        }
+    }
+    if let Some(node) = &plan.node {
+        raw.push((
+            "node_major".to_string(),
+            u32_to_le(&node.node_major),
+            "u32",
+            vec![plan.n, node.h],
+        ));
+    }
+    let g = &ds.graph;
+    let vwgts: Vec<u32> = (0..g.num_nodes() as u32).map(|u| g.vertex_weight(u)).collect();
+    raw.push(("graph_indptr".into(), u64_to_le(g.indptr()), "u64", vec![g.num_nodes() + 1]));
+    raw.push(("graph_indices".into(), u32_to_le(g.indices()), "u32", vec![g.indices().len()]));
+    let all_weights: Vec<f32> =
+        (0..g.num_nodes() as u32).flat_map(|u| g.edge_weights(u).iter().copied()).collect();
+    raw.push(("graph_weights".into(), f32_to_le(&all_weights), "f32", vec![all_weights.len()]));
+    raw.push(("graph_vwgts".into(), u32_to_le(&vwgts), "u32", vec![g.num_nodes()]));
+
+    let mut sections = Vec::with_capacity(raw.len());
+    for (name, bytes, dtype, shape) in &raw {
+        let file = format!("{name}.bin");
+        let path = dir.join(&file);
+        fs::write(&path, bytes)
+            .with_context(|| format!("writing section '{name}' ({})", path.display()))?;
+        sections.push(SectionSpec {
+            name: name.clone(),
+            file,
+            dtype: (*dtype).to_string(),
+            shape: shape.clone(),
+            bytes: bytes.len(),
+            checksum: checksum_string(bytes),
+        });
+    }
+
+    let resident_table_bytes: usize = plan.param_shapes().iter().map(|t| t.size() * 4).sum();
+    let resident_index_bytes: usize = sections
+        .iter()
+        .filter(|s| s.name.starts_with("z_") || s.name == "node_major")
+        .map(|s| s.bytes)
+        .sum();
+    let manifest = ModelManifest {
+        format_version: FORMAT_VERSION,
+        kind: MODEL_KIND.to_string(),
+        method: plan.method.to_string(),
+        method_name: plan.method.name().to_string(),
+        dataset: ds.spec.name.to_string(),
+        task: match ds.spec.task {
+            TaskKind::MultiClass => "multiclass".to_string(),
+            TaskKind::MultiLabel => "multilabel".to_string(),
+        },
+        n: plan.n,
+        d: plan.d,
+        classes: ds.spec.classes,
+        layers,
+        hidden,
+        levels,
+        git_sha: bench_git_sha(),
+        param_names: params.names().to_vec(),
+        sections,
+        resident_table_bytes,
+        resident_index_bytes,
+        full_table_bytes: plan.n * plan.d * 4,
+    };
+    let json = serde_json::to_string_pretty(&manifest).context("serializing manifest")?;
+    let mpath = dir.join(MANIFEST_FILE);
+    fs::write(&mpath, json).with_context(|| format!("writing {}", mpath.display()))?;
+    Ok(manifest)
+}
+
+// ---------------------------------------------------------------------
+// load
+// ---------------------------------------------------------------------
+
+fn dtype_width(dtype: &str) -> Result<usize> {
+    match dtype {
+        "f32" | "u32" => Ok(4),
+        "u64" => Ok(8),
+        other => bail!("unsupported section dtype '{other}'"),
+    }
+}
+
+/// Read, verify and decode an artifact directory.
+///
+/// Every section's byte length and checksum are verified against the
+/// manifest before decoding; errors name the failing section so torn
+/// writes and mixed-up files are diagnosable from the message alone.
+pub(crate) fn load_artifact(dir: &Path) -> Result<LoadedModel> {
+    let mpath = dir.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&mpath)
+        .with_context(|| format!("reading model manifest {}", mpath.display()))?;
+    let manifest: ModelManifest =
+        serde_json::from_str(&text).with_context(|| format!("parsing {}", mpath.display()))?;
+    if manifest.kind != MODEL_KIND {
+        bail!("{} is a '{}' artifact, expected '{MODEL_KIND}'", dir.display(), manifest.kind);
+    }
+    if manifest.format_version != FORMAT_VERSION {
+        bail!(
+            "model artifact {} has format_version {}, this build reads {FORMAT_VERSION}; \
+             re-save the model with a matching build",
+            dir.display(),
+            manifest.format_version
+        );
+    }
+
+    let mut data: BTreeMap<String, SectionData> = BTreeMap::new();
+    let mut shapes: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for sec in &manifest.sections {
+        let path = dir.join(&sec.file);
+        let bytes = fs::read(&path)
+            .with_context(|| format!("reading section '{}' ({})", sec.name, path.display()))?;
+        if bytes.len() != sec.bytes {
+            bail!(
+                "section '{}' ({}) is {} bytes on disk, manifest says {}",
+                sec.name,
+                sec.file,
+                bytes.len(),
+                sec.bytes
+            );
+        }
+        let got = checksum_string(&bytes);
+        if got != sec.checksum {
+            bail!(
+                "checksum mismatch in section '{}' ({}): manifest {}, file {}",
+                sec.name,
+                sec.file,
+                sec.checksum,
+                got
+            );
+        }
+        let elems: usize = sec.shape.iter().product();
+        if elems * dtype_width(&sec.dtype)? != bytes.len() {
+            bail!("section '{}' shape {:?} does not match its byte length", sec.name, sec.shape);
+        }
+        let decoded = match sec.dtype.as_str() {
+            "f32" => SectionData::F32(le_to_f32(&bytes)),
+            "u32" => SectionData::U32(le_to_u32(&bytes)),
+            _ => SectionData::U64(le_to_u64(&bytes)),
+        };
+        shapes.insert(sec.name.clone(), sec.shape.clone());
+        data.insert(sec.name.clone(), decoded);
+    }
+
+    let take_f32 = |data: &mut BTreeMap<String, SectionData>, name: &str| -> Result<Vec<f32>> {
+        match data.remove(name) {
+            Some(SectionData::F32(v)) => Ok(v),
+            Some(_) => bail!("section '{name}' has the wrong dtype (expected f32)"),
+            None => bail!("artifact is missing required section '{name}'"),
+        }
+    };
+    let take_u32 = |data: &mut BTreeMap<String, SectionData>, name: &str| -> Result<Vec<u32>> {
+        match data.remove(name) {
+            Some(SectionData::U32(v)) => Ok(v),
+            Some(_) => bail!("section '{name}' has the wrong dtype (expected u32)"),
+            None => bail!("artifact is missing required section '{name}'"),
+        }
+    };
+    let take_u64 = |data: &mut BTreeMap<String, SectionData>, name: &str| -> Result<Vec<u64>> {
+        match data.remove(name) {
+            Some(SectionData::U64(v)) => Ok(v),
+            Some(_) => bail!("section '{name}' has the wrong dtype (expected u64)"),
+            None => bail!("artifact is missing required section '{name}'"),
+        }
+    };
+    let table_shape = |shapes: &BTreeMap<String, Vec<usize>>, name: &str| -> Result<TableShape> {
+        let s = shapes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact is missing required section '{name}'"))?;
+        if s.len() != 2 {
+            bail!("table section '{name}' must be 2-D, got shape {s:?}");
+        }
+        Ok(TableShape { name: name.to_string(), rows: s[0], cols: s[1] })
+    };
+
+    // -- parameters, in the manifest's canonical order --
+    let mut params = ParamStore::default();
+    for name in &manifest.param_names {
+        let shape = shapes
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest lists parameter '{name}' but no such section"))?
+            .clone();
+        params.insert(name, shape, take_f32(&mut data, name)?);
+    }
+
+    // -- plan, rebuilt from method tag + index sections --
+    let method: EmbeddingMethod = manifest
+        .method
+        .parse()
+        .map_err(|e| anyhow!("manifest method tag '{}': {e}", manifest.method))?;
+    if matches!(method, EmbeddingMethod::Dhe { .. }) {
+        bail!("DHE artifacts are not servable (and cannot be saved)");
+    }
+    let position = if manifest.levels > 0 {
+        let mut tables = Vec::with_capacity(manifest.levels);
+        let mut z = Vec::with_capacity(manifest.levels);
+        for j in 0..manifest.levels {
+            tables.push(table_shape(&shapes, &format!("pos_{j}"))?);
+            let zj = take_u32(&mut data, &format!("z_{j}"))?;
+            if zj.len() != manifest.n {
+                bail!("section 'z_{j}' has {} entries, expected n = {}", zj.len(), manifest.n);
+            }
+            z.push(zj);
+        }
+        Some(PositionPlan { tables, z })
+    } else {
+        None
+    };
+    let node = if shapes.contains_key("node_major") {
+        let table = table_shape(&shapes, "node_x")?;
+        let nm_shape = shapes["node_major"].clone();
+        if nm_shape.len() != 2 || nm_shape[0] != manifest.n {
+            bail!("section 'node_major' must be [n, h], got shape {nm_shape:?}");
+        }
+        let node_major = take_u32(&mut data, "node_major")?;
+        Some(NodePlan {
+            table,
+            h: nm_shape[1],
+            node_major,
+            learned_weights: manifest.param_names.iter().any(|p| p == "node_y"),
+        })
+    } else {
+        None
+    };
+    let plan = EmbeddingPlan {
+        method,
+        n: manifest.n,
+        d: manifest.d,
+        position,
+        node,
+        dhe: None,
+    };
+
+    // -- serving graph --
+    let indptr = take_u64(&mut data, "graph_indptr")?;
+    if indptr.len() != manifest.n + 1 {
+        bail!("section 'graph_indptr' has {} entries, expected n + 1", indptr.len());
+    }
+    let indices = take_u32(&mut data, "graph_indices")?;
+    let weights = take_f32(&mut data, "graph_weights")?;
+    let vwgts = take_u32(&mut data, "graph_vwgts")?;
+    if weights.len() != indices.len() || vwgts.len() != manifest.n {
+        bail!("graph sections disagree on edge/node counts");
+    }
+    let graph = CsrGraph::from_parts(indptr, indices, weights, vwgts);
+
+    Ok(LoadedModel { manifest, plan, params, graph })
+}

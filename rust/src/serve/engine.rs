@@ -1,0 +1,432 @@
+//! The mmap-style query engine over a loaded model artifact.
+//!
+//! [`ServeEngine::open`] verifies and decodes an artifact directory
+//! once (checksummed section reads, see [`super::artifact`]), then
+//! serves three queries from the resident tables without ever
+//! materializing the `n × d` matrix:
+//!
+//! * [`embed`](ServeEngine::embed) — compose embedding rows for a batch
+//!   of node ids through the same [`ComposeEngine`] batch path the
+//!   trainers use, fronted by a hot-node LRU cache ([`LruRows`]).
+//!   Cached and uncached answers are **bit-identical**: a composed row
+//!   depends only on its own gathers, so replaying it from the cache
+//!   returns the exact bytes compose produced (pinned by
+//!   `tests/serve.rs`).
+//! * [`classify`](ServeEngine::classify) — full-neighborhood SAGE
+//!   forward to logits, sharing `mean_rows`/`sage_affine_row` with the
+//!   trainers so serving can never drift from evaluation.
+//! * [`topk_neighbors`](ServeEngine::topk_neighbors) — a node's graph
+//!   neighbors ranked by cosine similarity in embedding space
+//!   (deterministic id tiebreak).
+//!
+//! The cache is sized in *rows* (`cache_rows × d` floats) so operators
+//! reason in the same unit as the tables; `cache_rows = 0` disables
+//! caching entirely and is the oracle the cached path is tested
+//! against.
+
+use super::artifact::{load_artifact, ModelManifest};
+use crate::coordinator::{head_param_names, layer_dims, mean_rows, sage_affine_row};
+use crate::embedding::{ComposeEngine, EmbeddingPlan, ParamStore};
+use crate::graph::CsrGraph;
+use crate::sampler::{Fanouts, MultiHopBlock, NeighborSampler};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Sentinel slot id for the LRU's intrusive links.
+const NONE: u32 = u32::MAX;
+
+/// Fixed-capacity LRU over embedding rows: a slot arena (`cap × d`
+/// floats) threaded by an intrusive doubly-linked recency list, with a
+/// `node id → slot` map. All operations are O(1); capacity 0 is a
+/// valid "cache off" configuration where `get` always misses and
+/// `insert` is a no-op.
+struct LruRows {
+    d: usize,
+    cap: usize,
+    map: HashMap<u32, u32>,
+    /// Per-slot node id (valid for slots < `len`).
+    keys: Vec<u32>,
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    /// Slot arena, row-major `cap × d`.
+    data: Vec<f32>,
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl LruRows {
+    fn new(cap: usize, d: usize) -> Self {
+        LruRows {
+            d,
+            cap,
+            map: HashMap::with_capacity(cap),
+            keys: vec![NONE; cap],
+            prev: vec![NONE; cap],
+            next: vec![NONE; cap],
+            data: vec![0f32; cap * d],
+            head: NONE,
+            tail: NONE,
+            len: 0,
+        }
+    }
+
+    /// Unlink `slot` from the recency list.
+    fn unlink(&mut self, slot: u32) {
+        let (p, n) = (self.prev[slot as usize], self.next[slot as usize]);
+        if p == NONE {
+            self.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NONE {
+            self.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+    }
+
+    /// Link `slot` at the most-recent end.
+    fn push_front(&mut self, slot: u32) {
+        self.prev[slot as usize] = NONE;
+        self.next[slot as usize] = self.head;
+        if self.head != NONE {
+            self.prev[self.head as usize] = slot;
+        }
+        self.head = slot;
+        if self.tail == NONE {
+            self.tail = slot;
+        }
+    }
+
+    /// The cached row for `id`, promoting it to most-recent.
+    fn get(&mut self, id: u32) -> Option<&[f32]> {
+        let slot = *self.map.get(&id)?;
+        if self.head != slot {
+            self.unlink(slot);
+            self.push_front(slot);
+        }
+        let s = slot as usize;
+        Some(&self.data[s * self.d..(s + 1) * self.d])
+    }
+
+    /// Insert (or refresh) `id`'s row, evicting the least-recent entry
+    /// at capacity.
+    fn insert(&mut self, id: u32, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        if self.cap == 0 {
+            return;
+        }
+        let slot = if let Some(&s) = self.map.get(&id) {
+            if self.head != s {
+                self.unlink(s);
+                self.push_front(s);
+            }
+            s
+        } else {
+            let s = if self.len < self.cap {
+                let s = self.len as u32;
+                self.len += 1;
+                s
+            } else {
+                let victim = self.tail;
+                self.unlink(victim);
+                self.map.remove(&self.keys[victim as usize]);
+                victim
+            };
+            self.keys[s as usize] = id;
+            self.map.insert(id, s);
+            self.push_front(s);
+            s
+        };
+        let s = slot as usize;
+        self.data[s * self.d..(s + 1) * self.d].copy_from_slice(row);
+    }
+}
+
+/// A loaded model artifact serving embedding/classification queries.
+///
+/// Construction is the only I/O; every query runs against the resident
+/// tables. See the module docs for the query surface and the caching
+/// contract, and [`crate::bench_harness::bench_serve`] for the load
+/// driver that measures it.
+pub struct ServeEngine {
+    manifest: ModelManifest,
+    plan: EmbeddingPlan,
+    params: ParamStore,
+    graph: CsrGraph,
+    cache: LruRows,
+    hits: u64,
+    misses: u64,
+    /// Batch output scratch (`ids.len() × d`), reused across calls.
+    out: Vec<f32>,
+    /// Batch positions (into `out`) of cache misses.
+    miss_pos: Vec<usize>,
+    /// Node ids of cache misses, aligned with `miss_pos`.
+    miss_ids: Vec<u32>,
+    /// Compose scratch for the miss rows.
+    miss_rows: Vec<f32>,
+}
+
+impl ServeEngine {
+    /// Open an artifact directory, verifying every section checksum,
+    /// with a hot-node cache of `cache_rows` embedding rows (0 = no
+    /// cache).
+    pub fn open(dir: &Path, cache_rows: usize) -> Result<Self> {
+        let m = load_artifact(dir)?;
+        let d = m.plan.d;
+        Ok(ServeEngine {
+            manifest: m.manifest,
+            plan: m.plan,
+            params: m.params,
+            graph: m.graph,
+            cache: LruRows::new(cache_rows, d),
+            hits: 0,
+            misses: 0,
+            out: Vec::new(),
+            miss_pos: Vec::new(),
+            miss_ids: Vec::new(),
+            miss_rows: Vec::new(),
+        })
+    }
+
+    /// The artifact's manifest (method, dataset, shapes, footprints).
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.manifest
+    }
+
+    /// Number of nodes served.
+    pub fn n(&self) -> usize {
+        self.plan.n
+    }
+
+    /// Embedding dimension.
+    pub fn d(&self) -> usize {
+        self.plan.d
+    }
+
+    /// Hot-node cache capacity in rows.
+    pub fn cache_rows(&self) -> usize {
+        self.cache.cap
+    }
+
+    /// `(hits, misses)` since the last
+    /// [`reset_cache_stats`](ServeEngine::reset_cache_stats) call.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Zero the hit/miss counters (the cache contents stay warm).
+    pub fn reset_cache_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Bytes of learned embedding-table sections resident in memory.
+    pub fn resident_table_bytes(&self) -> usize {
+        self.manifest.resident_table_bytes
+    }
+
+    /// Bytes of static index sections resident in memory.
+    pub fn resident_index_bytes(&self) -> usize {
+        self.manifest.resident_index_bytes
+    }
+
+    /// The Full-table baseline at equal dim: `n · d · 4` bytes.
+    pub fn full_table_bytes(&self) -> usize {
+        self.manifest.full_table_bytes
+    }
+
+    fn check_ids(&self, ids: &[u32]) -> Result<()> {
+        let n = self.plan.n;
+        if let Some(&bad) = ids.iter().find(|&&i| i as usize >= n) {
+            bail!("node id {bad} out of range (n = {n})");
+        }
+        Ok(())
+    }
+
+    /// Embedding rows for `ids`, row-major `ids.len() × d`, served from
+    /// the LRU cache where possible and composed in one batch
+    /// otherwise. The returned slice borrows internal scratch and is
+    /// valid until the next query.
+    pub fn embed(&mut self, ids: &[u32]) -> Result<&[f32]> {
+        self.check_ids(ids)?;
+        let d = self.plan.d;
+        self.out.resize(ids.len() * d, 0.0);
+        self.miss_pos.clear();
+        self.miss_ids.clear();
+        for (i, &id) in ids.iter().enumerate() {
+            if let Some(row) = self.cache.get(id) {
+                self.out[i * d..(i + 1) * d].copy_from_slice(row);
+                self.hits += 1;
+            } else {
+                self.miss_pos.push(i);
+                self.miss_ids.push(id);
+                self.misses += 1;
+            }
+        }
+        if !self.miss_ids.is_empty() {
+            self.miss_rows.resize(self.miss_ids.len() * d, 0.0);
+            let engine = ComposeEngine::new(&self.plan);
+            // ids were range-checked above, so the checked path's
+            // bounds pre-scan would be pure overhead
+            let prepared = engine.prepare(&self.params);
+            prepared.compose_into_unchecked(&self.miss_ids, &mut self.miss_rows);
+            for (j, (&i, &id)) in self.miss_pos.iter().zip(&self.miss_ids).enumerate() {
+                let row = &self.miss_rows[j * d..(j + 1) * d];
+                self.out[i * d..(i + 1) * d].copy_from_slice(row);
+                self.cache.insert(id, row);
+            }
+        }
+        Ok(&self.out[..ids.len() * d])
+    }
+
+    /// Class logits for `ids`, row-major `ids.len() × classes`: the
+    /// trained SAGE head over full neighborhoods — operation for
+    /// operation the trainers' evaluation forward
+    /// ([`crate::coordinator::MinibatchTrainer::evaluate`]), minus the
+    /// metric.
+    pub fn classify(&self, ids: &[u32]) -> Result<Vec<f32>> {
+        self.check_ids(ids)?;
+        let classes = self.manifest.classes;
+        if ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = self.plan.d;
+        let layers = self.manifest.layers;
+        let hidden = self.manifest.hidden;
+        let fans = Fanouts::all(layers);
+        let mut sampler = NeighborSampler::multi_hop(&self.graph, &fans, 0);
+        let mut mhb = MultiHopBlock::default();
+        sampler.sample_multi_into(ids, 0, 0, &mut mhb);
+        if mhb.num_seeds() != ids.len() {
+            bail!("classify batch must not contain duplicate node ids");
+        }
+        let rows = mhb.num_rows();
+        let mut x = vec![0f32; rows * d];
+        let engine = ComposeEngine::new(&self.plan);
+        engine.prepare(&self.params).compose_into_unchecked(&mhb.outer().nodes, &mut x);
+        let heads: Vec<(&[f32], &[f32], &[f32])> = head_param_names(layers)
+            .iter()
+            .map(|(ws, wn, b)| (self.params.get(ws), self.params.get(wn), self.params.get(b)))
+            .collect();
+        let mut cur: Vec<f32> = Vec::new();
+        let mut nxt: Vec<f32> = Vec::new();
+        let mut nb = vec![0f32; if layers > 1 { d.max(hidden) } else { d }];
+        for j in 0..layers {
+            let blk = mhb.hop(layers - 1 - j);
+            let s = blk.num_seeds;
+            let (din, dout) = layer_dims(d, classes, hidden, layers, j);
+            nxt.resize(s * dout, 0.0);
+            let input: &[f32] = if j == 0 { &x } else { &cur };
+            let (w_self, w_neigh, bias) = heads[j];
+            for si in 0..s {
+                mean_rows(&mut nb[..din], input, blk.neighbors_of(si));
+                sage_affine_row(
+                    &input[si * din..(si + 1) * din],
+                    &nb[..din],
+                    w_self,
+                    w_neigh,
+                    bias,
+                    &mut nxt[si * dout..(si + 1) * dout],
+                );
+            }
+            if j + 1 < layers {
+                for v in nxt[..s * dout].iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        cur.truncate(ids.len() * classes);
+        Ok(cur)
+    }
+
+    /// `id`'s graph neighbors ranked by cosine similarity to `id` in
+    /// embedding space, best first, at most `k` results. Ties break on
+    /// ascending node id so rankings are deterministic.
+    pub fn topk_neighbors(&mut self, id: u32, k: usize) -> Result<Vec<(u32, f32)>> {
+        self.check_ids(&[id])?;
+        let nbrs: Vec<u32> = self.graph.neighbors(id).to_vec();
+        if nbrs.is_empty() || k == 0 {
+            return Ok(Vec::new());
+        }
+        let d = self.plan.d;
+        let mut ids = Vec::with_capacity(nbrs.len() + 1);
+        ids.push(id);
+        ids.extend_from_slice(&nbrs);
+        let emb = self.embed(&ids)?;
+        let anchor = &emb[..d];
+        let anorm = anchor.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let mut ranked: Vec<(u32, f32)> = nbrs
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let row = &emb[(i + 1) * d..(i + 2) * d];
+                let dot: f32 = anchor.iter().zip(row).map(|(a, b)| a * b).sum();
+                let rnorm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+                let denom = anorm * rnorm;
+                (v, if denom > 0.0 { dot / denom } else { 0.0 })
+            })
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
+        ranked.truncate(k);
+        Ok(ranked)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f32, d: usize) -> Vec<f32> {
+        vec![v; d]
+    }
+
+    #[test]
+    fn lru_hits_and_promotes() {
+        let mut c = LruRows::new(2, 4);
+        c.insert(10, &row(1.0, 4));
+        c.insert(20, &row(2.0, 4));
+        assert_eq!(c.get(10), Some(&row(1.0, 4)[..]));
+        // 20 is now least-recent; inserting 30 evicts it
+        c.insert(30, &row(3.0, 4));
+        assert!(c.get(20).is_none());
+        assert_eq!(c.get(10), Some(&row(1.0, 4)[..]));
+        assert_eq!(c.get(30), Some(&row(3.0, 4)[..]));
+    }
+
+    #[test]
+    fn lru_eviction_is_least_recent() {
+        let mut c = LruRows::new(3, 2);
+        for id in [1u32, 2, 3] {
+            c.insert(id, &row(id as f32, 2));
+        }
+        c.insert(4, &row(4.0, 2));
+        assert!(c.get(1).is_none(), "oldest entry should be evicted");
+        for id in [2u32, 3, 4] {
+            assert!(c.get(id).is_some(), "id {id} should be resident");
+        }
+    }
+
+    #[test]
+    fn lru_refresh_overwrites_in_place() {
+        let mut c = LruRows::new(2, 2);
+        c.insert(7, &row(1.0, 2));
+        c.insert(7, &row(9.0, 2));
+        assert_eq!(c.get(7), Some(&row(9.0, 2)[..]));
+        // refreshing did not consume a second slot
+        c.insert(8, &row(2.0, 2));
+        assert!(c.get(7).is_some() && c.get(8).is_some());
+    }
+
+    #[test]
+    fn lru_capacity_zero_is_a_no_op() {
+        let mut c = LruRows::new(0, 4);
+        c.insert(1, &row(1.0, 4));
+        assert!(c.get(1).is_none());
+    }
+}

@@ -1,0 +1,35 @@
+//! The serving path: versioned model artifacts + a resident query
+//! engine.
+//!
+//! Training produces parameters; this module makes them *servable*
+//! without the training stack:
+//!
+//! ```text
+//! train (minibatch / full-batch)
+//!   └─ save_artifact ──► <dir>/manifest.json        versioned, checksummed
+//!                        <dir>/pos_0.bin …          f32 tables
+//!                        <dir>/z_0.bin, node_major  u32 index arrays
+//!                        <dir>/graph_*.bin          CSR for classify/top-k
+//!   ServeEngine::open ◄──┘   (verify every section, rebuild the plan
+//!                             from the manifest's method tag)
+//!   └─ embed / classify / topk_neighbors
+//! ```
+//!
+//! Sections are loaded once into resident buffers and served as
+//! zero-copy views from then on; nothing is re-read or re-decoded per
+//! query, and the `n × d` matrix is never materialized. (True OS-level
+//! `mmap(2)` would need a platform crate the offline dependency set
+//! does not carry; the section files are raw little-endian arrays
+//! precisely so [`artifact`]'s loader is the single isolated upgrade
+//! point if one is added.)
+//!
+//! The synthetic load driver lives in
+//! [`crate::bench_harness::bench_serve`]; the CLI front door is
+//! `poshashemb train-minibatch --save-model <dir>` followed by
+//! `poshashemb serve-bench --model <dir>`.
+
+pub mod artifact;
+mod engine;
+
+pub use artifact::{save_artifact, ModelManifest, SectionSpec, FORMAT_VERSION};
+pub use engine::ServeEngine;

@@ -1,0 +1,58 @@
+//! Section checksums for on-disk model artifacts.
+//!
+//! The offline dependency surface has no hash crates, so artifact
+//! sections are fingerprinted with FNV-1a/64 — not cryptographic, but
+//! ample for the failure mode it guards (torn writes, truncation, bit
+//! rot, mismatched files). Checksums are stored as `"fnv1a64:<hex>"`
+//! so the algorithm can be swapped without a format break.
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a/64 over `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Tagged checksum string stored in artifact manifests.
+pub fn checksum_string(bytes: &[u8]) -> String {
+    format!("fnv1a64:{:016x}", fnv1a64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a/64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let base = vec![0u8; 4096];
+        let h0 = fnv1a64(&base);
+        for i in [0usize, 1, 100, 4095] {
+            let mut flipped = base.clone();
+            flipped[i] ^= 0x01;
+            assert_ne!(fnv1a64(&flipped), h0, "flip at byte {i} undetected");
+        }
+    }
+
+    #[test]
+    fn string_form_is_tagged_hex() {
+        let s = checksum_string(b"abc");
+        assert!(s.starts_with("fnv1a64:"));
+        assert_eq!(s.len(), "fnv1a64:".len() + 16);
+    }
+}

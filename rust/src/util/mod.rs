@@ -14,8 +14,11 @@
 //! * [`proptest`] — a tiny property-testing driver: seeded random inputs,
 //!   shrink-free but reproducible (failing seed printed).
 //! * [`tempdir`] — RAII temp directories for tests.
+//! * [`checksum`] — FNV-1a/64 section fingerprints for model artifacts
+//!   (no hash crates in the offline dependency set).
 
 pub mod bench;
+pub mod checksum;
 pub mod json;
 pub mod proptest;
 pub mod rng;

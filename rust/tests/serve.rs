@@ -1,0 +1,206 @@
+//! Serving-path validation: versioned model artifacts + the query
+//! engine.
+//!
+//! * save → load round trip is **bit-exact**: `ServeEngine::embed`
+//!   returns the same bits as `ComposeEngine::compose_batch` on the
+//!   original in-memory (plan, params).
+//! * corruption is diagnosable: a flipped byte fails naming the
+//!   section, a future `format_version` fails mentioning the gate.
+//! * the hot-node LRU cache is invisible to results: cached and
+//!   uncached engines agree bit for bit at every capacity, including
+//!   caches smaller than the working set (eviction churn).
+//! * train → save → serve end to end: `MinibatchOptions::save_model`
+//!   writes an artifact whose `classify`/`topk_neighbors` answers are
+//!   well-formed and deterministic.
+//! * the acceptance memory band: an `inter(k=9)` artifact at n = 6000,
+//!   d = 64 keeps resident table bytes ≤ 15% of the Full-table
+//!   baseline.
+
+use poshashemb::coordinator::{MinibatchOptions, MinibatchTrainer};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{init_params, ComposeEngine, EmbeddingPlan, MethodSpec, ParamStore};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{Fanouts, SamplerConfig};
+use poshashemb::serve::{save_artifact, ServeEngine, FORMAT_VERSION};
+use poshashemb::util::tempdir::TempDir;
+use std::path::Path;
+
+/// Shrunk synth-arxiv analog (same generator/splits as the seed tests).
+fn small_dataset(n: usize, d: usize) -> Dataset {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    Dataset::generate(&s)
+}
+
+/// Dataset + plan for a method tag, building the hierarchy if needed.
+fn build(n: usize, d: usize, tag: &str, seed: u64) -> (Dataset, EmbeddingPlan) {
+    let ds = small_dataset(n, d);
+    let r = MethodSpec::parse(tag).unwrap().resolve(n).unwrap();
+    let hier = r.method.needs_hierarchy().then(|| {
+        Hierarchy::build(&ds.graph, &HierarchyConfig::new(r.k, r.method.levels().max(1)))
+    });
+    let plan = EmbeddingPlan::build(n, d, &r.method, hier.as_ref(), seed);
+    (ds, plan)
+}
+
+/// Save an untrained (tables-only) artifact for `tag` into `dir`.
+fn save_untrained(
+    dir: &Path,
+    n: usize,
+    d: usize,
+    tag: &str,
+) -> (Dataset, EmbeddingPlan, ParamStore) {
+    let (ds, plan) = build(n, d, tag, 7);
+    let params = init_params(&plan, 3);
+    save_artifact(dir, &ds, &plan, &params, 1, 16).unwrap();
+    (ds, plan, params)
+}
+
+#[test]
+fn save_load_round_trip_is_bit_exact() {
+    let t = TempDir::new("serve-roundtrip").unwrap();
+    let (_ds, plan, params) = save_untrained(t.path(), 400, 8, "inter(k=4)");
+
+    let manifest = {
+        let engine = ServeEngine::open(t.path(), 0).unwrap();
+        engine.manifest().clone()
+    };
+    assert_eq!(manifest.format_version, FORMAT_VERSION);
+    assert_eq!(manifest.n, 400);
+    assert_eq!(manifest.d, 8);
+    assert_eq!(manifest.dataset, "synth-arxiv");
+    // the manifest's method tag round-trips through the shared parser
+    let reparsed = MethodSpec::parse(&manifest.method).unwrap().resolve(400).unwrap();
+    assert_eq!(reparsed.method, plan.method);
+    let table_bytes: usize = plan.param_shapes().iter().map(|s| s.size() * 4).sum();
+    assert_eq!(manifest.resident_table_bytes, table_bytes);
+    assert_eq!(manifest.full_table_bytes, 400 * 8 * 4);
+
+    // embed must reproduce compose_batch on the original params bitwise
+    let mut engine = ServeEngine::open(t.path(), 0).unwrap();
+    let ids: Vec<u32> = (0..400).step_by(3).map(|i| i as u32).collect();
+    let served = engine.embed(&ids).unwrap().to_vec();
+    let oracle = ComposeEngine::new(&plan).compose_batch(&params, &ids);
+    assert_eq!(served.len(), oracle.len());
+    for (i, (a, b)) in served.iter().zip(&oracle).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "row element {i}: served {a} != composed {b}");
+    }
+}
+
+#[test]
+fn flipped_byte_fails_naming_the_section() {
+    let t = TempDir::new("serve-corrupt").unwrap();
+    save_untrained(t.path(), 200, 8, "inter(k=4)");
+    let victim = t.path().join("pos_0.bin");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&victim, &bytes).unwrap();
+
+    let err = ServeEngine::open(t.path(), 0).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum mismatch"), "unexpected error: {msg}");
+    assert!(msg.contains("pos_0"), "error must name the section: {msg}");
+}
+
+#[test]
+fn future_format_version_fails_cleanly() {
+    let t = TempDir::new("serve-version").unwrap();
+    save_untrained(t.path(), 200, 8, "hashemb");
+    let mpath = t.path().join("manifest.json");
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    let needle = format!("\"format_version\": {FORMAT_VERSION}");
+    assert!(text.contains(&needle), "manifest layout changed under the test");
+    std::fs::write(&mpath, text.replace(&needle, "\"format_version\": 99")).unwrap();
+
+    let err = ServeEngine::open(t.path(), 0).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("format_version"), "unexpected error: {msg}");
+    assert!(msg.contains("99"), "error must show the found version: {msg}");
+}
+
+#[test]
+fn cached_engine_matches_uncached_bit_for_bit() {
+    let t = TempDir::new("serve-cache").unwrap();
+    save_untrained(t.path(), 300, 8, "intra");
+
+    let mut oracle = ServeEngine::open(t.path(), 0).unwrap();
+    // capacities below, at and above the working-set size — the small
+    // ones churn through evictions constantly
+    for cap in [1usize, 7, 64, 1024] {
+        let mut cached = ServeEngine::open(t.path(), cap).unwrap();
+        for round in 0..6u32 {
+            // overlapping batches with repeats, so rounds re-hit ids
+            let ids: Vec<u32> = (0..50).map(|i| (i * (round + 1) + round) % 300).collect();
+            let want = oracle.embed(&ids).unwrap().to_vec();
+            let got = cached.embed(&ids).unwrap();
+            assert_eq!(got, &want[..], "cap {cap} round {round} diverged");
+        }
+        let (hits, misses) = cached.cache_stats();
+        assert_eq!(hits + misses, 6 * 50, "every lookup is a hit or a miss");
+        if cap >= 1024 {
+            assert!(hits > 0, "warm cache must serve some hits");
+        }
+    }
+}
+
+#[test]
+fn train_save_serve_end_to_end() {
+    let t = TempDir::new("serve-e2e").unwrap();
+    let (ds, plan) = build(300, 8, "inter(k=4)", 11);
+    let cfg = SamplerConfig { fanouts: Fanouts::parse("4,3").unwrap(), ..Default::default() };
+    let opts = MinibatchOptions {
+        epochs: 1,
+        hidden: 16,
+        seed: 5,
+        save_model: Some(t.path().to_path_buf()),
+        ..Default::default()
+    };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+    tr.train().unwrap();
+
+    let mut engine = ServeEngine::open(t.path(), 32).unwrap();
+    let m = engine.manifest();
+    assert_eq!(m.layers, 2);
+    let classes = m.classes;
+
+    // classify: one logit row per id, finite, deterministic
+    let ids = [0u32, 17, 123, 299];
+    let logits = engine.classify(&ids).unwrap();
+    assert_eq!(logits.len(), ids.len() * classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    assert_eq!(logits, engine.classify(&ids).unwrap());
+    let dup_err = engine.classify(&[3, 3]).unwrap_err();
+    assert!(format!("{dup_err:#}").contains("duplicate"));
+
+    // topk: neighbors only, descending similarity, deterministic
+    let k = 3;
+    let top = engine.topk_neighbors(17, k).unwrap();
+    assert!(top.len() <= k);
+    let nbrs = ds.graph.neighbors(17);
+    for (v, sim) in &top {
+        assert!(nbrs.contains(v), "{v} is not a neighbor of 17");
+        assert!(sim.is_finite() && *sim <= 1.0 + 1e-5);
+    }
+    for w in top.windows(2) {
+        assert!(w[0].1 >= w[1].1, "similarities must be sorted descending");
+    }
+    assert_eq!(top, engine.topk_neighbors(17, k).unwrap());
+}
+
+#[test]
+fn inter_artifact_stays_within_the_memory_band() {
+    let t = TempDir::new("serve-band").unwrap();
+    let (ds, plan) = build(6000, 64, "inter(k=9)", 1);
+    let params = init_params(&plan, 1);
+    let manifest = save_artifact(t.path(), &ds, &plan, &params, 1, 16).unwrap();
+    let ratio = manifest.resident_table_bytes as f64 / manifest.full_table_bytes as f64;
+    assert!(
+        ratio <= 0.15,
+        "inter(k=9) resident tables are {:.1}% of Full — acceptance band is ≤ 15%",
+        ratio * 100.0
+    );
+    assert!(ratio >= 0.005, "suspiciously small footprint ({ratio}) — check the accounting");
+}
