@@ -549,6 +549,10 @@ pub struct MinibatchBenchRecord {
     pub first_loss: f64,
     /// Mean training loss of the final epoch.
     pub final_loss: f64,
+    /// Full per-epoch loss trajectory — what the crash-resume harness
+    /// compares bit-for-bit between an interrupted-and-resumed run and
+    /// an uninterrupted control (JSON round-trips `f64` exactly).
+    pub losses: Vec<f64>,
     /// Validation metric after training.
     pub val_metric: f64,
     /// Test metric after training.
@@ -628,6 +632,7 @@ pub fn bench_minibatch(
         batches_per_sec: out.batches_per_epoch as f64 / mean_secs,
         first_loss: out.losses.first().copied().unwrap_or(f64::NAN),
         final_loss: out.losses.last().copied().unwrap_or(f64::NAN),
+        losses: out.losses.clone(),
         val_metric: out.val_metric,
         test_metric: out.test_metric,
         parallel: opts.parallel,
@@ -1046,6 +1051,7 @@ mod tests {
             batches_per_sec: 1.0,
             first_loss: 0.0,
             final_loss: 0.0,
+            losses: vec![0.0],
             val_metric: 0.0,
             test_metric: 0.0,
             parallel: true,
@@ -1074,6 +1080,7 @@ mod tests {
                 "batches_per_sec",
                 "first_loss",
                 "final_loss",
+                "losses",
                 "val_metric",
                 "test_metric",
                 "parallel",

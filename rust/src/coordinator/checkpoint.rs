@@ -1,0 +1,676 @@
+//! Crash-safe training checkpoints: atomic snapshots of full trainer
+//! state, with keep-last-K retention and torn-checkpoint fallback.
+//!
+//! Because every random draw in the minibatch path is a pure function
+//! of `(seed, epoch, batch, …)` (see the determinism ledger in
+//! `docs/ARCHITECTURE.md`), a checkpoint does not need RNG state — it
+//! only needs the parameter bits, the Adam moments, the optimizer step
+//! counter and the `(epoch, batch)` cursor, plus the completed-epoch
+//! loss history and the in-progress epoch's `f64` loss accumulator.
+//! Restoring those and replaying from the cursor reproduces the
+//! uninterrupted run **bit for bit**, serial or pipelined
+//! (`rust/tests/checkpoint.rs`, `rust/tests/crash_resume.rs`).
+//!
+//! On disk a checkpoint is a directory of checksummed little-endian
+//! sections ([`crate::util::sections`] — the same substrate as model
+//! artifacts) under the checkpoint root:
+//!
+//! ```text
+//! <root>/LATEST                  name of the newest checkpoint
+//! <root>/ckpt-0000000420/        named by optimizer step count
+//!   manifest.json                run key + cursor + section specs
+//!   param__<table>.bin           every ParamStore tensor (f32)
+//!   adam_m__<table>.bin          lazy Adam moments (f32, if any)
+//!   adam_v__<table>.bin
+//!   trainer_losses.bin           completed-epoch losses (f64)
+//!   trainer_epoch_ns.bin         completed-epoch wall times (u64)
+//!   trainer_loss_accum.bin       partial-epoch loss sum (f64[1])
+//! ```
+//!
+//! Publication is atomic: sections are written fsynced into a temp
+//! sibling, the manifest is written **last**, the directory is renamed
+//! into place and only then is `LATEST` (itself replaced atomically)
+//! pointed at it — a reader can observe the previous checkpoint or the
+//! new one, never a torn one. [`load_latest`] walks `LATEST` first and
+//! then every `ckpt-*` newest-first, verifying each candidate fully
+//! (byte lengths, checksums, shapes, counts) and falling back past
+//! corrupt ones with a warning naming the bad section.
+
+use super::optim::Optimizer;
+use crate::bench_harness::bench_git_sha;
+use crate::embedding::ParamStore;
+use crate::util::fault;
+use crate::util::sections::{
+    atomic_write_text, publish_dir, read_section, temp_sibling, write_section, SectionData,
+    SectionSpec,
+};
+use anyhow::{bail, Context, Result};
+use serde::{Deserialize, Serialize};
+use std::collections::BTreeMap;
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Checkpoint layout version; loaders bail on anything else.
+pub const CHECKPOINT_FORMAT_VERSION: u32 = 1;
+
+/// The manifest `kind` discriminator (model artifacts use
+/// `poshashemb-model`; the tags keep the two directory formats
+/// unmistakable even though they share the section substrate).
+pub const CHECKPOINT_KIND: &str = "poshashemb-checkpoint";
+
+/// Name of the newest-checkpoint pointer file under the root.
+pub const LATEST_FILE: &str = "LATEST";
+
+/// Manifest file name inside a checkpoint directory.
+const MANIFEST_FILE: &str = "manifest.json";
+
+/// Trainer-side checkpointing knobs.
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Checkpoint root directory (created on first save).
+    pub dir: PathBuf,
+    /// Snapshot every N optimizer steps (0 disables periodic saves;
+    /// a failing run still writes a final checkpoint before aborting).
+    pub every: usize,
+    /// Keep the newest K checkpoints (0 = keep everything). At least
+    /// 2 is recommended: the fallback path needs an older intact
+    /// checkpoint when the newest is torn.
+    pub keep: usize,
+}
+
+/// The run identity a checkpoint belongs to. Resume refuses a
+/// checkpoint whose key differs from the live run's — silently
+/// continuing a run with a different dataset, method, schedule or
+/// optimizer would produce garbage that *looks* resumed.
+///
+/// Deliberately absent: `parallel` / `prefetch`. The pipelined and
+/// serial engines are bit-identical (`tests/parallel_train.rs`), so a
+/// checkpoint written by one resumes under the other with the same
+/// guarantee.
+#[derive(Debug, Clone, PartialEq, Serialize, Deserialize)]
+pub struct RunKey {
+    /// Dataset name.
+    pub dataset: String,
+    /// Round-trippable embedding-method tag.
+    pub method: String,
+    /// Fanout list display form (e.g. `10,5`) — keys the sampler.
+    pub fanouts: String,
+    /// Seed nodes per batch.
+    pub batch_size: usize,
+    /// Per-epoch seed shuffling.
+    pub shuffle: bool,
+    /// Optimizer tag (`sgd` / `adam`).
+    pub optimizer: String,
+    /// Learning rate as raw f32 bits (exact comparison, no float
+    /// round-trip through JSON text).
+    pub lr_bits: u32,
+    /// Hidden width of intermediate head layers.
+    pub hidden: usize,
+    /// Master seed (parameter init, shuffles, neighbor draws).
+    pub seed: u64,
+    /// Total epochs of the run.
+    pub epochs: usize,
+}
+
+impl RunKey {
+    /// Fail with the first differing field, named, when `self` (the
+    /// checkpoint's key) does not match `live` (the current run's).
+    pub fn ensure_matches(&self, live: &RunKey) -> Result<()> {
+        let pairs: [(&str, String, String); 10] = [
+            ("dataset", self.dataset.clone(), live.dataset.clone()),
+            ("method", self.method.clone(), live.method.clone()),
+            ("fanouts", self.fanouts.clone(), live.fanouts.clone()),
+            ("batch_size", self.batch_size.to_string(), live.batch_size.to_string()),
+            ("shuffle", self.shuffle.to_string(), live.shuffle.to_string()),
+            ("optimizer", self.optimizer.clone(), live.optimizer.clone()),
+            (
+                "lr",
+                f32::from_bits(self.lr_bits).to_string(),
+                f32::from_bits(live.lr_bits).to_string(),
+            ),
+            ("hidden", self.hidden.to_string(), live.hidden.to_string()),
+            ("seed", self.seed.to_string(), live.seed.to_string()),
+            ("epochs", self.epochs.to_string(), live.epochs.to_string()),
+        ];
+        for (field, ours, theirs) in pairs {
+            if ours != theirs {
+                bail!(
+                    "checkpoint belongs to a different run: {field} is {ours} in the \
+                     checkpoint but {theirs} in this invocation"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where in the run a checkpoint was taken. `(epoch, batch)` is the
+/// **next** batch to process: a snapshot at an epoch boundary has
+/// `batch == 0` and `epoch` = completed epochs.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct Cursor {
+    /// Epoch of the next batch (0-based; == completed epochs).
+    pub epoch: usize,
+    /// Next batch index within `epoch`.
+    pub batch: usize,
+    /// Optimizer steps taken so far (keys Adam bias correction).
+    pub global_step: u64,
+    /// Seed nodes already consumed in the in-progress epoch.
+    pub epoch_seen: usize,
+    /// Largest composed block so far (outcome bookkeeping).
+    pub peak_compose_rows: usize,
+}
+
+/// The JSON manifest of one checkpoint directory.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct CheckpointManifest {
+    /// Layout version; loaders bail on anything but
+    /// [`CHECKPOINT_FORMAT_VERSION`].
+    pub format_version: u32,
+    /// Always [`CHECKPOINT_KIND`].
+    pub kind: String,
+    /// Producing build's git revision.
+    pub git_sha: String,
+    /// The run this checkpoint belongs to.
+    pub run: RunKey,
+    /// Where in the run it was taken.
+    pub cursor: Cursor,
+    /// All parameter tensor names in canonical store order.
+    pub param_names: Vec<String>,
+    /// Tables with saved Adam moments, name-sorted.
+    pub moment_names: Vec<String>,
+    /// Every binary section, in write order.
+    pub sections: Vec<SectionSpec>,
+}
+
+/// A fully verified, decoded checkpoint.
+#[derive(Debug)]
+pub struct LoadedCheckpoint {
+    /// The parsed manifest.
+    pub manifest: CheckpointManifest,
+    /// `(name, shape, data)` per parameter tensor, in canonical order.
+    pub params: Vec<(String, Vec<usize>, Vec<f32>)>,
+    /// `(name, m, v)` per table with Adam moments, name-sorted.
+    pub moments: Vec<(String, Vec<f32>, Vec<f32>)>,
+    /// Completed-epoch mean losses.
+    pub losses: Vec<f64>,
+    /// Completed-epoch wall times (ns).
+    pub epoch_ns: Vec<u64>,
+    /// Partial-epoch loss sum (bit-exact f64).
+    pub loss_accum: f64,
+    /// Directory name under the root (e.g. `ckpt-0000000420`).
+    pub name: String,
+}
+
+/// Directory name for a checkpoint taken at optimizer step `step`.
+/// Zero-padded so lexicographic order is step order.
+pub fn checkpoint_name(step: u64) -> String {
+    format!("ckpt-{step:010}")
+}
+
+fn section_f32(dir: &Path, name: &str, shape: &[usize], data: &[f32]) -> Result<SectionSpec> {
+    write_section(dir, name, shape, &SectionData::F32(data.to_vec()), "checkpoint.section")
+}
+
+/// Write one checkpoint under `root` and point `LATEST` at it, then
+/// apply keep-last-`keep` retention. Returns the checkpoint directory.
+///
+/// The publish order is the crash-safety protocol: fsynced sections
+/// into a temp sibling → `manifest.json` last → atomic directory
+/// rename → atomic `LATEST` replace. A crash (or injected fault:
+/// `checkpoint.section` / `checkpoint.manifest` / `checkpoint.rename` /
+/// `checkpoint.latest`) anywhere in between leaves the previous
+/// checkpoint fully intact and discoverable.
+#[allow(clippy::too_many_arguments)]
+pub fn save_checkpoint(
+    root: &Path,
+    keep: usize,
+    run: &RunKey,
+    cursor: &Cursor,
+    params: &ParamStore,
+    opt: &Optimizer,
+    losses: &[f64],
+    epoch_ns: &[u64],
+    loss_accum: f64,
+) -> Result<PathBuf> {
+    fs::create_dir_all(root)
+        .with_context(|| format!("creating checkpoint root {}", root.display()))?;
+    let name = checkpoint_name(cursor.global_step);
+    let dst = root.join(&name);
+    let tmp = temp_sibling(&dst);
+    fs::create_dir_all(&tmp)
+        .with_context(|| format!("creating checkpoint temp dir {}", tmp.display()))?;
+    let written =
+        write_checkpoint_contents(&tmp, run, cursor, params, opt, losses, epoch_ns, loss_accum)
+            .and_then(|()| fault::hit("checkpoint.rename").context("publishing checkpoint"))
+            .and_then(|()| publish_dir(&tmp, &dst));
+    if let Err(e) = written {
+        // best-effort cleanup; the torn temp dir never looks like a
+        // checkpoint (publication *is* the rename that just failed)
+        let _ = fs::remove_dir_all(&tmp);
+        return Err(e);
+    }
+    fault::hit("checkpoint.latest").context("updating LATEST")?;
+    atomic_write_text(&root.join(LATEST_FILE), &format!("{name}\n"))?;
+    apply_retention(root, keep, &name)?;
+    Ok(dst)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_checkpoint_contents(
+    tmp: &Path,
+    run: &RunKey,
+    cursor: &Cursor,
+    params: &ParamStore,
+    opt: &Optimizer,
+    losses: &[f64],
+    epoch_ns: &[u64],
+    loss_accum: f64,
+) -> Result<()> {
+    let mut specs: Vec<SectionSpec> = Vec::new();
+    for pname in params.names() {
+        let shape = params.shape(pname).to_vec();
+        specs.push(section_f32(tmp, &format!("param__{pname}"), &shape, params.get(pname))?);
+    }
+    let moments = opt.moment_tables();
+    for (mname, m, v) in &moments {
+        specs.push(section_f32(tmp, &format!("adam_m__{mname}"), &[m.len()], m)?);
+        specs.push(section_f32(tmp, &format!("adam_v__{mname}"), &[v.len()], v)?);
+    }
+    specs.push(write_section(
+        tmp,
+        "trainer_losses",
+        &[losses.len()],
+        &SectionData::F64(losses.to_vec()),
+        "checkpoint.section",
+    )?);
+    specs.push(write_section(
+        tmp,
+        "trainer_epoch_ns",
+        &[epoch_ns.len()],
+        &SectionData::U64(epoch_ns.to_vec()),
+        "checkpoint.section",
+    )?);
+    specs.push(write_section(
+        tmp,
+        "trainer_loss_accum",
+        &[1],
+        &SectionData::F64(vec![loss_accum]),
+        "checkpoint.section",
+    )?);
+    let manifest = CheckpointManifest {
+        format_version: CHECKPOINT_FORMAT_VERSION,
+        kind: CHECKPOINT_KIND.to_string(),
+        git_sha: bench_git_sha(),
+        run: run.clone(),
+        cursor: cursor.clone(),
+        param_names: params.names().to_vec(),
+        moment_names: moments.iter().map(|(n, _, _)| n.to_string()).collect(),
+        sections: specs,
+    };
+    fault::hit("checkpoint.manifest").context("writing checkpoint manifest")?;
+    let json = serde_json::to_string_pretty(&manifest).context("serializing checkpoint manifest")?;
+    let mpath = tmp.join(MANIFEST_FILE);
+    let mut f = File::create(&mpath).with_context(|| format!("creating {}", mpath.display()))?;
+    f.write_all(json.as_bytes()).with_context(|| format!("writing {}", mpath.display()))?;
+    f.sync_all().with_context(|| format!("fsyncing {}", mpath.display()))?;
+    Ok(())
+}
+
+/// Delete the oldest checkpoints beyond the newest `keep`, never
+/// touching `just_written`. `keep == 0` keeps everything.
+fn apply_retention(root: &Path, keep: usize, just_written: &str) -> Result<()> {
+    if keep == 0 {
+        return Ok(());
+    }
+    let mut names = checkpoint_dir_names(root)?;
+    // lexicographic == step order (zero-padded names)
+    names.sort();
+    while names.len() > keep {
+        let victim = names.remove(0);
+        if victim == just_written {
+            // keep == 1 pathological overlap: never delete the newest
+            break;
+        }
+        let path = root.join(&victim);
+        fs::remove_dir_all(&path)
+            .with_context(|| format!("retention: removing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// All `ckpt-*` directory names under `root` (unordered).
+fn checkpoint_dir_names(root: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    let entries =
+        fs::read_dir(root).with_context(|| format!("listing checkpoint root {}", root.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with("ckpt-") && entry.path().is_dir() {
+            names.push(name);
+        }
+    }
+    Ok(names)
+}
+
+/// Load the newest intact checkpoint under `root`.
+///
+/// Tries every `ckpt-*` directory newest-first (the names are
+/// step-ordered; the `LATEST` pointer is an operator convenience and a
+/// publish-order witness — a crash between the directory rename and
+/// the pointer update leaves `LATEST` one behind, and scanning by name
+/// still finds the newer published checkpoint). Candidates that fail
+/// verification (torn rename, flipped bit, truncated section, missing
+/// manifest) are skipped with a warning naming the failure; the
+/// warnings are returned alongside the loaded checkpoint. Returns
+/// `Ok(None)` when the root holds no checkpoints at all (a fresh run),
+/// and an error only when candidates exist but none is intact.
+pub fn load_latest(root: &Path) -> Result<Option<(LoadedCheckpoint, Vec<String>)>> {
+    if !root.exists() {
+        return Ok(None);
+    }
+    let mut candidates = checkpoint_dir_names(root)?;
+    candidates.sort();
+    candidates.reverse();
+    if let Ok(latest) = fs::read_to_string(root.join(LATEST_FILE)) {
+        let latest = latest.trim().to_string();
+        if !latest.is_empty() && !candidates.contains(&latest) {
+            candidates.push(latest);
+        }
+    }
+    if candidates.is_empty() {
+        return Ok(None);
+    }
+    let mut warnings = Vec::new();
+    for name in &candidates {
+        match load_checkpoint_dir(&root.join(name)) {
+            Ok(mut ck) => {
+                ck.name.clone_from(name);
+                return Ok(Some((ck, warnings)));
+            }
+            Err(e) => warnings.push(format!("skipping checkpoint '{name}': {e:#}")),
+        }
+    }
+    bail!(
+        "no intact checkpoint under {} ({} candidate(s) failed verification): {}",
+        root.display(),
+        candidates.len(),
+        warnings.join("; ")
+    );
+}
+
+/// Read, verify and decode one checkpoint directory.
+pub fn load_checkpoint_dir(dir: &Path) -> Result<LoadedCheckpoint> {
+    let mpath = dir.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&mpath)
+        .with_context(|| format!("reading checkpoint manifest {}", mpath.display()))?;
+    let manifest: CheckpointManifest =
+        serde_json::from_str(&text).with_context(|| format!("parsing {}", mpath.display()))?;
+    if manifest.kind != CHECKPOINT_KIND {
+        bail!("{} is a '{}' directory, expected '{CHECKPOINT_KIND}'", dir.display(), manifest.kind);
+    }
+    if manifest.format_version != CHECKPOINT_FORMAT_VERSION {
+        bail!(
+            "checkpoint {} has format_version {}, this build reads {CHECKPOINT_FORMAT_VERSION}",
+            dir.display(),
+            manifest.format_version
+        );
+    }
+    let by_name: BTreeMap<&str, &SectionSpec> =
+        manifest.sections.iter().map(|s| (s.name.as_str(), s)).collect();
+    let take_f32 = |name: &str| -> Result<(Vec<usize>, Vec<f32>)> {
+        let spec = by_name
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing required section '{name}'"))?;
+        match read_section(dir, spec)? {
+            SectionData::F32(v) => Ok((spec.shape.clone(), v)),
+            _ => bail!("section '{name}' has the wrong dtype (expected f32)"),
+        }
+    };
+    let mut params = Vec::with_capacity(manifest.param_names.len());
+    for pname in &manifest.param_names {
+        let (shape, data) = take_f32(&format!("param__{pname}"))?;
+        params.push((pname.clone(), shape, data));
+    }
+    let mut moments = Vec::with_capacity(manifest.moment_names.len());
+    for mname in &manifest.moment_names {
+        let (_, m) = take_f32(&format!("adam_m__{mname}"))?;
+        let (_, v) = take_f32(&format!("adam_v__{mname}"))?;
+        if m.len() != v.len() {
+            bail!("moment sections for '{mname}' disagree on length");
+        }
+        moments.push((mname.clone(), m, v));
+    }
+    let take = |name: &str| -> Result<SectionData> {
+        let spec = by_name
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing required section '{name}'"))?;
+        read_section(dir, spec)
+    };
+    let losses = match take("trainer_losses")? {
+        SectionData::F64(v) => v,
+        _ => bail!("section 'trainer_losses' has the wrong dtype (expected f64)"),
+    };
+    let epoch_ns = match take("trainer_epoch_ns")? {
+        SectionData::U64(v) => v,
+        _ => bail!("section 'trainer_epoch_ns' has the wrong dtype (expected u64)"),
+    };
+    let loss_accum = match take("trainer_loss_accum")? {
+        SectionData::F64(v) if v.len() == 1 => v[0],
+        SectionData::F64(_) => bail!("section 'trainer_loss_accum' must hold exactly one value"),
+        _ => bail!("section 'trainer_loss_accum' has the wrong dtype (expected f64)"),
+    };
+    if losses.len() != manifest.cursor.epoch {
+        bail!(
+            "checkpoint cursor says {} completed epochs but 'trainer_losses' holds {}",
+            manifest.cursor.epoch,
+            losses.len()
+        );
+    }
+    if epoch_ns.len() != losses.len() {
+        bail!("'trainer_epoch_ns' and 'trainer_losses' disagree on epoch count");
+    }
+    Ok(LoadedCheckpoint {
+        manifest,
+        params,
+        moments,
+        losses,
+        epoch_ns,
+        loss_accum,
+        name: dir.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+    })
+}
+
+/// Remove stale checkpoint temp directories left behind by a crash
+/// mid-write (they are invisible to [`load_latest`], but they hold
+/// disk). Returns how many were removed.
+pub fn sweep_stale_temps(root: &Path) -> Result<usize> {
+    if !root.exists() {
+        return Ok(0);
+    }
+    let mut removed = 0usize;
+    for entry in
+        fs::read_dir(root).with_context(|| format!("listing checkpoint root {}", root.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with(".ckpt-") && name.contains(".tmp-") && entry.path().is_dir() {
+            fs::remove_dir_all(entry.path())
+                .with_context(|| format!("removing stale temp {name}"))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::OptimizerKind;
+    use crate::util::tempdir::TempDir;
+
+    fn tiny_state() -> (ParamStore, Optimizer) {
+        let mut params = ParamStore::default();
+        params.insert("table_a", vec![4, 2], (0..8).map(|i| i as f32 * 0.5).collect());
+        params.insert("head_b", vec![1, 3], vec![-1.0, 0.25, 7.5]);
+        let mut opt = Optimizer::new(OptimizerKind::Adam, 0.01);
+        opt.restore_moments("table_a", vec![0.1; 8], vec![0.2; 8]);
+        (params, opt)
+    }
+
+    fn key() -> RunKey {
+        RunKey {
+            dataset: "synth-arxiv".into(),
+            method: "hashemb(b=32,h=2)".into(),
+            fanouts: "4".into(),
+            batch_size: 64,
+            shuffle: true,
+            optimizer: "adam".into(),
+            lr_bits: 0.01f32.to_bits(),
+            hidden: 64,
+            seed: 7,
+            epochs: 5,
+        }
+    }
+
+    fn cursor(step: u64, epoch: usize) -> Cursor {
+        Cursor { epoch, batch: 3, global_step: step, epoch_seen: 192, peak_compose_rows: 123 }
+    }
+
+    #[test]
+    fn save_load_round_trip_is_exact() {
+        let t = TempDir::new("ckpt-rt").unwrap();
+        let (params, opt) = tiny_state();
+        let losses = vec![0.9, 0.7];
+        let ns = vec![111, 222];
+        let dir = save_checkpoint(
+            t.path(),
+            0,
+            &key(),
+            &cursor(9, 2),
+            &params,
+            &opt,
+            &losses,
+            &ns,
+            1.2345678901234567,
+        )
+        .unwrap();
+        assert!(dir.ends_with(checkpoint_name(9)));
+        let (ck, warnings) = load_latest(t.path()).unwrap().expect("checkpoint present");
+        assert!(warnings.is_empty(), "{warnings:?}");
+        assert_eq!(ck.name, checkpoint_name(9));
+        assert_eq!(ck.manifest.cursor.batch, 3);
+        assert_eq!(ck.manifest.cursor.epoch_seen, 192);
+        assert_eq!(ck.losses, losses);
+        assert_eq!(ck.epoch_ns, ns);
+        assert_eq!(ck.loss_accum.to_bits(), 1.2345678901234567f64.to_bits());
+        assert_eq!(ck.params.len(), 2);
+        let (name, shape, data) = &ck.params[0];
+        assert_eq!((name.as_str(), shape.as_slice()), ("table_a", &[4usize, 2][..]));
+        assert_eq!(data, params.get("table_a"));
+        assert_eq!(ck.moments.len(), 1);
+        assert_eq!(ck.moments[0].1, vec![0.1; 8]);
+        ck.manifest.run.ensure_matches(&key()).unwrap();
+    }
+
+    #[test]
+    fn run_key_mismatch_names_the_field() {
+        let a = key();
+        let mut b = key();
+        b.batch_size = 128;
+        let err = a.ensure_matches(&b).unwrap_err().to_string();
+        assert!(err.contains("batch_size"), "{err}");
+        let mut c = key();
+        c.lr_bits = 0.5f32.to_bits();
+        let err = a.ensure_matches(&c).unwrap_err().to_string();
+        assert!(err.contains("lr"), "{err}");
+    }
+
+    #[test]
+    fn retention_keeps_newest_k() {
+        let t = TempDir::new("ckpt-keep").unwrap();
+        let (params, opt) = tiny_state();
+        for step in [3u64, 6, 9, 12] {
+            save_checkpoint(t.path(), 2, &key(), &cursor(step, 0), &params, &opt, &[], &[], 0.0)
+                .unwrap();
+        }
+        let mut names = checkpoint_dir_names(t.path()).unwrap();
+        names.sort();
+        assert_eq!(names, vec![checkpoint_name(9), checkpoint_name(12)]);
+        let (ck, _) = load_latest(t.path()).unwrap().unwrap();
+        assert_eq!(ck.name, checkpoint_name(12));
+    }
+
+    #[test]
+    fn empty_root_is_a_fresh_run() {
+        let t = TempDir::new("ckpt-empty").unwrap();
+        assert!(load_latest(t.path()).unwrap().is_none());
+        assert!(load_latest(&t.path().join("never-created")).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_latest_falls_back_to_previous_intact() {
+        let t = TempDir::new("ckpt-torn").unwrap();
+        let (params, opt) = tiny_state();
+        save_checkpoint(t.path(), 0, &key(), &cursor(5, 0), &params, &opt, &[], &[], 0.5).unwrap();
+        save_checkpoint(t.path(), 0, &key(), &cursor(10, 0), &params, &opt, &[], &[], 0.6).unwrap();
+        // corrupt the newest checkpoint's first param section
+        let victim = t.path().join(checkpoint_name(10)).join("param__table_a.bin");
+        let mut bytes = fs::read(&victim).unwrap();
+        bytes[0] ^= 0xFF;
+        fs::write(&victim, &bytes).unwrap();
+        let (ck, warnings) = load_latest(t.path()).unwrap().unwrap();
+        assert_eq!(ck.name, checkpoint_name(5));
+        assert_eq!(ck.loss_accum, 0.5);
+        assert_eq!(warnings.len(), 1);
+        assert!(
+            warnings[0].contains("param__table_a") && warnings[0].contains("checksum"),
+            "warning must name the bad section: {}",
+            warnings[0]
+        );
+    }
+
+    #[test]
+    fn all_torn_is_an_error_not_a_silent_fresh_start() {
+        let t = TempDir::new("ckpt-alltorn").unwrap();
+        let (params, opt) = tiny_state();
+        save_checkpoint(t.path(), 0, &key(), &cursor(5, 0), &params, &opt, &[], &[], 0.0).unwrap();
+        fs::remove_file(t.path().join(checkpoint_name(5)).join(MANIFEST_FILE)).unwrap();
+        let err = load_latest(t.path()).unwrap_err().to_string();
+        assert!(err.contains("no intact checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn injected_faults_tear_nothing_visible() {
+        let _g = fault::test_guard();
+        let t = TempDir::new("ckpt-fault").unwrap();
+        let (params, opt) = tiny_state();
+        save_checkpoint(t.path(), 0, &key(), &cursor(1, 0), &params, &opt, &[], &[], 0.1).unwrap();
+        for site in
+            ["checkpoint.section", "checkpoint.manifest", "checkpoint.rename", "checkpoint.latest"]
+        {
+            fault::reset();
+            fault::arm(&format!("{site}=1:err")).unwrap();
+            let res =
+                save_checkpoint(t.path(), 0, &key(), &cursor(2, 0), &params, &opt, &[], &[], 0.2);
+            fault::reset();
+            if site == "checkpoint.latest" {
+                // the rename already happened: the new checkpoint is
+                // published even though LATEST still names the old one,
+                // and the fallback scan finds it
+                assert!(res.is_err());
+                let (ck, _) = load_latest(t.path()).unwrap().unwrap();
+                assert_eq!(ck.name, checkpoint_name(2));
+                let _ = fs::remove_dir_all(t.path().join(checkpoint_name(2)));
+            } else {
+                assert!(res.is_err(), "fault at {site} must surface");
+                let (ck, warnings) = load_latest(t.path()).unwrap().unwrap();
+                assert_eq!(ck.name, checkpoint_name(1), "fault at {site} tore the old checkpoint");
+                assert!(warnings.is_empty(), "fault at {site}: {warnings:?}");
+            }
+        }
+        assert_eq!(sweep_stale_temps(t.path()).unwrap(), 0, "temp dirs must be cleaned up");
+    }
+}

@@ -55,10 +55,24 @@
 //! the oracle block's per-hop discovery order), so the two loss
 //! trajectories agree within 1e-5 per epoch (pinned by proptest).
 //!
+//! **Crash safety.** The trainer walks one global `(epoch, batch)`
+//! cursor instead of per-epoch loops, and can snapshot everything that
+//! cursor implies — parameter bits, lazy Adam moments, optimizer step
+//! count, completed-epoch losses and the in-progress epoch's `f64` loss
+//! accumulator — into an atomically-published checkpoint
+//! ([`super::checkpoint`]) every N steps and at any failure boundary.
+//! Because every random draw is a pure function of
+//! `(seed, epoch, batch, …)`, resuming from a checkpoint replays the
+//! exact remaining schedule: a killed-and-resumed run produces the same
+//! loss trajectory and final tables **bit for bit** as an uninterrupted
+//! one, serial or pipelined (`tests/checkpoint.rs`,
+//! `tests/crash_resume.rs`).
+//!
 //! DHE is the one method family not supported here: it has no embedding
 //! tables to scatter gradients into (an MLP backward would be needed),
 //! and the paper itself could not scale DHE to its largest graph.
 
+use super::checkpoint::{self, CheckpointConfig, Cursor, RunKey};
 use super::optim::{GradBuffer, Optimizer, OptimizerKind};
 use crate::data::{Dataset, TaskKind};
 use crate::embedding::{
@@ -68,8 +82,9 @@ use crate::metrics::{accuracy, mean_roc_auc};
 use crate::sampler::{
     mix_seed, BlockPrefetcher, Fanouts, MultiHopBlock, NeighborSampler, SamplerConfig, SeedBatcher,
 };
+use crate::util::fault;
 use crate::util::rng::Rng;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use rayon::prelude::*;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -118,6 +133,15 @@ pub struct MinibatchOptions {
     /// Write a versioned model artifact (tables + plan indices + graph,
     /// see [`crate::serve`]) to this directory after training.
     pub save_model: Option<std::path::PathBuf>,
+    /// Periodic crash-safe checkpointing (root directory, step period,
+    /// retention — see [`CheckpointConfig`]); `None` disables it.
+    pub checkpoint: Option<CheckpointConfig>,
+    /// Resume from the newest intact checkpoint under
+    /// `checkpoint.dir` before training (a no-op when the root holds no
+    /// checkpoint yet — the run then starts fresh). Requires
+    /// `checkpoint` to be set; refuses checkpoints whose [`RunKey`]
+    /// differs from this run's.
+    pub resume: bool,
 }
 
 impl Default for MinibatchOptions {
@@ -133,6 +157,8 @@ impl Default for MinibatchOptions {
             prefetch: 2,
             hidden: 64,
             save_model: None,
+            checkpoint: None,
+            resume: false,
         }
     }
 }
@@ -269,6 +295,22 @@ pub struct MinibatchTrainer<'a> {
     /// as the "add your own `W_self` signal here" marker.
     rev_idx: Vec<u32>,
     peak_compose_rows: usize,
+    /// Completed-epoch mean losses — owned by the trainer (not the
+    /// epoch loop) so checkpoints can snapshot them mid-run.
+    losses: Vec<f64>,
+    /// Completed-epoch wall times (ns).
+    epoch_ns: Vec<u64>,
+    /// Epoch of the next batch to process (== completed epochs).
+    cur_epoch: usize,
+    /// Next batch index within `cur_epoch`.
+    cur_batch: usize,
+    /// In-progress epoch's summed per-seed loss (`f64`, batch order —
+    /// checkpointed bit-exactly so a resumed epoch's mean is identical).
+    epoch_loss_sum: f64,
+    /// Seed nodes consumed so far in the in-progress epoch.
+    epoch_seen: usize,
+    /// Wall-clock start of the in-progress epoch.
+    epoch_t0: Instant,
 }
 
 impl<'a> MinibatchTrainer<'a> {
@@ -335,6 +377,13 @@ impl<'a> MinibatchTrainer<'a> {
             rev_cur: Vec::new(),
             rev_idx: Vec::new(),
             peak_compose_rows: 0,
+            losses: Vec::new(),
+            epoch_ns: Vec::new(),
+            cur_epoch: 0,
+            cur_batch: 0,
+            epoch_loss_sum: 0.0,
+            epoch_seen: 0,
+            epoch_t0: Instant::now(),
         })
     }
 
@@ -385,93 +434,244 @@ impl<'a> MinibatchTrainer<'a> {
         self.step_block(mhb)
     }
 
-    /// Run one epoch, sampling every block on the calling thread (the
-    /// original, un-prefetched loop — [`train`](MinibatchTrainer::train)
-    /// overlaps sampling instead when `opts.prefetch > 0`). Returns the
-    /// epoch's mean training loss.
-    pub fn train_epoch(&mut self, epoch: usize) -> Result<f64> {
-        if self.sampler.is_none() {
+    /// This run's [`RunKey`] — what checkpoints are stamped with, and
+    /// what resume validates a checkpoint against.
+    pub fn run_key(&self) -> RunKey {
+        RunKey {
+            dataset: self.ds.spec.name.to_string(),
+            method: self.engine.plan().method.name(),
+            fanouts: self.cfg.fanouts.to_string(),
+            batch_size: self.cfg.batch_size,
+            shuffle: self.cfg.shuffle,
+            optimizer: match self.opts.optimizer {
+                OptimizerKind::Sgd => "sgd".to_string(),
+                OptimizerKind::Adam => "adam".to_string(),
+            },
+            lr_bits: self.opts.lr.to_bits(),
+            hidden: self.opts.hidden,
+            seed: self.opts.seed,
+            epochs: self.opts.epochs,
+        }
+    }
+
+    /// Process one batch at the cursor: step on the block, advance the
+    /// cursor, close the epoch at its last batch, checkpoint when due.
+    /// The `trainer.step` fault site fires *before* the step, so an
+    /// injected failure (or abort) lands exactly at a batch boundary.
+    fn run_batch(&mut self, mhb: &MultiHopBlock) -> Result<()> {
+        fault::hit("trainer.step").with_context(|| {
+            format!("stepping epoch {} batch {}", self.cur_epoch, self.cur_batch)
+        })?;
+        self.epoch_loss_sum += self.process_block(mhb);
+        self.epoch_seen += mhb.num_seeds();
+        self.cur_batch += 1;
+        if self.cur_batch == self.batcher.num_batches() {
+            self.finish_epoch()?;
+        }
+        self.checkpoint_if_due()
+    }
+
+    /// Close the in-progress epoch: record its mean loss and wall time,
+    /// move the cursor to the next epoch's first batch.
+    fn finish_epoch(&mut self) -> Result<()> {
+        let loss = self.epoch_loss_sum / self.epoch_seen as f64;
+        if !loss.is_finite() {
+            bail!("non-finite training loss at epoch {}", self.cur_epoch);
+        }
+        self.losses.push(loss);
+        self.epoch_ns.push(self.epoch_t0.elapsed().as_nanos() as u64);
+        if self.opts.verbose {
+            println!("  epoch {:>4}  loss {loss:.4}", self.cur_epoch + 1);
+        }
+        self.cur_epoch += 1;
+        self.cur_batch = 0;
+        self.epoch_loss_sum = 0.0;
+        self.epoch_seen = 0;
+        self.epoch_t0 = Instant::now();
+        Ok(())
+    }
+
+    /// Write a periodic checkpoint when one is configured and the
+    /// optimizer step count hits the period.
+    fn checkpoint_if_due(&mut self) -> Result<()> {
+        let due = match &self.opts.checkpoint {
+            Some(cfg) => cfg.every > 0 && self.opt.step_count() % cfg.every as u64 == 0,
+            None => false,
+        };
+        if due {
+            self.checkpoint_now()?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the full trainer state (params, moments, cursor, loss
+    /// history and accumulator) into an atomically-published checkpoint
+    /// under the configured root. No-op without a checkpoint config.
+    pub fn checkpoint_now(&mut self) -> Result<()> {
+        let Some(cfg) = self.opts.checkpoint.clone() else {
+            return Ok(());
+        };
+        let run = self.run_key();
+        let cursor = Cursor {
+            epoch: self.cur_epoch,
+            batch: self.cur_batch,
+            global_step: self.opt.step_count(),
+            epoch_seen: self.epoch_seen,
+            peak_compose_rows: self.peak_compose_rows,
+        };
+        checkpoint::save_checkpoint(
+            &cfg.dir,
+            cfg.keep,
+            &run,
+            &cursor,
+            &self.params,
+            &self.opt,
+            &self.losses,
+            &self.epoch_ns,
+            self.epoch_loss_sum,
+        )?;
+        Ok(())
+    }
+
+    /// Restore the newest intact checkpoint under the configured root,
+    /// bit-installing parameters, Adam moments, the optimizer step
+    /// count, the cursor and the loss history. Fresh-run no-op when the
+    /// root is empty; fails when the checkpoint belongs to a different
+    /// run or its tensors do not match this run's shapes.
+    fn maybe_resume(&mut self) -> Result<()> {
+        if !self.opts.resume {
+            return Ok(());
+        }
+        let Some(cfg) = self.opts.checkpoint.clone() else {
+            bail!("--resume requires a checkpoint directory");
+        };
+        let Some((ck, warnings)) = checkpoint::load_latest(&cfg.dir)? else {
+            return Ok(());
+        };
+        for w in &warnings {
+            eprintln!("warning: {w}");
+        }
+        ck.manifest.run.ensure_matches(&self.run_key())?;
+        if ck.manifest.param_names != self.params.names() {
+            bail!(
+                "checkpoint '{}' holds tensors {:?}, this run has {:?}",
+                ck.name,
+                ck.manifest.param_names,
+                self.params.names()
+            );
+        }
+        for (name, shape, data) in &ck.params {
+            if self.params.shape(name) != shape.as_slice() {
+                bail!(
+                    "checkpoint tensor '{}' has shape {:?}, this run expects {:?}",
+                    name,
+                    shape,
+                    self.params.shape(name)
+                );
+            }
+            self.params.get_mut(name).copy_from_slice(data);
+        }
+        for (name, m, v) in ck.moments {
+            let want = self.params.get(&name).len();
+            if m.len() != want {
+                bail!("checkpoint moments for '{name}' hold {} values, expected {want}", m.len());
+            }
+            self.opt.restore_moments(&name, m, v);
+        }
+        self.opt.set_step_count(ck.manifest.cursor.global_step);
+        self.cur_epoch = ck.manifest.cursor.epoch;
+        self.cur_batch = ck.manifest.cursor.batch;
+        self.epoch_seen = ck.manifest.cursor.epoch_seen;
+        self.peak_compose_rows = ck.manifest.cursor.peak_compose_rows;
+        self.epoch_loss_sum = ck.loss_accum;
+        self.losses = ck.losses;
+        self.epoch_ns = ck.epoch_ns;
+        let _ = checkpoint::sweep_stale_temps(&cfg.dir);
+        eprintln!(
+            "resumed from checkpoint '{}' at epoch {} batch {} (step {})",
+            ck.name, self.cur_epoch, self.cur_batch, ck.manifest.cursor.global_step
+        );
+        Ok(())
+    }
+
+    /// The cursor-driven loop with inline sampling (the un-prefetched
+    /// path — [`train`](MinibatchTrainer::train) overlaps sampling on a
+    /// prefetch thread instead when `opts.prefetch > 0`).
+    fn run_inline(&mut self) -> Result<()> {
+        let epochs = self.opts.epochs;
+        if self.sampler.is_none() && self.cur_epoch < epochs {
             let ds = self.ds;
             let sampler =
                 NeighborSampler::multi_hop(&ds.graph, &self.cfg.fanouts, self.sampler_seed);
             self.sampler = Some(sampler);
         }
-        let batches = self.batcher.epoch_batches(epoch);
-        let mut loss_sum = 0f64;
-        let mut seen = 0usize;
         let mut mhb = MultiHopBlock::default();
-        for (bi, seeds) in batches.iter().enumerate() {
-            let sampler = self.sampler.as_mut().expect("inline sampler initialized above");
-            sampler.sample_multi_into(seeds, epoch, bi, &mut mhb);
-            loss_sum += self.process_block(&mhb);
-            seen += mhb.num_seeds();
+        while self.cur_epoch < epochs {
+            let epoch = self.cur_epoch;
+            let batches = self.batcher.epoch_batches(epoch);
+            while self.cur_epoch == epoch {
+                let bi = self.cur_batch;
+                let sampler = self.sampler.as_mut().expect("inline sampler initialized above");
+                sampler.sample_multi_into(&batches[bi], epoch, bi, &mut mhb);
+                self.run_batch(&mhb)?;
+            }
         }
-        let loss = loss_sum / seen as f64;
-        if !loss.is_finite() {
-            bail!("non-finite training loss at epoch {epoch}");
-        }
-        Ok(loss)
+        Ok(())
     }
 
-    /// One epoch over blocks delivered by the prefetcher (bit-identical
-    /// to [`train_epoch`](MinibatchTrainer::train_epoch): same blocks,
-    /// same order — only the sampling overlaps the stepping).
-    fn train_epoch_streamed(&mut self, epoch: usize, stream: &BlockPrefetcher) -> Result<f64> {
-        let batches = self.batcher.num_batches();
-        let mut loss_sum = 0f64;
-        let mut seen = 0usize;
-        for _ in 0..batches {
-            let block = stream
-                .recv()
-                .map_err(|_| anyhow!("block prefetch thread stopped early at epoch {epoch}"))?;
-            loss_sum += self.process_block(&block);
-            seen += block.num_seeds();
-            stream.recycle(block);
-        }
-        let loss = loss_sum / seen as f64;
-        if !loss.is_finite() {
-            bail!("non-finite training loss at epoch {epoch}");
-        }
-        Ok(loss)
-    }
-
-    /// Train for `opts.epochs` epochs, then evaluate val/test. With
-    /// `opts.prefetch > 0` a dedicated sampler thread materializes
-    /// upcoming blocks while the current one is stepped.
+    /// Train to `opts.epochs` epochs (from the resumed cursor, if any),
+    /// then evaluate val/test. With `opts.prefetch > 0` a dedicated
+    /// sampler thread materializes upcoming blocks while the current one
+    /// is stepped. On a failure mid-run the trainer first writes a
+    /// best-effort checkpoint at the last completed batch boundary, so
+    /// `--resume` loses no finished work even on unplanned aborts.
     pub fn train(&mut self) -> Result<MinibatchOutcome> {
         let t0 = Instant::now();
+        self.maybe_resume()?;
+        self.epoch_t0 = Instant::now();
         let epochs = self.opts.epochs;
-        let mut losses = Vec::with_capacity(epochs);
-        let mut epoch_ns = Vec::with_capacity(epochs);
-        if self.opts.prefetch > 0 && epochs > 0 {
+        let run = if self.opts.prefetch > 0 && self.cur_epoch < epochs {
             let ds = self.ds;
             let batcher = self.batcher.clone();
             let fans = self.cfg.fanouts.clone();
             let (seed, depth) = (self.sampler_seed, self.opts.prefetch);
+            let start = (self.cur_epoch, self.cur_batch);
             std::thread::scope(|scope| -> Result<()> {
-                let stream =
-                    BlockPrefetcher::spawn(scope, &ds.graph, batcher, fans, seed, epochs, depth);
-                for epoch in 0..epochs {
-                    let e0 = Instant::now();
-                    let loss = self.train_epoch_streamed(epoch, &stream)?;
-                    epoch_ns.push(e0.elapsed().as_nanos() as u64);
-                    if self.opts.verbose {
-                        println!("  epoch {:>4}  loss {loss:.4}", epoch + 1);
-                    }
-                    losses.push(loss);
+                let stream = BlockPrefetcher::spawn(
+                    scope,
+                    &ds.graph,
+                    batcher,
+                    fans,
+                    seed,
+                    epochs,
+                    start,
+                    depth,
+                );
+                while self.cur_epoch < epochs {
+                    let block = stream.recv()?;
+                    self.run_batch(&block)?;
+                    stream.recycle(block);
                 }
                 Ok(())
-            })?;
+            })
         } else {
-            for epoch in 0..epochs {
-                let e0 = Instant::now();
-                let loss = self.train_epoch(epoch)?;
-                epoch_ns.push(e0.elapsed().as_nanos() as u64);
-                if self.opts.verbose {
-                    println!("  epoch {:>4}  loss {loss:.4}", epoch + 1);
+            self.run_inline()
+        };
+        if let Err(e) = run {
+            // the cursor sits at the last completed batch boundary
+            // unless the epoch close itself failed (non-finite loss —
+            // nothing worth resuming then)
+            if self.opts.checkpoint.is_some() && self.cur_batch < self.batcher.num_batches() {
+                match self.checkpoint_now() {
+                    Ok(()) => eprintln!(
+                        "checkpointed at epoch {} batch {} before aborting; rerun with \
+                         --resume to continue",
+                        self.cur_epoch, self.cur_batch
+                    ),
+                    Err(ce) => eprintln!("warning: failure-boundary checkpoint failed: {ce:#}"),
                 }
-                losses.push(loss);
             }
+            return Err(e);
         }
         let ds = self.ds;
         let val_metric = self.evaluate(&ds.splits.val)?;
@@ -480,8 +680,8 @@ impl<'a> MinibatchTrainer<'a> {
             self.save_artifact(&dir)?;
         }
         Ok(MinibatchOutcome {
-            losses,
-            epoch_ns,
+            losses: self.losses.clone(),
+            epoch_ns: self.epoch_ns.clone(),
             val_metric,
             test_metric,
             peak_compose_rows: self.peak_compose_rows,

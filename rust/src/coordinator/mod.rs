@@ -19,13 +19,24 @@
 //!   optimizer apply run on the rayon pool — bit-identical to the
 //!   serial oracle step at any thread count
 //!   (`tests/parallel_train.rs`).
+//!
+//! The minibatch path is additionally **crash-safe**: [`checkpoint`]
+//! snapshots parameters, Adam moments and the `(epoch, batch)` cursor
+//! into atomically-published checkpoint directories, and a run resumed
+//! from any checkpoint replays the identical loss trajectory bit for
+//! bit (`tests/checkpoint.rs`, `tests/crash_resume.rs`).
 
+pub mod checkpoint;
 mod minibatch;
 mod optim;
 mod params;
 mod statics;
 mod trainer;
 
+pub use checkpoint::{
+    load_latest, save_checkpoint, sweep_stale_temps, CheckpointConfig, CheckpointManifest, Cursor,
+    LoadedCheckpoint, RunKey,
+};
 pub use minibatch::{train_full_batch, MinibatchOptions, MinibatchOutcome, MinibatchTrainer};
 // shared with the serving path (`crate::serve`), so a served forward
 // can never drift from the trainers' evaluation forward

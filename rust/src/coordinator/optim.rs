@@ -320,6 +320,47 @@ impl Optimizer {
         self.step
     }
 
+    /// The update rule this optimizer applies.
+    pub fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    /// The learning rate.
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// Overwrite the step counter — checkpoint resume only. Adam's
+    /// bias correction is a pure function of the step count, so
+    /// restoring it (with the moments) makes the next `apply`
+    /// bit-identical to the uninterrupted run's.
+    pub fn set_step_count(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// The lazily allocated Adam moment tables, name-sorted — the
+    /// checkpoint writer's deterministic section order. Empty for SGD
+    /// (and before the first Adam `apply`); a table absent here is
+    /// exactly equivalent to all-zero moments, because the lazy
+    /// allocation in [`apply`](Optimizer::apply) zero-initializes.
+    pub fn moment_tables(&self) -> Vec<(&str, &[f32], &[f32])> {
+        let mut tables: Vec<(&str, &[f32], &[f32])> = self
+            .moments
+            .iter()
+            .map(|(name, (m, v))| (name.as_str(), m.as_slice(), v.as_slice()))
+            .collect();
+        tables.sort_by_key(|t| t.0);
+        tables
+    }
+
+    /// Install restored moment state for one table — checkpoint resume
+    /// only. `m` and `v` must have the table's full element count (the
+    /// next `apply` indexes them by row).
+    pub fn restore_moments(&mut self, name: &str, m: Vec<f32>, v: Vec<f32>) {
+        assert_eq!(m.len(), v.len(), "moment tables for '{name}' disagree on length");
+        self.moments.insert(name.to_string(), (m, v));
+    }
+
     /// Apply `gb`'s accumulated gradients to the row-major table `data`.
     /// Only touched rows are updated; `gb` is not cleared here. With
     /// [`parallel`](Optimizer::parallel) set and enough touched rows,

@@ -22,6 +22,16 @@
 //!   (`--fanouts 10,5` = a 2-layer head over 2-hop blocks; `--hidden`
 //!   sets its intermediate width). The pipelined engine is the
 //!   default; `--serial` selects the single-threaded oracle path.
+//!   The trainer is crash-safe: `--checkpoint-dir DIR` snapshots
+//!   parameters, optimizer moments and the `(epoch, batch)` cursor
+//!   every `--checkpoint-every` steps into atomically-published
+//!   checkpoint directories, and `--resume` continues from the newest
+//!   intact one with a bit-identical loss trajectory.
+//! * `crash-test [...]` — end-to-end crash/recovery harness: runs an
+//!   uninterrupted control, kills a checkpointing victim subprocess
+//!   mid-epoch with an injected fault (`POSHASH_FAULT`), resumes it,
+//!   and asserts the resumed run's loss trajectory matches the control
+//!   bit for bit.
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
 //!   benchmark the partitioner pipeline; defaults to the acceptance
 //!   SBM (n = 50k, 32 communities).
@@ -49,7 +59,9 @@ use poshashemb::bench_harness::{
     rows_from_outcomes, Harness, ServeBenchOptions,
 };
 use poshashemb::config::{full_grid, materialize, smoke_grid, write_aot_request};
-use poshashemb::coordinator::{run_experiment, MinibatchOptions, OptimizerKind, TrainOptions};
+use poshashemb::coordinator::{
+    run_experiment, CheckpointConfig, MinibatchOptions, OptimizerKind, TrainOptions,
+};
 use poshashemb::data::{spec, Dataset, DATASET_NAMES};
 use poshashemb::embedding::{EmbeddingPlan, MethodSpec};
 use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
@@ -57,8 +69,11 @@ use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConf
 use poshashemb::runtime::{Manifest, RuntimeClient};
 use poshashemb::sampler::{Fanout, Fanouts, SamplerConfig};
 use poshashemb::serve::ServeEngine;
+use poshashemb::util::fault::FAULT_ENV;
+use poshashemb::util::tempdir::TempDir;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::process::Command;
 
 fn main() {
     if let Err(e) = run() {
@@ -157,8 +172,32 @@ static COMMANDS: &[CommandSpec] = &[
             flag("serial", None, "single-threaded oracle path (bit-identical losses)"),
             flag("prefetch", Some("DEPTH"), "sampled blocks prefetched ahead of the trainer"),
             flag("save-model", Some("DIR"), "write a versioned model artifact after training"),
+            flag("nodes", Some("N"), "override the synthetic dataset's node count"),
+            flag("dim", Some("D"), "override the embedding dimension"),
+            flag("checkpoint-dir", Some("DIR"), "enable crash-safe checkpointing under DIR"),
+            flag("checkpoint-every", Some("N"), "steps between checkpoints (default 50)"),
+            flag("checkpoint-keep", Some("K"), "retained checkpoints, 0 = all (default 3)"),
+            flag("resume", None, "continue from the newest intact checkpoint in DIR"),
             flag("verbose", None, "per-epoch progress lines"),
             flag("json", None, "emit the bench record as JSON"),
+        ],
+    },
+    CommandSpec {
+        name: "crash-test",
+        positional: None,
+        about: "kill/resume harness: prove resumed losses match an uninterrupted control",
+        flags: &[
+            flag("dataset", Some("D"), "dataset name (default synth-arxiv)"),
+            flag("method", Some("TAG"), "method tag (default intra)"),
+            flag("nodes", Some("N"), "node-count override for a fast run (default 400)"),
+            flag("dim", Some("D"), "embedding-dimension override (default 16)"),
+            flag("batch", Some("B"), "seeds per minibatch (default 64)"),
+            flag("fanouts", Some("F1,F2,.."), "per-hop fanouts (default 5,3)"),
+            flag("epochs", Some("N"), "training epochs (default 3)"),
+            flag("kill-step", Some("K"), "abort the victim before its K-th step (default 6)"),
+            flag("checkpoint-every", Some("N"), "victim checkpoint period in steps (default 2)"),
+            flag("serial", None, "run all three trainers on the serial oracle path"),
+            flag("dir", Some("DIR"), "use (and keep) DIR for checkpoints instead of a temp dir"),
         ],
     },
     CommandSpec {
@@ -355,6 +394,7 @@ fn run() -> Result<()> {
         "partition" => cmd_partition(&parsed),
         "train" => cmd_train(&parsed),
         "train-minibatch" => cmd_train_minibatch(&parsed),
+        "crash-test" => cmd_crash_test(&parsed),
         "experiment" => cmd_experiment(&parsed),
         "compose" => cmd_compose(&parsed),
         "partition-bench" => cmd_partition_bench(&parsed),
@@ -486,8 +526,31 @@ fn cmd_train(args: &CliArgs) -> Result<()> {
 /// subcommands. The tag goes through [`MethodSpec`]: bare tags resolve
 /// paper-default scale knobs from `n` (exactly as the experiment grid
 /// does), explicit parameters like `inter(k=9,h=1)` override them.
-fn dataset_and_plan(dsname: &str, tag: &str, seed: u64) -> Result<(Dataset, EmbeddingPlan)> {
-    let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
+/// `nodes`/`dim` shrink (or grow) the synthetic spec before generation
+/// — community/super counts are capped so the planted structure stays
+/// valid — letting smoke runs like `crash-test` finish in seconds.
+fn dataset_and_plan(
+    dsname: &str,
+    tag: &str,
+    seed: u64,
+    nodes: Option<usize>,
+    dim: Option<usize>,
+) -> Result<(Dataset, EmbeddingPlan)> {
+    let mut sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
+    if let Some(n) = nodes {
+        if n == 0 {
+            bail!("--nodes must be >= 1");
+        }
+        sp.n = n;
+        sp.communities = sp.communities.min(n.div_ceil(20)).max(1);
+        sp.supers = sp.supers.min(sp.communities);
+    }
+    if let Some(d) = dim {
+        if d == 0 {
+            bail!("--dim must be >= 1");
+        }
+        sp.d = d;
+    }
     let resolved = MethodSpec::parse(tag)?.resolve(sp.n)?;
     let ds = Dataset::generate(&sp);
     let hier = if resolved.method.needs_hierarchy() {
@@ -505,7 +568,7 @@ fn cmd_compose(args: &CliArgs) -> Result<()> {
     let dsname = args.get("dataset").unwrap_or("synth-arxiv");
     let tag = args.get("method").unwrap_or("intra");
     let batch: usize = args.parse_as("batch")?.unwrap_or(1024);
-    let (_ds, plan) = dataset_and_plan(dsname, tag, 0)?;
+    let (_ds, plan) = dataset_and_plan(dsname, tag, 0, None, None)?;
     eprintln!("compose bench: {dsname} n={} d={} method={}", plan.n, plan.d, plan.method.name());
     let records = bench_compose(&plan, batch);
     if args.has("json") {
@@ -527,6 +590,9 @@ fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
     if exp_flag.is_some() && (args.has("dataset") || args.has("method")) {
         bail!("--experiment already fixes the dataset and method; drop --dataset/--method");
     }
+    if exp_flag.is_some() && (args.has("nodes") || args.has("dim")) {
+        bail!("--experiment already fixes the dataset size; drop --nodes/--dim");
+    }
     let (label, dsname, ds, plan, mut cfg, mut opts) = if let Some(name) = exp_flag {
         let e = full_grid()
             .into_iter()
@@ -539,7 +605,8 @@ fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
     } else {
         let dsname = args.get("dataset").unwrap_or("synth-arxiv");
         let tag = args.get("method").unwrap_or("intra");
-        let (ds, plan) = dataset_and_plan(dsname, tag, seed)?;
+        let (nodes, dim) = (args.parse_as("nodes")?, args.parse_as("dim")?);
+        let (ds, plan) = dataset_and_plan(dsname, tag, seed, nodes, dim)?;
         let opts = MinibatchOptions { seed, ..Default::default() };
         (dsname.to_string(), dsname.to_string(), ds, plan, SamplerConfig::default(), opts)
     };
@@ -593,6 +660,16 @@ fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
     if let Some(dir) = args.get("save-model") {
         opts.save_model = Some(PathBuf::from(dir));
     }
+    let wants_ckpt = args.has("checkpoint-every") || args.has("checkpoint-keep");
+    if args.get("checkpoint-dir").is_none() && (wants_ckpt || args.has("resume")) {
+        bail!("--checkpoint-every/--checkpoint-keep/--resume need --checkpoint-dir DIR");
+    }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        let every: usize = args.parse_as("checkpoint-every")?.unwrap_or(50);
+        let keep: usize = args.parse_as("checkpoint-keep")?.unwrap_or(3);
+        opts.checkpoint = Some(CheckpointConfig { dir: PathBuf::from(dir), every, keep });
+        opts.resume = args.has("resume");
+    }
     opts.verbose = args.has("verbose");
     eprintln!(
         "minibatch train: {label} n={} d={} method={} batch={} fanouts={} layers={} epochs={} \
@@ -619,6 +696,139 @@ fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
     } else {
         println!("{}", record.row());
     }
+    Ok(())
+}
+
+/// Run `train-minibatch` as a subprocess of this same binary,
+/// optionally with an injected fault armed in its environment (and the
+/// parent's fault spec, if any, scrubbed otherwise).
+fn run_trainer_subprocess(argv: &[String], fault: Option<&str>) -> Result<std::process::Output> {
+    let exe = std::env::current_exe()?;
+    let mut cmd = Command::new(exe);
+    cmd.arg("train-minibatch").args(argv);
+    if let Some(spec) = fault {
+        cmd.env(FAULT_ENV, spec);
+    } else {
+        cmd.env_remove(FAULT_ENV);
+    }
+    cmd.output().map_err(|e| anyhow!("spawning trainer subprocess: {e}"))
+}
+
+/// Parse the `losses` trajectory out of a `train-minibatch --json`
+/// record. JSON round-trips `f64` exactly (shortest-round-trip
+/// printing), so comparing the parsed values bit for bit is exact.
+fn losses_from_json(stdout: &[u8]) -> Result<Vec<f64>> {
+    let v: serde_json::Value = serde_json::from_slice(stdout)
+        .map_err(|e| anyhow!("trainer emitted unparseable JSON: {e}"))?;
+    let arr = v["losses"].as_array().ok_or_else(|| anyhow!("record has no losses array"))?;
+    arr.iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-numeric loss in record")))
+        .collect()
+}
+
+/// End-to-end crash/recovery proof. Three runs of this same binary:
+/// an uninterrupted control; a checkpointing victim aborted mid-epoch
+/// by a deterministic injected fault; and a `--resume` of the victim.
+/// Passes iff the victim really died, really left checkpoints, really
+/// resumed from one — and the resumed run's per-epoch loss trajectory
+/// matches the control **bit for bit**.
+fn cmd_crash_test(args: &CliArgs) -> Result<()> {
+    let kill_step: u64 = args.parse_as("kill-step")?.unwrap_or(6);
+    let every: usize = args.parse_as("checkpoint-every")?.unwrap_or(2);
+    if kill_step == 0 {
+        bail!("--kill-step must be >= 1");
+    }
+    if every == 0 {
+        bail!("--checkpoint-every must be >= 1");
+    }
+    let epochs = args.get("epochs").unwrap_or("3");
+    let mut base: Vec<String> = [
+        ("--dataset", args.get("dataset").unwrap_or("synth-arxiv")),
+        ("--method", args.get("method").unwrap_or("intra")),
+        ("--nodes", args.get("nodes").unwrap_or("400")),
+        ("--dim", args.get("dim").unwrap_or("16")),
+        ("--batch", args.get("batch").unwrap_or("64")),
+        ("--fanouts", args.get("fanouts").unwrap_or("5,3")),
+        ("--epochs", epochs),
+        ("--seed", "0"),
+    ]
+    .iter()
+    .flat_map(|(k, v)| [k.to_string(), v.to_string()])
+    .collect();
+    if args.has("serial") {
+        base.push("--serial".to_string());
+    }
+    let (_tmp, dir) = match args.get("dir") {
+        Some(d) => (None, PathBuf::from(d)),
+        None => {
+            let t = TempDir::new("poshashemb-crash-test")?;
+            let p = t.path().to_path_buf();
+            (Some(t), p)
+        }
+    };
+
+    eprintln!("crash-test: control run ({epochs} epochs, uninterrupted)");
+    let mut control_args = base.clone();
+    control_args.push("--json".to_string());
+    let control = run_trainer_subprocess(&control_args, None)?;
+    if !control.status.success() {
+        bail!("control run failed:\n{}", String::from_utf8_lossy(&control.stderr));
+    }
+    let control_losses = losses_from_json(&control.stdout)?;
+
+    let mut victim_args = base.clone();
+    victim_args.extend([
+        "--checkpoint-dir".to_string(),
+        dir.display().to_string(),
+        "--checkpoint-every".to_string(),
+        every.to_string(),
+    ]);
+    let fault = format!("trainer.step={kill_step}:abort");
+    eprintln!("crash-test: victim run (aborted by injected fault {fault})");
+    let victim = run_trainer_subprocess(&victim_args, Some(&fault))?;
+    if victim.status.success() {
+        bail!("victim run survived — it never reached step {kill_step}; lower --kill-step");
+    }
+    let ckpts: Vec<String> = std::fs::read_dir(&dir)
+        .map_err(|e| anyhow!("reading checkpoint dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("ckpt-"))
+        .collect();
+    if ckpts.is_empty() {
+        bail!("victim died before any checkpoint; raise --kill-step or lower --checkpoint-every");
+    }
+
+    eprintln!("crash-test: resume run ({} checkpoint(s) on disk)", ckpts.len());
+    let mut resume_args = victim_args.clone();
+    resume_args.extend(["--resume".to_string(), "--json".to_string()]);
+    let resume = run_trainer_subprocess(&resume_args, None)?;
+    if !resume.status.success() {
+        bail!("resume run failed:\n{}", String::from_utf8_lossy(&resume.stderr));
+    }
+    let resume_stderr = String::from_utf8_lossy(&resume.stderr);
+    if !resume_stderr.contains("resumed from checkpoint") {
+        bail!("resume run started from scratch instead of a checkpoint:\n{resume_stderr}");
+    }
+    let resumed_losses = losses_from_json(&resume.stdout)?;
+
+    if control_losses.len() != resumed_losses.len() {
+        bail!(
+            "loss trajectories differ in length: control {} vs resumed {}",
+            control_losses.len(),
+            resumed_losses.len()
+        );
+    }
+    for (i, (c, r)) in control_losses.iter().zip(&resumed_losses).enumerate() {
+        if c.to_bits() != r.to_bits() {
+            bail!("loss diverged at epoch {i}: control {c:.17e} vs resumed {r:.17e}");
+        }
+    }
+    println!(
+        "crash-test PASS: victim killed before step {kill_step}, resumed, {} epoch losses \
+         bit-identical to the uninterrupted control",
+        control_losses.len()
+    );
     Ok(())
 }
 

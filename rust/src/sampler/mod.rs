@@ -37,7 +37,7 @@ mod prefetch;
 
 pub use batcher::SeedBatcher;
 pub use neighbor::{MultiHopBlock, NeighborSampler, SampledBlock};
-pub use prefetch::BlockPrefetcher;
+pub use prefetch::{BlockPrefetcher, PrefetchError};
 
 /// Per-seed neighbor cap for one sampled hop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

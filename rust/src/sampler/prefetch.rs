@@ -10,39 +10,100 @@
 //! **cannot** change what any block contains; because the channel is
 //! ordered and single-producer / single-consumer, the trainer receives
 //! blocks in exactly the serial loop's batch order. The only observable
-//! difference from sampling inline is wall time.
+//! difference from sampling inline is wall time. The stream can start
+//! at any `(epoch, batch)` cursor, which is how a resumed run picks up
+//! mid-epoch without resampling the consumed prefix.
+//!
+//! Failures on the sampler thread (a panic, or an injected
+//! `prefetch.handover` fault) do **not** wait for the enclosing scope's
+//! join: they are caught, converted to a typed [`PrefetchError`] and
+//! delivered through the channel, so the trainer learns the exact
+//! `(epoch, batch)` that failed on its very next [`recv`] — in time to
+//! checkpoint at the last clean batch boundary and abort.
 //!
 //! Blocks the trainer has finished stepping flow back through an
 //! unbounded return channel and are reused via
 //! [`NeighborSampler::sample_multi_into`], so steady-state sampling is
 //! allocation-free: after the first `depth + in-flight` blocks, every
 //! batch recycles an earlier batch's per-hop vectors.
+//!
+//! [`recv`]: BlockPrefetcher::recv
 
 use super::{Fanouts, MultiHopBlock, NeighborSampler, SeedBatcher};
 use crate::graph::CsrGraph;
+use crate::util::fault;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::thread::Scope;
+
+/// Why a prefetched block stream ended before delivering every batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PrefetchError {
+    /// The sampler thread failed (panicked, or hit an injected fault)
+    /// while producing the named batch. The stream ends here; blocks
+    /// for every earlier batch were delivered intact, so the trainer
+    /// sits at a clean batch boundary and can checkpoint before
+    /// propagating the error.
+    Batch {
+        /// Epoch of the batch that failed to sample.
+        epoch: usize,
+        /// Batch index (within the epoch) that failed to sample.
+        batch: usize,
+        /// The panic payload or injected error, as text.
+        detail: String,
+    },
+    /// The sampler thread went away without reporting a failure
+    /// (only seen when receiving past the end of the schedule).
+    Disconnected,
+}
+
+impl std::fmt::Display for PrefetchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrefetchError::Batch { epoch, batch, detail } => {
+                write!(f, "prefetch failed sampling epoch {epoch} batch {batch}: {detail}")
+            }
+            PrefetchError::Disconnected => write!(f, "prefetch stream disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for PrefetchError {}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "sampler thread panicked".to_string()
+    }
+}
 
 /// Receiving end of a prefetched block stream, plus the recycle pool.
 ///
 /// Create with [`BlockPrefetcher::spawn`] inside a
 /// [`std::thread::scope`]; the sampler thread is joined when the scope
-/// ends (it exits on its own once all blocks are delivered, or as soon
-/// as the receiver is dropped mid-run).
+/// ends (it exits on its own once all blocks are delivered, after
+/// reporting a failure, or as soon as the receiver is dropped mid-run).
 pub struct BlockPrefetcher {
-    rx: Receiver<MultiHopBlock>,
+    rx: Receiver<Result<MultiHopBlock, PrefetchError>>,
     pool: Sender<MultiHopBlock>,
 }
 
 impl BlockPrefetcher {
-    /// Spawn the sampler thread on `scope`, streaming every batch of
-    /// epochs `0..epochs` in deterministic `(epoch, batch)` order.
+    /// Spawn the sampler thread on `scope`, streaming every batch from
+    /// the `start` cursor (inclusive, `(epoch, batch)`) to the end of
+    /// epoch `epochs - 1` in deterministic `(epoch, batch)` order. A
+    /// fresh run passes `(0, 0)`; a resumed run passes the restored
+    /// cursor and receives exactly the not-yet-consumed suffix.
     ///
     /// `depth` bounds how many sampled blocks may sit ready ahead of
     /// the trainer (clamped to ≥ 1; 2 is classic double buffering).
     /// `stream_seed` must be the same sampler stream seed a serial run
     /// would use — the blocks are then bit-identical to inline
-    /// sampling, at any hop count.
+    /// sampling, at any hop count and from any start cursor.
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn<'scope, 'env>(
         scope: &'scope Scope<'scope, 'env>,
         graph: &'env CsrGraph,
@@ -50,34 +111,57 @@ impl BlockPrefetcher {
         fanouts: Fanouts,
         stream_seed: u64,
         epochs: usize,
+        start: (usize, usize),
         depth: usize,
     ) -> BlockPrefetcher {
-        let (tx, rx) = sync_channel::<MultiHopBlock>(depth.max(1));
+        let (tx, rx) = sync_channel::<Result<MultiHopBlock, PrefetchError>>(depth.max(1));
         let (pool_tx, pool_rx) = channel::<MultiHopBlock>();
         scope.spawn(move || {
             let mut sampler = NeighborSampler::multi_hop(graph, &fanouts, stream_seed);
-            for epoch in 0..epochs {
+            for epoch in start.0..epochs {
                 let batches = batcher.epoch_batches(epoch);
-                for (bi, seeds) in batches.iter().enumerate() {
+                let skip = if epoch == start.0 { start.1 } else { 0 };
+                for (bi, seeds) in batches.iter().enumerate().skip(skip) {
                     // recycle a stepped block's buffers when one is back
                     let mut block = pool_rx.try_recv().unwrap_or_default();
-                    sampler.sample_multi_into(seeds, epoch, bi, &mut block);
-                    if tx.send(block).is_err() {
-                        // trainer dropped the stream (error mid-run):
-                        // stop sampling and let the scope join us
-                        return;
-                    }
+                    let sampled = catch_unwind(AssertUnwindSafe(|| {
+                        fault::hit("prefetch.handover")?;
+                        sampler.sample_multi_into(seeds, epoch, bi, &mut block);
+                        Ok::<(), std::io::Error>(())
+                    }));
+                    let detail = match sampled {
+                        Ok(Ok(())) => {
+                            if tx.send(Ok(block)).is_err() {
+                                // trainer dropped the stream (error
+                                // mid-run): stop sampling and let the
+                                // scope join us
+                                return;
+                            }
+                            continue;
+                        }
+                        Ok(Err(e)) => e.to_string(),
+                        Err(payload) => panic_text(payload.as_ref()),
+                    };
+                    let _ = tx.send(Err(PrefetchError::Batch { epoch, batch: bi, detail }));
+                    return;
                 }
             }
         });
         BlockPrefetcher { rx, pool: pool_tx }
     }
 
-    /// Receive the next block, in `(epoch, batch)` order. `Err` only if
-    /// the sampler thread stopped early (it never does on its own — a
-    /// panic over there surfaces when the enclosing scope joins).
-    pub fn recv(&self) -> Result<MultiHopBlock, std::sync::mpsc::RecvError> {
-        self.rx.recv()
+    /// Receive the next block, in `(epoch, batch)` order.
+    ///
+    /// A sampler-side failure surfaces here as
+    /// [`PrefetchError::Batch`] naming the batch that failed — on the
+    /// next call, not at scope join. Receiving after the schedule is
+    /// exhausted (or after a failure was already reported) returns
+    /// [`PrefetchError::Disconnected`].
+    pub fn recv(&self) -> Result<MultiHopBlock, PrefetchError> {
+        match self.rx.recv() {
+            Ok(next) => next,
+            Err(_) => Err(PrefetchError::Disconnected),
+        }
     }
 
     /// Hand a stepped block's buffers back for reuse. Never fails: the
@@ -122,7 +206,7 @@ mod tests {
                 let b = batcher.clone();
                 let f = fanouts.clone();
                 std::thread::scope(|scope| {
-                    let pf = BlockPrefetcher::spawn(scope, &g, b, f, seed, epochs, depth);
+                    let pf = BlockPrefetcher::spawn(scope, &g, b, f, seed, epochs, (0, 0), depth);
                     for _ in 0..inline.len() {
                         let block = pf.recv().expect("sampler thread alive");
                         streamed.push(block.clone());
@@ -135,12 +219,70 @@ mod tests {
     }
 
     #[test]
+    fn streaming_from_a_cursor_delivers_exactly_the_suffix() {
+        let g = ring(48);
+        let ids: Vec<u32> = (0..48).collect();
+        let batcher = SeedBatcher::new(&ids, 10, true, 9);
+        let (epochs, seed) = (3, 21u64);
+        let fanouts = Fanouts::parse("2,1").unwrap();
+        let per_epoch = batcher.num_batches();
+
+        let mut inline = Vec::new();
+        let mut sampler = NeighborSampler::multi_hop(&g, &fanouts, seed);
+        for epoch in 0..epochs {
+            for (bi, seeds) in batcher.epoch_batches(epoch).iter().enumerate() {
+                inline.push(sampler.sample_multi(seeds, epoch, bi));
+            }
+        }
+
+        for start in [(0usize, 0usize), (0, 3), (1, 0), (1, 2), (2, per_epoch - 1)] {
+            let expect = &inline[start.0 * per_epoch + start.1..];
+            let mut streamed = Vec::new();
+            let b = batcher.clone();
+            let f = fanouts.clone();
+            std::thread::scope(|scope| {
+                let pf = BlockPrefetcher::spawn(scope, &g, b, f, seed, epochs, start, 2);
+                for _ in 0..expect.len() {
+                    streamed.push(pf.recv().expect("sampler thread alive"));
+                }
+                assert_eq!(pf.recv(), Err(PrefetchError::Disconnected), "stream must end");
+            });
+            assert_eq!(expect, &streamed[..], "start cursor {start:?}");
+        }
+    }
+
+    #[test]
+    fn a_sampler_fault_surfaces_as_a_typed_error_on_recv() {
+        let _guard = fault::test_guard();
+        fault::reset();
+        fault::arm("prefetch.handover=3").unwrap();
+        let g = ring(32);
+        let ids: Vec<u32> = (0..32).collect();
+        let batcher = SeedBatcher::new(&ids, 8, false, 0); // 4 batches/epoch
+        std::thread::scope(|scope| {
+            let pf = BlockPrefetcher::spawn(scope, &g, batcher, Fanouts::all(2), 1, 2, (0, 0), 2);
+            assert!(pf.recv().is_ok(), "batch (0,0) precedes the fault");
+            assert!(pf.recv().is_ok(), "batch (0,1) precedes the fault");
+            match pf.recv().unwrap_err() {
+                PrefetchError::Batch { epoch, batch, detail } => {
+                    assert_eq!((epoch, batch), (0, 2), "error names the failed batch");
+                    assert!(detail.contains("injected fault"), "detail: {detail}");
+                }
+                other => panic!("expected a Batch error, got {other}"),
+            }
+            // after a failure the stream is over, not wedged
+            assert_eq!(pf.recv(), Err(PrefetchError::Disconnected));
+        });
+        fault::reset();
+    }
+
+    #[test]
     fn dropping_the_stream_mid_run_stops_the_sampler_cleanly() {
         let g = ring(32);
         let ids: Vec<u32> = (0..32).collect();
         let batcher = SeedBatcher::new(&ids, 4, false, 0);
         std::thread::scope(|scope| {
-            let pf = BlockPrefetcher::spawn(scope, &g, batcher, Fanouts::all(2), 1, 50, 2);
+            let pf = BlockPrefetcher::spawn(scope, &g, batcher, Fanouts::all(2), 1, 50, (0, 0), 2);
             let first = pf.recv().expect("first block");
             assert_eq!(first.num_seeds(), 4);
             drop(pf); // scope must still join without hanging

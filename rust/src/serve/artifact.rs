@@ -30,12 +30,16 @@ use crate::embedding::{
     EmbeddingMethod, EmbeddingPlan, NodePlan, ParamStore, PositionPlan, TableShape,
 };
 use crate::graph::CsrGraph;
-use crate::util::checksum::checksum_string;
+use crate::util::fault;
+use crate::util::sections::{publish_dir, read_section, temp_sibling, write_section};
 use anyhow::{anyhow, bail, Context, Result};
 use serde::{Deserialize, Serialize};
 use std::collections::BTreeMap;
-use std::fs;
+use std::fs::{self, File};
+use std::io::Write;
 use std::path::Path;
+
+pub use crate::util::sections::{SectionData, SectionSpec};
 
 /// On-disk layout version this build reads and writes.
 pub const FORMAT_VERSION: u32 = 1;
@@ -46,23 +50,6 @@ pub const MODEL_KIND: &str = "poshashemb-model";
 
 /// Manifest file name inside an artifact directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
-
-/// One binary section of a model artifact.
-#[derive(Debug, Clone, Serialize, Deserialize)]
-pub struct SectionSpec {
-    /// Section name (tensor/index/graph-array name).
-    pub name: String,
-    /// File name inside the artifact directory.
-    pub file: String,
-    /// Element dtype: `"f32"`, `"u32"` or `"u64"` (little-endian).
-    pub dtype: String,
-    /// Logical shape; the element count is the product.
-    pub shape: Vec<usize>,
-    /// Exact file length in bytes.
-    pub bytes: usize,
-    /// Tagged checksum of the file bytes (`"fnv1a64:<hex>"`).
-    pub checksum: String,
-}
 
 /// The JSON manifest of a saved model artifact.
 #[derive(Debug, Clone, Serialize, Deserialize)]
@@ -125,66 +112,20 @@ pub(crate) struct LoadedModel {
 }
 
 // ---------------------------------------------------------------------
-// little-endian byte codecs
-// ---------------------------------------------------------------------
-
-fn f32_to_le(v: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(v.len() * 4);
-    for &x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-    out
-}
-
-fn u32_to_le(v: &[u32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(v.len() * 4);
-    for &x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-    out
-}
-
-fn u64_to_le(v: &[u64]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(v.len() * 8);
-    for &x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-    out
-}
-
-fn le_to_f32(b: &[u8]) -> Vec<f32> {
-    b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
-}
-
-fn le_to_u32(b: &[u8]) -> Vec<u32> {
-    b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
-}
-
-fn le_to_u64(b: &[u8]) -> Vec<u64> {
-    b.chunks_exact(8)
-        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
-        .collect()
-}
-
-/// Decoded section payload.
-pub(crate) enum SectionData {
-    /// f32 elements.
-    F32(Vec<f32>),
-    /// u32 elements.
-    U32(Vec<u32>),
-    /// u64 elements.
-    U64(Vec<u64>),
-}
-
-// ---------------------------------------------------------------------
 // save
 // ---------------------------------------------------------------------
 
-/// Serialize a trained model into the artifact directory `dir`
-/// (created if missing; existing section files are overwritten).
+/// Serialize a trained model into the artifact directory `dir` and
+/// return the written manifest.
 ///
-/// `params` must hold the plan's tables plus an `layers`-deep SAGE head
-/// as produced by the host trainers. Returns the written manifest.
+/// The publish is **atomic** (see [`crate::util::sections`]): every
+/// section is written fsynced into a temp sibling, `manifest.json` is
+/// written last, and the directory is renamed over `dir` — so
+/// [`super::ServeEngine::open`] can never observe a torn or
+/// half-updated model directory, no matter when the writer dies
+/// (injected-fault sites: `artifact.section` / `artifact.manifest` /
+/// `artifact.rename`). `params` must hold the plan's tables plus an
+/// `layers`-deep SAGE head as produced by the host trainers.
 pub fn save_artifact(
     dir: &Path,
     ds: &Dataset,
@@ -199,55 +140,86 @@ pub fn save_artifact(
     if plan.n != ds.graph.num_nodes() {
         bail!("plan is for n = {} but dataset has {} nodes", plan.n, ds.graph.num_nodes());
     }
-    fs::create_dir_all(dir)
-        .with_context(|| format!("creating artifact directory {}", dir.display()))?;
+    if let Some(parent) = dir.parent() {
+        if parent != Path::new("") {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating artifact parent {}", parent.display()))?;
+        }
+    }
 
-    // (name, bytes, dtype, shape) in write order
-    let mut raw: Vec<(String, Vec<u8>, &'static str, Vec<usize>)> = Vec::new();
+    // (name, data, shape) in write order
+    let mut raw: Vec<(String, SectionData, Vec<usize>)> = Vec::new();
     for name in params.names() {
         let shape = params.shape(name).to_vec();
-        raw.push((name.clone(), f32_to_le(params.get(name)), "f32", shape));
+        raw.push((name.clone(), SectionData::F32(params.get(name).to_vec()), shape));
     }
     let mut levels = 0usize;
     if let Some(pos) = &plan.position {
         levels = pos.tables.len();
         for (j, z) in pos.z.iter().enumerate() {
-            raw.push((format!("z_{j}"), u32_to_le(z), "u32", vec![z.len()]));
+            raw.push((format!("z_{j}"), SectionData::U32(z.clone()), vec![z.len()]));
         }
     }
     if let Some(node) = &plan.node {
         raw.push((
             "node_major".to_string(),
-            u32_to_le(&node.node_major),
-            "u32",
+            SectionData::U32(node.node_major.clone()),
             vec![plan.n, node.h],
         ));
     }
     let g = &ds.graph;
     let vwgts: Vec<u32> = (0..g.num_nodes() as u32).map(|u| g.vertex_weight(u)).collect();
-    raw.push(("graph_indptr".into(), u64_to_le(g.indptr()), "u64", vec![g.num_nodes() + 1]));
-    raw.push(("graph_indices".into(), u32_to_le(g.indices()), "u32", vec![g.indices().len()]));
+    raw.push((
+        "graph_indptr".into(),
+        SectionData::U64(g.indptr().to_vec()),
+        vec![g.num_nodes() + 1],
+    ));
+    raw.push((
+        "graph_indices".into(),
+        SectionData::U32(g.indices().to_vec()),
+        vec![g.indices().len()],
+    ));
     let all_weights: Vec<f32> =
         (0..g.num_nodes() as u32).flat_map(|u| g.edge_weights(u).iter().copied()).collect();
-    raw.push(("graph_weights".into(), f32_to_le(&all_weights), "f32", vec![all_weights.len()]));
-    raw.push(("graph_vwgts".into(), u32_to_le(&vwgts), "u32", vec![g.num_nodes()]));
+    let weights_len = all_weights.len();
+    raw.push(("graph_weights".into(), SectionData::F32(all_weights), vec![weights_len]));
+    raw.push(("graph_vwgts".into(), SectionData::U32(vwgts), vec![g.num_nodes()]));
 
-    let mut sections = Vec::with_capacity(raw.len());
-    for (name, bytes, dtype, shape) in &raw {
-        let file = format!("{name}.bin");
-        let path = dir.join(&file);
-        fs::write(&path, bytes)
-            .with_context(|| format!("writing section '{name}' ({})", path.display()))?;
-        sections.push(SectionSpec {
-            name: name.clone(),
-            file,
-            dtype: (*dtype).to_string(),
-            shape: shape.clone(),
-            bytes: bytes.len(),
-            checksum: checksum_string(bytes),
-        });
+    let param_names = params.names().to_vec();
+    let tmp = temp_sibling(dir);
+    fs::create_dir_all(&tmp)
+        .with_context(|| format!("creating artifact temp dir {}", tmp.display()))?;
+    let res = write_artifact_contents(&tmp, ds, plan, &raw, param_names, layers, hidden, levels)
+        .and_then(|m| {
+            fault::hit("artifact.rename").context("publishing artifact")?;
+            Ok(m)
+        })
+        .and_then(|m| publish_dir(&tmp, dir).map(|()| m));
+    match res {
+        Ok(manifest) => Ok(manifest),
+        Err(e) => {
+            let _ = fs::remove_dir_all(&tmp);
+            Err(e)
+        }
     }
+}
 
+/// Write every section (fsynced) and then the manifest into `tmp`.
+#[allow(clippy::too_many_arguments)]
+fn write_artifact_contents(
+    tmp: &Path,
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    raw: &[(String, SectionData, Vec<usize>)],
+    param_names: Vec<String>,
+    layers: usize,
+    hidden: usize,
+    levels: usize,
+) -> Result<ModelManifest> {
+    let mut sections = Vec::with_capacity(raw.len());
+    for (name, data, shape) in raw {
+        sections.push(write_section(tmp, name, shape, data, "artifact.section")?);
+    }
     let resident_table_bytes: usize = plan.param_shapes().iter().map(|t| t.size() * 4).sum();
     let resident_index_bytes: usize = sections
         .iter()
@@ -271,29 +243,24 @@ pub fn save_artifact(
         hidden,
         levels,
         git_sha: bench_git_sha(),
-        param_names: params.names().to_vec(),
+        param_names,
         sections,
         resident_table_bytes,
         resident_index_bytes,
         full_table_bytes: plan.n * plan.d * 4,
     };
     let json = serde_json::to_string_pretty(&manifest).context("serializing manifest")?;
-    let mpath = dir.join(MANIFEST_FILE);
-    fs::write(&mpath, json).with_context(|| format!("writing {}", mpath.display()))?;
+    fault::hit("artifact.manifest").context("writing artifact manifest")?;
+    let mpath = tmp.join(MANIFEST_FILE);
+    let mut f = File::create(&mpath).with_context(|| format!("creating {}", mpath.display()))?;
+    f.write_all(json.as_bytes()).with_context(|| format!("writing {}", mpath.display()))?;
+    f.sync_all().with_context(|| format!("fsyncing {}", mpath.display()))?;
     Ok(manifest)
 }
 
 // ---------------------------------------------------------------------
 // load
 // ---------------------------------------------------------------------
-
-fn dtype_width(dtype: &str) -> Result<usize> {
-    match dtype {
-        "f32" | "u32" => Ok(4),
-        "u64" => Ok(8),
-        other => bail!("unsupported section dtype '{other}'"),
-    }
-}
 
 /// Read, verify and decode an artifact directory.
 ///
@@ -321,37 +288,7 @@ pub(crate) fn load_artifact(dir: &Path) -> Result<LoadedModel> {
     let mut data: BTreeMap<String, SectionData> = BTreeMap::new();
     let mut shapes: BTreeMap<String, Vec<usize>> = BTreeMap::new();
     for sec in &manifest.sections {
-        let path = dir.join(&sec.file);
-        let bytes = fs::read(&path)
-            .with_context(|| format!("reading section '{}' ({})", sec.name, path.display()))?;
-        if bytes.len() != sec.bytes {
-            bail!(
-                "section '{}' ({}) is {} bytes on disk, manifest says {}",
-                sec.name,
-                sec.file,
-                bytes.len(),
-                sec.bytes
-            );
-        }
-        let got = checksum_string(&bytes);
-        if got != sec.checksum {
-            bail!(
-                "checksum mismatch in section '{}' ({}): manifest {}, file {}",
-                sec.name,
-                sec.file,
-                sec.checksum,
-                got
-            );
-        }
-        let elems: usize = sec.shape.iter().product();
-        if elems * dtype_width(&sec.dtype)? != bytes.len() {
-            bail!("section '{}' shape {:?} does not match its byte length", sec.name, sec.shape);
-        }
-        let decoded = match sec.dtype.as_str() {
-            "f32" => SectionData::F32(le_to_f32(&bytes)),
-            "u32" => SectionData::U32(le_to_u32(&bytes)),
-            _ => SectionData::U64(le_to_u64(&bytes)),
-        };
+        let decoded = read_section(dir, sec)?;
         shapes.insert(sec.name.clone(), sec.shape.clone());
         data.insert(sec.name.clone(), decoded);
     }

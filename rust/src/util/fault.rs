@@ -1,0 +1,225 @@
+//! Deterministic fault injection for crash-safety tests.
+//!
+//! A *fault point* is a named site in the code (e.g.
+//! `checkpoint.manifest`, `artifact.rename`, `prefetch.handover`) that
+//! calls [`hit`] before doing its real work. Normally that is a single
+//! relaxed atomic load and nothing more; when a fault is *armed* for the
+//! site, the Nth call either returns an injected [`std::io::Error`]
+//! (mode `err`) or aborts the process on the spot (mode `abort` —
+//! indistinguishable from a SIGKILL to everything downstream, which is
+//! exactly what the crash-resume harness wants).
+//!
+//! Faults are armed from the `POSHASH_FAULT` environment variable (read
+//! once, on first use — the subprocess path used by `crash-test` and
+//! CI) or programmatically via [`arm`] / [`reset`] (the in-process path
+//! used by integration tests). The spec grammar is a comma-separated
+//! list of
+//!
+//! ```text
+//! site=N[:mode]      mode ∈ {err, abort}, default err
+//! ```
+//!
+//! meaning "on the Nth time `site` is hit, fire once". Hit counting is
+//! global and monotonic per site, so the same spec always fires at the
+//! same point of a deterministic run — that is the whole trick: a
+//! "crash at batch 7 of epoch 2" is reproducible bit-for-bit.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// Environment variable holding a fault spec for subprocess runs.
+pub const FAULT_ENV: &str = "POSHASH_FAULT";
+
+/// What an armed fault point does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// Return an injected `io::Error` from [`hit`].
+    Err,
+    /// Abort the process (no unwinding, no destructors — a crash).
+    Abort,
+}
+
+#[derive(Debug)]
+struct FaultPoint {
+    /// Fire on the `trigger`-th hit (1-based).
+    trigger: u64,
+    mode: Mode,
+    /// Hits observed so far.
+    hits: u64,
+}
+
+/// Fast path: true iff any fault point is currently armed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn points() -> &'static Mutex<HashMap<String, FaultPoint>> {
+    static POINTS: OnceLock<Mutex<HashMap<String, FaultPoint>>> = OnceLock::new();
+    POINTS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn ensure_env_loaded() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var(FAULT_ENV) {
+            let spec = spec.trim();
+            if !spec.is_empty() {
+                if let Err(e) = arm(spec) {
+                    // A malformed spec must fail loudly, not silently
+                    // run without faults (the test would then "pass"
+                    // by never crashing).
+                    panic!("invalid {FAULT_ENV} spec '{spec}': {e}");
+                }
+            }
+        }
+    });
+}
+
+/// Arm fault points from a spec string (see module docs for grammar).
+/// Specs accumulate: arming `a=1` then `b=2:abort` leaves both live.
+pub fn arm(spec: &str) -> Result<(), String> {
+    let mut parsed = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site, rest) = part
+            .split_once('=')
+            .ok_or_else(|| format!("'{part}': expected site=N[:mode]"))?;
+        let (count, mode) = match rest.split_once(':') {
+            Some((c, m)) => (c, m),
+            None => (rest, "err"),
+        };
+        let trigger: u64 =
+            count.parse().map_err(|_| format!("'{part}': hit count '{count}' is not a number"))?;
+        if trigger == 0 {
+            return Err(format!("'{part}': hit count is 1-based, 0 never fires"));
+        }
+        let mode = match mode {
+            "err" => Mode::Err,
+            "abort" => Mode::Abort,
+            other => return Err(format!("'{part}': unknown mode '{other}' (err|abort)")),
+        };
+        if site.is_empty() {
+            return Err(format!("'{part}': empty site name"));
+        }
+        parsed.push((site.to_string(), FaultPoint { trigger, mode, hits: 0 }));
+    }
+    if parsed.is_empty() {
+        return Err("spec armed no fault points".to_string());
+    }
+    let mut map = points().lock().expect("fault registry poisoned");
+    for (site, fp) in parsed {
+        map.insert(site, fp);
+    }
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every fault point and zero all hit counters. Tests that arm
+/// faults must call this when done (and serialize against each other —
+/// the registry is process-global).
+pub fn reset() {
+    let mut map = points().lock().expect("fault registry poisoned");
+    map.clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Record a hit at `site`; returns the injected error if an armed
+/// fault fires here (or aborts the process in `abort` mode).
+///
+/// Call this immediately *before* the operation the site names — a
+/// fired `err` means the operation never happened, which is the torn
+/// state the recovery paths must tolerate.
+pub fn hit(site: &str) -> std::io::Result<()> {
+    ensure_env_loaded();
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    let mut map = points().lock().expect("fault registry poisoned");
+    let Some(p) = map.get_mut(site) else {
+        return Ok(());
+    };
+    p.hits += 1;
+    if p.hits != p.trigger {
+        // fires exactly once: later hits sail past the trigger
+        return Ok(());
+    }
+    match p.mode {
+        Mode::Err => Err(std::io::Error::other(format!(
+            "injected fault at '{site}' (hit {})",
+            p.trigger
+        ))),
+        Mode::Abort => {
+            eprintln!("poshashemb: injected abort at '{site}' (hit {})", p.trigger);
+            std::process::abort();
+        }
+    }
+}
+
+/// Serialize tests that arm the process-global fault registry: take
+/// this guard for the whole test, and [`reset`] before releasing it.
+/// (Test-support API, but `pub`: unit tests in other modules and the
+/// integration suites need the same lock.)
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_on_nth_hit_exactly_once() {
+        let _g = test_guard();
+        reset();
+        arm("site.a=3:err").unwrap();
+        assert!(hit("site.a").is_ok());
+        assert!(hit("site.a").is_ok());
+        let e = hit("site.a").unwrap_err();
+        assert!(e.to_string().contains("site.a"), "error names the site: {e}");
+        assert!(e.to_string().contains("hit 3"), "error names the hit: {e}");
+        // past the trigger: never fires again
+        for _ in 0..5 {
+            assert!(hit("site.a").is_ok());
+        }
+        reset();
+    }
+
+    #[test]
+    fn unarmed_sites_are_untouched() {
+        let _g = test_guard();
+        reset();
+        arm("site.b=1").unwrap();
+        assert!(hit("site.other").is_ok());
+        assert!(hit("site.b").is_err());
+        reset();
+        // fully disarmed: even the armed site is clean again
+        assert!(hit("site.b").is_ok());
+    }
+
+    #[test]
+    fn default_mode_is_err_and_specs_accumulate() {
+        let _g = test_guard();
+        reset();
+        arm("x=1").unwrap();
+        arm("y=2:err").unwrap();
+        assert!(hit("x").is_err());
+        assert!(hit("y").is_ok());
+        assert!(hit("y").is_err());
+        reset();
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        let _g = test_guard();
+        reset();
+        for bad in ["noequals", "s=zero", "s=0", "s=1:boom", "=1", "", " ,, "] {
+            assert!(arm(bad).is_err(), "spec '{bad}' should be rejected");
+        }
+        // nothing got armed along the way
+        assert!(hit("s").is_ok());
+        reset();
+    }
+}

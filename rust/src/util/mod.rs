@@ -16,10 +16,17 @@
 //! * [`tempdir`] — RAII temp directories for tests.
 //! * [`checksum`] — FNV-1a/64 section fingerprints for model artifacts
 //!   (no hash crates in the offline dependency set).
+//! * [`sections`] — checksummed little-endian binary sections and the
+//!   atomic directory-publish protocol shared by model artifacts and
+//!   training checkpoints.
+//! * [`fault`] — deterministic fault injection (`POSHASH_FAULT`) for
+//!   the crash-safety tests.
 
 pub mod bench;
 pub mod checksum;
+pub mod fault;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sections;
 pub mod tempdir;

@@ -1,0 +1,383 @@
+//! Checksummed little-endian binary sections plus the atomic
+//! directory-publish protocol — the shared substrate under both model
+//! artifacts ([`crate::serve`]) and training checkpoints
+//! ([`crate::coordinator`]).
+//!
+//! A *section* is one raw little-endian binary file described by a
+//! [`SectionSpec`] (dtype, shape, byte length, FNV-1a/64 checksum) in a
+//! JSON manifest. [`write_section`] fsyncs every file it writes;
+//! [`read_section`] verifies length, checksum and shape before decoding
+//! and names the offending section in every error, so torn writes and
+//! mixed-up files are diagnosable from the message alone.
+//!
+//! Directories of sections are *published atomically*: write everything
+//! into a temp sibling ([`temp_sibling`]), write the manifest **last**
+//! (a directory without a manifest is by definition not published),
+//! then [`publish_dir`] — fsync, rename over the destination, fsync the
+//! parent. A reader can observe the old directory or the new one, never
+//! a half-written mix. Single-file pointers (e.g. a checkpoint `LATEST`
+//! marker) get the same treatment from [`atomic_write_text`].
+//!
+//! Write-side entry points carry a [`crate::util::fault`] site so the
+//! crash-safety tests can tear a publish at any named step.
+
+use crate::util::checksum::checksum_string;
+use crate::util::fault;
+use anyhow::{bail, Context, Result};
+use serde::{Deserialize, Serialize};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One binary section of an on-disk directory (model artifact or
+/// training checkpoint).
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct SectionSpec {
+    /// Section name (tensor/index/graph-array name).
+    pub name: String,
+    /// File name inside the directory.
+    pub file: String,
+    /// Element dtype: `"f32"`, `"f64"`, `"u32"` or `"u64"`
+    /// (little-endian).
+    pub dtype: String,
+    /// Logical shape; the element count is the product.
+    pub shape: Vec<usize>,
+    /// Exact file length in bytes.
+    pub bytes: usize,
+    /// Tagged checksum of the file bytes (`"fnv1a64:<hex>"`).
+    pub checksum: String,
+}
+
+/// Decoded (or to-be-encoded) section payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SectionData {
+    /// f32 elements.
+    F32(Vec<f32>),
+    /// f64 elements (bit-exact loss trajectories and accumulators).
+    F64(Vec<f64>),
+    /// u32 elements.
+    U32(Vec<u32>),
+    /// u64 elements.
+    U64(Vec<u64>),
+}
+
+impl SectionData {
+    /// The manifest dtype tag for this payload.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            SectionData::F32(_) => "f32",
+            SectionData::F64(_) => "f64",
+            SectionData::U32(_) => "u32",
+            SectionData::U64(_) => "u64",
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            SectionData::F32(v) => v.len(),
+            SectionData::F64(v) => v.len(),
+            SectionData::U32(v) => v.len(),
+            SectionData::U64(v) => v.len(),
+        }
+    }
+
+    /// True when the payload has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn to_le(&self) -> Vec<u8> {
+        match self {
+            SectionData::F32(v) => {
+                let mut out = Vec::with_capacity(v.len() * 4);
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                out
+            }
+            SectionData::F64(v) => {
+                let mut out = Vec::with_capacity(v.len() * 8);
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                out
+            }
+            SectionData::U32(v) => {
+                let mut out = Vec::with_capacity(v.len() * 4);
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                out
+            }
+            SectionData::U64(v) => {
+                let mut out = Vec::with_capacity(v.len() * 8);
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Byte width of a manifest dtype tag.
+pub fn dtype_width(dtype: &str) -> Result<usize> {
+    match dtype {
+        "f32" | "u32" => Ok(4),
+        "f64" | "u64" => Ok(8),
+        other => bail!("unsupported section dtype '{other}'"),
+    }
+}
+
+/// Write one section file `{name}.bin` into `dir`, fsynced, and return
+/// its spec. `fault_site` is hit before anything touches disk.
+pub fn write_section(
+    dir: &Path,
+    name: &str,
+    shape: &[usize],
+    data: &SectionData,
+    fault_site: &str,
+) -> Result<SectionSpec> {
+    let elems: usize = shape.iter().product();
+    if elems != data.len() {
+        bail!("section '{name}' shape {shape:?} does not match its {} elements", data.len());
+    }
+    fault::hit(fault_site).with_context(|| format!("writing section '{name}'"))?;
+    let bytes = data.to_le();
+    let file = format!("{name}.bin");
+    let path = dir.join(&file);
+    let mut f = File::create(&path)
+        .with_context(|| format!("creating section '{name}' ({})", path.display()))?;
+    f.write_all(&bytes).with_context(|| format!("writing section '{name}'"))?;
+    f.sync_all().with_context(|| format!("fsyncing section '{name}'"))?;
+    Ok(SectionSpec {
+        name: name.to_string(),
+        file,
+        dtype: data.dtype().to_string(),
+        shape: shape.to_vec(),
+        bytes: bytes.len(),
+        checksum: checksum_string(&bytes),
+    })
+}
+
+/// Read, verify (byte length, checksum, shape × dtype width) and decode
+/// one section. Every failure names the section.
+pub fn read_section(dir: &Path, sec: &SectionSpec) -> Result<SectionData> {
+    let path = dir.join(&sec.file);
+    let bytes = fs::read(&path)
+        .with_context(|| format!("reading section '{}' ({})", sec.name, path.display()))?;
+    if bytes.len() != sec.bytes {
+        bail!(
+            "section '{}' ({}) is {} bytes on disk, manifest says {}",
+            sec.name,
+            sec.file,
+            bytes.len(),
+            sec.bytes
+        );
+    }
+    let got = checksum_string(&bytes);
+    if got != sec.checksum {
+        bail!(
+            "checksum mismatch in section '{}' ({}): manifest {}, file {}",
+            sec.name,
+            sec.file,
+            sec.checksum,
+            got
+        );
+    }
+    let elems: usize = sec.shape.iter().product();
+    if elems * dtype_width(&sec.dtype)? != bytes.len() {
+        bail!("section '{}' shape {:?} does not match its byte length", sec.name, sec.shape);
+    }
+    Ok(match sec.dtype.as_str() {
+        "f32" => SectionData::F32(
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+        ),
+        "f64" => SectionData::F64(
+            bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                .collect(),
+        ),
+        "u32" => SectionData::U32(
+            bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+        ),
+        _ => SectionData::U64(
+            bytes
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                .collect(),
+        ),
+    })
+}
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique temp sibling path for `dst` (same filesystem, so the final
+/// rename is atomic). The caller creates/removes it.
+pub fn temp_sibling(dst: &Path) -> PathBuf {
+    let file = dst.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+    let unique = format!(
+        ".{file}.tmp-{}-{}",
+        std::process::id(),
+        TEMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    );
+    match dst.parent() {
+        Some(p) if p != Path::new("") => p.join(unique),
+        _ => PathBuf::from(unique),
+    }
+}
+
+/// Fsync a directory so renames inside it are durable. Best-effort:
+/// platforms that cannot open directories for syncing are skipped
+/// (every Linux/macOS target this repo builds on can).
+pub fn fsync_dir(dir: &Path) -> std::io::Result<()> {
+    match File::open(dir) {
+        Ok(f) => f.sync_all(),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Atomically publish the fully-written temp directory `tmp` as `dst`:
+/// fsync `tmp`, move any existing `dst` aside and delete it, rename
+/// `tmp` → `dst`, fsync the parent. A concurrent reader sees the old
+/// directory or the new one, never a mix.
+pub fn publish_dir(tmp: &Path, dst: &Path) -> Result<()> {
+    fsync_dir(tmp).with_context(|| format!("fsyncing {}", tmp.display()))?;
+    if dst.exists() {
+        let aside = temp_sibling(dst);
+        fs::rename(dst, &aside)
+            .with_context(|| format!("moving old {} aside", dst.display()))?;
+        fs::remove_dir_all(&aside)
+            .with_context(|| format!("removing old {}", aside.display()))?;
+    }
+    fs::rename(tmp, dst)
+        .with_context(|| format!("publishing {} -> {}", tmp.display(), dst.display()))?;
+    if let Some(parent) = dst.parent() {
+        fsync_dir(parent).with_context(|| format!("fsyncing {}", parent.display()))?;
+    }
+    Ok(())
+}
+
+/// Atomically replace `path` with `text`: write a fsynced temp sibling,
+/// rename it into place, fsync the parent.
+pub fn atomic_write_text(path: &Path, text: &str) -> Result<()> {
+    let tmp = temp_sibling(path);
+    let mut f =
+        File::create(&tmp).with_context(|| format!("creating temp file {}", tmp.display()))?;
+    f.write_all(text.as_bytes()).with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+    drop(f);
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    if let Some(parent) = path.parent() {
+        fsync_dir(parent).with_context(|| format!("fsyncing {}", parent.display()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn sections_round_trip_every_dtype() {
+        let t = TempDir::new("sections-rt").unwrap();
+        let cases = vec![
+            ("a", vec![2, 3], SectionData::F32(vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX])),
+            ("b", vec![2], SectionData::F64(vec![1.0 / 3.0, -0.0])),
+            ("c", vec![4], SectionData::U32(vec![0, 1, u32::MAX, 7])),
+            ("d", vec![1, 2], SectionData::U64(vec![u64::MAX, 42])),
+        ];
+        for (name, shape, data) in cases {
+            let spec = write_section(t.path(), name, &shape, &data, "test.none").unwrap();
+            assert_eq!(spec.dtype, data.dtype());
+            assert_eq!(spec.shape, shape);
+            let back = read_section(t.path(), &spec).unwrap();
+            assert_eq!(back, data, "round trip of '{name}'");
+        }
+    }
+
+    #[test]
+    fn read_rejects_shape_element_mismatch_at_write() {
+        let t = TempDir::new("sections-shape").unwrap();
+        let err = write_section(t.path(), "bad", &[3], &SectionData::U32(vec![1, 2]), "test.none")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("'bad'"), "{err:#}");
+    }
+
+    #[test]
+    fn corruption_is_detected_and_named() {
+        let t = TempDir::new("sections-corrupt").unwrap();
+        let data = SectionData::F32(vec![1.0; 16]);
+        let spec = write_section(t.path(), "table", &[16], &data, "test.none").unwrap();
+
+        // flip one byte
+        let path = t.path().join(&spec.file);
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[5] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        let err = read_section(t.path(), &spec).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum mismatch") && msg.contains("'table'"), "{msg}");
+
+        // truncate
+        fs::write(&path, &bytes[..10]).unwrap();
+        let err = read_section(t.path(), &spec).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("10 bytes on disk") && msg.contains("'table'"), "{msg}");
+
+        // delete
+        fs::remove_file(&path).unwrap();
+        let err = read_section(t.path(), &spec).unwrap_err();
+        assert!(format!("{err:#}").contains("'table'"));
+    }
+
+    #[test]
+    fn publish_dir_replaces_atomically() {
+        let t = TempDir::new("sections-publish").unwrap();
+        let dst = t.path().join("model");
+
+        let tmp1 = temp_sibling(&dst);
+        fs::create_dir_all(&tmp1).unwrap();
+        fs::write(tmp1.join("v.txt"), "one").unwrap();
+        publish_dir(&tmp1, &dst).unwrap();
+        assert_eq!(fs::read_to_string(dst.join("v.txt")).unwrap(), "one");
+        assert!(!tmp1.exists());
+
+        // publishing over an existing dir fully replaces it
+        let tmp2 = temp_sibling(&dst);
+        fs::create_dir_all(&tmp2).unwrap();
+        fs::write(tmp2.join("w.txt"), "two").unwrap();
+        publish_dir(&tmp2, &dst).unwrap();
+        assert_eq!(fs::read_to_string(dst.join("w.txt")).unwrap(), "two");
+        assert!(!dst.join("v.txt").exists(), "stale section survived the swap");
+    }
+
+    #[test]
+    fn atomic_text_replaces_and_leaves_no_temp() {
+        let t = TempDir::new("sections-text").unwrap();
+        let p = t.path().join("LATEST");
+        atomic_write_text(&p, "ckpt-1\n").unwrap();
+        atomic_write_text(&p, "ckpt-2\n").unwrap();
+        assert_eq!(fs::read_to_string(&p).unwrap(), "ckpt-2\n");
+        let leftovers: Vec<_> = fs::read_dir(t.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n != "LATEST")
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+    }
+
+    #[test]
+    fn temp_siblings_are_unique_and_colocated() {
+        let dst = Path::new("/some/dir/model");
+        let a = temp_sibling(dst);
+        let b = temp_sibling(dst);
+        assert_ne!(a, b);
+        assert_eq!(a.parent(), dst.parent());
+    }
+}

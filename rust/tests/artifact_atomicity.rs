@@ -1,0 +1,59 @@
+//! Atomic model-artifact publication: a fault injected anywhere in
+//! `save_artifact`'s write path (section write, manifest write, final
+//! rename) must leave either no artifact directory at all or the
+//! previous fully-intact artifact — never a torn one. Lives in its own
+//! integration binary because armed fault points are process-global and
+//! the serve suite's other tests call `save_artifact` concurrently.
+
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{init_params, EmbeddingPlan, MethodSpec};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::serve::{save_artifact, ServeEngine};
+use poshashemb::util::fault;
+use poshashemb::util::tempdir::TempDir;
+
+/// Shrunk synth-arxiv analog (same generator/splits as the seed tests).
+fn build(n: usize, d: usize, tag: &str) -> (Dataset, EmbeddingPlan) {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    let ds = Dataset::generate(&s);
+    let r = MethodSpec::parse(tag).unwrap().resolve(n).unwrap();
+    let hier = r.method.needs_hierarchy().then(|| {
+        Hierarchy::build(&ds.graph, &HierarchyConfig::new(r.k, r.method.levels().max(1)))
+    });
+    let plan = EmbeddingPlan::build(n, d, &r.method, hier.as_ref(), 7);
+    (ds, plan)
+}
+
+#[test]
+fn failed_artifact_publish_leaves_no_trace_and_keeps_the_old_artifact() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let t = TempDir::new("artifact-atomic").unwrap();
+    let dir = t.path().join("model");
+    let (ds, plan) = build(200, 8, "inter(k=4)");
+    let params = init_params(&plan, 3);
+
+    // a fault at any stage before publication leaves nothing behind —
+    // no artifact directory and no orphaned temp sibling
+    for site in ["artifact.section=1", "artifact.manifest=1", "artifact.rename=1"] {
+        fault::arm(site).unwrap();
+        let err = save_artifact(&dir, &ds, &plan, &params, 1, 16).unwrap_err();
+        fault::reset();
+        assert!(format!("{err:#}").contains("injected fault"), "{site}: {err:#}");
+        assert!(!dir.exists(), "{site}: failed publish must not leave a directory");
+        let leftovers = std::fs::read_dir(t.path()).unwrap().count();
+        assert_eq!(leftovers, 0, "{site}: failed publish must clean up its temp dir");
+    }
+
+    // publish a good artifact, then fail a re-publish over it: the old
+    // artifact must remain fully intact and openable
+    save_artifact(&dir, &ds, &plan, &params, 1, 16).unwrap();
+    fault::arm("artifact.manifest=1").unwrap();
+    save_artifact(&dir, &ds, &plan, &params, 1, 16).unwrap_err();
+    fault::reset();
+    let mut engine = ServeEngine::open(&dir, 0).unwrap();
+    assert!(engine.embed(&[0, 1, 2]).is_ok(), "old artifact survives a failed re-publish");
+}

@@ -1,0 +1,212 @@
+//! Crash-safe checkpoint/resume acceptance. The headline pin: a
+//! training run killed at an arbitrary batch boundary and resumed from
+//! disk reproduces the uninterrupted run's loss trajectory and final
+//! parameter tables **bit for bit** — serial or pipelined, SGD or
+//! Adam. Also pins torn-checkpoint fallback, keep-last-K retention,
+//! run-key refusal and the fresh-start (empty dir) resume path.
+//!
+//! Every test that trains takes [`fault::test_guard`] for its whole
+//! body: the fault registry and its hit counters are process-global,
+//! so an armed `trainer.step` fault in one test must never leak hits
+//! into a concurrently running control trainer of another.
+
+use poshashemb::coordinator::{CheckpointConfig, MinibatchOptions, MinibatchTrainer, OptimizerKind};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan, ParamStore};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{Fanout, SamplerConfig};
+use poshashemb::util::fault;
+use poshashemb::util::tempdir::TempDir;
+use std::path::{Path, PathBuf};
+
+/// Shrunk synth-arxiv analog (same generator/splits as the seed tests).
+fn small_dataset(n: usize, d: usize) -> Dataset {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    Dataset::generate(&s)
+}
+
+/// A paper-method configuration with every trainable table family
+/// (position levels + intra pools + learned y + SAGE head).
+fn build(n: usize) -> (Dataset, EmbeddingPlan) {
+    let ds = small_dataset(n, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 3));
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 5, h: 2 };
+    let plan = EmbeddingPlan::build(n, 16, &method, Some(&hier), 3);
+    (ds, plan)
+}
+
+fn cfg() -> SamplerConfig {
+    SamplerConfig { batch_size: 64, fanouts: Fanout::Max(5).into(), shuffle: true }
+}
+
+fn opts(
+    optimizer: OptimizerKind,
+    parallel: bool,
+    checkpoint: Option<CheckpointConfig>,
+    resume: bool,
+) -> MinibatchOptions {
+    MinibatchOptions {
+        epochs: 4,
+        lr: 0.03,
+        optimizer,
+        seed: 7,
+        parallel,
+        prefetch: if parallel { 2 } else { 0 },
+        hidden: 16,
+        checkpoint,
+        resume,
+        ..Default::default()
+    }
+}
+
+/// Every tensor's exact bits, in canonical order.
+fn param_bits(p: &ParamStore) -> Vec<(String, Vec<u32>)> {
+    p.names()
+        .iter()
+        .map(|n| (n.clone(), p.get(n).iter().map(|x| x.to_bits()).collect()))
+        .collect()
+}
+
+fn ckpt_names(root: &Path) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(root)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("ckpt-"))
+        .collect();
+    names.sort();
+    names
+}
+
+fn newest_ckpt(root: &Path) -> PathBuf {
+    root.join(ckpt_names(root).last().expect("at least one checkpoint"))
+}
+
+#[test]
+fn killed_and_resumed_training_is_bit_identical_to_uninterrupted() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let (ds, plan) = build(420);
+    let runs =
+        [(OptimizerKind::Adam, false), (OptimizerKind::Adam, true), (OptimizerKind::Sgd, false)];
+    for (optimizer, parallel) in runs {
+        let label = format!("{optimizer:?} parallel={parallel}");
+
+        // uninterrupted control
+        let o = opts(optimizer, parallel, None, false);
+        let mut control = MinibatchTrainer::new(&ds, &plan, cfg(), o).unwrap();
+        let control_out = control.train().unwrap();
+
+        // victim: checkpoints every 3 steps, killed before its 8th step
+        // (mid-epoch: 420 nodes / batch 64 is > 1 batch per epoch)
+        let t = TempDir::new("ckpt-parity").unwrap();
+        let ck = CheckpointConfig { dir: t.path().to_path_buf(), every: 3, keep: 0 };
+        let o = opts(optimizer, parallel, Some(ck.clone()), false);
+        let mut victim = MinibatchTrainer::new(&ds, &plan, cfg(), o).unwrap();
+        fault::arm("trainer.step=8").unwrap();
+        let err = victim.train().unwrap_err();
+        fault::reset();
+        assert!(format!("{err:#}").contains("injected fault"), "{label}: {err:#}");
+        assert!(!ckpt_names(t.path()).is_empty(), "{label}: victim left no checkpoint");
+
+        // resume from disk and train to completion
+        let o = opts(optimizer, parallel, Some(ck), true);
+        let mut resumed = MinibatchTrainer::new(&ds, &plan, cfg(), o).unwrap();
+        let resumed_out = resumed.train().unwrap();
+
+        assert_eq!(resumed_out.losses, control_out.losses, "{label}: loss trajectory");
+        assert_eq!(resumed_out.val_metric, control_out.val_metric, "{label}: val metric");
+        assert_eq!(resumed_out.test_metric, control_out.test_metric, "{label}: test metric");
+        assert_eq!(param_bits(resumed.params()), param_bits(control.params()), "{label}: tables");
+    }
+}
+
+#[test]
+fn resume_falls_back_when_the_newest_checkpoint_is_torn() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let (ds, plan) = build(420);
+    let mut control = MinibatchTrainer::new(&ds, &plan, cfg(), opts3(None, false)).unwrap();
+    let control_out = control.train().unwrap();
+
+    let t = TempDir::new("ckpt-torn").unwrap();
+    let ck = CheckpointConfig { dir: t.path().to_path_buf(), every: 2, keep: 0 };
+    let mut victim =
+        MinibatchTrainer::new(&ds, &plan, cfg(), opts3(Some(ck.clone()), false)).unwrap();
+    fault::arm("trainer.step=7").unwrap();
+    victim.train().unwrap_err();
+    fault::reset();
+    assert!(ckpt_names(t.path()).len() >= 2, "need an older checkpoint to fall back to");
+
+    // tear the newest checkpoint the way an unluckily-timed crash
+    // would: its manifest (always written last) goes missing
+    std::fs::remove_file(newest_ckpt(t.path()).join("manifest.json")).unwrap();
+
+    let mut resumed = MinibatchTrainer::new(&ds, &plan, cfg(), opts3(Some(ck), true)).unwrap();
+    let out = resumed.train().unwrap();
+    assert_eq!(out.losses, control_out.losses, "fallback resume still matches the control");
+    assert_eq!(param_bits(resumed.params()), param_bits(control.params()));
+}
+
+/// [`opts`] pinned to the serial-Adam configuration the single-path
+/// tests use.
+fn opts3(checkpoint: Option<CheckpointConfig>, resume: bool) -> MinibatchOptions {
+    opts(OptimizerKind::Adam, false, checkpoint, resume)
+}
+
+#[test]
+fn retention_keeps_only_the_newest_k_checkpoints() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let (ds, plan) = build(420);
+    let t = TempDir::new("ckpt-keep").unwrap();
+    let ck = CheckpointConfig { dir: t.path().to_path_buf(), every: 1, keep: 2 };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg(), opts3(Some(ck), false)).unwrap();
+    let out = tr.train().unwrap();
+    assert_eq!(out.losses.len(), 4, "full run completed");
+    let names = ckpt_names(t.path());
+    assert_eq!(names.len(), 2, "keep=2 retains exactly two: {names:?}");
+    let latest = std::fs::read_to_string(t.path().join("LATEST")).unwrap();
+    assert_eq!(latest.trim(), names.last().unwrap().as_str(), "LATEST names the newest");
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_a_different_run() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let (ds, plan) = build(420);
+    let t = TempDir::new("ckpt-runkey").unwrap();
+    let ck = CheckpointConfig { dir: t.path().to_path_buf(), every: 2, keep: 0 };
+    let mut victim =
+        MinibatchTrainer::new(&ds, &plan, cfg(), opts3(Some(ck.clone()), false)).unwrap();
+    fault::arm("trainer.step=5").unwrap();
+    victim.train().unwrap_err();
+    fault::reset();
+
+    let mut other = opts3(Some(ck), true);
+    other.lr = 0.05;
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg(), other).unwrap();
+    let err = tr.train().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("different run"), "refusal names the cause: {msg}");
+    assert!(msg.contains("lr"), "refusal names the differing field: {msg}");
+}
+
+#[test]
+fn resume_on_an_empty_directory_trains_from_scratch() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let (ds, plan) = build(420);
+    let mut control = MinibatchTrainer::new(&ds, &plan, cfg(), opts3(None, false)).unwrap();
+    let control_out = control.train().unwrap();
+
+    let t = TempDir::new("ckpt-empty").unwrap();
+    let ck = CheckpointConfig { dir: t.path().to_path_buf(), every: 0, keep: 0 };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg(), opts3(Some(ck), true)).unwrap();
+    let out = tr.train().unwrap();
+    assert_eq!(out.losses, control_out.losses, "fresh-start resume is a plain run");
+    assert!(ckpt_names(t.path()).is_empty(), "every=0 writes no periodic checkpoints");
+}

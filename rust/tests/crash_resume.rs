@@ -1,0 +1,46 @@
+//! Subprocess crash-resume smoke: drives the real binary's
+//! `crash-test` subcommand — an uninterrupted control, a checkpointing
+//! victim killed mid-epoch by an injected abort (`POSHASH_FAULT`,
+//! no unwinding, no destructors, no flushes), and a `--resume` that
+//! must land on the control's loss trajectory bit for bit. The
+//! in-process twin of these scenarios lives in `tests/checkpoint.rs`;
+//! this file is the one that proves recovery across a genuine process
+//! death.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_poshashemb"));
+    // never inherit a fault spec from the test runner's environment
+    c.env_remove("POSHASH_FAULT");
+    c
+}
+
+#[test]
+fn crash_test_harness_passes_on_the_pipelined_path() {
+    let out = bin().arg("crash-test").output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "crash-test failed:\nstdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("crash-test PASS"), "stdout: {stdout}");
+}
+
+#[test]
+fn crash_test_harness_passes_on_the_serial_oracle_path() {
+    let out = bin().args(["crash-test", "--serial"]).output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "crash-test failed:\nstdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("crash-test PASS"), "stdout: {stdout}");
+}
+
+#[test]
+fn resume_without_a_checkpoint_dir_is_refused() {
+    let out = bin()
+        .args(["train-minibatch", "--nodes", "300", "--dim", "8", "--epochs", "1", "--resume"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--resume without --checkpoint-dir must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--checkpoint-dir"), "stderr: {stderr}");
+}
