@@ -11,6 +11,10 @@
 //!   shared by `benches/minibatch.rs` and the `poshashemb
 //!   train-minibatch` subcommand: trains a configuration end to end and
 //!   records per-epoch timing, nodes/s and batches/s.
+//! * [`run_showdown`] — the paper's memory/accuracy claim at the CLI:
+//!   sweeps (method × task × memory budget), training every cell with
+//!   the minibatch trainer and emitting one [`ShowdownRecord`] per cell
+//!   (see the `showdown` submodule).
 //!
 //! Seeds default to 2 and are controlled with `POSHASH_SEEDS`; epochs can
 //! be capped with `POSHASH_EPOCHS` (useful for CI smoke runs).
@@ -35,6 +39,9 @@ use anyhow::{bail, Result};
 use serde::Serialize;
 use std::collections::BTreeMap;
 use std::path::Path;
+
+mod showdown;
+pub use showdown::{run_showdown, ShowdownConfig, ShowdownRecord};
 
 /// Reusable harness: PJRT client + manifest + options.
 pub struct Harness {
@@ -512,6 +519,9 @@ pub struct MinibatchBenchRecord {
     pub dataset: String,
     /// Embedding method display name.
     pub method: String,
+    /// Training objective, in its round-trippable display form
+    /// (`"nodeclass"`, `"linkpred(dot,neg=3)"`, ...).
+    pub objective: String,
     /// Nodes in the graph.
     pub n: usize,
     /// Embedding dimension.
@@ -553,10 +563,18 @@ pub struct MinibatchBenchRecord {
     /// compares bit-for-bit between an interrupted-and-resumed run and
     /// an uninterrupted control (JSON round-trips `f64` exactly).
     pub losses: Vec<f64>,
-    /// Validation metric after training.
+    /// Validation metric after training (accuracy / ROC-AUC for node
+    /// classification; link AUC for link prediction).
     pub val_metric: f64,
     /// Test metric after training.
     pub test_metric: f64,
+    /// Validation hits@k — link-prediction runs only (omitted from the
+    /// JSON otherwise, so node-classification records are unchanged).
+    #[serde(skip_serializing_if = "Option::is_none")]
+    pub val_hits: Option<f64>,
+    /// Test hits@k — link-prediction runs only.
+    #[serde(skip_serializing_if = "Option::is_none")]
+    pub test_hits: Option<f64>,
     /// Pipelined engine (parallel step + prefetch) or the serial oracle.
     pub parallel: bool,
     /// Prefetch depth the run used (0 = inline sampling).
@@ -615,6 +633,7 @@ pub fn bench_minibatch(
     Ok(MinibatchBenchRecord {
         dataset: dataset.to_string(),
         method: plan.method.name(),
+        objective: opts.objective.to_string(),
         n: plan.n,
         d: plan.d,
         batch_size: cfg.batch_size,
@@ -635,6 +654,8 @@ pub fn bench_minibatch(
         losses: out.losses.clone(),
         val_metric: out.val_metric,
         test_metric: out.test_metric,
+        val_hits: out.val_hits,
+        test_hits: out.test_hits,
         parallel: opts.parallel,
         prefetch: opts.prefetch,
         meta: RecordMeta::capture("minibatch-bench/v1"),
@@ -909,6 +930,8 @@ mod tests {
         assert!(rec.peak_compose_rows < spec.n);
         assert!(rec.final_loss.is_finite());
         assert!(rec.parallel && rec.prefetch > 0, "pipelined engine is the default");
+        assert_eq!(rec.objective, "nodeclass");
+        assert!(rec.val_hits.is_none() && rec.test_hits.is_none());
         assert!(rec.meta.threads >= 1);
         let json = serde_json::to_string(&rec).unwrap();
         assert!(json.contains("\"nodes_per_sec\""), "json: {json}");
@@ -1034,6 +1057,7 @@ mod tests {
         let m = MinibatchBenchRecord {
             dataset: "d".into(),
             method: "m".into(),
+            objective: "nodeclass".into(),
             n: 1,
             d: 1,
             batch_size: 1,
@@ -1054,39 +1078,49 @@ mod tests {
             losses: vec![0.0],
             val_metric: 0.0,
             test_metric: 0.0,
+            val_hits: None,
+            test_hits: None,
             parallel: true,
             prefetch: 1,
             meta: meta.clone(),
         };
-        assert_eq!(
-            sorted_keys(&serde_json::to_value(&m).unwrap()),
-            expect(vec![
-                "dataset",
-                "method",
-                "n",
-                "d",
-                "batch_size",
-                "fanout",
-                "fanouts",
-                "layers",
-                "epochs",
-                "batches_per_epoch",
-                "seeds_per_epoch",
-                "peak_compose_rows",
-                "mean_epoch_ns",
-                "p50_epoch_ns",
-                "p95_epoch_ns",
-                "nodes_per_sec",
-                "batches_per_sec",
-                "first_loss",
-                "final_loss",
-                "losses",
-                "val_metric",
-                "test_metric",
-                "parallel",
-                "prefetch",
-            ])
-        );
+        let nc_keys = vec![
+            "dataset",
+            "method",
+            "objective",
+            "n",
+            "d",
+            "batch_size",
+            "fanout",
+            "fanouts",
+            "layers",
+            "epochs",
+            "batches_per_epoch",
+            "seeds_per_epoch",
+            "peak_compose_rows",
+            "mean_epoch_ns",
+            "p50_epoch_ns",
+            "p95_epoch_ns",
+            "nodes_per_sec",
+            "batches_per_sec",
+            "first_loss",
+            "final_loss",
+            "losses",
+            "val_metric",
+            "test_metric",
+            "parallel",
+            "prefetch",
+        ];
+        // node-classification records omit the hits@k keys entirely
+        assert_eq!(sorted_keys(&serde_json::to_value(&m).unwrap()), expect(nc_keys.clone()));
+        // link-prediction records add exactly the two hits@k keys
+        let mut lp = m.clone();
+        lp.objective = "linkpred(dot,neg=3)".into();
+        lp.val_hits = Some(0.5);
+        lp.test_hits = Some(0.5);
+        let mut lp_keys = nc_keys;
+        lp_keys.extend(["val_hits", "test_hits"]);
+        assert_eq!(sorted_keys(&serde_json::to_value(&lp).unwrap()), expect(lp_keys));
 
         let s = ServeBenchRecord {
             method: "m".into(),

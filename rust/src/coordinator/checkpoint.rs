@@ -111,13 +111,23 @@ pub struct RunKey {
     pub seed: u64,
     /// Total epochs of the run.
     pub epochs: usize,
+    /// Training objective display form (`nodeclass` or
+    /// `linkpred(decoder,neg=N)`). Defaults on deserialize so
+    /// pre-link-prediction checkpoints (all node classification) stay
+    /// resumable.
+    #[serde(default = "default_objective")]
+    pub objective: String,
+}
+
+fn default_objective() -> String {
+    "nodeclass".to_string()
 }
 
 impl RunKey {
     /// Fail with the first differing field, named, when `self` (the
     /// checkpoint's key) does not match `live` (the current run's).
     pub fn ensure_matches(&self, live: &RunKey) -> Result<()> {
-        let pairs: [(&str, String, String); 10] = [
+        let pairs: [(&str, String, String); 11] = [
             ("dataset", self.dataset.clone(), live.dataset.clone()),
             ("method", self.method.clone(), live.method.clone()),
             ("fanouts", self.fanouts.clone(), live.fanouts.clone()),
@@ -132,6 +142,7 @@ impl RunKey {
             ("hidden", self.hidden.to_string(), live.hidden.to_string()),
             ("seed", self.seed.to_string(), live.seed.to_string()),
             ("epochs", self.epochs.to_string(), live.epochs.to_string()),
+            ("objective", self.objective.clone(), live.objective.clone()),
         ];
         for (field, ours, theirs) in pairs {
             if ours != theirs {
@@ -532,6 +543,7 @@ mod tests {
             hidden: 64,
             seed: 7,
             epochs: 5,
+            objective: "nodeclass".into(),
         }
     }
 
@@ -586,6 +598,23 @@ mod tests {
         c.lr_bits = 0.5f32.to_bits();
         let err = a.ensure_matches(&c).unwrap_err().to_string();
         assert!(err.contains("lr"), "{err}");
+        let mut o = key();
+        o.objective = "linkpred(dot,neg=1)".into();
+        let err = a.ensure_matches(&o).unwrap_err().to_string();
+        assert!(err.contains("objective"), "{err}");
+    }
+
+    #[test]
+    fn pre_objective_manifests_deserialize_as_nodeclass() {
+        // a RunKey written before the objective field existed (PR 7 and
+        // earlier) must keep loading — and must mean node classification
+        let legacy = r#"{
+            "dataset": "synth-arxiv", "method": "full", "fanouts": "4",
+            "batch_size": 64, "shuffle": true, "optimizer": "sgd",
+            "lr_bits": 1036831949, "hidden": 0, "seed": 7, "epochs": 5
+        }"#;
+        let k: RunKey = serde_json::from_str(legacy).unwrap();
+        assert_eq!(k.objective, "nodeclass");
     }
 
     #[test]

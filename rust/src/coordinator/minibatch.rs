@@ -78,9 +78,10 @@ use crate::data::{Dataset, TaskKind};
 use crate::embedding::{
     compose, init_params, ComposeEngine, ComposeOptions, EmbeddingPlan, ParamStore,
 };
-use crate::metrics::{accuracy, mean_roc_auc};
+use crate::metrics::{accuracy, binary_auc, hits_at_k, mean_roc_auc};
 use crate::sampler::{
-    mix_seed, BlockPrefetcher, Fanouts, MultiHopBlock, NeighborSampler, SamplerConfig, SeedBatcher,
+    mix_seed, sample_negative, BlockPrefetcher, EdgeBatch, EdgeBatcher, EdgeSplit, Fanouts,
+    MultiHopBlock, NeighborSampler, SamplerConfig, SeedBatcher, SeedSource,
 };
 use crate::util::fault;
 use crate::util::rng::Rng;
@@ -93,6 +94,100 @@ use std::time::{Duration, Instant};
 /// a fixed constant (not the pool size), so the work decomposition and
 /// therefore the touch-merge order never depend on thread count.
 const SCATTER_SHARDS: usize = 16;
+
+/// Edge fraction held out of the link-prediction loss for validation.
+const LP_VAL_FRAC: f64 = 0.05;
+/// Edge fraction held out of the link-prediction loss for testing.
+const LP_TEST_FRAC: f64 = 0.10;
+/// `k` for the link-prediction hits@k evaluation metric.
+const LP_HITS_K: usize = 50;
+
+/// How an edge score is decoded from two node representations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeDecoder {
+    /// `s(u, v) = ⟨h_u, h_v⟩` — parameter-free.
+    Dot,
+    /// `s(u, v) = ⟨w, h_u ⊙ h_v⟩ + b` with a learned weight row
+    /// (`edge_w`) and bias (`edge_b`) — the Hadamard-MLP decoder.
+    Hadamard,
+}
+
+impl std::fmt::Display for EdgeDecoder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EdgeDecoder::Dot => write!(f, "dot"),
+            EdgeDecoder::Hadamard => write!(f, "hadamard"),
+        }
+    }
+}
+
+/// What the trainer optimizes: the classic node-classification loss, or
+/// link prediction over a held-out edge split (per Hashing-Accelerated
+/// GNNs for Link Prediction, Wu 2021) — BCE on decoded edge scores,
+/// with seeded negative sampling and AUC / hits@k evaluation. Both
+/// objectives share the sampler, compose engine, SAGE head, prefetch
+/// pipeline and checkpoint machinery; only the loss head differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Cross-entropy (or multi-label BCE) over labeled seed nodes.
+    NodeClassification,
+    /// BCE over decoded edge scores, `neg_per_pos` sampled negatives
+    /// per held-out positive edge.
+    LinkPrediction {
+        /// Edge score decoder.
+        decoder: EdgeDecoder,
+        /// Negatives sampled per positive, per batch.
+        neg_per_pos: usize,
+    },
+}
+
+impl Objective {
+    /// True for the link-prediction variants.
+    pub fn is_link(&self) -> bool {
+        matches!(self, Objective::LinkPrediction { .. })
+    }
+
+    /// Parse a CLI-style task tag: `nodeclass` (alias `nc`), `linkpred`
+    /// (alias `lp`, dot decoder) or `linkpred-hadamard`. `neg_per_pos`
+    /// arrives via its own flag, so start from 1 and adjust with
+    /// [`with_neg_per_pos`](Objective::with_neg_per_pos).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "nodeclass" | "nc" => Ok(Objective::NodeClassification),
+            "linkpred" | "lp" | "linkpred-dot" => {
+                Ok(Objective::LinkPrediction { decoder: EdgeDecoder::Dot, neg_per_pos: 1 })
+            }
+            "linkpred-hadamard" => {
+                Ok(Objective::LinkPrediction { decoder: EdgeDecoder::Hadamard, neg_per_pos: 1 })
+            }
+            _ => Err(format!(
+                "unknown task '{s}' (expected nodeclass, linkpred or linkpred-hadamard)"
+            )),
+        }
+    }
+
+    /// The same objective with `neg_per_pos` negatives per positive
+    /// (no-op for node classification).
+    pub fn with_neg_per_pos(self, neg: usize) -> Self {
+        match self {
+            Objective::LinkPrediction { decoder, .. } => {
+                Objective::LinkPrediction { decoder, neg_per_pos: neg }
+            }
+            nc => nc,
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Objective::NodeClassification => write!(f, "nodeclass"),
+            Objective::LinkPrediction { decoder, neg_per_pos } => {
+                write!(f, "linkpred({decoder},neg={neg_per_pos})")
+            }
+        }
+    }
+}
 
 /// Knobs for a host-side training run (minibatch or full-batch).
 #[derive(Debug, Clone)]
@@ -142,6 +237,9 @@ pub struct MinibatchOptions {
     /// `checkpoint` to be set; refuses checkpoints whose [`RunKey`]
     /// differs from this run's.
     pub resume: bool,
+    /// Training objective: node classification (default) or link
+    /// prediction over a held-out edge split.
+    pub objective: Objective,
 }
 
 impl Default for MinibatchOptions {
@@ -159,6 +257,7 @@ impl Default for MinibatchOptions {
             save_model: None,
             checkpoint: None,
             resume: false,
+            objective: Objective::NodeClassification,
         }
     }
 }
@@ -171,10 +270,15 @@ pub struct MinibatchOutcome {
     pub losses: Vec<f64>,
     /// Wall time of each epoch in nanoseconds.
     pub epoch_ns: Vec<u64>,
-    /// Validation metric after the final epoch (accuracy or ROC-AUC).
+    /// Validation metric after the final epoch (accuracy or ROC-AUC
+    /// for node classification; AUC for link prediction).
     pub val_metric: f64,
     /// Test metric after the final epoch.
     pub test_metric: f64,
+    /// Validation hits@k (link prediction only).
+    pub val_hits: Option<f64>,
+    /// Test hits@k (link prediction only).
+    pub test_hits: Option<f64>,
     /// Largest number of rows composed for a single training batch. The
     /// minibatch trainer's memory invariant: strictly less than `n`
     /// whenever batches are smaller than the graph.
@@ -249,9 +353,15 @@ pub struct MinibatchTrainer<'a> {
     params: ParamStore,
     opt: Optimizer,
     grads: BTreeMap<String, GradBuffer>,
-    batcher: SeedBatcher,
+    source: SeedSource,
     /// SAGE head depth (= `cfg.fanouts.layers()`).
     layers: usize,
+    /// Head output width: `classes` for node classification, `hidden`
+    /// for link prediction (the last SAGE layer emits node embeddings
+    /// an edge decoder scores, not logits).
+    out_dim: usize,
+    /// Held-out edge split (link prediction only).
+    lp_split: Option<EdgeSplit>,
     /// Per-layer head parameter names.
     head: Vec<(String, String, String)>,
     /// Inline sampler for the un-prefetched path, built lazily on first
@@ -328,25 +438,62 @@ impl<'a> MinibatchTrainer<'a> {
         if plan.n != ds.graph.num_nodes() {
             bail!("plan is for n = {} but dataset has {} nodes", plan.n, ds.graph.num_nodes());
         }
-        if ds.splits.train.is_empty() {
-            bail!("dataset has no training nodes to batch");
-        }
         let layers = cfg.fanouts.layers();
         if layers > 1 && opts.hidden == 0 {
             bail!("hidden width must be >= 1 for a {layers}-layer head");
         }
-        let params = init_host_params(plan, ds.spec.classes, layers, opts.hidden, opts.seed);
+        // Node classification batches the train split; link prediction
+        // builds its own held-out edge split and batches positive edges
+        // (seed stream 0x5EED5 in both cases, so objectives are
+        // independent draws of the same batching machinery).
+        let batch_seed = mix_seed(&[opts.seed, 0x5EED5]);
+        let (out_dim, lp_split, source) = match opts.objective {
+            Objective::NodeClassification => {
+                if ds.splits.train.is_empty() {
+                    bail!("dataset has no training nodes to batch");
+                }
+                let batcher =
+                    SeedBatcher::new(&ds.splits.train, cfg.batch_size, cfg.shuffle, batch_seed);
+                (ds.spec.classes, None, SeedSource::Nodes(batcher))
+            }
+            Objective::LinkPrediction { neg_per_pos, .. } => {
+                if opts.hidden == 0 {
+                    bail!("link prediction needs hidden >= 1 (node-embedding width)");
+                }
+                let split = EdgeSplit::build(
+                    &ds.graph,
+                    LP_VAL_FRAC,
+                    LP_TEST_FRAC,
+                    mix_seed(&[opts.seed, 0xED6E5]),
+                );
+                if split.train.is_empty() {
+                    bail!("graph has no training edges to batch");
+                }
+                let batcher = EdgeBatcher::new(
+                    &split.train,
+                    cfg.batch_size,
+                    cfg.shuffle,
+                    neg_per_pos,
+                    batch_seed,
+                );
+                (opts.hidden, Some(split), SeedSource::Edges(batcher))
+            }
+        };
+        let mut params = init_host_params(plan, out_dim, layers, opts.hidden, opts.seed);
         if opts.verify_compose {
             verify_compose_bounded(plan, &params)
                 .map_err(|msg| anyhow!("compose engine self-check failed: {msg}"))?;
         }
-        let grads = make_grad_buffers(plan, ds.spec.classes, layers, opts.hidden);
-        let batcher = SeedBatcher::new(
-            &ds.splits.train,
-            cfg.batch_size,
-            cfg.shuffle,
-            mix_seed(&[opts.seed, 0x5EED5]),
-        );
+        let mut grads = make_grad_buffers(plan, out_dim, layers, opts.hidden);
+        if let Objective::LinkPrediction { decoder: EdgeDecoder::Hadamard, .. } = opts.objective {
+            let mut rng = Rng::seed_from_u64(mix_seed(&[opts.seed, 0xDEC0]));
+            let bound = 1.0 / (out_dim as f32).sqrt();
+            let w: Vec<f32> = (0..out_dim).map(|_| rng.gen_f32_range(-bound, bound)).collect();
+            params.insert("edge_w", vec![1, out_dim], w);
+            params.insert("edge_b", vec![1, 1], vec![0.0]);
+            grads.insert("edge_w".to_string(), GradBuffer::new(1, out_dim));
+            grads.insert("edge_b".to_string(), GradBuffer::new(1, 1));
+        }
         let sampler_seed = mix_seed(&[opts.seed, 0x54AFF]);
         let mut opt = Optimizer::new(opts.optimizer, opts.lr);
         opt.parallel = opts.parallel;
@@ -359,8 +506,10 @@ impl<'a> MinibatchTrainer<'a> {
             params,
             opt,
             grads,
-            batcher,
+            source,
             layers,
+            out_dim,
+            lp_split,
             head,
             sampler: None,
             acts: vec![Vec::new(); layers + 1],
@@ -420,8 +569,10 @@ impl<'a> MinibatchTrainer<'a> {
 
     /// Compose one sampled multi-hop block and step on it: the shared
     /// body of the inline and prefetched epoch loops. Returns the
-    /// block's summed per-seed loss.
-    fn process_block(&mut self, mhb: &MultiHopBlock) -> f64 {
+    /// block's summed loss and how many loss terms it contributed
+    /// (seeds for node classification, pos + neg edges for link
+    /// prediction) so epoch means stay correctly weighted.
+    fn process_block(&mut self, mhb: &MultiHopBlock) -> (f64, usize) {
         debug_assert_eq!(mhb.num_hops(), self.layers, "block depth != head depth");
         let d = self.engine.plan().d;
         let rows = mhb.num_rows();
@@ -431,7 +582,27 @@ impl<'a> MinibatchTrainer<'a> {
         // is < n, so the per-call bounds pre-scan is skipped
         let prepared = self.engine.prepare(&self.params);
         prepared.compose_into_unchecked(&mhb.outer().nodes, &mut self.acts[0][..rows * d]);
-        self.step_block(mhb)
+        // link prediction re-derives the batch's edges from the cursor
+        // (the block only carries the deduped seed list); the edge
+        // batcher is a pure function of (epoch, batch), so this matches
+        // the seeds the prefetcher sampled bit-for-bit
+        let eb = match &self.source {
+            SeedSource::Nodes(_) => None,
+            SeedSource::Edges(b) => {
+                Some(b.batch(&self.ds.graph, self.cur_epoch, self.cur_batch))
+            }
+        };
+        match eb {
+            None => (self.step_block(mhb, None), mhb.num_seeds()),
+            Some(eb) => {
+                debug_assert_eq!(
+                    &mhb.hop(0).nodes[..mhb.num_seeds()],
+                    &eb.seeds[..],
+                    "sampled block and edge batch disagree on seeds"
+                );
+                (self.step_block(mhb, Some(&eb)), eb.num_edges())
+            }
+        }
     }
 
     /// This run's [`RunKey`] — what checkpoints are stamped with, and
@@ -451,6 +622,7 @@ impl<'a> MinibatchTrainer<'a> {
             hidden: self.opts.hidden,
             seed: self.opts.seed,
             epochs: self.opts.epochs,
+            objective: self.opts.objective.to_string(),
         }
     }
 
@@ -462,10 +634,11 @@ impl<'a> MinibatchTrainer<'a> {
         fault::hit("trainer.step").with_context(|| {
             format!("stepping epoch {} batch {}", self.cur_epoch, self.cur_batch)
         })?;
-        self.epoch_loss_sum += self.process_block(mhb);
-        self.epoch_seen += mhb.num_seeds();
+        let (loss, seen) = self.process_block(mhb);
+        self.epoch_loss_sum += loss;
+        self.epoch_seen += seen;
         self.cur_batch += 1;
-        if self.cur_batch == self.batcher.num_batches() {
+        if self.cur_batch == self.source.num_batches() {
             self.finish_epoch()?;
         }
         self.checkpoint_if_due()
@@ -608,7 +781,7 @@ impl<'a> MinibatchTrainer<'a> {
         let mut mhb = MultiHopBlock::default();
         while self.cur_epoch < epochs {
             let epoch = self.cur_epoch;
-            let batches = self.batcher.epoch_batches(epoch);
+            let batches = self.source.epoch_batches(&self.ds.graph, epoch);
             while self.cur_epoch == epoch {
                 let bi = self.cur_batch;
                 let sampler = self.sampler.as_mut().expect("inline sampler initialized above");
@@ -632,7 +805,7 @@ impl<'a> MinibatchTrainer<'a> {
         let epochs = self.opts.epochs;
         let run = if self.opts.prefetch > 0 && self.cur_epoch < epochs {
             let ds = self.ds;
-            let batcher = self.batcher.clone();
+            let source = self.source.clone();
             let fans = self.cfg.fanouts.clone();
             let (seed, depth) = (self.sampler_seed, self.opts.prefetch);
             let start = (self.cur_epoch, self.cur_batch);
@@ -640,7 +813,7 @@ impl<'a> MinibatchTrainer<'a> {
                 let stream = BlockPrefetcher::spawn(
                     scope,
                     &ds.graph,
-                    batcher,
+                    source,
                     fans,
                     seed,
                     epochs,
@@ -661,7 +834,7 @@ impl<'a> MinibatchTrainer<'a> {
             // the cursor sits at the last completed batch boundary
             // unless the epoch close itself failed (non-finite loss —
             // nothing worth resuming then)
-            if self.opts.checkpoint.is_some() && self.cur_batch < self.batcher.num_batches() {
+            if self.opts.checkpoint.is_some() && self.cur_batch < self.source.num_batches() {
                 match self.checkpoint_now() {
                     Ok(()) => eprintln!(
                         "checkpointed at epoch {} batch {} before aborting; rerun with \
@@ -674,8 +847,16 @@ impl<'a> MinibatchTrainer<'a> {
             return Err(e);
         }
         let ds = self.ds;
-        let val_metric = self.evaluate(&ds.splits.val)?;
-        let test_metric = self.evaluate(&ds.splits.test)?;
+        let (val_metric, test_metric, val_hits, test_hits) = match &self.lp_split {
+            None => {
+                (self.evaluate(&ds.splits.val)?, self.evaluate(&ds.splits.test)?, None, None)
+            }
+            Some(split) => {
+                let (vauc, vhits) = self.evaluate_link(&split.val)?;
+                let (tauc, thits) = self.evaluate_link(&split.test)?;
+                (vauc, tauc, Some(vhits), Some(thits))
+            }
+        };
         if let Some(dir) = self.opts.save_model.clone() {
             self.save_artifact(&dir)?;
         }
@@ -684,9 +865,11 @@ impl<'a> MinibatchTrainer<'a> {
             epoch_ns: self.epoch_ns.clone(),
             val_metric,
             test_metric,
+            val_hits,
+            test_hits,
             peak_compose_rows: self.peak_compose_rows,
-            seeds_per_epoch: self.batcher.num_seeds(),
-            batches_per_epoch: self.batcher.num_batches(),
+            seeds_per_epoch: self.source.num_seeds(),
+            batches_per_epoch: self.source.num_batches(),
             wall: t0.elapsed(),
         })
     }
@@ -699,65 +882,9 @@ impl<'a> MinibatchTrainer<'a> {
     /// invariant, but still far from `n × d` on bounded-degree graphs.
     /// Returns accuracy (multi-class) or mean ROC-AUC (multi-label).
     pub fn evaluate(&self, fold: &[u32]) -> Result<f64> {
-        if fold.is_empty() {
-            bail!("empty evaluation fold");
-        }
         let ds = self.ds;
-        let d = self.engine.plan().d;
         let classes = ds.spec.classes;
-        let layers = self.layers;
-        let hidden = self.opts.hidden;
-        let chunk = self.cfg.batch_size.max(1);
-        let mut sampler = NeighborSampler::multi_hop(&ds.graph, &Fanouts::all(layers), 0);
-        let mut mhb = MultiHopBlock::default();
-        let mut x: Vec<f32> = Vec::new();
-        let mut cur: Vec<f32> = Vec::new();
-        let mut nxt: Vec<f32> = Vec::new();
-        let mut nb = vec![0f32; if layers > 1 { d.max(hidden) } else { d }];
-        let mut scores = vec![0f32; fold.len() * classes];
-        let heads: Vec<(&[f32], &[f32], &[f32])> = self
-            .head
-            .iter()
-            .map(|(ws, wn, b)| (self.params.get(ws), self.params.get(wn), self.params.get(b)))
-            .collect();
-        // parameters are frozen during evaluation: resolve the plan once
-        // for the whole fold instead of once per chunk
-        let prepared = self.engine.prepare(&self.params);
-        let mut done = 0usize;
-        for (ci, seeds) in fold.chunks(chunk).enumerate() {
-            sampler.sample_multi_into(seeds, 0, ci, &mut mhb);
-            let rows = mhb.num_rows();
-            grow(&mut x, rows * d);
-            prepared.compose_into_unchecked(&mhb.outer().nodes, &mut x[..rows * d]);
-            for j in 0..layers {
-                let blk = mhb.hop(layers - 1 - j);
-                let s = blk.num_seeds;
-                let (din, dout) = layer_dims(d, classes, hidden, layers, j);
-                grow(&mut nxt, s * dout);
-                let input: &[f32] = if j == 0 { &x } else { &cur };
-                let (w_self, w_neigh, bias) = heads[j];
-                for si in 0..s {
-                    mean_rows(&mut nb[..din], input, blk.neighbors_of(si));
-                    sage_affine_row(
-                        &input[si * din..(si + 1) * din],
-                        &nb[..din],
-                        w_self,
-                        w_neigh,
-                        bias,
-                        &mut nxt[si * dout..(si + 1) * dout],
-                    );
-                }
-                if j + 1 < layers {
-                    for v in nxt[..s * dout].iter_mut() {
-                        *v = v.max(0.0);
-                    }
-                }
-                std::mem::swap(&mut cur, &mut nxt);
-            }
-            let s = mhb.num_seeds();
-            scores[done * classes..(done + s) * classes].copy_from_slice(&cur[..s * classes]);
-            done += s;
-        }
+        let scores = self.embed_nodes(fold)?;
         // both branches hand the shared metric fns fold-local labels
         // and indices, so minibatch eval can never drift from the
         // metric implementations the full-batch paths use
@@ -781,16 +908,141 @@ impl<'a> MinibatchTrainer<'a> {
         Ok(metric)
     }
 
+    /// Run the frozen model over `fold`, composed and forwarded chunk
+    /// by chunk with **full** neighborhoods at every hop, returning the
+    /// head's output rows (`fold.len() × out_dim`, fold order): logits
+    /// for node classification, node embeddings for link prediction.
+    fn embed_nodes(&self, fold: &[u32]) -> Result<Vec<f32>> {
+        if fold.is_empty() {
+            bail!("empty evaluation fold");
+        }
+        let ds = self.ds;
+        let d = self.engine.plan().d;
+        let out_dim = self.out_dim;
+        let layers = self.layers;
+        let hidden = self.opts.hidden;
+        let chunk = self.cfg.batch_size.max(1);
+        let mut sampler = NeighborSampler::multi_hop(&ds.graph, &Fanouts::all(layers), 0);
+        let mut mhb = MultiHopBlock::default();
+        let mut x: Vec<f32> = Vec::new();
+        let mut cur: Vec<f32> = Vec::new();
+        let mut nxt: Vec<f32> = Vec::new();
+        let mut nb = vec![0f32; if layers > 1 { d.max(hidden) } else { d }];
+        let mut scores = vec![0f32; fold.len() * out_dim];
+        let heads: Vec<(&[f32], &[f32], &[f32])> = self
+            .head
+            .iter()
+            .map(|(ws, wn, b)| (self.params.get(ws), self.params.get(wn), self.params.get(b)))
+            .collect();
+        // parameters are frozen during evaluation: resolve the plan once
+        // for the whole fold instead of once per chunk
+        let prepared = self.engine.prepare(&self.params);
+        let mut done = 0usize;
+        for (ci, seeds) in fold.chunks(chunk).enumerate() {
+            sampler.sample_multi_into(seeds, 0, ci, &mut mhb);
+            let rows = mhb.num_rows();
+            grow(&mut x, rows * d);
+            prepared.compose_into_unchecked(&mhb.outer().nodes, &mut x[..rows * d]);
+            for j in 0..layers {
+                let blk = mhb.hop(layers - 1 - j);
+                let s = blk.num_seeds;
+                let (din, dout) = layer_dims(d, out_dim, hidden, layers, j);
+                grow(&mut nxt, s * dout);
+                let input: &[f32] = if j == 0 { &x } else { &cur };
+                let (w_self, w_neigh, bias) = heads[j];
+                for si in 0..s {
+                    mean_rows(&mut nb[..din], input, blk.neighbors_of(si));
+                    sage_affine_row(
+                        &input[si * din..(si + 1) * din],
+                        &nb[..din],
+                        w_self,
+                        w_neigh,
+                        bias,
+                        &mut nxt[si * dout..(si + 1) * dout],
+                    );
+                }
+                if j + 1 < layers {
+                    for v in nxt[..s * dout].iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+            let s = mhb.num_seeds();
+            scores[done * out_dim..(done + s) * out_dim].copy_from_slice(&cur[..s * out_dim]);
+            done += s;
+        }
+        Ok(scores)
+    }
+
+    /// Score a held-out edge fold: one seeded negative per positive
+    /// (keyed by the positive's fold index — stream `0xEBA1` — so the
+    /// eval set is fixed across epochs, thread counts and resumes),
+    /// full-neighborhood embeddings for every endpoint, then
+    /// `(AUC, hits@{LP_HITS_K})` over the decoded scores.
+    pub fn evaluate_link(&self, pos: &[(u32, u32)]) -> Result<(f64, f64)> {
+        if pos.is_empty() {
+            bail!("empty edge evaluation fold");
+        }
+        let ds = self.ds;
+        let negs: Vec<(u32, u32)> = pos
+            .iter()
+            .enumerate()
+            .map(|(i, &e)| {
+                let mut rng =
+                    Rng::seed_from_u64(mix_seed(&[self.opts.seed, 0xEBA1, i as u64]));
+                sample_negative(&ds.graph, &mut rng, e)
+            })
+            .collect();
+        // first-occurrence-deduped endpoint list (the sampler rejects
+        // duplicate seeds), embedded once and indexed per edge
+        let mut local: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        let mut nodes: Vec<u32> = Vec::new();
+        let mut row = |u: u32| -> usize {
+            *local.entry(u).or_insert_with(|| {
+                nodes.push(u);
+                (nodes.len() - 1) as u32
+            }) as usize
+        };
+        let pos_local: Vec<(usize, usize)> = pos.iter().map(|&(u, v)| (row(u), row(v))).collect();
+        let neg_local: Vec<(usize, usize)> = negs.iter().map(|&(u, v)| (row(u), row(v))).collect();
+        let h = self.embed_nodes(&nodes)?;
+        let dim = self.out_dim;
+        let decoder = match self.opts.objective {
+            Objective::LinkPrediction { decoder, .. } => decoder,
+            Objective::NodeClassification => bail!("evaluate_link on a node-classification run"),
+        };
+        let score = |&(a, b): &(usize, usize)| -> f32 {
+            let hu = &h[a * dim..(a + 1) * dim];
+            let hv = &h[b * dim..(b + 1) * dim];
+            match decoder {
+                EdgeDecoder::Dot => hu.iter().zip(hv).map(|(x, y)| x * y).sum(),
+                EdgeDecoder::Hadamard => {
+                    let w = self.params.get("edge_w");
+                    let bias = self.params.get("edge_b")[0];
+                    bias + hu.iter().zip(hv).zip(w).map(|((x, y), wk)| wk * x * y).sum::<f32>()
+                }
+            }
+        };
+        let pos_scores: Vec<f32> = pos_local.iter().map(&score).collect();
+        let neg_scores: Vec<f32> = neg_local.iter().map(&score).collect();
+        Ok((
+            binary_auc(&pos_scores, &neg_scores),
+            hits_at_k(&pos_scores, &neg_scores, LP_HITS_K),
+        ))
+    }
+
     /// Forward + backward + optimizer step on one composed block
     /// (`self.acts[0]` must hold the outer hop's composed rows).
-    /// Returns the sum of per-seed losses. Dispatches to the serial
-    /// oracle step or the bit-identical parallel step per
-    /// `opts.parallel`.
-    fn step_block(&mut self, mhb: &MultiHopBlock) -> f64 {
+    /// Returns the summed loss (per seed for node classification, per
+    /// edge for link prediction — `eb` carries the batch's localized
+    /// edges then). Dispatches to the serial oracle step or the
+    /// bit-identical parallel step per `opts.parallel`.
+    fn step_block(&mut self, mhb: &MultiHopBlock, eb: Option<&EdgeBatch>) -> f64 {
         if self.opts.parallel {
-            self.step_block_parallel(mhb)
+            self.step_block_parallel(mhb, eb)
         } else {
-            self.step_block_serial(mhb)
+            self.step_block_serial(mhb, eb)
         }
     }
 
@@ -798,10 +1050,10 @@ impl<'a> MinibatchTrainer<'a> {
     /// parallel step is pinned against (`tests/parallel_train.rs`,
     /// `tests/multihop.rs`). With one layer this is, operation for
     /// operation, the pre-multi-hop trainer's step.
-    fn step_block_serial(&mut self, mhb: &MultiHopBlock) -> f64 {
+    fn step_block_serial(&mut self, mhb: &MultiHopBlock, eb: Option<&EdgeBatch>) -> f64 {
         let plan = self.engine.plan();
         let d = plan.d;
-        let classes = self.ds.spec.classes;
+        let classes = self.out_dim;
         let layers = self.layers;
         let hidden = self.opts.hidden;
         let s0 = mhb.num_seeds();
@@ -840,27 +1092,43 @@ impl<'a> MinibatchTrainer<'a> {
             }
         }
 
-        // ---- loss + dL/dlogits (mean over the batch's seeds) ----
-        let gscale = match self.ds.spec.task {
-            TaskKind::MultiClass => 1.0 / s0 as f32,
-            TaskKind::MultiLabel => 1.0 / (s0 * classes) as f32,
-        };
+        // ---- loss + dL/d(head output) ----
         grow(&mut self.glogits, s0 * classes);
         let mut loss_sum = 0f64;
-        {
-            let seeds_blk = mhb.hop(0);
-            let logits = &self.acts[layers];
-            for si in 0..s0 {
-                let node = seeds_blk.nodes[si] as usize;
-                let lrow = &logits[si * classes..(si + 1) * classes];
-                let grow_row = &mut self.glogits[si * classes..(si + 1) * classes];
-                loss_sum += loss_and_grad_row(
-                    self.ds.spec.task,
-                    &self.ds.labels,
-                    node,
-                    lrow,
-                    grow_row,
-                    gscale,
+        match eb {
+            // node classification: mean CE/BCE over the batch's seeds
+            None => {
+                let gscale = match self.ds.spec.task {
+                    TaskKind::MultiClass => 1.0 / s0 as f32,
+                    TaskKind::MultiLabel => 1.0 / (s0 * classes) as f32,
+                };
+                let seeds_blk = mhb.hop(0);
+                let logits = &self.acts[layers];
+                for si in 0..s0 {
+                    let node = seeds_blk.nodes[si] as usize;
+                    let lrow = &logits[si * classes..(si + 1) * classes];
+                    let grow_row = &mut self.glogits[si * classes..(si + 1) * classes];
+                    loss_sum += loss_and_grad_row(
+                        self.ds.spec.task,
+                        &self.ds.labels,
+                        node,
+                        lrow,
+                        grow_row,
+                        gscale,
+                    );
+                }
+            }
+            // link prediction: mean BCE over the batch's decoded edges
+            Some(eb) => {
+                self.glogits[..s0 * classes].fill(0.0);
+                loss_sum = lp_edge_loss(
+                    lp_decoder(self.opts.objective),
+                    &self.params,
+                    &self.acts[layers],
+                    classes,
+                    eb,
+                    &mut self.glogits,
+                    &mut self.grads,
                 );
             }
         }
@@ -990,10 +1258,10 @@ impl<'a> MinibatchTrainer<'a> {
     ///   rows in order, so per-element order is block-row ascending,
     ///   exactly as the serial scatter;
     /// * the optimizer updates touched rows independently (order-free).
-    fn step_block_parallel(&mut self, mhb: &MultiHopBlock) -> f64 {
+    fn step_block_parallel(&mut self, mhb: &MultiHopBlock, eb: Option<&EdgeBatch>) -> f64 {
         let plan = self.engine.plan();
         let d = plan.d;
-        let classes = self.ds.spec.classes;
+        let classes = self.out_dim;
         let layers = self.layers;
         let hidden = self.opts.hidden;
         let s0 = mhb.num_seeds();
@@ -1029,7 +1297,7 @@ impl<'a> MinibatchTrainer<'a> {
                         *v = v.max(0.0);
                     }
                 });
-            } else {
+            } else if eb.is_none() {
                 let gscale = match self.ds.spec.task {
                     TaskKind::MultiClass => 1.0 / s as f32,
                     TaskKind::MultiLabel => 1.0 / (s * classes) as f32,
@@ -1059,10 +1327,44 @@ impl<'a> MinibatchTrainer<'a> {
                     let node = nodes[si] as usize;
                     *loss = loss_and_grad_row(task, labels, node, orow, grow_row, gscale);
                 });
+            } else {
+                // link prediction: parallel per-seed embedding rows (no
+                // activation, no fused loss — the edge loss below walks
+                // edges, not seeds)
+                let nbar_rows = self.nbars[j][..s * din].par_chunks_mut(din);
+                let out_rows = out[..s * dout].par_chunks_mut(dout);
+                nbar_rows.zip(out_rows).enumerate().for_each(|(si, (nb, orow))| {
+                    mean_rows(nb, input, blk.neighbors_of(si));
+                    sage_affine_row(
+                        &input[si * din..(si + 1) * din],
+                        nb,
+                        w_self,
+                        w_neigh,
+                        bias,
+                        orow,
+                    );
+                });
             }
         }
-        // seed-order sum: the exact f64 additions of the serial loop
-        let loss_sum: f64 = self.losses_buf[..s0].iter().sum();
+        let loss_sum: f64 = match eb {
+            // seed-order sum: the exact f64 additions of the serial loop
+            None => self.losses_buf[..s0].iter().sum(),
+            // the edge loss is a single edge-order walk — shared with
+            // the serial step, so the two paths agree bit for bit
+            Some(eb) => {
+                grow(&mut self.glogits, s0 * classes);
+                self.glogits[..s0 * classes].fill(0.0);
+                lp_edge_loss(
+                    lp_decoder(self.opts.objective),
+                    &self.params,
+                    &self.acts[layers],
+                    classes,
+                    eb,
+                    &mut self.glogits,
+                    &mut self.grads,
+                )
+            }
+        };
 
         // ---- backward, outermost layer first ----
         for j in (0..layers).rev() {
@@ -1317,6 +1619,12 @@ pub fn train_full_batch(
     if layers > 1 && opts.hidden == 0 {
         bail!("hidden width must be >= 1 for a {layers}-layer head");
     }
+    if opts.objective.is_link() {
+        bail!(
+            "full-batch training supports node classification only \
+             (use the minibatch trainer for link prediction)"
+        );
+    }
     let n = plan.n;
     let d = plan.d;
     let classes = ds.spec.classes;
@@ -1534,6 +1842,8 @@ pub fn train_full_batch(
         epoch_ns,
         val_metric,
         test_metric,
+        val_hits: None,
+        test_hits: None,
         peak_compose_rows: n,
         seeds_per_epoch: train.len(),
         batches_per_epoch: 1,
@@ -1749,6 +2059,88 @@ fn loss_and_grad_row(
     }
 }
 
+/// The edge decoder of a link-prediction objective (panics on a
+/// node-classification objective — callers only reach here with an
+/// [`EdgeBatch`] in hand).
+fn lp_decoder(objective: Objective) -> EdgeDecoder {
+    match objective {
+        Objective::LinkPrediction { decoder, .. } => decoder,
+        Objective::NodeClassification => unreachable!("edge loss on a node-classification run"),
+    }
+}
+
+/// Link-prediction loss head, shared verbatim by the serial and
+/// parallel steps (so the two paths agree bit for bit): walks the
+/// batch's positive then negative edges in order, scores each from the
+/// final-layer embedding rows (`acts`, `dim` wide per seed), sums the
+/// stable BCE-with-logits losses, and accumulates `dL/dh` into `glog`
+/// (same shape as `acts`' seed rows — the existing SAGE backward
+/// treats it exactly like the classification `dL/dlogits`). The
+/// Hadamard decoder's `edge_w`/`edge_b` gradients land in `grads`,
+/// edge-order, ready for the shared optimizer sweep. Gradients are
+/// scaled by `1 / (pos + neg)` (the batch's mean edge loss); the
+/// return value is the batch's **summed** per-edge losses — the
+/// trainer divides by edges seen at epoch close, mirroring the
+/// node-classification convention.
+fn lp_edge_loss(
+    decoder: EdgeDecoder,
+    params: &ParamStore,
+    acts: &[f32],
+    dim: usize,
+    eb: &EdgeBatch,
+    glog: &mut [f32],
+    grads: &mut BTreeMap<String, GradBuffer>,
+) -> f64 {
+    let num_edges = eb.num_edges();
+    let gscale = 1.0 / num_edges as f32;
+    let mut loss_sum = 0f64;
+    let mut had = vec![0f32; if decoder == EdgeDecoder::Hadamard { dim } else { 0 }];
+    for (local, y) in [(&eb.pos_local, 1.0f32), (&eb.neg_local, 0.0f32)] {
+        for &(a, b) in local {
+            let (a, b) = (a as usize, b as usize);
+            let hu = &acts[a * dim..(a + 1) * dim];
+            let hv = &acts[b * dim..(b + 1) * dim];
+            let s: f32 = match decoder {
+                EdgeDecoder::Dot => hu.iter().zip(hv).map(|(x, z)| x * z).sum(),
+                EdgeDecoder::Hadamard => {
+                    let w = params.get("edge_w");
+                    let bias = params.get("edge_b")[0];
+                    for ((hk, &x), &z) in had.iter_mut().zip(hu).zip(hv) {
+                        *hk = x * z;
+                    }
+                    bias + w.iter().zip(&had).map(|(wk, hk)| wk * hk).sum::<f32>()
+                }
+            };
+            // stable BCE-with-logits: max(s,0) - s·y + ln(1 + e^-|s|)
+            loss_sum += (s.max(0.0) - s * y + (-s.abs()).exp().ln_1p()) as f64;
+            let sig = 1.0 / (1.0 + (-s).exp());
+            let g = (sig - y) * gscale;
+            match decoder {
+                EdgeDecoder::Dot => {
+                    for k in 0..dim {
+                        glog[a * dim + k] += g * hv[k];
+                    }
+                    for k in 0..dim {
+                        glog[b * dim + k] += g * hu[k];
+                    }
+                }
+                EdgeDecoder::Hadamard => {
+                    let w = params.get("edge_w");
+                    for k in 0..dim {
+                        glog[a * dim + k] += g * w[k] * hv[k];
+                    }
+                    for k in 0..dim {
+                        glog[b * dim + k] += g * w[k] * hu[k];
+                    }
+                    grads.get_mut("edge_w").expect("edge_w grads").add_row(0, g, &had);
+                    grads.get_mut("edge_b").expect("edge_b grads").add_at(0, 0, g);
+                }
+            }
+        }
+    }
+    loss_sum
+}
+
 /// Backpropagate one node's `dL/dv` row into its embedding tables
 /// (the compose backward): position levels get the leading `d_j`
 /// coordinates (Eq. 11's zero-extension), the node-specific table gets
@@ -1885,5 +2277,109 @@ mod tests {
         assert!(out.losses.iter().all(|l| l.is_finite()));
         assert!(out.peak_compose_rows < ds.graph.num_nodes());
         assert!((0.0..=1.0).contains(&out.test_metric));
+    }
+
+    #[test]
+    fn objective_parse_display_roundtrip() {
+        assert_eq!(Objective::parse("nodeclass").unwrap(), Objective::NodeClassification);
+        assert_eq!(Objective::parse("nc").unwrap(), Objective::NodeClassification);
+        let lp = Objective::parse("linkpred").unwrap().with_neg_per_pos(3);
+        assert_eq!(lp, Objective::LinkPrediction { decoder: EdgeDecoder::Dot, neg_per_pos: 3 });
+        assert_eq!(lp.to_string(), "linkpred(dot,neg=3)");
+        let had = Objective::parse("linkpred-hadamard").unwrap();
+        assert_eq!(
+            had,
+            Objective::LinkPrediction { decoder: EdgeDecoder::Hadamard, neg_per_pos: 1 }
+        );
+        assert_eq!(had.to_string(), "linkpred(hadamard,neg=1)");
+        assert!(Objective::parse("??").is_err());
+        assert!(!Objective::NodeClassification.is_link());
+        assert!(lp.is_link());
+        assert_eq!(Objective::NodeClassification.to_string(), "nodeclass");
+    }
+
+    #[test]
+    fn link_prediction_trains_and_reports_auc_and_hits() {
+        let ds = tiny_dataset();
+        let plan = EmbeddingPlan::build(
+            ds.graph.num_nodes(),
+            16,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            1,
+        );
+        let cfg = SamplerConfig { batch_size: 64, fanouts: Fanout::Max(4).into(), shuffle: true };
+        let opts = MinibatchOptions {
+            epochs: 2,
+            hidden: 16,
+            objective: Objective::LinkPrediction {
+                decoder: EdgeDecoder::Dot,
+                neg_per_pos: 1,
+            },
+            ..Default::default()
+        };
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        let out = tr.train().unwrap();
+        assert_eq!(out.losses.len(), 2);
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        assert!(out.peak_compose_rows < ds.graph.num_nodes());
+        assert!((0.0..=1.0).contains(&out.val_metric));
+        assert!((0.0..=1.0).contains(&out.test_metric));
+        let hits = out.test_hits.expect("link prediction reports hits@k");
+        assert!((0.0..=1.0).contains(&hits));
+        assert!(out.val_hits.is_some());
+    }
+
+    #[test]
+    fn hadamard_decoder_trains_with_edge_params() {
+        let ds = tiny_dataset();
+        let plan = EmbeddingPlan::build(
+            ds.graph.num_nodes(),
+            16,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            5,
+        );
+        let cfg = SamplerConfig { batch_size: 64, fanouts: Fanout::Max(4).into(), shuffle: true };
+        let opts = MinibatchOptions {
+            epochs: 1,
+            hidden: 16,
+            objective: Objective::LinkPrediction {
+                decoder: EdgeDecoder::Hadamard,
+                neg_per_pos: 2,
+            },
+            ..Default::default()
+        };
+        let mut tr = MinibatchTrainer::new(&ds, &plan, cfg, opts).unwrap();
+        assert_eq!(tr.params().shape("edge_w"), &[1, 16]);
+        assert_eq!(tr.params().shape("edge_b"), &[1, 1]);
+        let out = tr.train().unwrap();
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        assert!((0.0..=1.0).contains(&out.test_metric));
+    }
+
+    #[test]
+    fn link_prediction_requires_hidden_width() {
+        let ds = tiny_dataset();
+        let plan = EmbeddingPlan::build(
+            ds.graph.num_nodes(),
+            16,
+            &EmbeddingMethod::HashEmb { buckets: 32, h: 2 },
+            None,
+            1,
+        );
+        let opts = MinibatchOptions {
+            hidden: 0,
+            objective: Objective::LinkPrediction { decoder: EdgeDecoder::Dot, neg_per_pos: 1 },
+            ..Default::default()
+        };
+        assert!(MinibatchTrainer::new(&ds, &plan, SamplerConfig::default(), opts).is_err());
+        // and the full-batch oracle refuses the objective outright
+        let lp_opts = MinibatchOptions {
+            hidden: 16,
+            objective: Objective::LinkPrediction { decoder: EdgeDecoder::Dot, neg_per_pos: 1 },
+            ..Default::default()
+        };
+        assert!(train_full_batch(&ds, &plan, &lp_opts, 1).is_err());
     }
 }

@@ -37,7 +37,9 @@ pub use checkpoint::{
     load_latest, save_checkpoint, sweep_stale_temps, CheckpointConfig, CheckpointManifest, Cursor,
     LoadedCheckpoint, RunKey,
 };
-pub use minibatch::{train_full_batch, MinibatchOptions, MinibatchOutcome, MinibatchTrainer};
+pub use minibatch::{
+    train_full_batch, EdgeDecoder, MinibatchOptions, MinibatchOutcome, MinibatchTrainer, Objective,
+};
 // shared with the serving path (`crate::serve`), so a served forward
 // can never drift from the trainers' evaluation forward
 pub(crate) use minibatch::{head_param_names, layer_dims, mean_rows, sage_affine_row};

@@ -247,6 +247,8 @@ mod tests {
             EmbeddingMethod::HashTrick { buckets: b },
             EmbeddingMethod::Bloom { buckets: b, h: 2 },
             EmbeddingMethod::HashEmb { buckets: b, h: 3 },
+            EmbeddingMethod::UniversalHash { buckets: b },
+            EmbeddingMethod::DoubleHash { buckets: b / 2 },
             EmbeddingMethod::Dhe { encoding_dim: 8, hidden: 16, layers: 1 },
             EmbeddingMethod::PosEmb { levels: 3 },
             EmbeddingMethod::RandomPart { parts: 5 },

@@ -31,6 +31,26 @@ pub enum EmbeddingMethod {
         /// Number of hash functions.
         h: usize,
     },
+    /// Plain universal-hash bucketing: one 2-universal hash into
+    /// `buckets` shared rows, no importance weights — the showdown's
+    /// simplest hashing baseline (HashTrick with the crate's
+    /// [`UniversalHash`](crate::hashing::UniversalHash) family made
+    /// explicit as its own tag).
+    UniversalHash {
+        /// Shared table rows.
+        buckets: usize,
+    },
+    /// Double-hash compositional scheme (quotient–remainder, after
+    /// "Compositional embeddings using complementary partitions",
+    /// Shi 2020): one universal hash into a `buckets²` domain split as
+    /// `H mod buckets` and `H div buckets`, each indexing its own half
+    /// of a `2·buckets` row table, summed unweighted. Two dependent
+    /// lookups distinguish all `buckets²` hash values while paying for
+    /// `2·buckets` rows.
+    DoubleHash {
+        /// Rows per half-table (the table holds `2·buckets` rows).
+        buckets: usize,
+    },
     /// Deep hash embeddings [8]: dense hash encoding + MLP.
     Dhe {
         /// Dense encoding width.
@@ -100,6 +120,8 @@ impl EmbeddingMethod {
         "hashtrick",
         "bloom",
         "hashemb",
+        "uhash",
+        "doublehash",
         "dhe",
         "posemb",
         "posemb1",
@@ -118,6 +140,8 @@ impl EmbeddingMethod {
             EmbeddingMethod::HashTrick { .. } => "HashTrick".into(),
             EmbeddingMethod::Bloom { .. } => "Bloom".into(),
             EmbeddingMethod::HashEmb { .. } => "HashEmb".into(),
+            EmbeddingMethod::UniversalHash { .. } => "UHash".into(),
+            EmbeddingMethod::DoubleHash { .. } => "DoubleHash".into(),
             EmbeddingMethod::Dhe { .. } => "DHE".into(),
             EmbeddingMethod::PosEmb { levels } => format!("PosEmb {levels}-level"),
             EmbeddingMethod::RandomPart { .. } => "RandomPart".into(),
@@ -133,7 +157,9 @@ impl EmbeddingMethod {
             EmbeddingMethod::Full => MethodFamily::Full,
             EmbeddingMethod::HashTrick { .. }
             | EmbeddingMethod::Bloom { .. }
-            | EmbeddingMethod::HashEmb { .. } => MethodFamily::Hashing,
+            | EmbeddingMethod::HashEmb { .. }
+            | EmbeddingMethod::UniversalHash { .. }
+            | EmbeddingMethod::DoubleHash { .. } => MethodFamily::Hashing,
             EmbeddingMethod::Dhe { .. } => MethodFamily::Dhe,
             EmbeddingMethod::PosEmb { .. } | EmbeddingMethod::RandomPart { .. } => {
                 MethodFamily::Position
@@ -187,6 +213,8 @@ impl fmt::Display for EmbeddingMethod {
             EmbeddingMethod::HashTrick { buckets } => write!(f, "hashtrick(b={buckets})"),
             EmbeddingMethod::Bloom { buckets, h } => write!(f, "bloom(b={buckets},h={h})"),
             EmbeddingMethod::HashEmb { buckets, h } => write!(f, "hashemb(b={buckets},h={h})"),
+            EmbeddingMethod::UniversalHash { buckets } => write!(f, "uhash(b={buckets})"),
+            EmbeddingMethod::DoubleHash { buckets } => write!(f, "doublehash(b={buckets})"),
             EmbeddingMethod::Dhe { encoding_dim, hidden, layers } => {
                 write!(f, "dhe(e={encoding_dim},w={hidden},l={layers})")
             }
@@ -241,7 +269,7 @@ fn perr(msg: impl Into<String>) -> MethodParseError {
 /// Parameter keys each tag accepts in the `tag(key=val,...)` form.
 fn allowed_keys(tag: &str) -> &'static [&'static str] {
     match tag {
-        "hashtrick" => &["b", "k"],
+        "hashtrick" | "uhash" | "doublehash" => &["b", "k"],
         "bloom" | "hashemb" => &["b", "h", "k"],
         "dhe" => &["e", "w", "l"],
         "posemb" | "posemb1" | "posemb2" | "posemb3" | "posfullemb" => &["levels", "k"],
@@ -360,6 +388,8 @@ impl MethodSpec {
             "hashtrick" => EmbeddingMethod::HashTrick { buckets: b },
             "bloom" => EmbeddingMethod::Bloom { buckets: b, h },
             "hashemb" => EmbeddingMethod::HashEmb { buckets: b, h },
+            "uhash" => EmbeddingMethod::UniversalHash { buckets: b },
+            "doublehash" => EmbeddingMethod::DoubleHash { buckets: b },
             "dhe" => EmbeddingMethod::Dhe {
                 encoding_dim: self.get("e").unwrap_or(32),
                 hidden: self.get("w").unwrap_or(64),
@@ -387,7 +417,7 @@ impl FromStr for EmbeddingMethod {
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         let spec: MethodSpec = s.parse()?;
         let needs: &[&str] = match spec.tag.as_str() {
-            "hashtrick" | "bloom" | "hashemb" | "inter" => &["b"],
+            "hashtrick" | "bloom" | "hashemb" | "uhash" | "doublehash" | "inter" => &["b"],
             "intra" => &["c"],
             "randompart" => &["parts"],
             _ => &[],
@@ -451,6 +481,8 @@ mod tests {
             EmbeddingMethod::HashTrick { buckets: 357 },
             EmbeddingMethod::Bloom { buckets: 357, h: 2 },
             EmbeddingMethod::HashEmb { buckets: 357, h: 3 },
+            EmbeddingMethod::UniversalHash { buckets: 357 },
+            EmbeddingMethod::DoubleHash { buckets: 78 },
             EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 64, layers: 2 },
             EmbeddingMethod::PosEmb { levels: 2 },
             EmbeddingMethod::RandomPart { parts: 21 },
@@ -484,6 +516,30 @@ mod tests {
         assert_eq!(r.method, EmbeddingMethod::Full);
         let r = MethodSpec::parse("dhe").unwrap().resolve(6000).unwrap();
         assert_eq!(r.method, EmbeddingMethod::Dhe { encoding_dim: 32, hidden: 64, layers: 1 });
+    }
+
+    #[test]
+    fn hashing_baseline_tags_resolve_and_report_as_hashing() {
+        // bare tags get the same b = c·k default as the other hashing
+        // baselines (n=6000: b=357), and overrides win
+        let r = MethodSpec::parse("uhash").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::UniversalHash { buckets: 357 });
+        assert_eq!(r.method.family(), MethodFamily::Hashing);
+        assert_eq!(r.method.name(), "UHash");
+        let r = MethodSpec::parse("doublehash(b=100)").unwrap().resolve(6000).unwrap();
+        assert_eq!(r.method, EmbeddingMethod::DoubleHash { buckets: 100 });
+        assert_eq!(r.method.family(), MethodFamily::Hashing);
+        assert_eq!(r.method.name(), "DoubleHash");
+        assert!(!r.method.needs_hierarchy());
+        // parse → Display → parse round-trips the explicit form
+        for s in ["uhash(b=64)", "doublehash(b=32)"] {
+            let m: EmbeddingMethod = s.parse().unwrap();
+            assert_eq!(m.to_string(), s);
+            assert_eq!(m.to_string().parse::<EmbeddingMethod>().unwrap(), m);
+        }
+        // a bare tag without b cannot parse as a concrete method
+        assert!("uhash".parse::<EmbeddingMethod>().is_err());
+        assert!("doublehash".parse::<EmbeddingMethod>().is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! * the DHE dense encoding where applicable.
 
 use super::config::EmbeddingMethod;
-use crate::hashing::HashedIndices;
+use crate::hashing::{HashFamily, HashedIndices};
 use crate::partition::{random_partition, Hierarchy};
 
 /// Shape of a single trainable table.
@@ -172,6 +172,12 @@ impl EmbeddingPlan {
             EmbeddingMethod::HashEmb { buckets, h } => {
                 Some(Self::hashed_node_plan(n, d, *buckets, *h, true, seed))
             }
+            EmbeddingMethod::UniversalHash { buckets } => {
+                Some(Self::hashed_node_plan(n, d, *buckets, 1, false, seed))
+            }
+            EmbeddingMethod::DoubleHash { buckets } => {
+                Some(Self::double_hash_node_plan(n, d, *buckets, seed))
+            }
             EmbeddingMethod::PosHashEmbInter { buckets, h, .. } => {
                 Some(Self::hashed_node_plan(n, d, *buckets, *h, true, seed))
             }
@@ -210,6 +216,31 @@ impl EmbeddingPlan {
             TableShape { name: "node_x".into(), rows: buckets, cols: d },
             hi.indices,
             learned,
+        )
+    }
+
+    /// Quotient–remainder double hashing: one universal hash into a
+    /// `b²` domain, decomposed as `H mod b` (remainder half, rows
+    /// `0..b`) and `H div b` (quotient half, rows `b..2b`) of a single
+    /// `2b × d` table, summed unweighted. The two lookups are dependent
+    /// (one draw, two digits), so every hash value in the `b²` domain
+    /// gets a distinct row *pair* while the table pays for only `2b`
+    /// rows — the compositional alternative to `h` independent hashes.
+    fn double_hash_node_plan(n: usize, d: usize, b: usize, seed: u64) -> NodePlan {
+        assert!(b > 0, "doublehash needs at least one bucket");
+        assert!(b * b <= u32::MAX as usize, "doublehash domain b² must fit in u32");
+        let f = HashFamily::new(seed).function(0, (b * b) as u32);
+        let mut rem = Vec::with_capacity(n);
+        let mut quo = Vec::with_capacity(n);
+        for i in 0..n {
+            let hv = f.hash(i as u64) as usize;
+            rem.push((hv % b) as u32);
+            quo.push((b + hv / b) as u32);
+        }
+        NodePlan::new(
+            TableShape { name: "node_x".into(), rows: 2 * b, cols: d },
+            vec![rem, quo],
+            false,
         )
     }
 
@@ -378,6 +409,44 @@ mod tests {
             EmbeddingPlan::build(1000, 8, &EmbeddingMethod::Bloom { buckets: 50, h: 2 }, None, 1);
         assert_eq!(p.num_params(), 50 * 8);
         assert!(!p.node.as_ref().unwrap().learned_weights);
+    }
+
+    #[test]
+    fn uhash_is_single_unweighted_hash() {
+        let p = EmbeddingPlan::build(
+            1000,
+            8,
+            &EmbeddingMethod::UniversalHash { buckets: 50 },
+            None,
+            1,
+        );
+        let nx = p.node.as_ref().unwrap();
+        assert_eq!(nx.h, 1);
+        assert!(!nx.learned_weights);
+        assert_eq!(p.num_params(), 50 * 8);
+        assert!(nx.node_major.iter().all(|&r| (r as usize) < 50));
+    }
+
+    #[test]
+    fn doublehash_rows_split_into_remainder_and_quotient_halves() {
+        let b = 20usize;
+        let p = EmbeddingPlan::build(1000, 8, &EmbeddingMethod::DoubleHash { buckets: b }, None, 1);
+        let nx = p.node.as_ref().unwrap();
+        assert_eq!(nx.h, 2);
+        assert!(!nx.learned_weights);
+        assert_eq!(nx.table.rows, 2 * b);
+        assert_eq!(p.num_params(), 2 * b * 8);
+        for i in 0..1000 {
+            let rem = nx.node_major[i * 2] as usize;
+            let quo = nx.node_major[i * 2 + 1] as usize;
+            assert!(rem < b, "node {i}: remainder row {rem} outside its half");
+            assert!((b..2 * b).contains(&quo), "node {i}: quotient row {quo} outside its half");
+        }
+        // the decomposition is injective over the b² hash domain:
+        // distinct hash values get distinct (rem, quo) pairs, so two
+        // nodes collide on BOTH rows only when the full hash collides
+        let q = EmbeddingPlan::build(1000, 8, &EmbeddingMethod::DoubleHash { buckets: b }, None, 1);
+        assert_eq!(nx.node_major, q.node.as_ref().unwrap().node_major, "plan is seeded");
     }
 
     #[test]

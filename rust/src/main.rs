@@ -27,11 +27,18 @@
 //!   every `--checkpoint-every` steps into atomically-published
 //!   checkpoint directories, and `--resume` continues from the newest
 //!   intact one with a bit-identical loss trajectory.
+//!   The objective is selectable: `--task linkpred [--neg N]` trains
+//!   link prediction (BCE over decoded edge scores, AUC + hits@k
+//!   evaluation) instead of node classification.
 //! * `crash-test [...]` — end-to-end crash/recovery harness: runs an
 //!   uninterrupted control, kills a checkpointing victim subprocess
 //!   mid-epoch with an injected fault (`POSHASH_FAULT`), resumes it,
 //!   and asserts the resumed run's loss trajectory matches the control
 //!   bit for bit.
+//! * `showdown [...]` — the paper's memory/accuracy claim at the CLI:
+//!   sweeps (method × task × memory budget) from one config, trains
+//!   every cell with the minibatch trainer and emits one
+//!   schema-versioned JSON record per cell (`--json`, `--out PATH`).
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
 //!   benchmark the partitioner pipeline; defaults to the acceptance
 //!   SBM (n = 50k, 32 communities).
@@ -56,11 +63,11 @@
 use anyhow::{anyhow, bail, Result};
 use poshashemb::bench_harness::{
     bench_compose, bench_minibatch, bench_partition, bench_serve, print_table,
-    rows_from_outcomes, Harness, ServeBenchOptions,
+    rows_from_outcomes, run_showdown, Harness, ServeBenchOptions, ShowdownConfig,
 };
 use poshashemb::config::{full_grid, materialize, smoke_grid, write_aot_request};
 use poshashemb::coordinator::{
-    run_experiment, CheckpointConfig, MinibatchOptions, OptimizerKind, TrainOptions,
+    run_experiment, CheckpointConfig, MinibatchOptions, Objective, OptimizerKind, TrainOptions,
 };
 use poshashemb::data::{spec, Dataset, DATASET_NAMES};
 use poshashemb::embedding::{EmbeddingPlan, MethodSpec};
@@ -160,6 +167,8 @@ static COMMANDS: &[CommandSpec] = &[
             flag("experiment", Some("NAME"), "grid experiment name (fixes dataset + method)"),
             flag("dataset", Some("D"), "dataset name (default synth-arxiv)"),
             flag("method", Some("TAG"), "method tag, e.g. intra, inter(k=9,h=1) (default intra)"),
+            flag("task", Some("T"), "objective: nodeclass|linkpred|linkpred-hadamard"),
+            flag("neg", Some("N"), "negatives per positive edge (link prediction, default 3)"),
             flag("batch", Some("B"), "seeds per minibatch"),
             flag("fanout", Some("F|all"), "one-hop neighbor fanout"),
             flag("fanouts", Some("F1,F2,.."), "per-hop fanouts; list length = head depth"),
@@ -198,6 +207,28 @@ static COMMANDS: &[CommandSpec] = &[
             flag("checkpoint-every", Some("N"), "victim checkpoint period in steps (default 2)"),
             flag("serial", None, "run all three trainers on the serial oracle path"),
             flag("dir", Some("DIR"), "use (and keep) DIR for checkpoints instead of a temp dir"),
+        ],
+    },
+    CommandSpec {
+        name: "showdown",
+        positional: None,
+        about: "sweep (method x task x memory budget); one JSON record per cell",
+        flags: &[
+            flag("dataset", Some("D"), "dataset name (default synth-arxiv)"),
+            flag("methods", Some("M1,M2,.."), "method tags to budget-fit (default full,uhash,doublehash,hashemb,intra)"),
+            flag("tasks", Some("T1,T2,.."), "objectives to sweep (default nodeclass,linkpred)"),
+            flag("budgets", Some("F1,F2,.."), "memory budgets as fractions of full n*d (default 0.25,0.0833)"),
+            flag("neg", Some("N"), "negatives per positive edge for linkpred tasks (default 3)"),
+            flag("epochs", Some("N"), "training epochs per cell (default 5)"),
+            flag("batch", Some("B"), "seeds per minibatch (default 128)"),
+            flag("fanouts", Some("F1,F2,.."), "per-hop fanouts; list length = head depth (default 10,5)"),
+            flag("hidden", Some("W"), "head hidden width / linkpred embedding width (default 32)"),
+            flag("seed", Some("S"), "random seed (default 0)"),
+            flag("nodes", Some("N"), "override the synthetic dataset's node count"),
+            flag("dim", Some("D"), "override the embedding dimension"),
+            flag("out", Some("PATH"), "also write the records to PATH as JSON"),
+            flag("verbose", None, "per-epoch progress lines from every cell"),
+            flag("json", None, "emit the records to stdout as JSON"),
         ],
     },
     CommandSpec {
@@ -395,6 +426,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&parsed),
         "train-minibatch" => cmd_train_minibatch(&parsed),
         "crash-test" => cmd_crash_test(&parsed),
+        "showdown" => cmd_showdown(&parsed),
         "experiment" => cmd_experiment(&parsed),
         "compose" => cmd_compose(&parsed),
         "partition-bench" => cmd_partition_bench(&parsed),
@@ -631,6 +663,24 @@ fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
             bail!("--hidden must be >= 1");
         }
     }
+    if let Some(t) = args.get("task") {
+        let obj = Objective::parse(t).map_err(|e| anyhow!(e))?;
+        if args.has("neg") && !obj.is_link() {
+            bail!("--neg only applies to link-prediction tasks");
+        }
+        let neg: usize = args.parse_as("neg")?.unwrap_or(3);
+        if neg == 0 {
+            bail!("--neg must be >= 1");
+        }
+        if obj.is_link() && opts.hidden == 0 {
+            // link prediction embeds nodes at the head's hidden width;
+            // give unflagged runs a working default instead of a bail
+            opts.hidden = 32;
+        }
+        opts.objective = obj.with_neg_per_pos(neg);
+    } else if args.has("neg") {
+        bail!("--neg needs --task linkpred or --task linkpred-hadamard");
+    }
     if args.has("no-shuffle") {
         cfg.shuffle = false;
     }
@@ -829,6 +879,94 @@ fn cmd_crash_test(args: &CliArgs) -> Result<()> {
          bit-identical to the uninterrupted control",
         control_losses.len()
     );
+    Ok(())
+}
+
+/// The paper's memory/accuracy claim at the CLI: sweep a
+/// (method × task × memory-budget) grid with the minibatch trainer and
+/// emit one schema-versioned record per cell (see
+/// `bench_harness::run_showdown`).
+fn cmd_showdown(args: &CliArgs) -> Result<()> {
+    let mut cfg = ShowdownConfig::default();
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(m) = args.get("methods") {
+        cfg.methods =
+            m.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect();
+    }
+    let neg: usize = args.parse_as("neg")?.unwrap_or(3);
+    if neg == 0 {
+        bail!("--neg must be >= 1");
+    }
+    let tasks = match args.get("tasks") {
+        Some(t) => t
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| Objective::parse(s).map_err(|e| anyhow!(e)))
+            .collect::<Result<Vec<_>>>()?,
+        None => cfg.tasks,
+    };
+    cfg.tasks = tasks.into_iter().map(|o| o.with_neg_per_pos(neg)).collect();
+    if let Some(b) = args.get("budgets") {
+        cfg.budgets = b
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>().map_err(|e| anyhow!("--budgets '{s}': {e}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(e) = args.parse_as("epochs")? {
+        cfg.epochs = e;
+    }
+    if let Some(b) = args.parse_as("batch")? {
+        cfg.batch_size = b;
+        if cfg.batch_size == 0 {
+            bail!("--batch must be >= 1");
+        }
+    }
+    if let Some(f) = args.get("fanouts") {
+        cfg.fanouts = Fanouts::parse(f).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(w) = args.parse_as("hidden")? {
+        cfg.hidden = w;
+        if cfg.hidden == 0 {
+            bail!("--hidden must be >= 1");
+        }
+    }
+    if let Some(s) = args.parse_as("seed")? {
+        cfg.seed = s;
+    }
+    cfg.nodes = args.parse_as("nodes")?;
+    cfg.dim = args.parse_as("dim")?;
+    cfg.verbose = args.has("verbose");
+    eprintln!(
+        "showdown: {} methods=[{}] tasks=[{}] budgets={:?} epochs={} batch={} fanouts={}",
+        cfg.dataset,
+        cfg.methods.join(","),
+        cfg.tasks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","),
+        cfg.budgets,
+        cfg.epochs,
+        cfg.batch_size,
+        cfg.fanouts
+    );
+    let records = run_showdown(&cfg)?;
+    let json = serde_json::to_string_pretty(&records)?;
+    if let Some(path) = args.get("out") {
+        if let Some(parent) = Path::new(path).parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &json)?;
+        eprintln!("wrote {} records to {path}", records.len());
+    }
+    if args.has("json") {
+        println!("{json}");
+    } else {
+        for r in &records {
+            println!("{}", r.row());
+        }
+    }
     Ok(())
 }
 

@@ -1,6 +1,7 @@
 //! Evaluation metrics: accuracy (arxiv/products) and ROC-AUC
 //! (proteins, mean over binary tasks) — the paper's Table II metrics —
-//! plus mean/std aggregation for the `x.xxx ± y.yyy` rows.
+//! plus the link-prediction pair ([`binary_auc`], [`hits_at_k`]) and
+//! mean/std aggregation for the `x.xxx ± y.yyy` rows.
 
 /// Classification accuracy from logits (`rows × classes`, row-major) over
 /// the node ids in `fold`.
@@ -56,6 +57,61 @@ pub fn mean_roc_auc(scores: &[f32], tasks: usize, labels: &[u32], fold: &[u32]) 
     }
     assert!(counted > 0, "no scorable task");
     total / counted as f64
+}
+
+/// Binary ROC-AUC between a positive and a negative score set — the
+/// rank-based Mann–Whitney U estimator with midrank tie handling, i.e.
+/// the probability a uniformly drawn positive outscores a uniformly
+/// drawn negative (ties count half). The degenerate all-one-class case
+/// (either side empty) scores 0.5, the random-classifier convention —
+/// no ordering information exists to reward or punish.
+pub fn binary_auc(pos: &[f32], neg: &[f32]) -> f64 {
+    if pos.is_empty() || neg.is_empty() {
+        return 0.5;
+    }
+    let mut pairs: Vec<(f32, bool)> = pos
+        .iter()
+        .map(|&s| (s, true))
+        .chain(neg.iter().map(|&s| (s, false)))
+        .collect();
+    pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut rank_sum_pos = 0f64;
+    let mut i = 0usize;
+    while i < pairs.len() {
+        let mut j = i;
+        while j + 1 < pairs.len() && pairs[j + 1].0 == pairs[i].0 {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0;
+        for p in &pairs[i..=j] {
+            if p.1 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let np = pos.len() as f64;
+    let nn = neg.len() as f64;
+    (rank_sum_pos - np * (np + 1.0) / 2.0) / (np * nn)
+}
+
+/// OGB-style hits@k: the fraction of positives scored **strictly**
+/// above the k-th highest negative (ties with the threshold do not
+/// count — a positive must beat it outright). Fewer than `k` negatives
+/// means no negative can block the k-th slot, so every positive is a
+/// hit (the OGB convention); `k = 0` offers no slots at all.
+pub fn hits_at_k(pos: &[f32], neg: &[f32], k: usize) -> f64 {
+    assert!(!pos.is_empty(), "no positive edges to rank");
+    if k == 0 {
+        return 0.0;
+    }
+    if neg.len() < k {
+        return 1.0;
+    }
+    let mut ns = neg.to_vec();
+    ns.sort_by(|a, b| b.total_cmp(a));
+    let threshold = ns[k - 1];
+    pos.iter().filter(|&&s| s > threshold).count() as f64 / pos.len() as f64
 }
 
 /// Index of the max element (first on ties).
@@ -143,6 +199,61 @@ mod tests {
         let fold = [0, 1];
         let auc = mean_roc_auc(&scores, 2, &labels, &fold);
         assert!((auc - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binary_auc_golden_values() {
+        // perfect separation
+        assert!((binary_auc(&[0.8, 0.9], &[0.1, 0.2]) - 1.0).abs() < 1e-9);
+        // perfectly wrong
+        assert!((binary_auc(&[0.1, 0.2], &[0.8, 0.9]) - 0.0).abs() < 1e-9);
+        // hand-computed: pos {3,6,7,8}, neg {1,2,4,5} of ranks 1..8 →
+        // 14 winning pairs of 16 = 0.875 (same case mean_roc_auc pins)
+        let auc = binary_auc(&[3., 6., 7., 8.], &[1., 2., 4., 5.]);
+        assert!((auc - 0.875).abs() < 1e-9);
+        // one positive, one negative, different scores
+        assert!((binary_auc(&[2.0], &[1.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binary_auc_ties_use_midranks() {
+        // all scores equal → every pair ties → 0.5
+        assert!((binary_auc(&[0.5, 0.5], &[0.5, 0.5]) - 0.5).abs() < 1e-9);
+        // pos {1, 2}, neg {1, 0}: pairs (1v1 tie=0.5) (1v0 win) (2v1 win)
+        // (2v0 win) → 3.5 / 4 = 0.875
+        let auc = binary_auc(&[1.0, 2.0], &[1.0, 0.0]);
+        assert!((auc - 0.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binary_auc_degenerate_folds_score_half() {
+        assert!((binary_auc(&[], &[1.0, 2.0]) - 0.5).abs() < 1e-9);
+        assert!((binary_auc(&[1.0, 2.0], &[]) - 0.5).abs() < 1e-9);
+        assert!((binary_auc(&[], &[]) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hits_at_k_golden_values() {
+        let pos = [0.9, 0.6, 0.3, 0.1];
+        let neg = [0.5, 0.4, 0.2];
+        // k=1: threshold 0.5 → only 0.9 and 0.6 beat it → 2/4
+        assert!((hits_at_k(&pos, &neg, 1) - 0.5).abs() < 1e-9);
+        // k=2: threshold 0.4 → same two → 2/4
+        assert!((hits_at_k(&pos, &neg, 2) - 0.5).abs() < 1e-9);
+        // k=3: threshold 0.2 → 0.9, 0.6, 0.3 → 3/4
+        assert!((hits_at_k(&pos, &neg, 3) - 0.75).abs() < 1e-9);
+        // k beyond the negative count: every positive is a hit
+        assert!((hits_at_k(&pos, &neg, 4) - 1.0).abs() < 1e-9);
+        assert!((hits_at_k(&pos, &[], 50) - 1.0).abs() < 1e-9);
+        // k=0: no slots
+        assert!(hits_at_k(&pos, &neg, 0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hits_at_k_ties_do_not_count() {
+        // positive tied with the threshold is not strictly above it
+        assert!(hits_at_k(&[0.5], &[0.5], 1).abs() < 1e-9);
+        assert!((hits_at_k(&[0.6, 0.5], &[0.5], 1) - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! Link-prediction data path: held-out edge splits, deterministic
+//! positive-edge batching and seeded negative sampling.
+//!
+//! The link-prediction objective (per Hashing-Accelerated GNNs for Link
+//! Prediction, Wu 2021) trains on *edges* instead of labeled nodes: a
+//! batch is a slice of held-out positive edges plus `neg_per_pos`
+//! corrupted negatives per positive, and the batch's seed set — the
+//! unique endpoints — feeds the exact same multi-hop sampler / compose
+//! engine / SAGE head the node-classification path uses.
+//!
+//! **Determinism invariant.** Everything here is a pure function of its
+//! coordinates, mirroring [`SeedBatcher`](super::SeedBatcher): the edge
+//! split is keyed by its seed, the per-epoch positive order by
+//! `(seed, epoch)`, and every negative draw by
+//! `(seed, epoch, batch, edge index)` via [`mix_seed`](super::mix_seed)
+//! — so batch `(epoch, i)` can be recomputed identically on the
+//! prefetch thread, the training thread and in tests, at any rayon
+//! thread count (`rust/tests/link_prediction.rs` pins this at 1 vs 4
+//! threads).
+//!
+//! **Negatives are never true edges.** A negative keeps one endpoint of
+//! its positive (tail corruption first, head as fallback) and draws the
+//! other uniformly, rejecting graph edges by binary search over the
+//! CSR's sorted adjacency rows; after a bounded number of rejected
+//! draws it falls back to a deterministic sweep, so sampling terminates
+//! whenever the anchor has any non-neighbor at all.
+
+use super::{mix_seed, SeedBatcher};
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Stream-seed domain tag for the edge split's shuffle.
+const SPLIT_STREAM_TAG: u64 = 0xED6E_5;
+/// Stream-seed domain tag for the per-epoch positive-edge order.
+const ORDER_STREAM_TAG: u64 = 0xE0_DA7;
+/// Stream-seed domain tag for negative draws.
+const NEG_STREAM_TAG: u64 = 0x6E6_A7;
+/// Rejection draws per anchor before the deterministic sweep kicks in.
+const NEG_REJECTION_TRIES: usize = 64;
+
+/// A held-out edge split: train/val/test partitions of the graph's
+/// undirected edge set (each edge stored once, `u < v`).
+///
+/// The split holds edges out of the *loss*, not out of message passing:
+/// the graph every method trains on is identical, so a showdown between
+/// embedding methods compares like with like (and the sampler, compose
+/// engine and serving path stay untouched).
+#[derive(Debug, Clone)]
+pub struct EdgeSplit {
+    /// Training positives (the [`EdgeBatcher`]'s edge pool).
+    pub train: Vec<(u32, u32)>,
+    /// Validation positives.
+    pub val: Vec<(u32, u32)>,
+    /// Test positives.
+    pub test: Vec<(u32, u32)>,
+}
+
+impl EdgeSplit {
+    /// Partition `graph`'s undirected edges into train/val/test by a
+    /// Fisher–Yates shuffle keyed by `seed` (val takes the first
+    /// `val_frac` of the shuffled order, test the next `test_frac`,
+    /// train the rest). Pure in `(graph, fractions, seed)`.
+    pub fn build(graph: &CsrGraph, val_frac: f64, test_frac: f64, seed: u64) -> Self {
+        assert!(val_frac >= 0.0 && test_frac >= 0.0 && val_frac + test_frac < 1.0);
+        let mut edges: Vec<(u32, u32)> = Vec::with_capacity(graph.num_edges());
+        for u in 0..graph.num_nodes() as u32 {
+            for &v in graph.neighbors(u) {
+                if u < v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let mut rng = Rng::seed_from_u64(mix_seed(&[seed, SPLIT_STREAM_TAG]));
+        rng.shuffle(&mut edges);
+        let m = edges.len();
+        let nv = (m as f64 * val_frac).round() as usize;
+        let nt = (m as f64 * test_frac).round() as usize;
+        let val = edges[..nv].to_vec();
+        let test = edges[nv..nv + nt].to_vec();
+        let train = edges[nv + nt..].to_vec();
+        EdgeSplit { train, val, test }
+    }
+
+    /// Total edges across all three folds.
+    pub fn num_edges(&self) -> usize {
+        self.train.len() + self.val.len() + self.test.len()
+    }
+}
+
+/// One link-prediction minibatch: positives, their sampled negatives,
+/// and the unique-endpoint seed set the GNN composes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EdgeBatch {
+    /// Positive edges (global node ids).
+    pub pos: Vec<(u32, u32)>,
+    /// Sampled negatives, `neg_per_pos` per positive in positive order.
+    pub neg: Vec<(u32, u32)>,
+    /// Unique endpoints of `pos ∪ neg`, first-occurrence order — the
+    /// seed list handed to the neighbor sampler (distinct by
+    /// construction, as [`NeighborSampler`](super::NeighborSampler)
+    /// requires).
+    pub seeds: Vec<u32>,
+    /// `pos` re-indexed into `seeds` (local row pairs).
+    pub pos_local: Vec<(u32, u32)>,
+    /// `neg` re-indexed into `seeds`.
+    pub neg_local: Vec<(u32, u32)>,
+}
+
+impl EdgeBatch {
+    /// Total scored edges (positives + negatives).
+    pub fn num_edges(&self) -> usize {
+        self.pos.len() + self.neg.len()
+    }
+
+    fn from_edges(pos: Vec<(u32, u32)>, neg: Vec<(u32, u32)>) -> Self {
+        let mut local: HashMap<u32, u32> = HashMap::with_capacity(2 * (pos.len() + neg.len()));
+        let mut seeds: Vec<u32> = Vec::new();
+        let mut localize = |e: &(u32, u32)| -> (u32, u32) {
+            let mut row = |w: u32| -> u32 {
+                *local.entry(w).or_insert_with(|| {
+                    seeds.push(w);
+                    seeds.len() as u32 - 1
+                })
+            };
+            (row(e.0), row(e.1))
+        };
+        let pos_local: Vec<(u32, u32)> = pos.iter().map(&mut localize).collect();
+        let neg_local: Vec<(u32, u32)> = neg.iter().map(&mut localize).collect();
+        EdgeBatch { pos, neg, seeds, pos_local, neg_local }
+    }
+}
+
+/// Sample one negative for the positive `(u, v)`: keep an anchor
+/// endpoint (tail first, head as fallback) and draw the other uniformly
+/// until it is neither the anchor nor one of its graph neighbors. After
+/// [`NEG_REJECTION_TRIES`] rejected draws the search falls back to a
+/// deterministic wrap-around sweep from a random start, so it
+/// terminates whenever the anchor has any non-neighbor.
+///
+/// The returned pair is normalized `min ≤ max`; by construction it is
+/// never an edge of `graph`.
+pub fn sample_negative(graph: &CsrGraph, rng: &mut Rng, (u, v): (u32, u32)) -> (u32, u32) {
+    let n = graph.num_nodes() as u32;
+    for anchor in [u, v] {
+        let adj = graph.neighbors(anchor);
+        for _ in 0..NEG_REJECTION_TRIES {
+            let w = rng.gen_range(n as usize) as u32;
+            if w != anchor && adj.binary_search(&w).is_err() {
+                return (anchor.min(w), anchor.max(w));
+            }
+        }
+        let start = rng.gen_range(n as usize) as u32;
+        for off in 0..n {
+            let w = (start + off) % n;
+            if w != anchor && adj.binary_search(&w).is_err() {
+                return (anchor.min(w), anchor.max(w));
+            }
+        }
+    }
+    panic!("cannot sample a negative edge: graph is complete");
+}
+
+/// Splits a fixed positive-edge pool (normally [`EdgeSplit::train`])
+/// into per-epoch link-prediction batches, attaching `neg_per_pos`
+/// seeded negatives per positive.
+///
+/// Like [`SeedBatcher`], every batch is a pure function of
+/// `(stream seed, epoch, batch)` — no hidden iterator state — so the
+/// prefetch thread's seed lists and the trainer's edge lists are
+/// recomputed independently yet always agree.
+#[derive(Debug, Clone)]
+pub struct EdgeBatcher {
+    edges: Vec<(u32, u32)>,
+    batch_size: usize,
+    shuffle: bool,
+    neg_per_pos: usize,
+    seed: u64,
+}
+
+impl EdgeBatcher {
+    /// Batcher over `edges` with `batch_size` positives per batch.
+    /// `seed` keys the epoch shuffles and all negative draws.
+    pub fn new(
+        edges: &[(u32, u32)],
+        batch_size: usize,
+        shuffle: bool,
+        neg_per_pos: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(batch_size >= 1, "batch_size must be >= 1");
+        assert!(!edges.is_empty(), "no positive edges to batch");
+        assert!(neg_per_pos >= 1, "at least one negative per positive required");
+        EdgeBatcher { edges: edges.to_vec(), batch_size, shuffle, neg_per_pos, seed }
+    }
+
+    /// Total positive edges per epoch.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Negatives sampled per positive.
+    pub fn neg_per_pos(&self) -> usize {
+        self.neg_per_pos
+    }
+
+    /// Batches per epoch (last batch may be ragged).
+    pub fn num_batches(&self) -> usize {
+        self.edges.len().div_ceil(self.batch_size)
+    }
+
+    /// One epoch's positive-edge order: the pool order with `shuffle`
+    /// off, a Fisher–Yates shuffle keyed by `(seed, epoch)` with it on.
+    fn epoch_order(&self, epoch: usize) -> Vec<(u32, u32)> {
+        let mut edges = self.edges.clone();
+        if self.shuffle {
+            let mut rng =
+                Rng::seed_from_u64(mix_seed(&[self.seed, epoch as u64, ORDER_STREAM_TAG]));
+            rng.shuffle(&mut edges);
+        }
+        edges
+    }
+
+    /// Materialize batch `(epoch, bi)`: its positives, its negatives
+    /// (one RNG stream per `(seed, epoch, batch, edge index)` draw,
+    /// rejected against `graph`) and the localized seed set.
+    pub fn batch(&self, graph: &CsrGraph, epoch: usize, bi: usize) -> EdgeBatch {
+        let ordered = self.epoch_order(epoch);
+        let lo = bi * self.batch_size;
+        let hi = (lo + self.batch_size).min(ordered.len());
+        assert!(lo < hi, "batch index {bi} out of range (epoch has {} batches)", self.num_batches());
+        let pos = ordered[lo..hi].to_vec();
+        let mut neg = Vec::with_capacity(pos.len() * self.neg_per_pos);
+        for (i, &e) in pos.iter().enumerate() {
+            for t in 0..self.neg_per_pos {
+                let draw = (i * self.neg_per_pos + t) as u64;
+                let mut rng = Rng::seed_from_u64(mix_seed(&[
+                    self.seed,
+                    epoch as u64,
+                    bi as u64,
+                    draw,
+                    NEG_STREAM_TAG,
+                ]));
+                neg.push(sample_negative(graph, &mut rng, e));
+            }
+        }
+        EdgeBatch::from_edges(pos, neg)
+    }
+
+    /// The seed lists of one epoch's batches — what the prefetch thread
+    /// hands the neighbor sampler (bit-identical to the seed sets the
+    /// trainer recomputes via [`batch`](EdgeBatcher::batch)).
+    pub fn epoch_seed_batches(&self, graph: &CsrGraph, epoch: usize) -> Vec<Vec<u32>> {
+        (0..self.num_batches()).map(|bi| self.batch(graph, epoch, bi).seeds).collect()
+    }
+}
+
+/// What drives the epoch/batch schedule: labeled seed nodes (node
+/// classification) or held-out positive edges (link prediction). Both
+/// trainer paths and the [`BlockPrefetcher`](super::BlockPrefetcher)
+/// consume this one interface, so prefetching, checkpoint cursors and
+/// the pipelined engine work unchanged under either objective.
+#[derive(Debug, Clone)]
+pub enum SeedSource {
+    /// Node-classification batches over a train split.
+    Nodes(SeedBatcher),
+    /// Link-prediction batches over a train edge pool.
+    Edges(EdgeBatcher),
+}
+
+impl SeedSource {
+    /// Batches per epoch.
+    pub fn num_batches(&self) -> usize {
+        match self {
+            SeedSource::Nodes(b) => b.num_batches(),
+            SeedSource::Edges(b) => b.num_batches(),
+        }
+    }
+
+    /// Schedule units per epoch: seed nodes (node classification) or
+    /// positive edges (link prediction).
+    pub fn num_seeds(&self) -> usize {
+        match self {
+            SeedSource::Nodes(b) => b.num_seeds(),
+            SeedSource::Edges(b) => b.num_edges(),
+        }
+    }
+
+    /// One epoch's per-batch seed lists (each list holds distinct node
+    /// ids, as the neighbor sampler requires). The graph is only
+    /// consulted by the edge source (negative-draw rejection).
+    pub fn epoch_batches(&self, graph: &CsrGraph, epoch: usize) -> Vec<Vec<u32>> {
+        match self {
+            SeedSource::Nodes(b) => b.epoch_batches(epoch),
+            SeedSource::Edges(b) => b.epoch_seed_batches(graph, epoch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn ring(n: usize) -> CsrGraph {
+        let mut b = GraphBuilder::new(n);
+        for u in 0..n as u32 {
+            b.add_edge(u, (u + 1) % n as u32, 1.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn split_partitions_the_edge_set() {
+        let g = ring(50); // 50 undirected edges
+        let s = EdgeSplit::build(&g, 0.1, 0.2, 7);
+        assert_eq!(s.num_edges(), 50);
+        assert_eq!(s.val.len(), 5);
+        assert_eq!(s.test.len(), 10);
+        assert_eq!(s.train.len(), 35);
+        let mut all: Vec<(u32, u32)> = Vec::new();
+        all.extend(&s.train);
+        all.extend(&s.val);
+        all.extend(&s.test);
+        for &(u, v) in &all {
+            assert!(u < v, "edges stored once, low endpoint first");
+            assert!(g.neighbors(u).binary_search(&v).is_ok(), "({u},{v}) is a real edge");
+        }
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 50, "folds are disjoint and cover every edge");
+        // deterministic per seed, different across seeds
+        let s2 = EdgeSplit::build(&g, 0.1, 0.2, 7);
+        assert_eq!(s.train, s2.train);
+        let s3 = EdgeSplit::build(&g, 0.1, 0.2, 8);
+        assert_ne!(s.train, s3.train);
+    }
+
+    #[test]
+    fn negatives_are_never_true_edges() {
+        let g = ring(20);
+        let mut rng = Rng::seed_from_u64(3);
+        for i in 0..200u32 {
+            let u = i % 20;
+            let pos = (u, (u + 1) % 20);
+            let (a, b) = sample_negative(&g, &mut rng, pos);
+            assert!(a <= b);
+            assert_ne!(a, b);
+            assert!(g.neighbors(a).binary_search(&b).is_err(), "({a},{b}) is a true edge");
+        }
+    }
+
+    #[test]
+    fn negative_sweep_fallback_terminates_on_dense_anchors() {
+        // K4 minus one edge: node 0 is adjacent to 1 and 2 but not 3,
+        // so the only valid negative anchored anywhere is (0, 3).
+        let mut b = GraphBuilder::new(4);
+        for (u, v) in [(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)] {
+            b.add_edge(u, v, 1.0);
+        }
+        let g = b.build();
+        let mut rng = Rng::seed_from_u64(0);
+        for _ in 0..50 {
+            assert_eq!(sample_negative(&g, &mut rng, (0, 1)), (0, 3));
+        }
+    }
+
+    #[test]
+    fn batches_are_pure_functions_of_their_coordinates() {
+        let g = ring(40);
+        let s = EdgeSplit::build(&g, 0.1, 0.1, 1);
+        let b = EdgeBatcher::new(&s.train, 8, true, 2, 99);
+        assert_eq!(b.num_batches(), s.train.len().div_ceil(8));
+        let x = b.batch(&g, 3, 1);
+        let y = b.batch(&g, 3, 1);
+        assert_eq!(x, y, "same coordinates, same batch");
+        assert_eq!(x.neg.len(), x.pos.len() * 2);
+        for &(u, v) in &x.neg {
+            assert!(g.neighbors(u).binary_search(&v).is_err());
+        }
+        // one epoch's batches partition the pool; epochs reshuffle it
+        let epoch_pos = |e: usize| -> Vec<(u32, u32)> {
+            (0..b.num_batches()).flat_map(|bi| b.batch(&g, e, bi).pos).collect()
+        };
+        let (e3, e4) = (epoch_pos(3), epoch_pos(4));
+        let mut sorted = e3.clone();
+        sorted.sort_unstable();
+        let mut pool = s.train.clone();
+        pool.sort_unstable();
+        assert_eq!(sorted, pool, "epoch batches partition the train pool");
+        assert_ne!(e3, e4, "epochs reshuffle");
+    }
+
+    #[test]
+    fn seed_lists_localize_consistently() {
+        let g = ring(30);
+        let s = EdgeSplit::build(&g, 0.0, 0.0, 5);
+        let b = EdgeBatcher::new(&s.train, 6, true, 1, 11);
+        let eb = b.batch(&g, 0, 0);
+        // seeds are distinct and local pairs map back to global edges
+        let mut sorted = eb.seeds.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), eb.seeds.len(), "seed list has duplicates");
+        for (&(u, v), &(a, bb)) in eb.pos.iter().zip(&eb.pos_local) {
+            assert_eq!(eb.seeds[a as usize], u);
+            assert_eq!(eb.seeds[bb as usize], v);
+        }
+        for (&(u, v), &(a, bb)) in eb.neg.iter().zip(&eb.neg_local) {
+            assert_eq!(eb.seeds[a as usize], u);
+            assert_eq!(eb.seeds[bb as usize], v);
+        }
+        // the prefetcher's seed lists match the trainer's recomputation
+        let lists = b.epoch_seed_batches(&g, 0);
+        assert_eq!(lists[0], eb.seeds);
+        assert_eq!(lists.len(), b.num_batches());
+    }
+
+    #[test]
+    fn no_shuffle_preserves_pool_order() {
+        let g = ring(24);
+        let s = EdgeSplit::build(&g, 0.0, 0.0, 2);
+        let b = EdgeBatcher::new(&s.train, 5, false, 1, 0);
+        let e0 = b.batch(&g, 0, 0);
+        let e7 = b.batch(&g, 7, 0);
+        assert_eq!(e0.pos, e7.pos, "no shuffle: every epoch walks the pool order");
+        assert_eq!(e0.pos[..], s.train[..5]);
+    }
+}

@@ -32,10 +32,12 @@
 //! equivalence the minibatch trainer is tested against.
 
 mod batcher;
+mod edges;
 mod neighbor;
 mod prefetch;
 
 pub use batcher::SeedBatcher;
+pub use edges::{sample_negative, EdgeBatch, EdgeBatcher, EdgeSplit, SeedSource};
 pub use neighbor::{MultiHopBlock, NeighborSampler, SampledBlock};
 pub use prefetch::{BlockPrefetcher, PrefetchError};
 

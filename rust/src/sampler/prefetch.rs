@@ -29,7 +29,7 @@
 //!
 //! [`recv`]: BlockPrefetcher::recv
 
-use super::{Fanouts, MultiHopBlock, NeighborSampler, SeedBatcher};
+use super::{Fanouts, MultiHopBlock, NeighborSampler, SeedSource};
 use crate::graph::CsrGraph;
 use crate::util::fault;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -107,7 +107,7 @@ impl BlockPrefetcher {
     pub fn spawn<'scope, 'env>(
         scope: &'scope Scope<'scope, 'env>,
         graph: &'env CsrGraph,
-        batcher: SeedBatcher,
+        source: SeedSource,
         fanouts: Fanouts,
         stream_seed: u64,
         epochs: usize,
@@ -119,7 +119,7 @@ impl BlockPrefetcher {
         scope.spawn(move || {
             let mut sampler = NeighborSampler::multi_hop(graph, &fanouts, stream_seed);
             for epoch in start.0..epochs {
-                let batches = batcher.epoch_batches(epoch);
+                let batches = source.epoch_batches(graph, epoch);
                 let skip = if epoch == start.0 { start.1 } else { 0 };
                 for (bi, seeds) in batches.iter().enumerate().skip(skip) {
                     // recycle a stepped block's buffers when one is back
@@ -176,7 +176,7 @@ impl BlockPrefetcher {
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
-    use crate::sampler::Fanout;
+    use crate::sampler::{Fanout, SeedBatcher};
 
     fn ring(n: usize) -> CsrGraph {
         let mut b = GraphBuilder::new(n);
@@ -203,7 +203,7 @@ mod tests {
             }
             for depth in [1usize, 2, 7] {
                 let mut streamed = Vec::new();
-                let b = batcher.clone();
+                let b = SeedSource::Nodes(batcher.clone());
                 let f = fanouts.clone();
                 std::thread::scope(|scope| {
                     let pf = BlockPrefetcher::spawn(scope, &g, b, f, seed, epochs, (0, 0), depth);
@@ -238,7 +238,7 @@ mod tests {
         for start in [(0usize, 0usize), (0, 3), (1, 0), (1, 2), (2, per_epoch - 1)] {
             let expect = &inline[start.0 * per_epoch + start.1..];
             let mut streamed = Vec::new();
-            let b = batcher.clone();
+            let b = SeedSource::Nodes(batcher.clone());
             let f = fanouts.clone();
             std::thread::scope(|scope| {
                 let pf = BlockPrefetcher::spawn(scope, &g, b, f, seed, epochs, start, 2);
@@ -258,7 +258,7 @@ mod tests {
         fault::arm("prefetch.handover=3").unwrap();
         let g = ring(32);
         let ids: Vec<u32> = (0..32).collect();
-        let batcher = SeedBatcher::new(&ids, 8, false, 0); // 4 batches/epoch
+        let batcher = SeedSource::Nodes(SeedBatcher::new(&ids, 8, false, 0)); // 4 batches/epoch
         std::thread::scope(|scope| {
             let pf = BlockPrefetcher::spawn(scope, &g, batcher, Fanouts::all(2), 1, 2, (0, 0), 2);
             assert!(pf.recv().is_ok(), "batch (0,0) precedes the fault");
@@ -280,7 +280,7 @@ mod tests {
     fn dropping_the_stream_mid_run_stops_the_sampler_cleanly() {
         let g = ring(32);
         let ids: Vec<u32> = (0..32).collect();
-        let batcher = SeedBatcher::new(&ids, 4, false, 0);
+        let batcher = SeedSource::Nodes(SeedBatcher::new(&ids, 4, false, 0));
         std::thread::scope(|scope| {
             let pf = BlockPrefetcher::spawn(scope, &g, batcher, Fanouts::all(2), 1, 50, (0, 0), 2);
             let first = pf.recv().expect("first block");

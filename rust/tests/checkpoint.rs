@@ -10,7 +10,9 @@
 //! so an armed `trainer.step` fault in one test must never leak hits
 //! into a concurrently running control trainer of another.
 
-use poshashemb::coordinator::{CheckpointConfig, MinibatchOptions, MinibatchTrainer, OptimizerKind};
+use poshashemb::coordinator::{
+    CheckpointConfig, EdgeDecoder, MinibatchOptions, MinibatchTrainer, Objective, OptimizerKind,
+};
 use poshashemb::data::{spec, Dataset};
 use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan, ParamStore};
 use poshashemb::partition::{Hierarchy, HierarchyConfig};
@@ -122,6 +124,77 @@ fn killed_and_resumed_training_is_bit_identical_to_uninterrupted() {
         assert_eq!(resumed_out.test_metric, control_out.test_metric, "{label}: test metric");
         assert_eq!(param_bits(resumed.params()), param_bits(control.params()), "{label}: tables");
     }
+}
+
+#[test]
+fn killed_and_resumed_link_prediction_is_bit_identical_to_uninterrupted() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let (ds, plan) = build(420);
+    // LP shares the checkpoint machinery wholesale (RunKey carries the
+    // objective; edge_w/edge_b live in the ParamStore), so kill/resume
+    // parity must hold under it too — pipelined and serial.
+    let runs = [(OptimizerKind::Adam, true), (OptimizerKind::Sgd, false)];
+    for (optimizer, parallel) in runs {
+        let label = format!("lp {optimizer:?} parallel={parallel}");
+        let lp_opts = |checkpoint: Option<CheckpointConfig>, resume: bool| {
+            let mut o = opts(optimizer, parallel, checkpoint, resume);
+            o.objective =
+                Objective::LinkPrediction { decoder: EdgeDecoder::Hadamard, neg_per_pos: 2 };
+            o
+        };
+
+        // uninterrupted control
+        let mut control = MinibatchTrainer::new(&ds, &plan, cfg(), lp_opts(None, false)).unwrap();
+        let control_out = control.train().unwrap();
+
+        // victim: checkpoints every 3 steps, killed before its 8th step
+        let t = TempDir::new("ckpt-lp-parity").unwrap();
+        let ck = CheckpointConfig { dir: t.path().to_path_buf(), every: 3, keep: 0 };
+        let mut victim =
+            MinibatchTrainer::new(&ds, &plan, cfg(), lp_opts(Some(ck.clone()), false)).unwrap();
+        fault::arm("trainer.step=8").unwrap();
+        let err = victim.train().unwrap_err();
+        fault::reset();
+        assert!(format!("{err:#}").contains("injected fault"), "{label}: {err:#}");
+        assert!(!ckpt_names(t.path()).is_empty(), "{label}: victim left no checkpoint");
+
+        // resume from disk and train to completion
+        let mut resumed =
+            MinibatchTrainer::new(&ds, &plan, cfg(), lp_opts(Some(ck), true)).unwrap();
+        let resumed_out = resumed.train().unwrap();
+
+        assert_eq!(resumed_out.losses, control_out.losses, "{label}: loss trajectory");
+        assert_eq!(resumed_out.val_metric, control_out.val_metric, "{label}: val AUC");
+        assert_eq!(resumed_out.test_metric, control_out.test_metric, "{label}: test AUC");
+        assert_eq!(resumed_out.val_hits, control_out.val_hits, "{label}: val hits@k");
+        assert_eq!(resumed_out.test_hits, control_out.test_hits, "{label}: test hits@k");
+        assert_eq!(param_bits(resumed.params()), param_bits(control.params()), "{label}: tables");
+    }
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_a_different_objective() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let (ds, plan) = build(420);
+    let t = TempDir::new("ckpt-objkey").unwrap();
+    let ck = CheckpointConfig { dir: t.path().to_path_buf(), every: 2, keep: 0 };
+    // node-classification victim leaves checkpoints behind...
+    let mut victim =
+        MinibatchTrainer::new(&ds, &plan, cfg(), opts3(Some(ck.clone()), false)).unwrap();
+    fault::arm("trainer.step=5").unwrap();
+    victim.train().unwrap_err();
+    fault::reset();
+
+    // ...which a link-prediction run must refuse to resume from
+    let mut other = opts3(Some(ck), true);
+    other.objective = Objective::LinkPrediction { decoder: EdgeDecoder::Dot, neg_per_pos: 2 };
+    let mut tr = MinibatchTrainer::new(&ds, &plan, cfg(), other).unwrap();
+    let err = tr.train().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("different run"), "refusal names the cause: {msg}");
+    assert!(msg.contains("objective"), "refusal names the differing field: {msg}");
 }
 
 #[test]

@@ -1,0 +1,183 @@
+//! Link-prediction acceptance: property-based checks that (a) the
+//! seeded negative sampler never emits a true edge and is a pure
+//! function of `(seed, epoch, batch)` — rebuilding the batcher
+//! reproduces every batch bit for bit — and (b) the pipelined trainer
+//! under the link-prediction objective reproduces the serial oracle's
+//! loss trajectory **exactly** at 1 and 4 rayon threads, for SGD and
+//! Adam, for both edge decoders. Deterministic tests pin the evaluation
+//! metrics (AUC, hits@k) to be identical across execution modes too.
+//!
+//! Thread counts are varied with dedicated `rayon::ThreadPool`s rather
+//! than `RAYON_NUM_THREADS` (the global pool is process-wide and the
+//! test runner is itself parallel), mirroring `tests/parallel_train.rs`.
+
+use poshashemb::coordinator::{
+    EdgeDecoder, MinibatchOptions, MinibatchOutcome, MinibatchTrainer, Objective, OptimizerKind,
+};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{EdgeBatcher, EdgeSplit, Fanout, SamplerConfig};
+use proptest::prelude::*;
+
+fn in_pool<T: Send>(threads: usize, f: impl FnOnce() -> T + Send) -> T {
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("thread pool")
+        .install(f)
+}
+
+/// Shrunk synth-arxiv analog (same generator/splits as the seed tests).
+fn small_dataset(n: usize, d: usize) -> Dataset {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    Dataset::generate(&s)
+}
+
+/// One link-prediction training run under the given execution knobs.
+fn run_lp(
+    ds: &Dataset,
+    plan: &EmbeddingPlan,
+    cfg: &SamplerConfig,
+    decoder: EdgeDecoder,
+    optimizer: OptimizerKind,
+    parallel: bool,
+    prefetch: usize,
+) -> MinibatchOutcome {
+    let opts = MinibatchOptions {
+        epochs: 3,
+        lr: 0.03,
+        optimizer,
+        seed: 7,
+        parallel,
+        prefetch,
+        hidden: 16,
+        objective: Objective::LinkPrediction { decoder, neg_per_pos: 2 },
+        ..Default::default()
+    };
+    let mut tr = MinibatchTrainer::new(ds, plan, cfg.clone(), opts).unwrap();
+    tr.train().unwrap()
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(12))]
+
+    #[test]
+    fn sampled_negatives_are_never_true_edges_and_are_deterministic(
+        n in 200usize..500,
+        batch in 16usize..64,
+        neg in 1usize..4,
+        epoch in 0usize..3,
+        seed in 0u64..1000,
+    ) {
+        let ds = small_dataset(n, 16);
+        let split = EdgeSplit::build(&ds.graph, 0.05, 0.10, seed);
+        prop_assume!(!split.train.is_empty());
+        let batcher = EdgeBatcher::new(&split.train, batch, true, neg, seed);
+        // an independently rebuilt batcher must agree bit for bit —
+        // batches are pure functions of (seed, epoch, batch index)
+        let rebuilt = EdgeBatcher::new(&split.train, batch, true, neg, seed);
+        for bi in 0..batcher.num_batches().min(3) {
+            let eb = batcher.batch(&ds.graph, epoch, bi);
+            prop_assert_eq!(eb.neg.len(), eb.pos.len() * neg);
+            for &(u, v) in &eb.neg {
+                prop_assert!(u < v, "negatives are normalized (min, max): ({u}, {v})");
+                prop_assert!(
+                    ds.graph.neighbors(u).binary_search(&v).is_err(),
+                    "sampled negative ({u}, {v}) is a true edge"
+                );
+            }
+            let eb2 = rebuilt.batch(&ds.graph, epoch, bi);
+            prop_assert_eq!(&eb.pos, &eb2.pos, "positives (epoch {}, batch {})", epoch, bi);
+            prop_assert_eq!(&eb.neg, &eb2.neg, "negatives (epoch {}, batch {})", epoch, bi);
+            prop_assert_eq!(&eb.seeds, &eb2.seeds, "seed sets (epoch {}, batch {})", epoch, bi);
+            // the deduped seed set covers exactly the scored endpoints
+            for &(a, b) in eb.pos_local.iter().chain(&eb.neg_local) {
+                prop_assert!((a as usize) < eb.seeds.len() && (b as usize) < eb.seeds.len());
+            }
+        }
+    }
+
+    #[test]
+    fn lp_pipelined_training_reproduces_serial_oracle_exactly(
+        n in 300usize..600,
+        batch in 32usize..96,
+        fanout in 2usize..6,
+        adam in any::<bool>(),
+        hadamard in any::<bool>(),
+    ) {
+        // the LP acceptance pin: prefetched + parallel-backward training
+        // under the link-prediction objective must reproduce the serial
+        // trainer's loss trajectory EXACTLY (bit-for-bit f64 equality),
+        // at 1 and at 4 rayon threads, for both decoders.
+        let ds = small_dataset(n, 16);
+        let plan =
+            EmbeddingPlan::build(n, 16, &EmbeddingMethod::HashEmb { buckets: 48, h: 2 }, None, 3);
+        let cfg =
+            SamplerConfig { batch_size: batch, fanouts: Fanout::Max(fanout).into(), shuffle: true };
+        let decoder = if hadamard { EdgeDecoder::Hadamard } else { EdgeDecoder::Dot };
+        let optimizer = if adam { OptimizerKind::Adam } else { OptimizerKind::Sgd };
+        let serial = run_lp(&ds, &plan, &cfg, decoder, optimizer, false, 0).losses;
+        let piped1 = in_pool(1, || run_lp(&ds, &plan, &cfg, decoder, optimizer, true, 2).losses);
+        let piped4 = in_pool(4, || run_lp(&ds, &plan, &cfg, decoder, optimizer, true, 2).losses);
+        prop_assert_eq!(&piped1, &serial, "1-thread pipelined vs serial");
+        prop_assert_eq!(&piped4, &serial, "4-thread pipelined vs serial");
+    }
+}
+
+#[test]
+fn lp_metrics_match_between_serial_and_pipelined_with_position_method() {
+    // the paper method (position levels + intra pools + learned y)
+    // through the LP path: the whole outcome — losses, AUC and hits@k
+    // on both held-out folds — must be identical across execution modes.
+    let ds = small_dataset(450, 16);
+    let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 3));
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 3, compression: 5, h: 2 };
+    let plan = EmbeddingPlan::build(450, 16, &method, Some(&hier), 3);
+    let cfg = SamplerConfig { batch_size: 64, fanouts: Fanout::Max(5).into(), shuffle: true };
+    let serial = run_lp(&ds, &plan, &cfg, EdgeDecoder::Dot, OptimizerKind::Adam, false, 0);
+    let piped = in_pool(4, || run_lp(&ds, &plan, &cfg, EdgeDecoder::Dot, OptimizerKind::Adam, true, 2));
+    assert_eq!(piped.losses, serial.losses, "loss trajectory");
+    assert_eq!(piped.val_metric, serial.val_metric, "val AUC");
+    assert_eq!(piped.test_metric, serial.test_metric, "test AUC");
+    assert_eq!(piped.val_hits, serial.val_hits, "val hits@k");
+    assert_eq!(piped.test_hits, serial.test_hits, "test hits@k");
+    // sanity on ranges: AUC and hits@k are probabilities
+    assert!((0.0..=1.0).contains(&serial.test_metric), "AUC {}", serial.test_metric);
+    let hits = serial.test_hits.expect("LP reports hits@k");
+    assert!((0.0..=1.0).contains(&hits), "hits {hits}");
+    assert!(serial.val_hits.is_some());
+}
+
+#[test]
+fn lp_trains_the_loss_down_and_beats_chance_auc() {
+    // end-to-end signal check: a few epochs on the community graph must
+    // pull BCE below its ~0.693 chance level and push AUC above 0.5
+    // (communities make linked pairs genuinely more similar).
+    let ds = small_dataset(600, 16);
+    let plan =
+        EmbeddingPlan::build(600, 16, &EmbeddingMethod::Full, None, 0);
+    let cfg = SamplerConfig { batch_size: 64, fanouts: Fanout::Max(5).into(), shuffle: true };
+    let out = run_lp(&ds, &plan, &cfg, EdgeDecoder::Dot, OptimizerKind::Adam, true, 2);
+    let first = out.losses.first().copied().unwrap();
+    let last = out.losses.last().copied().unwrap();
+    assert!(last < first, "loss should fall: {first} -> {last}");
+    assert!(out.test_metric > 0.5, "AUC should beat chance: {}", out.test_metric);
+}
+
+#[test]
+fn edge_split_is_disjoint_and_seed_stable() {
+    let ds = small_dataset(400, 16);
+    let a = EdgeSplit::build(&ds.graph, 0.05, 0.10, 11);
+    let b = EdgeSplit::build(&ds.graph, 0.05, 0.10, 11);
+    assert_eq!(a.train, b.train, "same seed, same split");
+    assert_eq!(a.val, b.val);
+    assert_eq!(a.test, b.test);
+    let total = a.train.len() + a.val.len() + a.test.len();
+    assert_eq!(total, ds.graph.num_edges(), "every undirected edge lands in exactly one fold");
+    let c = EdgeSplit::build(&ds.graph, 0.05, 0.10, 12);
+    assert_ne!(a.train, c.train, "different seed shuffles the folds");
+}
