@@ -40,7 +40,9 @@ use serde::Serialize;
 use std::collections::BTreeMap;
 use std::path::Path;
 
+mod sharded;
 mod showdown;
+pub use sharded::{ShardBenchRecord, ShardedBenchRecord};
 pub use showdown::{run_showdown, ShowdownConfig, ShowdownRecord};
 
 /// Reusable harness: PJRT client + manifest + options.

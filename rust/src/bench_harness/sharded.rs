@@ -1,0 +1,251 @@
+//! `sharded/v1` bench records for partition-sharded training runs.
+//!
+//! The `train-sharded` CLI subcommand trains a
+//! [`ShardedTrainer`](crate::coordinator::ShardedTrainer) and emits one
+//! [`ShardedBenchRecord`] per run: run-level aggregates (edge cut, halo
+//! traffic, peak resident table bytes vs the FullEmb baseline, loss
+//! trajectory) plus one [`ShardBenchRecord`] per shard (nodes/s, halo
+//! bytes exchanged, resident bytes). CI's `train-sharded` smoke job
+//! validates these records and asserts the per-shard memory bound
+//! `resident_table_bytes ≤ 1.15 · full_table_bytes / k + halo-row
+//! bytes` on them; the JSON key set is pinned by a test below.
+
+use super::RecordMeta;
+use crate::coordinator::ShardedOutcome;
+use serde::Serialize;
+
+/// Per-shard slice of a `sharded/v1` record.
+#[derive(Debug, Clone, Serialize)]
+pub struct ShardBenchRecord {
+    /// Shard id in `[0, k)`.
+    pub shard: usize,
+    /// Nodes this shard owns.
+    pub owned_nodes: usize,
+    /// One-hop halo replicas resident on this shard.
+    pub halo_nodes: usize,
+    /// Undirected edges in the shard's local induced subgraph.
+    pub local_edges: u64,
+    /// Training seed nodes per epoch.
+    pub train_seeds: usize,
+    /// Resident embedding-table bytes (the shard's whole
+    /// optimizer-visible table footprint).
+    pub resident_table_bytes: u64,
+    /// Rows one full halo exchange + node sync refreshes.
+    pub halo_rows: usize,
+    /// Bytes pulled by one per-epoch table exchange.
+    pub halo_bytes_per_exchange: u64,
+    /// Bytes pulled by one periodic node-table sync.
+    pub node_sync_bytes: u64,
+    /// Training seeds per second on this shard.
+    pub nodes_per_sec: f64,
+    /// Mean training loss of the shard's final epoch.
+    pub final_loss: f64,
+}
+
+/// One `train-sharded` run, serializable for the CI `sharded-bench`
+/// artifact.
+#[derive(Debug, Clone, Serialize)]
+pub struct ShardedBenchRecord {
+    /// Graph/dataset display name.
+    pub dataset: String,
+    /// Method tag trained per shard.
+    pub method: String,
+    /// Number of shards.
+    pub k: usize,
+    /// Nodes in the global graph.
+    pub n: usize,
+    /// Undirected edges in the global graph.
+    pub edges: u64,
+    /// Embedding dimension.
+    pub d: usize,
+    /// Epochs trained.
+    pub epochs: usize,
+    /// Node-table sync period in epochs (0 = initial sync only).
+    pub sync_every: usize,
+    /// Weighted edge cut the sharding pays.
+    pub edge_cut: f64,
+    /// FullEmb reference table bytes at this (n, d): `n·d·4`.
+    pub full_table_bytes: u64,
+    /// Largest per-shard resident table bytes — the memory headline:
+    /// bounded by `full_table_bytes / k` plus halo replica rows.
+    pub peak_resident_table_bytes: u64,
+    /// Total bytes moved by all halo exchanges and node syncs.
+    pub halo_bytes_total: u64,
+    /// Per-epoch table exchanges performed.
+    pub exchanges: usize,
+    /// Owned-node-weighted validation metric.
+    pub val_metric: f64,
+    /// Owned-node-weighted test metric.
+    pub test_metric: f64,
+    /// Aggregate mean loss of the final epoch.
+    pub final_loss: f64,
+    /// Wall-clock seconds for the whole run.
+    pub wall_secs: f64,
+    /// Run seed.
+    pub seed: u64,
+    /// Per-shard statistics, indexed by shard id.
+    pub shards: Vec<ShardBenchRecord>,
+    /// Shared record envelope (schema/threads/git_sha), flattened.
+    #[serde(flatten)]
+    pub meta: RecordMeta,
+}
+
+impl ShardedBenchRecord {
+    /// Build the record from a finished run.
+    pub fn from_outcome(
+        dataset: &str,
+        method: &str,
+        n: usize,
+        edges: u64,
+        d: usize,
+        sync_every: usize,
+        seed: u64,
+        out: &ShardedOutcome,
+    ) -> Self {
+        ShardedBenchRecord {
+            dataset: dataset.to_string(),
+            method: method.to_string(),
+            k: out.k,
+            n,
+            edges,
+            d,
+            epochs: out.losses.len(),
+            sync_every,
+            edge_cut: out.edge_cut,
+            full_table_bytes: out.full_table_bytes,
+            peak_resident_table_bytes: out.peak_resident_table_bytes,
+            halo_bytes_total: out.halo_bytes_total,
+            exchanges: out.exchanges,
+            val_metric: out.val_metric,
+            test_metric: out.test_metric,
+            final_loss: out.losses.last().copied().unwrap_or(f64::NAN),
+            wall_secs: out.wall.as_secs_f64(),
+            seed,
+            shards: out
+                .shards
+                .iter()
+                .map(|s| ShardBenchRecord {
+                    shard: s.shard,
+                    owned_nodes: s.owned_nodes,
+                    halo_nodes: s.halo_nodes,
+                    local_edges: s.local_edges,
+                    train_seeds: s.train_seeds,
+                    resident_table_bytes: s.resident_table_bytes,
+                    halo_rows: s.halo_rows,
+                    halo_bytes_per_exchange: s.halo_bytes_per_exchange,
+                    node_sync_bytes: s.node_sync_bytes,
+                    nodes_per_sec: s.nodes_per_sec,
+                    final_loss: s.losses.last().copied().unwrap_or(f64::NAN),
+                })
+                .collect(),
+            meta: RecordMeta::capture("sharded/v1"),
+        }
+    }
+
+    /// Human-readable report line.
+    pub fn row(&self) -> String {
+        format!(
+            "k={:<3} cut={:<10.0} peak_mem={:>5.1}% of full  halo={:>8}B/epoch  test={:.4}",
+            self.k,
+            self.edge_cut,
+            self.peak_resident_table_bytes as f64 / self.full_table_bytes.max(1) as f64 * 100.0,
+            self.shards.iter().map(|s| s.halo_bytes_per_exchange).sum::<u64>(),
+            self.test_metric
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pins the exact JSON key set of the `sharded/v1` record — the CI
+    /// smoke's inline validator (`.github/workflows/ci.yml`) reads
+    /// these names.
+    #[test]
+    fn sharded_record_json_keys_are_stable() {
+        let rec = ShardedBenchRecord {
+            dataset: "rmat-powerlaw".into(),
+            method: "intra(l=2,c=4,h=2)".into(),
+            k: 2,
+            n: 8,
+            edges: 9,
+            d: 8,
+            epochs: 1,
+            sync_every: 1,
+            edge_cut: 3.0,
+            full_table_bytes: 256,
+            peak_resident_table_bytes: 160,
+            halo_bytes_total: 64,
+            exchanges: 1,
+            val_metric: 0.5,
+            test_metric: 0.5,
+            final_loss: 1.0,
+            wall_secs: 0.1,
+            seed: 0,
+            shards: vec![ShardBenchRecord {
+                shard: 0,
+                owned_nodes: 4,
+                halo_nodes: 2,
+                local_edges: 6,
+                train_seeds: 3,
+                resident_table_bytes: 160,
+                halo_rows: 2,
+                halo_bytes_per_exchange: 32,
+                node_sync_bytes: 16,
+                nodes_per_sec: 10.0,
+                final_loss: 1.0,
+            }],
+            meta: RecordMeta::capture("sharded/v1"),
+        };
+        let v = serde_json::to_value(&rec).unwrap();
+        let keys = |v: &serde_json::Value| -> Vec<String> {
+            let mut k: Vec<String> = v.as_object().unwrap().keys().cloned().collect();
+            k.sort();
+            k
+        };
+        let mut want = vec![
+            "dataset",
+            "method",
+            "k",
+            "n",
+            "edges",
+            "d",
+            "epochs",
+            "sync_every",
+            "edge_cut",
+            "full_table_bytes",
+            "peak_resident_table_bytes",
+            "halo_bytes_total",
+            "exchanges",
+            "val_metric",
+            "test_metric",
+            "final_loss",
+            "wall_secs",
+            "seed",
+            "shards",
+            "schema",
+            "threads",
+            "git_sha",
+        ];
+        want.sort_unstable();
+        assert_eq!(keys(&v), want);
+        let mut shard_want = vec![
+            "shard",
+            "owned_nodes",
+            "halo_nodes",
+            "local_edges",
+            "train_seeds",
+            "resident_table_bytes",
+            "halo_rows",
+            "halo_bytes_per_exchange",
+            "node_sync_bytes",
+            "nodes_per_sec",
+            "final_loss",
+        ];
+        shard_want.sort_unstable();
+        assert_eq!(keys(&v["shards"][0]), shard_want);
+        assert_eq!(v["schema"], "sharded/v1");
+        assert!(rec.row().contains("peak_mem"));
+    }
+}

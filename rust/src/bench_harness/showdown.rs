@@ -70,6 +70,11 @@ pub struct ShowdownConfig {
     pub dim: Option<usize>,
     /// Per-epoch progress lines from each cell's trainer.
     pub verbose: bool,
+    /// Run grid cells rayon-parallel. Cells are independent (each owns
+    /// its trainer and parameters) and every record is bit-identical to
+    /// the sequential sweep's up to the measured throughput field, so
+    /// this is purely a wall-clock knob (`--sequential` at the CLI).
+    pub parallel: bool,
 }
 
 impl Default for ShowdownConfig {
@@ -90,6 +95,7 @@ impl Default for ShowdownConfig {
             nodes: None,
             dim: None,
             verbose: false,
+            parallel: true,
         }
     }
 }
@@ -254,6 +260,13 @@ fn fit_method(
 /// Run the full (method × task × budget) sweep, one trained cell per
 /// record, in deterministic grid order (tasks outermost, then budgets,
 /// then methods — the order the config lists them).
+///
+/// With `cfg.parallel` the cells train rayon-parallel — each cell is
+/// fully independent (own plan, trainer, optimizer state, seeds keyed
+/// only by `cfg.seed`) and the results are collected back in grid
+/// order, so every record matches the sequential sweep's bit for bit
+/// apart from the measured `nodes_per_sec` (asserted in the grid test
+/// below).
 pub fn run_showdown(cfg: &ShowdownConfig) -> Result<Vec<ShowdownRecord>> {
     if cfg.methods.is_empty() || cfg.tasks.is_empty() || cfg.budgets.is_empty() {
         bail!("showdown needs at least one method, one task and one budget");
@@ -270,66 +283,77 @@ pub fn run_showdown(cfg: &ShowdownConfig) -> Result<Vec<ShowdownRecord>> {
     let ds = Dataset::generate(&sp);
     let (n, d) = (sp.n, sp.d);
     let full_table_bytes = n * d * 4;
-    let cells = cfg.tasks.len() * cfg.budgets.len() * cfg.methods.len();
-    let mut records = Vec::with_capacity(cells);
+
+    // the grid, flattened in its deterministic order
+    let mut cells: Vec<(usize, Objective, f64, &str)> = Vec::new();
     for &task in &cfg.tasks {
         for &fraction in &cfg.budgets {
-            let budget_params = (n as f64 * d as f64 * fraction) as usize;
             for tag in &cfg.methods {
-                let (method, hier) = fit_method(tag, n, d, budget_params, fraction, &ds.graph)?;
-                let plan = EmbeddingPlan::build(n, d, &method, hier.as_ref(), cfg.seed);
-                eprintln!(
-                    "[showdown {}/{cells}] task={task} budget={fraction:.4} method={}",
-                    records.len() + 1,
-                    plan.method.name()
-                );
-                let scfg = SamplerConfig {
-                    batch_size: cfg.batch_size,
-                    fanouts: cfg.fanouts.clone(),
-                    shuffle: true,
-                };
-                let opts = MinibatchOptions {
-                    epochs: cfg.epochs,
-                    hidden: cfg.hidden,
-                    seed: cfg.seed,
-                    objective: task,
-                    verbose: cfg.verbose,
-                    ..Default::default()
-                };
-                let mut trainer = MinibatchTrainer::new(&ds, &plan, scfg, opts)?;
-                let out = trainer.train()?;
-                let mean_ns =
-                    (out.epoch_ns.iter().sum::<u64>() / out.epoch_ns.len().max(1) as u64).max(1);
-                let params = plan.num_params();
-                let table_bytes = params * 4;
-                records.push(ShowdownRecord {
-                    dataset: cfg.dataset.clone(),
-                    method: plan.method.name(),
-                    method_tag: plan.method.to_string(),
-                    family: family_name(&plan.method).to_string(),
-                    task: task.to_string(),
-                    budget_fraction: fraction,
-                    budget_params,
-                    params,
-                    table_bytes,
-                    full_table_bytes,
-                    memory_ratio: table_bytes as f64 / full_table_bytes.max(1) as f64,
-                    n,
-                    d,
-                    epochs: out.losses.len(),
-                    val_metric: out.val_metric,
-                    test_metric: out.test_metric,
-                    val_hits: out.val_hits,
-                    test_hits: out.test_hits,
-                    final_loss: out.losses.last().copied().unwrap_or(f64::NAN),
-                    nodes_per_sec: out.seeds_per_epoch as f64 / (mean_ns as f64 / 1e9),
-                    seed: cfg.seed,
-                    meta: RecordMeta::capture("showdown/v1"),
-                });
+                cells.push((cells.len() + 1, task, fraction, tag.as_str()));
             }
         }
     }
-    Ok(records)
+    let total = cells.len();
+
+    let run_cell = |cell: &(usize, Objective, f64, &str)| -> Result<ShowdownRecord> {
+        let &(idx, task, fraction, tag) = cell;
+        let budget_params = (n as f64 * d as f64 * fraction) as usize;
+        let (method, hier) = fit_method(tag, n, d, budget_params, fraction, &ds.graph)?;
+        let plan = EmbeddingPlan::build(n, d, &method, hier.as_ref(), cfg.seed);
+        eprintln!(
+            "[showdown {idx}/{total}] task={task} budget={fraction:.4} method={}",
+            plan.method.name()
+        );
+        let scfg = SamplerConfig {
+            batch_size: cfg.batch_size,
+            fanouts: cfg.fanouts.clone(),
+            shuffle: true,
+        };
+        let opts = MinibatchOptions {
+            epochs: cfg.epochs,
+            hidden: cfg.hidden,
+            seed: cfg.seed,
+            objective: task,
+            verbose: cfg.verbose,
+            ..Default::default()
+        };
+        let mut trainer = MinibatchTrainer::new(&ds, &plan, scfg, opts)?;
+        let out = trainer.train()?;
+        let mean_ns = (out.epoch_ns.iter().sum::<u64>() / out.epoch_ns.len().max(1) as u64).max(1);
+        let params = plan.num_params();
+        let table_bytes = params * 4;
+        Ok(ShowdownRecord {
+            dataset: cfg.dataset.clone(),
+            method: plan.method.name(),
+            method_tag: plan.method.to_string(),
+            family: family_name(&plan.method).to_string(),
+            task: task.to_string(),
+            budget_fraction: fraction,
+            budget_params,
+            params,
+            table_bytes,
+            full_table_bytes,
+            memory_ratio: table_bytes as f64 / full_table_bytes.max(1) as f64,
+            n,
+            d,
+            epochs: out.losses.len(),
+            val_metric: out.val_metric,
+            test_metric: out.test_metric,
+            val_hits: out.val_hits,
+            test_hits: out.test_hits,
+            final_loss: out.losses.last().copied().unwrap_or(f64::NAN),
+            nodes_per_sec: out.seeds_per_epoch as f64 / (mean_ns as f64 / 1e9),
+            seed: cfg.seed,
+            meta: RecordMeta::capture("showdown/v1"),
+        })
+    };
+
+    if cfg.parallel {
+        use rayon::prelude::*;
+        cells.par_iter().map(run_cell).collect()
+    } else {
+        cells.iter().map(run_cell).collect()
+    }
 }
 
 #[cfg(test)]
@@ -360,6 +384,20 @@ mod tests {
         let cfg = smoke_config();
         let recs = run_showdown(&cfg).unwrap();
         assert_eq!(recs.len(), 3 * 2 * 1, "one record per (method, task, budget) cell");
+
+        // the rayon-parallel sweep (the default) must be byte-identical
+        // to the sequential one, record for record, modulo the one
+        // wall-clock-measured field
+        let seq = run_showdown(&ShowdownConfig { parallel: false, ..cfg.clone() }).unwrap();
+        assert_eq!(seq.len(), recs.len());
+        for (p, s) in recs.iter().zip(&seq) {
+            let strip = |r: &ShowdownRecord| {
+                let mut r = r.clone();
+                r.nodes_per_sec = 0.0;
+                serde_json::to_string(&r).unwrap()
+            };
+            assert_eq!(strip(p), strip(s), "parallel sweep diverged from sequential");
+        }
         for r in &recs {
             assert!(r.test_metric.is_finite() && r.final_loss.is_finite());
             assert!(r.nodes_per_sec > 0.0);

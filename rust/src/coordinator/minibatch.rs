@@ -768,10 +768,10 @@ impl<'a> MinibatchTrainer<'a> {
     }
 
     /// The cursor-driven loop with inline sampling (the un-prefetched
-    /// path — [`train`](MinibatchTrainer::train) overlaps sampling on a
-    /// prefetch thread instead when `opts.prefetch > 0`).
-    fn run_inline(&mut self) -> Result<()> {
-        let epochs = self.opts.epochs;
+    /// path — [`advance_to_epoch`](MinibatchTrainer::advance_to_epoch)
+    /// overlaps sampling on a prefetch thread instead when
+    /// `opts.prefetch > 0`). Runs until `epochs` epochs are complete.
+    fn run_inline_to(&mut self, epochs: usize) -> Result<()> {
         if self.sampler.is_none() && self.cur_epoch < epochs {
             let ds = self.ds;
             let sampler =
@@ -792,18 +792,19 @@ impl<'a> MinibatchTrainer<'a> {
         Ok(())
     }
 
-    /// Train to `opts.epochs` epochs (from the resumed cursor, if any),
-    /// then evaluate val/test. With `opts.prefetch > 0` a dedicated
-    /// sampler thread materializes upcoming blocks while the current one
-    /// is stepped. On a failure mid-run the trainer first writes a
-    /// best-effort checkpoint at the last completed batch boundary, so
-    /// `--resume` loses no finished work even on unplanned aborts.
-    pub fn train(&mut self) -> Result<MinibatchOutcome> {
-        let t0 = Instant::now();
-        self.maybe_resume()?;
-        self.epoch_t0 = Instant::now();
-        let epochs = self.opts.epochs;
-        let run = if self.opts.prefetch > 0 && self.cur_epoch < epochs {
+    /// Run the training loop forward until `target` epochs are complete
+    /// (clamped to `opts.epochs`; no-op when the cursor is already
+    /// there). With `opts.prefetch > 0` a dedicated sampler thread
+    /// materializes upcoming blocks while the current one is stepped;
+    /// otherwise sampling is inline. Because blocks are pure functions
+    /// of `(seed, epoch, batch, layer, node)`, driving the loop one
+    /// epoch at a time through this method — as the sharded trainer
+    /// does between halo exchanges — replays exactly the batches a
+    /// single [`train`](MinibatchTrainer::train) call would, bit for
+    /// bit, on both engine paths.
+    pub fn advance_to_epoch(&mut self, target: usize) -> Result<()> {
+        let epochs = target.min(self.opts.epochs);
+        if self.opts.prefetch > 0 && self.cur_epoch < epochs {
             let ds = self.ds;
             let source = self.source.clone();
             let fans = self.cfg.fanouts.clone();
@@ -828,8 +829,54 @@ impl<'a> MinibatchTrainer<'a> {
                 Ok(())
             })
         } else {
-            self.run_inline()
-        };
+            self.run_inline_to(epochs)
+        }
+    }
+
+    /// Completed-epoch mean losses so far (one entry per finished epoch).
+    pub fn losses(&self) -> &[f64] {
+        &self.losses
+    }
+
+    /// Completed-epoch wall times so far (ns, one entry per epoch).
+    pub fn completed_epoch_ns(&self) -> &[u64] {
+        &self.epoch_ns
+    }
+
+    /// Epoch of the next batch to process (== completed epochs).
+    pub fn cur_epoch(&self) -> usize {
+        self.cur_epoch
+    }
+
+    /// Seed nodes (or positive edges) consumed per epoch.
+    pub fn seeds_per_epoch(&self) -> usize {
+        self.source.num_seeds()
+    }
+
+    /// Batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.source.num_batches()
+    }
+
+    /// Mutable access to the parameter tables — the sharded trainer's
+    /// halo-exchange hook. Overwriting rows between epochs is safe (the
+    /// trainer holds no stale copies), but callers own the determinism
+    /// of what they write.
+    pub(crate) fn params_mut(&mut self) -> &mut ParamStore {
+        &mut self.params
+    }
+
+    /// Train to `opts.epochs` epochs (from the resumed cursor, if any),
+    /// then evaluate val/test. With `opts.prefetch > 0` a dedicated
+    /// sampler thread materializes upcoming blocks while the current one
+    /// is stepped. On a failure mid-run the trainer first writes a
+    /// best-effort checkpoint at the last completed batch boundary, so
+    /// `--resume` loses no finished work even on unplanned aborts.
+    pub fn train(&mut self) -> Result<MinibatchOutcome> {
+        let t0 = Instant::now();
+        self.maybe_resume()?;
+        self.epoch_t0 = Instant::now();
+        let run = self.advance_to_epoch(self.opts.epochs);
         if let Err(e) = run {
             // the cursor sits at the last completed batch boundary
             // unless the epoch close itself failed (non-finite loss —
@@ -1928,7 +1975,7 @@ fn verify_compose_bounded(plan: &EmbeddingPlan, params: &ParamStore) -> Result<(
 /// dim) and a zero bias, drawn in layer order from one stream keyed by
 /// `seed` — so a one-layer head's draws are exactly the pre-multi-hop
 /// trainer's.
-fn init_host_params(
+pub(crate) fn init_host_params(
     plan: &EmbeddingPlan,
     classes: usize,
     layers: usize,

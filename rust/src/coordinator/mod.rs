@@ -2,7 +2,7 @@
 //! side — parameter/optimizer state, static tensor construction, epoch
 //! loops, periodic evaluation, early stopping and result aggregation.
 //!
-//! Two training paths live here:
+//! Three training paths live here:
 //!
 //! * [`run_experiment`] — the AOT/PJRT full-batch path: the compiled
 //!   train-step HLO is the compute, Python never runs, and the packed
@@ -19,6 +19,11 @@
 //!   optimizer apply run on the rayon pool — bit-identical to the
 //!   serial oracle step at any thread count
 //!   (`tests/parallel_train.rs`).
+//! * [`ShardedTrainer`] — partition-sharded training: the graph is cut
+//!   into `k` shards, each running the minibatch path on its own local
+//!   subgraph + partition-aligned table slice, stitched together by a
+//!   per-epoch halo exchange (see `sharded`'s module docs). At `k = 1`
+//!   it reproduces [`MinibatchTrainer`] bit for bit.
 //!
 //! The minibatch path is additionally **crash-safe**: [`checkpoint`]
 //! snapshots parameters, Adam moments and the `(epoch, batch)` cursor
@@ -30,6 +35,7 @@ pub mod checkpoint;
 mod minibatch;
 mod optim;
 mod params;
+mod sharded;
 mod statics;
 mod trainer;
 
@@ -45,5 +51,6 @@ pub use minibatch::{
 pub(crate) use minibatch::{head_param_names, layer_dims, mean_rows, sage_affine_row};
 pub use optim::{GradBuffer, GradShard, Optimizer, OptimizerKind};
 pub use params::{gnn_param_shapes, init_full_params};
+pub use sharded::{ShardStats, ShardedOutcome, ShardedTrainer};
 pub use statics::build_statics;
 pub use trainer::{run_experiment, TrainOptions, TrainOutcome};

@@ -1,0 +1,746 @@
+//! Partition-sharded minibatch training with halo exchange.
+//!
+//! [`ShardedTrainer`] cuts the graph into `k` shards with the
+//! multilevel partitioner ([`GraphShards`]), builds each shard a
+//! **local** dataset (induced owned + one-hop-halo subgraph, remapped
+//! labels, the global splits filtered to owned nodes in global split
+//! order) and a **local** embedding plan whose position buckets are
+//! aligned to the partition hierarchy: every table holds the shard's
+//! own partition-aligned rows first, then a compact tail of replicated
+//! **halo rows** — one per distinct `(owner shard, owner row)` a halo
+//! node resolves to. Each shard's `NodePlan`/`PositionPlan` therefore
+//! resolves only local + halo rows; no global table, optimizer state or
+//! index array is ever materialized.
+//!
+//! Epochs run shard-parallel on the existing pipelined engine: one
+//! [`MinibatchTrainer`] per shard advances exactly one epoch
+//! ([`MinibatchTrainer::advance_to_epoch`]) on its own thread, then the
+//! coordinator runs a **halo exchange** — copying every replicated
+//! position/pool row from its owning shard's table into the replicas,
+//! in fixed (shard, table, row) order — and, every `sync_every` epochs,
+//! a **node-table sync** that refreshes per-node halo rows (`node_x`
+//! identity rows for Full/PosFullEmb, `node_y` importance rows for
+//! Intra) the same way. Halo rows also receive local gradient updates
+//! between exchanges (halo nodes appear as sampled neighbors); the
+//! exchange overwrites them with the owner's authoritative bits.
+//!
+//! Determinism ledger:
+//! * **k = 1 bit parity** — the single shard owns `0..n` ascending, so
+//!   the local graph, hierarchy, plan, splits and every seed stream are
+//!   bit-identical to the un-sharded path; halo pull lists are empty,
+//!   so the loss trajectory equals [`MinibatchTrainer::train`]'s bit
+//!   for bit, serial and pipelined (`rust/tests/sharded.rs`).
+//! * **halo-exchange ordering** — pull lists are built sorted and
+//!   applied main-thread in shard id → table name → row order; no
+//!   atomics, no races.
+//! * **fixed (seed, k) determinism** — the partitioner, every per-shard
+//!   trainer and the exchange are deterministic and thread-count
+//!   independent, so repeated runs agree exactly.
+
+use super::minibatch::{MinibatchOptions, MinibatchTrainer, Objective};
+use crate::data::{Dataset, DatasetSpec, Splits, TaskKind};
+use crate::embedding::{EmbeddingMethod, EmbeddingPlan, NodePlan, PositionPlan, TableShape};
+use crate::hashing::HashFamily;
+use crate::partition::{
+    induced_subgraph_with_scratch, GraphShards, Hierarchy, HierarchyConfig, Shard,
+};
+use crate::sampler::{mix_seed, SamplerConfig};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One replicated row: copy the owner's `owner_row` of a table into
+/// this shard's `local_row` of the same-named local table.
+#[derive(Debug, Clone)]
+struct HaloPull {
+    owner: u32,
+    owner_row: u32,
+    local_row: u32,
+}
+
+/// All pulls for one named table on one shard.
+#[derive(Debug, Clone)]
+struct PullSet {
+    name: String,
+    pulls: Vec<HaloPull>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PullKind {
+    /// Partition-aligned tables: position levels + intra pools
+    /// (refreshed every epoch).
+    Tables,
+    /// Per-node rows: `node_x` identity rows / `node_y` importance rows
+    /// (refreshed every `sync_every` epochs).
+    Nodes,
+}
+
+/// Everything one shard owns: its local dataset + plan and its halo
+/// pull lists.
+struct ShardPart {
+    dataset: Dataset,
+    plan: EmbeddingPlan,
+    owned_nodes: usize,
+    halo_nodes: usize,
+    table_pulls: Vec<PullSet>,
+    node_pulls: Vec<PullSet>,
+}
+
+impl ShardPart {
+    fn pull_sets(&self, kind: PullKind) -> &[PullSet] {
+        match kind {
+            PullKind::Tables => &self.table_pulls,
+            PullKind::Nodes => &self.node_pulls,
+        }
+    }
+}
+
+/// Per-shard statistics of one sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Shard id.
+    pub shard: usize,
+    /// Nodes this shard owns.
+    pub owned_nodes: usize,
+    /// One-hop halo replicas resident on this shard.
+    pub halo_nodes: usize,
+    /// Undirected edges in the local induced subgraph.
+    pub local_edges: u64,
+    /// Training seed nodes per epoch on this shard.
+    pub train_seeds: usize,
+    /// Resident embedding-table bytes (`plan.num_params() × 4`): the
+    /// shard's entire optimizer-visible table footprint.
+    pub resident_table_bytes: u64,
+    /// Rows refreshed by one full exchange (tables + node rows).
+    pub halo_rows: usize,
+    /// Bytes pulled by one per-epoch table exchange.
+    pub halo_bytes_per_exchange: u64,
+    /// Bytes pulled by one periodic node-table sync.
+    pub node_sync_bytes: u64,
+    /// Training seeds per second (seeds/epoch over mean epoch wall).
+    pub nodes_per_sec: f64,
+    /// Per-epoch mean losses on this shard.
+    pub losses: Vec<f64>,
+}
+
+/// Result of a sharded training run.
+#[derive(Debug, Clone)]
+pub struct ShardedOutcome {
+    /// Number of shards trained.
+    pub k: usize,
+    /// Weighted edge cut the sharding pays.
+    pub edge_cut: f64,
+    /// FullEmb reference bytes at this (n, d): `n × d × 4`.
+    pub full_table_bytes: u64,
+    /// Largest per-shard resident table bytes.
+    pub peak_resident_table_bytes: u64,
+    /// Total bytes moved by all halo exchanges + node syncs.
+    pub halo_bytes_total: u64,
+    /// Number of per-epoch table exchanges performed.
+    pub exchanges: usize,
+    /// Owned-node-weighted validation metric across shards.
+    pub val_metric: f64,
+    /// Owned-node-weighted test metric across shards.
+    pub test_metric: f64,
+    /// Per-epoch aggregate loss: at k = 1 exactly shard 0's losses
+    /// (bit-parity with the un-sharded trainer); at k > 1 the
+    /// seed-weighted mean across shards.
+    pub losses: Vec<f64>,
+    /// Wall-clock time of the whole run.
+    pub wall: Duration,
+    /// Per-shard statistics, indexed by shard id.
+    pub shards: Vec<ShardStats>,
+}
+
+/// Shard-parallel minibatch trainer (see the module docs).
+pub struct ShardedTrainer {
+    parts: Vec<ShardPart>,
+    cfg: SamplerConfig,
+    opts: MinibatchOptions,
+    sync_every: usize,
+    k: usize,
+    edge_cut: f64,
+    full_table_bytes: u64,
+}
+
+impl ShardedTrainer {
+    /// Shard `ds` into `shards` parts and prepare per-shard datasets,
+    /// partition-aligned plans and halo pull lists.
+    ///
+    /// `hier_k` is the branching factor of each shard's position
+    /// hierarchy (ignored for `full`). `sync_every` is the node-table
+    /// sync period in epochs (`0` disables periodic sync; the initial
+    /// pre-epoch sync always runs). Supported methods: `full`,
+    /// `posemb`, `posfullemb`, `intra`; supported objective: node
+    /// classification. Checkpointing / artifact saving are per-trainer
+    /// features the sharded driver does not forward — leave them unset.
+    pub fn new(
+        ds: &Dataset,
+        method: &EmbeddingMethod,
+        hier_k: usize,
+        shards: usize,
+        sync_every: usize,
+        cfg: SamplerConfig,
+        opts: MinibatchOptions,
+    ) -> Result<Self> {
+        if !matches!(opts.objective, Objective::NodeClassification) {
+            bail!("sharded training supports node classification only");
+        }
+        if opts.checkpoint.is_some() || opts.save_model.is_some() || opts.resume {
+            bail!("sharded training does not support checkpointing or artifact saving");
+        }
+        if !supported_method(method) {
+            bail!("sharded training supports full, posemb, posfullemb and intra (got {method})");
+        }
+        if method.needs_hierarchy() && hier_k < 2 {
+            bail!("position methods need a hierarchy branching factor k >= 2");
+        }
+        let n = ds.graph.num_nodes();
+        let d = ds.spec.d;
+        let shard_seed = mix_seed(&[opts.seed, 0x54A2D]);
+        let cut = GraphShards::build(&ds.graph, shards, shard_seed);
+
+        // Per-shard position hierarchies over the OWNED induced
+        // subgraph (halo excluded: halo nodes take their owner's
+        // buckets, which is what makes the tables partition-aligned
+        // across shards). At k = 1 the owned subgraph is the input
+        // graph bit for bit, so the hierarchy matches the global one.
+        let mut scratch = vec![u32::MAX; n];
+        let hierarchies: Vec<Option<Hierarchy>> = cut
+            .shards
+            .iter()
+            .map(|s| {
+                method.needs_hierarchy().then(|| {
+                    let owned_graph =
+                        induced_subgraph_with_scratch(&ds.graph, &s.owned, &mut scratch);
+                    Hierarchy::build(&owned_graph, &HierarchyConfig::new(hier_k, method.levels()))
+                })
+            })
+            .collect();
+        drop(scratch);
+
+        let mut parts = Vec::with_capacity(shards);
+        for shard in &cut.shards {
+            let (plan, table_pulls, node_pulls) =
+                shard_plan(method, d, opts.seed, shard, &cut.assignment, &cut.shards, &hierarchies);
+            let dataset = shard_dataset(ds, shard, &cut.assignment);
+            if dataset.splits.train.is_empty() {
+                bail!(
+                    "shard {} owns {} nodes but no training nodes — use fewer shards",
+                    shard.id,
+                    shard.owned.len()
+                );
+            }
+            parts.push(ShardPart {
+                dataset,
+                plan,
+                owned_nodes: shard.owned.len(),
+                halo_nodes: shard.halo.len(),
+                table_pulls,
+                node_pulls,
+            });
+        }
+        Ok(ShardedTrainer {
+            parts,
+            cfg,
+            opts,
+            sync_every,
+            k: shards,
+            edge_cut: cut.edge_cut,
+            full_table_bytes: (n * d * 4) as u64,
+        })
+    }
+
+    /// Number of shards.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Weighted edge cut of the sharding.
+    pub fn edge_cut(&self) -> f64 {
+        self.edge_cut
+    }
+
+    /// Run shard-parallel epochs with per-epoch halo exchange and
+    /// periodic node-table sync, then evaluate each shard on its owned
+    /// val/test nodes.
+    pub fn train(&self) -> Result<ShardedOutcome> {
+        let t0 = Instant::now();
+        let mut trainers: Vec<MinibatchTrainer<'_>> = Vec::with_capacity(self.parts.len());
+        for p in &self.parts {
+            trainers.push(MinibatchTrainer::new(
+                &p.dataset,
+                &p.plan,
+                self.cfg.clone(),
+                self.opts.clone(),
+            )?);
+        }
+        let mut halo_bytes_total = 0u64;
+        let mut exchanges = 0usize;
+        // Seed every halo row with the owner's initial bits so epoch 1
+        // composes owner parameters, not local random init. No-op at
+        // k = 1 (every pull list is empty).
+        halo_bytes_total += apply_pulls(&mut trainers, &self.parts, PullKind::Tables);
+        halo_bytes_total += apply_pulls(&mut trainers, &self.parts, PullKind::Nodes);
+        for epoch in 0..self.opts.epochs {
+            let target = epoch + 1;
+            std::thread::scope(|scope| -> Result<()> {
+                let handles: Vec<_> = trainers
+                    .iter_mut()
+                    .map(|t| scope.spawn(move || t.advance_to_epoch(target)))
+                    .collect();
+                for (s, h) in handles.into_iter().enumerate() {
+                    match h.join() {
+                        Ok(r) => r.with_context(|| format!("shard {s} failed in epoch {epoch}"))?,
+                        Err(_) => bail!("shard {s} trainer thread panicked in epoch {epoch}"),
+                    }
+                }
+                Ok(())
+            })?;
+            halo_bytes_total += apply_pulls(&mut trainers, &self.parts, PullKind::Tables);
+            exchanges += 1;
+            if self.sync_every > 0 && target % self.sync_every == 0 {
+                halo_bytes_total += apply_pulls(&mut trainers, &self.parts, PullKind::Nodes);
+            }
+        }
+
+        // Owned-node-weighted evaluation: each shard scores only the
+        // val/test nodes it owns, so every global fold node is scored
+        // exactly once.
+        let fold_metric = |fold: fn(&Splits) -> &Vec<u32>| -> Result<f64> {
+            let (mut num, mut den) = (0.0f64, 0usize);
+            for (p, t) in self.parts.iter().zip(&trainers) {
+                let nodes = fold(&p.dataset.splits);
+                if nodes.is_empty() {
+                    continue;
+                }
+                num += t.evaluate(nodes)? * nodes.len() as f64;
+                den += nodes.len();
+            }
+            Ok(if den == 0 { 0.0 } else { num / den as f64 })
+        };
+        let val_metric = fold_metric(|s| &s.val)?;
+        let test_metric = fold_metric(|s| &s.test)?;
+
+        let shards: Vec<ShardStats> = self
+            .parts
+            .iter()
+            .zip(&trainers)
+            .enumerate()
+            .map(|(s, (p, t))| {
+                let ns = t.completed_epoch_ns();
+                let mean_ns = if ns.is_empty() {
+                    0.0
+                } else {
+                    ns.iter().sum::<u64>() as f64 / ns.len() as f64
+                };
+                let seeds = t.seeds_per_epoch();
+                let table_bytes: u64 =
+                    p.table_pulls.iter().map(|ps| set_bytes(ps, &trainers[s])).sum();
+                let node_bytes: u64 =
+                    p.node_pulls.iter().map(|ps| set_bytes(ps, &trainers[s])).sum();
+                let halo_rows = p
+                    .table_pulls
+                    .iter()
+                    .chain(&p.node_pulls)
+                    .map(|ps| ps.pulls.len())
+                    .sum::<usize>();
+                ShardStats {
+                    shard: s,
+                    owned_nodes: p.owned_nodes,
+                    halo_nodes: p.halo_nodes,
+                    local_edges: p.dataset.graph.num_edges() as u64,
+                    train_seeds: seeds,
+                    resident_table_bytes: (p.plan.num_params() * 4) as u64,
+                    halo_rows,
+                    halo_bytes_per_exchange: table_bytes,
+                    node_sync_bytes: node_bytes,
+                    nodes_per_sec: if mean_ns > 0.0 {
+                        seeds as f64 / (mean_ns / 1e9)
+                    } else {
+                        0.0
+                    },
+                    losses: t.losses().to_vec(),
+                }
+            })
+            .collect();
+
+        // k = 1 hands shard 0's trajectory through untouched (the bit
+        // parity pin); k > 1 reports the seed-weighted epoch mean.
+        let losses: Vec<f64> = if self.k == 1 {
+            shards[0].losses.clone()
+        } else {
+            let total: f64 = shards.iter().map(|s| s.train_seeds as f64).sum();
+            (0..self.opts.epochs)
+                .map(|e| {
+                    shards
+                        .iter()
+                        .map(|s| s.losses.get(e).copied().unwrap_or(0.0) * s.train_seeds as f64)
+                        .sum::<f64>()
+                        / total
+                })
+                .collect()
+        };
+
+        Ok(ShardedOutcome {
+            k: self.k,
+            edge_cut: self.edge_cut,
+            full_table_bytes: self.full_table_bytes,
+            peak_resident_table_bytes: shards
+                .iter()
+                .map(|s| s.resident_table_bytes)
+                .max()
+                .unwrap_or(0),
+            halo_bytes_total,
+            exchanges,
+            val_metric,
+            test_metric,
+            losses,
+            wall: t0.elapsed(),
+            shards,
+        })
+    }
+}
+
+fn supported_method(method: &EmbeddingMethod) -> bool {
+    matches!(
+        method,
+        EmbeddingMethod::Full
+            | EmbeddingMethod::PosEmb { .. }
+            | EmbeddingMethod::PosFullEmb { .. }
+            | EmbeddingMethod::PosHashEmbIntra { .. }
+    )
+}
+
+/// Bytes one pull set moves per exchange.
+fn set_bytes(ps: &PullSet, trainer: &MinibatchTrainer<'_>) -> u64 {
+    if ps.pulls.is_empty() {
+        return 0;
+    }
+    let cols = trainer.params().shape(&ps.name)[1];
+    (ps.pulls.len() * cols * 4) as u64
+}
+
+/// One halo exchange: copy every replicated row from its owner's table
+/// into the replica, in fixed (shard, table, row) order. Two passes —
+/// stage all reads, then write — so owners are read immutably before
+/// any replica is touched. Returns bytes moved.
+fn apply_pulls(trainers: &mut [MinibatchTrainer<'_>], parts: &[ShardPart], kind: PullKind) -> u64 {
+    let mut staged: Vec<Vec<f32>> = Vec::new();
+    for part in parts {
+        for set in part.pull_sets(kind) {
+            if set.pulls.is_empty() {
+                staged.push(Vec::new());
+                continue;
+            }
+            let cols = trainers[set.pulls[0].owner as usize].params().shape(&set.name)[1];
+            let mut buf = Vec::with_capacity(set.pulls.len() * cols);
+            for p in &set.pulls {
+                let src = trainers[p.owner as usize].params().get(&set.name);
+                buf.extend_from_slice(
+                    &src[p.owner_row as usize * cols..(p.owner_row as usize + 1) * cols],
+                );
+            }
+            staged.push(buf);
+        }
+    }
+    let mut bytes = 0u64;
+    let mut staged = staged.into_iter();
+    for (s, part) in parts.iter().enumerate() {
+        for set in part.pull_sets(kind) {
+            let buf = staged.next().expect("one staged buffer per pull set");
+            if set.pulls.is_empty() {
+                continue;
+            }
+            let cols = buf.len() / set.pulls.len();
+            let dst = trainers[s].params_mut().get_mut(&set.name);
+            for (i, p) in set.pulls.iter().enumerate() {
+                dst[p.local_row as usize * cols..(p.local_row as usize + 1) * cols]
+                    .copy_from_slice(&buf[i * cols..(i + 1) * cols]);
+            }
+            bytes += buf.len() as u64 * 4;
+        }
+    }
+    bytes
+}
+
+/// The shard-local dataset: induced owned+halo graph, remapped labels
+/// and communities, and the global splits filtered to owned nodes **in
+/// global split order** (so at k = 1 the batcher sees exactly the
+/// global schedule).
+fn shard_dataset(ds: &Dataset, shard: &Shard, assignment: &[u32]) -> Dataset {
+    let n_local = shard.locals.len();
+    let classes = ds.spec.classes;
+    let labels: Vec<u32> = match ds.spec.task {
+        TaskKind::MultiClass => shard.locals.iter().map(|&g| ds.labels[g as usize]).collect(),
+        TaskKind::MultiLabel => shard
+            .locals
+            .iter()
+            .flat_map(|&g| {
+                let g = g as usize;
+                ds.labels[g * classes..(g + 1) * classes].iter().copied()
+            })
+            .collect(),
+    };
+    let communities: Vec<u32> =
+        shard.locals.iter().map(|&g| ds.communities[g as usize]).collect();
+    let map_fold = |fold: &[u32]| -> Vec<u32> {
+        fold.iter()
+            .filter(|&&g| assignment[g as usize] == shard.id as u32)
+            .map(|&g| shard.local_of(g).expect("owned node is resident"))
+            .collect()
+    };
+    let splits = Splits {
+        train: map_fold(&ds.splits.train),
+        val: map_fold(&ds.splits.val),
+        test: map_fold(&ds.splits.test),
+    };
+    let spec = DatasetSpec { n: n_local, ..ds.spec.clone() };
+    Dataset { spec, graph: shard.graph.clone(), communities, labels, splits }
+}
+
+/// Build one shard's partition-aligned plan plus its halo pull lists.
+///
+/// Layout contract per table: the shard's own rows occupy the same
+/// index range the un-sharded plan would give them (position level `j`:
+/// `0..m_j`; intra pool: `0..m_0·c`; per-node tables: local ids), and
+/// replicated halo rows are appended after, one per distinct
+/// `(owner, owner_row)`, in sorted order. At k = 1 no halo exists and
+/// the plan equals `EmbeddingPlan::build`'s output bit for bit — node
+/// hashes are keyed by **global** node id precisely so owner and
+/// replica (and the k = 1 global plan) agree on every bucket.
+fn shard_plan(
+    method: &EmbeddingMethod,
+    d: usize,
+    seed: u64,
+    shard: &Shard,
+    assignment: &[u32],
+    all_shards: &[Shard],
+    hierarchies: &[Option<Hierarchy>],
+) -> (EmbeddingPlan, Vec<PullSet>, Vec<PullSet>) {
+    assert!(d >= 4 && d % 4 == 0, "d must be a multiple of 4 for 3-level dims");
+    let n_local = shard.locals.len();
+    let levels = method.levels();
+    let mut table_pulls: Vec<PullSet> = Vec::new();
+    let mut node_pulls: Vec<PullSet> = Vec::new();
+    let owned_index = |o: u32, gid: u32| -> usize {
+        all_shards[o as usize].owned.binary_search(&gid).expect("node owned by its shard")
+    };
+    let bucket_of = |o: u32, j: usize, oi: usize| -> u32 {
+        hierarchies[o as usize].as_ref().expect("owner hierarchy").shard_assignments(j)[oi]
+    };
+
+    let position = method.needs_hierarchy().then(|| {
+        let hs = hierarchies[shard.id].as_ref().expect("own hierarchy built");
+        let mut tables = Vec::with_capacity(levels);
+        let mut z = Vec::with_capacity(levels);
+        for j in 0..levels {
+            let mj = hs.m[j];
+            // distinct (owner, owner bucket) pairs over the halo,
+            // sorted — the appended replica rows and their pull order
+            let mut extra: BTreeMap<(u32, u32), u32> = BTreeMap::new();
+            for &v in &shard.halo {
+                let o = assignment[v as usize];
+                let oi = owned_index(o, v);
+                let b = bucket_of(o, j, oi);
+                extra.insert((o, b), 0);
+            }
+            for (idx, slot) in extra.values_mut().enumerate() {
+                *slot = idx as u32;
+            }
+            let own_z = hs.shard_assignments(j);
+            let mut zj = vec![0u32; n_local];
+            for (l, &gid) in shard.locals.iter().enumerate() {
+                let o = assignment[gid as usize];
+                zj[l] = if o == shard.id as u32 {
+                    own_z[owned_index(o, gid)]
+                } else {
+                    let b = bucket_of(o, j, owned_index(o, gid));
+                    mj as u32 + extra[&(o, b)]
+                };
+            }
+            let pulls: Vec<HaloPull> = extra
+                .iter()
+                .map(|(&(owner, owner_row), &idx)| HaloPull {
+                    owner,
+                    owner_row,
+                    local_row: mj as u32 + idx,
+                })
+                .collect();
+            tables.push(TableShape {
+                name: format!("pos_{j}"),
+                rows: mj + pulls.len(),
+                cols: (d >> j).max(1),
+            });
+            table_pulls.push(PullSet { name: format!("pos_{j}"), pulls });
+            z.push(zj);
+        }
+        PositionPlan { tables, z }
+    });
+
+    let per_node_pulls = || -> Vec<HaloPull> {
+        shard
+            .halo
+            .iter()
+            .map(|&v| {
+                let o = assignment[v as usize];
+                HaloPull {
+                    owner: o,
+                    owner_row: all_shards[o as usize].local_of(v).expect("owner resident"),
+                    local_row: shard.local_of(v).expect("halo resident"),
+                }
+            })
+            .collect()
+    };
+
+    let node = match method {
+        EmbeddingMethod::Full | EmbeddingMethod::PosFullEmb { .. } => {
+            node_pulls.push(PullSet { name: "node_x".into(), pulls: per_node_pulls() });
+            Some(NodePlan {
+                table: TableShape { name: "node_x".into(), rows: n_local, cols: d },
+                h: 1,
+                node_major: (0..n_local as u32).collect(),
+                learned_weights: false,
+            })
+        }
+        EmbeddingMethod::PosHashEmbIntra { compression, h, .. } => {
+            let (c, h) = (*compression, *h);
+            let hs = hierarchies[shard.id].as_ref().expect("own hierarchy built");
+            let m0 = hs.m[0];
+            let family = HashFamily::new(seed);
+            let fns: Vec<_> = (0..h).map(|t| family.function(t as u64, c as u32)).collect();
+            let pool_of = |s: usize, oi: usize, gid: u32, f: &crate::hashing::UniversalHash| {
+                hierarchies[s].as_ref().expect("hierarchy").shard_assignments(0)[oi]
+                    * c as u32
+                    + f.hash(gid as u64)
+            };
+            let mut extra: BTreeMap<(u32, u32), u32> = BTreeMap::new();
+            for &v in &shard.halo {
+                let o = assignment[v as usize];
+                let oi = owned_index(o, v);
+                for f in &fns {
+                    extra.insert((o, pool_of(o as usize, oi, v, f)), 0);
+                }
+            }
+            for (idx, slot) in extra.values_mut().enumerate() {
+                *slot = idx as u32;
+            }
+            let mut node_major = vec![0u32; n_local * h];
+            for (l, &gid) in shard.locals.iter().enumerate() {
+                let o = assignment[gid as usize];
+                let oi = owned_index(o, gid);
+                for (t, f) in fns.iter().enumerate() {
+                    node_major[l * h + t] = if o == shard.id as u32 {
+                        pool_of(shard.id, oi, gid, f)
+                    } else {
+                        (m0 * c) as u32 + extra[&(o, pool_of(o as usize, oi, gid, f))]
+                    };
+                }
+            }
+            let pulls: Vec<HaloPull> = extra
+                .iter()
+                .map(|(&(owner, owner_row), &idx)| HaloPull {
+                    owner,
+                    owner_row,
+                    local_row: (m0 * c) as u32 + idx,
+                })
+                .collect();
+            let rows = m0 * c + pulls.len();
+            table_pulls.push(PullSet { name: "node_x".into(), pulls });
+            node_pulls.push(PullSet { name: "node_y".into(), pulls: per_node_pulls() });
+            Some(NodePlan {
+                table: TableShape { name: "node_x".into(), rows, cols: d },
+                h,
+                node_major,
+                learned_weights: true,
+            })
+        }
+        _ => None,
+    };
+
+    let plan = EmbeddingPlan {
+        method: method.clone(),
+        n: n_local,
+        d,
+        position,
+        node,
+        dhe: None,
+    };
+    (plan, table_pulls, node_pulls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec;
+    use crate::embedding::EmbeddingPlan;
+    use crate::partition::GraphShards;
+
+    fn tiny_ds() -> Dataset {
+        let mut s = spec("synth-arxiv").unwrap();
+        s.n = 600;
+        s.communities = 12;
+        s.supers = 4;
+        s.d = 16;
+        Dataset::generate(&s)
+    }
+
+    #[test]
+    fn k1_shard_plan_matches_global_plan_bit_for_bit() {
+        let ds = tiny_ds();
+        let n = ds.graph.num_nodes();
+        let method = EmbeddingMethod::PosHashEmbIntra { levels: 2, compression: 5, h: 2 };
+        let hier_k = 4;
+        let cut = GraphShards::build(&ds.graph, 1, 99);
+        let mut scratch = vec![u32::MAX; n];
+        let owned_graph =
+            induced_subgraph_with_scratch(&ds.graph, &cut.shards[0].owned, &mut scratch);
+        let hiers =
+            vec![Some(Hierarchy::build(&owned_graph, &HierarchyConfig::new(hier_k, 2)))];
+        let (local, tp, np) =
+            shard_plan(&method, 16, 7, &cut.shards[0], &cut.assignment, &cut.shards, &hiers);
+        let global_h = Hierarchy::build(&ds.graph, &HierarchyConfig::new(hier_k, 2));
+        let global = EmbeddingPlan::build(n, 16, &method, Some(&global_h), 7);
+        assert_eq!(local.n, global.n);
+        let (lp, gp) = (local.position.unwrap(), global.position.unwrap());
+        assert_eq!(lp.z, gp.z);
+        assert_eq!(lp.tables, gp.tables);
+        let (ln, gn) = (local.node.unwrap(), global.node.unwrap());
+        assert_eq!(ln.node_major, gn.node_major);
+        assert_eq!(ln.table, gn.table);
+        assert!(tp.iter().all(|s| s.pulls.is_empty()));
+        assert!(np.iter().all(|s| s.pulls.is_empty()));
+    }
+
+    #[test]
+    fn halo_rows_are_appended_and_resolved() {
+        let ds = tiny_ds();
+        let n = ds.graph.num_nodes();
+        let method = EmbeddingMethod::PosEmb { levels: 2 };
+        let cut = GraphShards::build(&ds.graph, 3, 5);
+        let mut scratch = vec![u32::MAX; n];
+        let hiers: Vec<Option<Hierarchy>> = cut
+            .shards
+            .iter()
+            .map(|s| {
+                let g = induced_subgraph_with_scratch(&ds.graph, &s.owned, &mut scratch);
+                Some(Hierarchy::build(&g, &HierarchyConfig::new(3, 2)))
+            })
+            .collect();
+        for shard in &cut.shards {
+            let (plan, tp, _) =
+                shard_plan(&method, 16, 1, shard, &cut.assignment, &cut.shards, &hiers);
+            let pos = plan.position.unwrap();
+            for (j, t) in pos.tables.iter().enumerate() {
+                // every z entry resolves inside the local table
+                assert!(pos.z[j].iter().all(|&b| (b as usize) < t.rows));
+                // halo pulls land exactly on the appended tail
+                for p in &tp[j].pulls {
+                    assert!(p.local_row as usize >= hiers[shard.id].as_ref().unwrap().m[j]);
+                    assert!((p.local_row as usize) < t.rows);
+                    assert_ne!(p.owner as usize, shard.id);
+                }
+            }
+        }
+    }
+}

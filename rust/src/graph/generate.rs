@@ -155,32 +155,159 @@ impl Default for RmatConfig {
     }
 }
 
+/// One R-MAT quadrant walk: sample a `(u, v)` pair, or `None` for a
+/// self-loop (the RNG advances identically either way, so count and
+/// fill passes over the same stream see the same pairs).
+fn rmat_pair(rng: &mut Rng, scale: u32, probs: (f64, f64, f64, f64)) -> Option<(u32, u32)> {
+    let (a, b, c, _d) = probs;
+    let (mut u, mut v) = (0usize, 0usize);
+    for _bit in 0..scale {
+        let r = rng.gen_f64();
+        let (du, dv) = if r < a {
+            (0, 0)
+        } else if r < a + b {
+            (0, 1)
+        } else if r < a + b + c {
+            (1, 0)
+        } else {
+            (1, 1)
+        };
+        u = (u << 1) | du;
+        v = (v << 1) | dv;
+    }
+    (u != v).then_some((u as u32, v as u32))
+}
+
 /// Generate an R-MAT graph (Chakrabarti et al.), symmetrized and deduped.
 pub fn rmat(cfg: &RmatConfig) -> CsrGraph {
     let n = 1usize << cfg.scale;
     let m = n * cfg.edge_factor;
-    let (a, b, c, _d) = cfg.probabilities;
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let mut builder = GraphBuilder::new(n);
     for _ in 0..m {
-        let (mut u, mut v) = (0usize, 0usize);
-        for _bit in 0..cfg.scale {
-            let r = rng.gen_f64();
-            let (du, dv) = if r < a {
-                (0, 0)
-            } else if r < a + b {
-                (0, 1)
-            } else if r < a + b + c {
-                (1, 0)
-            } else {
-                (1, 1)
-            };
-            u = (u << 1) | du;
-            v = (v << 1) | dv;
+        if let Some((u, v)) = rmat_pair(&mut rng, cfg.scale, cfg.probabilities) {
+            builder.add_edge(u, v, 1.0);
         }
-        builder.add_edge(u as u32, v as u32, 1.0);
     }
     builder.build()
+}
+
+/// Edges per regenerated chunk of the streamed R-MAT edge stream. A
+/// fixed constant (never derived from thread count) so the per-chunk
+/// RNG streams — and therefore the output — are identical no matter
+/// how many workers rayon schedules.
+const RMAT_CHUNK: usize = 1 << 19;
+
+/// Per-chunk RNG stream seed (SplitMix-style avalanche over the chunk
+/// index, so neighboring chunks get uncorrelated streams).
+fn chunk_seed(seed: u64, chunk: u64) -> u64 {
+    let mut h = seed ^ chunk.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// Streamed, chunk-parallel R-MAT generation straight into CSR.
+///
+/// [`rmat`] routes every sampled pair through [`GraphBuilder`], which
+/// buffers the full edge list and sorts it — fine at bench scale, but
+/// roughly 3× the final graph's footprint and single-threaded at the
+/// 100M-edge scale the sharded trainer targets. This variant never
+/// materializes an edge list: fixed-size chunks of the edge stream are
+/// regenerated twice from per-chunk RNG streams (a parallel degree
+/// count, then a parallel fill into preallocated CSR arrays via
+/// per-node atomic cursors), rows are sorted in parallel, and duplicate
+/// entries merge by summing their unit weights.
+///
+/// Deterministic for a fixed config **independent of thread count**
+/// (pinned in `tests/powerlaw.rs`): chunk streams are keyed by chunk
+/// index alone, the fill pass's scheduling races only permute entries
+/// *within* a row, and the per-row sort plus the order-independent
+/// duplicate merge (all pre-merge weights are 1.0) erase that
+/// permutation. Self-loops are dropped and each kept pair lands in both
+/// endpoint rows, mirroring [`GraphBuilder`] semantics — but the RNG
+/// streams differ from [`rmat`]'s single sequential stream, so the two
+/// generators produce different (equally valid) graphs for one seed.
+pub fn rmat_streamed(cfg: &RmatConfig) -> CsrGraph {
+    use rayon::prelude::*;
+    use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
+
+    let n = 1usize << cfg.scale;
+    let m = n * cfg.edge_factor;
+    let chunks = m.div_ceil(RMAT_CHUNK).max(1);
+    let chunk_range = |c: usize| (c * RMAT_CHUNK, ((c + 1) * RMAT_CHUNK).min(m));
+
+    // pass 1: degree count (order-independent atomic adds)
+    let deg: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    (0..chunks).into_par_iter().for_each(|c| {
+        let (lo, hi) = chunk_range(c);
+        let mut rng = Rng::seed_from_u64(chunk_seed(cfg.seed, c as u64));
+        for _ in lo..hi {
+            if let Some((u, v)) = rmat_pair(&mut rng, cfg.scale, cfg.probabilities) {
+                deg[u as usize].fetch_add(1, Relaxed);
+                deg[v as usize].fetch_add(1, Relaxed);
+            }
+        }
+    });
+    let mut indptr = Vec::with_capacity(n + 1);
+    indptr.push(0u64);
+    let mut acc = 0u64;
+    for d in &deg {
+        acc += d.load(Relaxed);
+        indptr.push(acc);
+    }
+    drop(deg);
+
+    // pass 2: regenerate the identical stream and scatter into rows
+    let cursor: Vec<AtomicU64> = indptr[..n].iter().map(|&o| AtomicU64::new(o)).collect();
+    let slots: Vec<AtomicU32> = (0..acc).map(|_| AtomicU32::new(0)).collect();
+    (0..chunks).into_par_iter().for_each(|c| {
+        let (lo, hi) = chunk_range(c);
+        let mut rng = Rng::seed_from_u64(chunk_seed(cfg.seed, c as u64));
+        for _ in lo..hi {
+            if let Some((u, v)) = rmat_pair(&mut rng, cfg.scale, cfg.probabilities) {
+                let iu = cursor[u as usize].fetch_add(1, Relaxed) as usize;
+                slots[iu].store(v, Relaxed);
+                let iv = cursor[v as usize].fetch_add(1, Relaxed) as usize;
+                slots[iv].store(u, Relaxed);
+            }
+        }
+    });
+    drop(cursor);
+    let mut indices: Vec<u32> = slots.into_iter().map(AtomicU32::into_inner).collect();
+
+    // parallel per-row sort restores a scheduling-independent order
+    let mut rows: Vec<&mut [u32]> = Vec::with_capacity(n);
+    let mut rest: &mut [u32] = &mut indices;
+    for u in 0..n {
+        let len = (indptr[u + 1] - indptr[u]) as usize;
+        let (row, tail) = rest.split_at_mut(len);
+        rows.push(row);
+        rest = tail;
+    }
+    rows.into_par_iter().for_each(|row| row.sort_unstable());
+
+    // merge duplicates (run-length → summed unit weight) and compact
+    let mut f_indptr = Vec::with_capacity(n + 1);
+    f_indptr.push(0u64);
+    let mut f_indices: Vec<u32> = Vec::new();
+    let mut f_weights: Vec<f32> = Vec::new();
+    for u in 0..n {
+        let (s, e) = (indptr[u] as usize, indptr[u + 1] as usize);
+        let mut i = s;
+        while i < e {
+            let v = indices[i];
+            let mut j = i + 1;
+            while j < e && indices[j] == v {
+                j += 1;
+            }
+            f_indices.push(v);
+            f_weights.push((j - i) as f32);
+            i = j;
+        }
+        f_indptr.push(f_indices.len() as u64);
+    }
+    CsrGraph::from_parts(f_indptr, f_indices, f_weights, vec![1; n])
 }
 
 #[cfg(test)]

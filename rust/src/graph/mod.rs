@@ -12,6 +12,6 @@ mod io;
 mod stats;
 
 pub use csr::{CsrGraph, GraphBuilder};
-pub use generate::{rmat, planted_partition, PlantedPartitionConfig, RmatConfig};
+pub use generate::{planted_partition, rmat, rmat_streamed, PlantedPartitionConfig, RmatConfig};
 pub use io::{read_edge_list, write_edge_list};
 pub use stats::GraphStats;

@@ -39,6 +39,16 @@
 //!   sweeps (method × task × memory budget) from one config, trains
 //!   every cell with the minibatch trainer and emits one
 //!   schema-versioned JSON record per cell (`--json`, `--out PATH`).
+//! * `train-sharded [...]` — partition-sharded training: cuts a
+//!   streamed synthetic power-law (R-MAT) graph into `--shards` parts
+//!   with the multilevel partitioner, trains every shard's minibatch
+//!   trainer in parallel over partition-aligned local tables with a
+//!   per-epoch halo exchange (and a periodic `--sync-every` node-table
+//!   sync), and emits one `sharded/v1` JSON record with per-shard
+//!   nodes/s, halo bytes and resident table bytes. No global optimizer
+//!   state is ever materialized. `--parity-check` instead proves the
+//!   k = 1 sharded trainer reproduces the single-shard minibatch
+//!   trainer's loss trajectory bit for bit (serial AND pipelined).
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
 //!   benchmark the partitioner pipeline; defaults to the acceptance
 //!   SBM (n = 50k, 32 communities).
@@ -63,15 +73,21 @@
 use anyhow::{anyhow, bail, Result};
 use poshashemb::bench_harness::{
     bench_compose, bench_minibatch, bench_partition, bench_serve, print_table,
-    rows_from_outcomes, run_showdown, Harness, ServeBenchOptions, ShowdownConfig,
+    rows_from_outcomes, run_showdown, Harness, ServeBenchOptions, ShardedBenchRecord,
+    ShowdownConfig,
 };
 use poshashemb::config::{full_grid, materialize, smoke_grid, write_aot_request};
 use poshashemb::coordinator::{
-    run_experiment, CheckpointConfig, MinibatchOptions, Objective, OptimizerKind, TrainOptions,
+    run_experiment, CheckpointConfig, MinibatchOptions, MinibatchTrainer, Objective,
+    OptimizerKind, ShardedTrainer, TrainOptions,
 };
-use poshashemb::data::{spec, Dataset, DATASET_NAMES};
-use poshashemb::embedding::{EmbeddingPlan, MethodSpec};
-use poshashemb::graph::{planted_partition, PlantedPartitionConfig};
+use poshashemb::data::{
+    spec, train_val_test_split, Dataset, DatasetSpec, TaskKind, DATASET_NAMES,
+};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan, MethodSpec};
+use poshashemb::graph::{
+    planted_partition, rmat_streamed, CsrGraph, PlantedPartitionConfig, RmatConfig,
+};
 use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
 use poshashemb::runtime::{Manifest, RuntimeClient};
 use poshashemb::sampler::{Fanout, Fanouts, SamplerConfig};
@@ -227,8 +243,32 @@ static COMMANDS: &[CommandSpec] = &[
             flag("nodes", Some("N"), "override the synthetic dataset's node count"),
             flag("dim", Some("D"), "override the embedding dimension"),
             flag("out", Some("PATH"), "also write the records to PATH as JSON"),
+            flag("sequential", None, "train grid cells one at a time instead of rayon-parallel"),
             flag("verbose", None, "per-epoch progress lines from every cell"),
             flag("json", None, "emit the records to stdout as JSON"),
+        ],
+    },
+    CommandSpec {
+        name: "train-sharded",
+        positional: None,
+        about: "partition-sharded training with halo exchange on a streamed power-law graph",
+        flags: &[
+            flag("scale", Some("S"), "log2 of the R-MAT node count (default 13)"),
+            flag("edge-factor", Some("E"), "sampled edges per node before dedup (default 8)"),
+            flag("shards", Some("K"), "number of graph shards to train in parallel (default 4)"),
+            flag("method", Some("TAG"), "per-shard method tag, e.g. intra, posemb (default intra)"),
+            flag("dim", Some("D"), "embedding dimension, multiple of 4 (default 32)"),
+            flag("epochs", Some("N"), "training epochs (default 3)"),
+            flag("batch", Some("B"), "seeds per minibatch (default 512)"),
+            flag("fanouts", Some("F1,F2,.."), "per-hop fanouts; list length = head depth"),
+            flag("hidden", Some("W"), "hidden width of intermediate head layers"),
+            flag("sync-every", Some("N"), "node-table sync period in epochs; 0 = initial only"),
+            flag("seed", Some("S"), "random seed (default 0)"),
+            flag("serial", None, "serial oracle path inside each shard's trainer"),
+            flag("parity-check", None, "prove k=1 matches the minibatch trainer, then exit"),
+            flag("out", Some("PATH"), "also write the record to PATH as JSON"),
+            flag("verbose", None, "per-epoch progress lines from every shard"),
+            flag("json", None, "emit the bench record as JSON"),
         ],
     },
     CommandSpec {
@@ -427,6 +467,7 @@ fn run() -> Result<()> {
         "train-minibatch" => cmd_train_minibatch(&parsed),
         "crash-test" => cmd_crash_test(&parsed),
         "showdown" => cmd_showdown(&parsed),
+        "train-sharded" => cmd_train_sharded(&parsed),
         "experiment" => cmd_experiment(&parsed),
         "compose" => cmd_compose(&parsed),
         "partition-bench" => cmd_partition_bench(&parsed),
@@ -941,6 +982,7 @@ fn cmd_showdown(args: &CliArgs) -> Result<()> {
     cfg.nodes = args.parse_as("nodes")?;
     cfg.dim = args.parse_as("dim")?;
     cfg.verbose = args.has("verbose");
+    cfg.parallel = !args.has("sequential");
     eprintln!(
         "showdown: {} methods=[{}] tasks=[{}] budgets={:?} epochs={} batch={} fanouts={}",
         cfg.dataset,
@@ -965,6 +1007,211 @@ fn cmd_showdown(args: &CliArgs) -> Result<()> {
     } else {
         for r in &records {
             println!("{}", r.row());
+        }
+    }
+    Ok(())
+}
+
+/// Wrap a generated power-law graph in a [`Dataset`] for sharded
+/// training. The labels are degree buckets (`log2(degree + 1)`, capped
+/// at 8 classes) — learnable from graph structure alone, so loss
+/// actually falls — and the communities mirror them so budget math
+/// stays well-defined. Splits come from the shared 80/10/10
+/// `train_val_test_split`.
+fn powerlaw_dataset(graph: CsrGraph, d: usize, seed: u64) -> Dataset {
+    let n = graph.num_nodes();
+    let labels: Vec<u32> =
+        (0..n as u32).map(|u| (graph.degree(u) as u64 + 1).ilog2().min(7)).collect();
+    let communities = labels.clone();
+    let splits = train_val_test_split(n, 0.8, 0.1, seed);
+    let spec = DatasetSpec {
+        name: "rmat-powerlaw",
+        n,
+        classes: 8,
+        communities: 8,
+        supers: 1,
+        intra_degree: 0.0,
+        super_degree: 0.0,
+        inter_degree: 0.0,
+        super_label_weight: 0.0,
+        train_frac: 0.8,
+        label_flip: 0.0,
+        task: TaskKind::MultiClass,
+        d,
+        seed,
+    };
+    Dataset { spec, graph, communities, labels, splits }
+}
+
+/// The `--parity-check` harness behind `train-sharded`: prove on this
+/// exact (dataset, method) that a k=1 [`ShardedTrainer`] reproduces the
+/// plain [`MinibatchTrainer`]'s per-epoch loss trajectory **bit for
+/// bit**, in both the serial and the pipelined engine. Prints a
+/// greppable `PASS` line for CI; any divergence is a hard error.
+fn sharded_parity_check(
+    ds: &Dataset,
+    method: &EmbeddingMethod,
+    hier_k: usize,
+    sync_every: usize,
+    cfg: &SamplerConfig,
+    opts: &MinibatchOptions,
+    seed: u64,
+) -> Result<()> {
+    for (label, parallel, prefetch) in [("serial", false, 0usize), ("pipelined", true, 2)] {
+        let mut o = opts.clone();
+        o.parallel = parallel;
+        o.prefetch = prefetch;
+        let hier = if method.needs_hierarchy() {
+            let levels = method.levels().max(1);
+            Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(hier_k, levels)))
+        } else {
+            None
+        };
+        let plan = EmbeddingPlan::build(ds.spec.n, ds.spec.d, method, hier.as_ref(), seed);
+        let reference = MinibatchTrainer::new(ds, &plan, cfg.clone(), o.clone())?.train()?;
+        let sharded = ShardedTrainer::new(ds, method, hier_k, 1, sync_every, cfg.clone(), o)?
+            .train()?;
+        if reference.losses.len() != sharded.losses.len() {
+            bail!(
+                "k=1 parity FAIL ({label}): {} reference epochs vs {} sharded",
+                reference.losses.len(),
+                sharded.losses.len()
+            );
+        }
+        for (e, (a, b)) in reference.losses.iter().zip(&sharded.losses).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                bail!(
+                    "k=1 parity FAIL ({label}): epoch {e} loss {a:.17e} (reference) vs {b:.17e} \
+                     (sharded)"
+                );
+            }
+        }
+        eprintln!(
+            "parity ok ({label}): {} epoch losses bit-identical to the minibatch trainer",
+            reference.losses.len()
+        );
+    }
+    println!(
+        "sharded parity PASS: k=1 reproduces the minibatch trainer bit for bit \
+         (serial + pipelined)"
+    );
+    Ok(())
+}
+
+/// Partition-sharded training on a streamed synthetic power-law graph
+/// (see `coordinator::ShardedTrainer`): multilevel-partition into
+/// `--shards` shards, train shard-parallel epochs with per-epoch halo
+/// exchange, and emit one `sharded/v1` record. `--parity-check` instead
+/// runs the k=1 bit-parity harness on the same graph.
+fn cmd_train_sharded(args: &CliArgs) -> Result<()> {
+    let scale: u32 = args.parse_as("scale")?.unwrap_or(13);
+    if !(1..=30).contains(&scale) {
+        bail!("--scale must be in 1..=30");
+    }
+    let edge_factor: usize = args.parse_as("edge-factor")?.unwrap_or(8);
+    if edge_factor == 0 {
+        bail!("--edge-factor must be >= 1");
+    }
+    let shards: usize = args.parse_as("shards")?.unwrap_or(4);
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    let tag = args.get("method").unwrap_or("intra");
+    let d: usize = args.parse_as("dim")?.unwrap_or(32);
+    if d < 4 || d % 4 != 0 {
+        bail!("--dim must be a multiple of 4, at least 4");
+    }
+    let sync_every: usize = args.parse_as("sync-every")?.unwrap_or(1);
+    let seed: u64 = args.parse_as("seed")?.unwrap_or(0);
+    let n = 1usize << scale;
+    eprintln!(
+        "train-sharded: generating R-MAT graph (scale={scale}, n={n}, ~{} sampled edges)",
+        n * edge_factor
+    );
+    let graph = rmat_streamed(&RmatConfig { scale, edge_factor, seed, ..Default::default() });
+    let edges = graph.num_edges() as u64;
+    let ds = powerlaw_dataset(graph, d, seed);
+    let resolved = MethodSpec::parse(tag)?.resolve(n)?;
+    let mut cfg = SamplerConfig::default();
+    if let Some(b) = args.parse_as("batch")? {
+        cfg.batch_size = b;
+        if cfg.batch_size == 0 {
+            bail!("--batch must be >= 1");
+        }
+    }
+    if let Some(f) = args.get("fanouts") {
+        cfg.fanouts = Fanouts::parse(f).map_err(|e| anyhow!(e))?;
+    }
+    let mut opts = MinibatchOptions { seed, epochs: 3, ..Default::default() };
+    if let Some(e) = args.parse_as("epochs")? {
+        opts.epochs = e;
+    }
+    if let Some(w) = args.parse_as("hidden")? {
+        opts.hidden = w;
+        if opts.hidden == 0 {
+            bail!("--hidden must be >= 1");
+        }
+    }
+    if args.has("serial") {
+        opts.parallel = false;
+        opts.prefetch = 0;
+    }
+    opts.verbose = args.has("verbose");
+    if args.has("parity-check") {
+        return sharded_parity_check(
+            &ds,
+            &resolved.method,
+            resolved.k,
+            sync_every,
+            &cfg,
+            &opts,
+            seed,
+        );
+    }
+    let (epochs, engine) = (opts.epochs, if opts.parallel { "pipelined" } else { "serial" });
+    let trainer =
+        ShardedTrainer::new(&ds, &resolved.method, resolved.k, shards, sync_every, cfg, opts)?;
+    eprintln!(
+        "train-sharded: n={n} edges={edges} d={d} method={} k={} edge_cut={:.0} \
+         epochs={epochs} sync_every={sync_every} {engine}",
+        resolved.method.name(),
+        trainer.k(),
+        trainer.edge_cut(),
+    );
+    let out = trainer.train()?;
+    let record = ShardedBenchRecord::from_outcome(
+        "rmat-powerlaw",
+        resolved.method.name(),
+        n,
+        edges,
+        d,
+        sync_every,
+        seed,
+        &out,
+    );
+    let json = serde_json::to_string_pretty(&record)?;
+    if let Some(path) = args.get("out") {
+        if let Some(parent) = Path::new(path).parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &json)?;
+        eprintln!("wrote sharded/v1 record to {path}");
+    }
+    if args.has("json") {
+        println!("{json}");
+    } else {
+        println!("{}", record.row());
+        for s in &record.shards {
+            println!(
+                "  shard {:<3} owned={:<8} halo={:<7} resident={:>10}B  {:>9.0} nodes/s  \
+                 loss={:.4}",
+                s.shard,
+                s.owned_nodes,
+                s.halo_nodes,
+                s.resident_table_bytes,
+                s.nodes_per_sec,
+                s.final_loss
+            );
         }
     }
     Ok(())

@@ -121,6 +121,15 @@ impl Hierarchy {
         self.m.iter().sum()
     }
 
+    /// The per-node partition-id slice at one `level` — the bulk
+    /// counterpart of [`path`](Hierarchy::path) for callers that walk
+    /// every node at a fixed level (the sharded trainer's setup path
+    /// reads level 0 for all `n` nodes: one slice borrow here instead
+    /// of `n` `path()` allocations).
+    pub fn shard_assignments(&self, level: usize) -> &[u32] {
+        &self.z[level]
+    }
+
     /// Check the parent-child consistency invariant
     /// `z_{j+1}(i) / k == z_j(i)` for all nodes and levels.
     pub fn validate(&self) -> Result<(), String> {

@@ -26,11 +26,13 @@ mod initial;
 mod matching;
 mod random;
 mod refine;
+mod shard;
 
 pub use coarsen::{coarsen, coarsen_reference};
 pub use hierarchy::{induced_subgraph, induced_subgraph_with_scratch, Hierarchy, HierarchyConfig};
 pub use matching::{heavy_edge_matching, parallel_heavy_edge_matching};
 pub use random::random_partition;
+pub use shard::{GraphShards, Shard};
 
 use crate::graph::CsrGraph;
 use crate::util::rng::Rng;

@@ -1,0 +1,227 @@
+//! Graph sharding for partition-sharded training.
+//!
+//! [`GraphShards::build`] cuts a graph into `k` shards with the
+//! multilevel partitioner, then extracts per-shard induced subgraphs
+//! over each shard's **owned** nodes plus a one-hop **halo** of
+//! cross-partition neighbors. The halo is what lets a shard run
+//! neighbor-sampled minibatch epochs locally: every owned seed's 1-hop
+//! neighborhood is fully resident (deeper hops are truncated at the
+//! halo boundary — the standard distributed-GNN approximation), while
+//! halo parameter rows are refreshed from their owning shard by the
+//! sharded trainer's per-epoch halo exchange.
+//!
+//! Local node ids are positions in the **ascending** merged
+//! `owned ∪ halo` list, so [`induced_subgraph_with_scratch`] takes its
+//! no-sort fast path and — crucially — at `k = 1` the single shard's
+//! local graph is the input graph **bit for bit** (identity node list),
+//! which is what the sharded trainer's k = 1 parity pin stands on.
+
+use super::{edge_cut, induced_subgraph_with_scratch, Hierarchy, HierarchyConfig, PartitionConfig};
+use crate::graph::CsrGraph;
+
+/// One shard: an owned node set, its one-hop halo, and the induced
+/// local subgraph over both.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Shard id in `[0, k)`.
+    pub id: usize,
+    /// Global ids of nodes this shard owns (ascending).
+    pub owned: Vec<u32>,
+    /// Global ids of one-hop cross-partition neighbors (ascending,
+    /// disjoint from `owned`).
+    pub halo: Vec<u32>,
+    /// `owned ∪ halo`, ascending — local id `l` is global `locals[l]`.
+    pub locals: Vec<u32>,
+    /// Induced subgraph over `locals` (local ids).
+    pub graph: CsrGraph,
+}
+
+impl Shard {
+    /// Local id of a global node, if resident on this shard.
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        self.locals.binary_search(&global).ok().map(|l| l as u32)
+    }
+
+    /// Is local id `l` an owned (vs halo) node?
+    pub fn is_owned_local(&self, l: u32, assignment: &[u32]) -> bool {
+        assignment[self.locals[l as usize] as usize] == self.id as u32
+    }
+}
+
+/// A `k`-way sharding of one graph: the assignment vector, the cut it
+/// pays, and the per-shard induced subgraphs with halos.
+#[derive(Debug, Clone)]
+pub struct GraphShards {
+    /// `assignment[i]` ∈ `[0, k)`: the shard owning global node `i`.
+    pub assignment: Vec<u32>,
+    /// Number of shards.
+    pub k: usize,
+    /// Weighted edge cut of the assignment (each cut edge once).
+    pub edge_cut: f64,
+    /// The shards, indexed by id.
+    pub shards: Vec<Shard>,
+}
+
+impl GraphShards {
+    /// Partition `g` into `k` shards (multilevel partitioner, seeded by
+    /// `seed`) and extract each shard's owned + halo induced subgraph.
+    ///
+    /// `k = 1` skips the partitioner entirely: one shard owning every
+    /// node in ascending order, no halo, and a local graph bit-identical
+    /// to `g`.
+    pub fn build(g: &CsrGraph, k: usize, seed: u64) -> Self {
+        assert!(k >= 1, "need at least one shard");
+        let n = g.num_nodes();
+        let assignment: Vec<u32> = if k == 1 {
+            vec![0; n]
+        } else {
+            // a 1-level hierarchy is exactly one multilevel k-way cut;
+            // shard_assignments(0) hands back the whole level-0 slice
+            let cfg = HierarchyConfig {
+                k,
+                levels: 1,
+                base: PartitionConfig { seed, ..PartitionConfig::default() },
+            };
+            Hierarchy::build(g, &cfg).shard_assignments(0).to_vec()
+        };
+        let cut = edge_cut(g, &assignment);
+
+        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (i, &p) in assignment.iter().enumerate() {
+            owned[p as usize].push(i as u32);
+        }
+        let mut scratch = vec![u32::MAX; n];
+        let shards: Vec<Shard> = owned
+            .into_iter()
+            .enumerate()
+            .map(|(id, owned)| {
+                let mut halo: Vec<u32> = owned
+                    .iter()
+                    .flat_map(|&u| g.neighbors(u).iter().copied())
+                    .filter(|&v| assignment[v as usize] != id as u32)
+                    .collect();
+                halo.sort_unstable();
+                halo.dedup();
+                // ascending merge of two disjoint sorted lists
+                let mut locals = Vec::with_capacity(owned.len() + halo.len());
+                let (mut a, mut b) = (0usize, 0usize);
+                while a < owned.len() || b < halo.len() {
+                    match (owned.get(a), halo.get(b)) {
+                        (Some(&u), Some(&v)) if u < v => {
+                            locals.push(u);
+                            a += 1;
+                        }
+                        (Some(_), Some(&v)) => {
+                            locals.push(v);
+                            b += 1;
+                        }
+                        (Some(&u), None) => {
+                            locals.push(u);
+                            a += 1;
+                        }
+                        (None, Some(&v)) => {
+                            locals.push(v);
+                            b += 1;
+                        }
+                        (None, None) => unreachable!(),
+                    }
+                }
+                let graph = induced_subgraph_with_scratch(g, &locals, &mut scratch);
+                Shard { id, owned, halo, locals, graph }
+            })
+            .collect();
+        GraphShards { assignment, k, edge_cut: cut, shards }
+    }
+
+    /// Total halo replicas across all shards (each cross-partition
+    /// neighbor counted once per shard replicating it).
+    pub fn total_halo_nodes(&self) -> usize {
+        self.shards.iter().map(|s| s.halo.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{planted_partition, PlantedPartitionConfig};
+
+    fn sbm(n: usize, k: usize, seed: u64) -> CsrGraph {
+        planted_partition(&PlantedPartitionConfig {
+            n,
+            communities: k,
+            intra_degree: 8.0,
+            inter_degree: 1.0,
+            seed,
+            ..Default::default()
+        })
+        .0
+    }
+
+    #[test]
+    fn k1_shard_is_the_whole_graph_bit_for_bit() {
+        let g = sbm(500, 4, 3);
+        let s = GraphShards::build(&g, 1, 7);
+        assert_eq!(s.k, 1);
+        assert_eq!(s.edge_cut, 0.0);
+        let sh = &s.shards[0];
+        assert_eq!(sh.owned, (0..500u32).collect::<Vec<_>>());
+        assert!(sh.halo.is_empty());
+        assert_eq!(sh.graph.indptr(), g.indptr());
+        assert_eq!(sh.graph.indices(), g.indices());
+    }
+
+    #[test]
+    fn shards_cover_all_nodes_exactly_once() {
+        let g = sbm(800, 4, 5);
+        let s = GraphShards::build(&g, 4, 11);
+        let total: usize = s.shards.iter().map(|sh| sh.owned.len()).sum();
+        assert_eq!(total, g.num_nodes());
+        for sh in &s.shards {
+            for &u in &sh.owned {
+                assert_eq!(s.assignment[u as usize], sh.id as u32);
+            }
+            for &v in &sh.halo {
+                assert_ne!(s.assignment[v as usize], sh.id as u32);
+                assert!(sh.owned.binary_search(&v).is_err());
+            }
+            assert!(sh.locals.windows(2).all(|w| w[0] < w[1]), "locals not ascending");
+            assert_eq!(sh.locals.len(), sh.owned.len() + sh.halo.len());
+            assert_eq!(sh.graph.num_nodes(), sh.locals.len());
+        }
+    }
+
+    #[test]
+    fn halo_closes_every_owned_nodes_one_hop_neighborhood() {
+        let g = sbm(600, 3, 9);
+        let s = GraphShards::build(&g, 3, 2);
+        for sh in &s.shards {
+            for &u in &sh.owned {
+                for &v in g.neighbors(u) {
+                    assert!(
+                        sh.local_of(v).is_some(),
+                        "shard {} misses neighbor {v} of owned {u}",
+                        sh.id
+                    );
+                }
+                // and the local row matches the global row, remapped
+                let lu = sh.local_of(u).unwrap();
+                let local_row: Vec<u32> =
+                    sh.graph.neighbors(lu).iter().map(|&l| sh.locals[l as usize]).collect();
+                assert_eq!(local_row, g.neighbors(u), "row mismatch for owned {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed_and_k() {
+        let g = sbm(700, 4, 1);
+        let a = GraphShards::build(&g, 4, 42);
+        let b = GraphShards::build(&g, 4, 42);
+        assert_eq!(a.assignment, b.assignment);
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.owned, y.owned);
+            assert_eq!(x.halo, y.halo);
+            assert_eq!(x.graph.indices(), y.graph.indices());
+        }
+    }
+}

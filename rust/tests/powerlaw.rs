@@ -1,0 +1,74 @@
+//! Power-law (R-MAT) generator properties at larger n: degree-
+//! distribution sanity over random configs (in-tree proptest driver)
+//! and the thread-count-independence pin for the streamed builder that
+//! `train-sharded` feeds on.
+
+use poshashemb::graph::{rmat_streamed, CsrGraph, RmatConfig};
+use poshashemb::util::proptest::run_cases;
+
+fn degrees(g: &CsrGraph) -> Vec<usize> {
+    (0..g.num_nodes() as u32).map(|u| g.degree(u)).collect()
+}
+
+#[test]
+fn prop_streamed_rmat_degree_distribution_is_sane() {
+    run_cases(8, 0x9A, |rng| {
+        let cfg = RmatConfig {
+            scale: (10 + rng.gen_range(3)) as u32, // 1k–4k nodes
+            edge_factor: 8 + rng.gen_range(9),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let g = rmat_streamed(&cfg);
+        g.validate().expect("invalid CSR");
+        let n = g.num_nodes();
+        assert_eq!(n, 1usize << cfg.scale);
+        // symmetrization doubles entries, dedup/self-loop-drop only
+        // removes: mean degree lands below 2·edge_factor but a healthy
+        // share of the sampled mass must survive
+        let entries = g.num_adjacency_entries();
+        assert!(entries <= 2 * n * cfg.edge_factor, "entries above symmetrized bound");
+        assert!(
+            entries * 2 >= n * cfg.edge_factor,
+            "lost too much mass: {entries} entries for {} sampled edges",
+            n * cfg.edge_factor
+        );
+        // heavy tail: the max degree dwarfs the mean, and the top
+        // decile of nodes carries far more than its 10% share
+        let mut degs = degrees(&g);
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        let mean = entries as f64 / n as f64;
+        assert!(
+            degs[0] as f64 > 4.0 * mean,
+            "no heavy tail: max {} vs mean {mean:.1}",
+            degs[0]
+        );
+        let top: usize = degs[..n / 10].iter().sum();
+        let share = top as f64 / entries as f64;
+        assert!(share > 0.25, "top decile holds only {share:.3} of adjacency");
+    });
+}
+
+#[test]
+fn streamed_rmat_is_identical_across_thread_counts() {
+    // big enough for several RMAT_CHUNK-sized stream chunks, so the
+    // parallel count/fill passes genuinely interleave
+    let cfg = RmatConfig { scale: 13, edge_factor: 256, seed: 42, ..Default::default() };
+    let run = |threads: usize| {
+        rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .unwrap()
+            .install(|| rmat_streamed(&cfg))
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one.indptr(), four.indptr());
+    assert_eq!(one.indices(), four.indices());
+    for u in 0..one.num_nodes() as u32 {
+        assert_eq!(one.edge_weights(u), four.edge_weights(u), "weights differ at node {u}");
+    }
+    // and stable on whatever pool the test harness provides
+    let ambient = rmat_streamed(&cfg);
+    assert_eq!(ambient.indices(), one.indices());
+}

@@ -1,0 +1,157 @@
+//! Partition-sharded training acceptance: the headline pins from the
+//! determinism ledger. k=1 must reproduce the plain minibatch trainer
+//! **bit for bit** (serial and pipelined engines); k>1 must be
+//! deterministic for a fixed (seed, k); and every shard's resident
+//! table must fit in `full/k` plus its halo replica rows.
+
+use poshashemb::coordinator::{MinibatchOptions, MinibatchTrainer, ShardedTrainer};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::partition::{Hierarchy, HierarchyConfig};
+use poshashemb::sampler::SamplerConfig;
+
+const HIER_K: usize = 4;
+
+/// A shrunk synth-arxiv: small enough that four trainers finish in
+/// test time, large enough that k=4 sharding leaves no shard empty.
+fn small_dataset(d: usize) -> Dataset {
+    let mut sp = spec("synth-arxiv").unwrap();
+    sp.n = 600;
+    sp.communities = 30;
+    sp.supers = 6;
+    sp.d = d;
+    Dataset::generate(&sp)
+}
+
+fn small_cfg() -> SamplerConfig {
+    SamplerConfig { batch_size: 64, ..Default::default() }
+}
+
+fn small_opts(parallel: bool) -> MinibatchOptions {
+    MinibatchOptions {
+        epochs: 2,
+        seed: 7,
+        parallel,
+        prefetch: if parallel { 2 } else { 0 },
+        ..Default::default()
+    }
+}
+
+/// Loss trajectory of the plain (unsharded) trainer on `ds`.
+fn reference_losses(
+    ds: &Dataset,
+    method: &EmbeddingMethod,
+    cfg: &SamplerConfig,
+    opts: &MinibatchOptions,
+) -> Vec<f64> {
+    let hier = if method.needs_hierarchy() {
+        let levels = method.levels().max(1);
+        Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(HIER_K, levels)))
+    } else {
+        None
+    };
+    let plan = EmbeddingPlan::build(ds.spec.n, ds.spec.d, method, hier.as_ref(), opts.seed);
+    let mut t = MinibatchTrainer::new(ds, &plan, cfg.clone(), opts.clone()).unwrap();
+    t.train().unwrap().losses
+}
+
+fn assert_bitwise_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: trajectory lengths differ");
+    for (e, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: epoch {e} diverged ({x:.17e} vs {y:.17e})"
+        );
+    }
+}
+
+#[test]
+fn k1_reproduces_minibatch_trainer_bit_for_bit() {
+    let ds = small_dataset(16);
+    let cfg = small_cfg();
+    let methods = [
+        EmbeddingMethod::Full,
+        EmbeddingMethod::PosHashEmbIntra { levels: 2, compression: 5, h: 2 },
+    ];
+    for method in &methods {
+        for parallel in [false, true] {
+            let opts = small_opts(parallel);
+            let want = reference_losses(&ds, method, &cfg, &opts);
+            let out = ShardedTrainer::new(&ds, method, HIER_K, 1, 1, cfg.clone(), opts)
+                .unwrap()
+                .train()
+                .unwrap();
+            assert_eq!(out.k, 1);
+            let what = format!(
+                "{} ({})",
+                method.name(),
+                if parallel { "pipelined" } else { "serial" }
+            );
+            assert_bitwise_eq(&want, &out.losses, &what);
+            // k=1 has no remote rows, so nothing crosses shards
+            assert_eq!(out.halo_bytes_total, 0, "{what}: k=1 exchanged halo bytes");
+            assert_eq!(out.shards[0].halo_nodes, 0);
+        }
+    }
+}
+
+#[test]
+fn fixed_seed_and_k_runs_are_deterministic() {
+    let ds = small_dataset(16);
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 2, compression: 5, h: 2 };
+    let run = || {
+        ShardedTrainer::new(&ds, &method, HIER_K, 4, 1, small_cfg(), small_opts(true))
+            .unwrap()
+            .train()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.k, 4);
+    assert_eq!(a.edge_cut.to_bits(), b.edge_cut.to_bits());
+    assert_bitwise_eq(&a.losses, &b.losses, "aggregate losses");
+    assert_eq!(a.val_metric.to_bits(), b.val_metric.to_bits());
+    assert_eq!(a.test_metric.to_bits(), b.test_metric.to_bits());
+    assert_eq!(a.halo_bytes_total, b.halo_bytes_total);
+    assert_eq!(a.exchanges, b.exchanges);
+    for (sa, sb) in a.shards.iter().zip(&b.shards) {
+        assert_eq!(sa.owned_nodes, sb.owned_nodes);
+        assert_eq!(sa.halo_nodes, sb.halo_nodes);
+        assert_eq!(sa.halo_bytes_per_exchange, sb.halo_bytes_per_exchange);
+        assert_bitwise_eq(&sa.losses, &sb.losses, "per-shard losses");
+    }
+}
+
+#[test]
+fn per_shard_resident_tables_fit_in_full_over_k_plus_halo() {
+    let d = 16;
+    let ds = small_dataset(d);
+    let k = 4;
+    let out = ShardedTrainer::new(&ds, &EmbeddingMethod::Full, HIER_K, k, 1, small_cfg(), {
+        let mut o = small_opts(true);
+        o.epochs = 1;
+        o
+    })
+    .unwrap()
+    .train()
+    .unwrap();
+    assert_eq!(out.full_table_bytes, (ds.spec.n * d * 4) as u64);
+    // 1.15 absorbs the partitioner's epsilon = 0.10 imbalance slack
+    let per_shard_budget = 1.15 * out.full_table_bytes as f64 / k as f64;
+    let mut peak = 0u64;
+    for s in &out.shards {
+        let halo_bytes = (s.halo_nodes * d * 4) as u64;
+        assert!(
+            (s.resident_table_bytes as f64) <= per_shard_budget + halo_bytes as f64,
+            "shard {} resident {}B exceeds full/k ({:.0}B) + halo ({halo_bytes}B)",
+            s.shard,
+            s.resident_table_bytes,
+            per_shard_budget
+        );
+        peak = peak.max(s.resident_table_bytes);
+    }
+    assert_eq!(out.peak_resident_table_bytes, peak);
+    // every node is owned by exactly one shard
+    assert_eq!(out.shards.iter().map(|s| s.owned_nodes).sum::<usize>(), ds.spec.n);
+}
