@@ -25,7 +25,7 @@ use crate::coordinator::{
 };
 use crate::data::Dataset;
 use crate::embedding::{compose_embeddings, init_params, ComposeEngine, EmbeddingPlan};
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 use crate::metrics::fmt_cell;
 use crate::partition::{
     coarsen, coarsen_reference, heavy_edge_matching, parallel_heavy_edge_matching, partition,
@@ -396,7 +396,7 @@ pub struct PartitionBenchRecord {
 }
 
 impl PartitionBenchRecord {
-    fn from_result(stage: &str, g: &CsrGraph, k: usize, r: &BenchResult) -> Self {
+    fn from_result<G: GraphStore + ?Sized>(stage: &str, g: &G, k: usize, r: &BenchResult) -> Self {
         PartitionBenchRecord {
             stage: stage.to_string(),
             n: g.num_nodes(),
@@ -440,8 +440,8 @@ impl PartitionBenchRecord {
 /// their scalar oracles on this exact graph (involution property,
 /// identical contraction structure) — a bench that silently measured a
 /// broken kernel would be worse than no bench.
-pub fn bench_partition(
-    g: &CsrGraph,
+pub fn bench_partition<G: GraphStore + ?Sized>(
+    g: &G,
     k: usize,
     levels: usize,
     seed: u64,

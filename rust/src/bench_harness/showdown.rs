@@ -30,7 +30,7 @@ use crate::data::{spec, Dataset, DatasetSpec};
 use crate::embedding::{
     budget_for_fraction, default_k, EmbeddingMethod, EmbeddingPlan, MethodFamily, PosBudget,
 };
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 use crate::partition::{Hierarchy, HierarchyConfig};
 use crate::sampler::{Fanouts, SamplerConfig};
 use anyhow::{anyhow, bail, Result};
@@ -211,13 +211,13 @@ fn shrunk_spec(dsname: &str, nodes: Option<usize>, dim: Option<usize>) -> Result
 /// Fit `tag` to a parameter budget: the concrete method plus the
 /// hierarchy the position-family methods partition with (`None` for
 /// table/hash methods). `budget` is `n·d·fraction` parameters.
-fn fit_method(
+fn fit_method<G: GraphStore + ?Sized>(
     tag: &str,
     n: usize,
     d: usize,
     budget: usize,
     fraction: f64,
-    graph: &CsrGraph,
+    graph: &G,
 ) -> Result<(EmbeddingMethod, Option<Hierarchy>)> {
     let h = 2; // paper default hash count for multi-hash baselines
     let method = match tag {

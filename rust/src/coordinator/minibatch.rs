@@ -1706,7 +1706,7 @@ pub fn train_full_batch(
         for l in 0..layers {
             let mut nxt = order[l].clone();
             for &u in &order[l] {
-                for &v in ds.graph.neighbors(u) {
+                for &v in ds.graph.mem().neighbors(u) {
                     if !seen[v as usize] {
                         seen[v as usize] = true;
                         nxt.push(v);
@@ -1827,7 +1827,7 @@ pub fn train_full_batch(
                         dh_in[uu * din + a] += acc_s;
                         dn[a] = acc_n;
                     }
-                    let nbs = ds.graph.neighbors(u);
+                    let nbs = ds.graph.mem().neighbors(u);
                     if !nbs.is_empty() {
                         let inv = 1.0 / nbs.len() as f32;
                         for &v in nbs {
@@ -1928,7 +1928,7 @@ fn forward_dense(
         let bias = params.get(&head[j].2);
         for i in 0..n {
             let nb = &mut nbar[i * din..(i + 1) * din];
-            mean_rows(nb, input, ds.graph.neighbors(i as u32));
+            mean_rows(nb, input, ds.graph.mem().neighbors(i as u32));
             sage_affine_row(
                 &input[i * din..(i + 1) * din],
                 nb,

@@ -496,7 +496,7 @@ fn shard_dataset(ds: &Dataset, shard: &Shard, assignment: &[u32]) -> Dataset {
         test: map_fold(&ds.splits.test),
     };
     let spec = DatasetSpec { n: n_local, ..ds.spec.clone() };
-    Dataset { spec, graph: shard.graph.clone(), communities, labels, splits }
+    Dataset { spec, graph: shard.graph.clone().into(), communities, labels, splits }
 }
 
 /// Build one shard's partition-aligned plan plus its halo pull lists.

@@ -46,7 +46,7 @@ pub fn build_statics(
             out.push(("adj_w".to_string(), HostTensor::F32(w, vec![n, k])));
         }
         ModelKind::Sage => {
-            let (src, dst) = ds.graph.to_coo();
+            let (src, dst) = ds.graph.mem().to_coo();
             let e = src.len();
             out.push((
                 "src".to_string(),
@@ -62,7 +62,7 @@ pub fn build_statics(
             out.push(("inv_deg".to_string(), HostTensor::F32(inv_deg, vec![n, 1])));
         }
         ModelKind::Gat => {
-            let (src, dst) = ds.graph.to_coo();
+            let (src, dst) = ds.graph.mem().to_coo();
             let e = src.len();
             out.push((
                 "src".to_string(),
@@ -81,7 +81,7 @@ pub fn build_statics(
 /// with `1/sqrt((deg_u+1)(deg_v+1))`, then the self loop `1/(deg_u+1)`,
 /// then weight-0 self-pointing padding up to `K = max_deg + 1`.
 pub fn padded_gcn_adjacency(ds: &Dataset) -> (Vec<i32>, Vec<f32>, usize) {
-    let g = &ds.graph;
+    let g = ds.graph.mem();
     let n = g.num_nodes();
     let max_deg = (0..n as u32).map(|u| g.degree(u)).max().unwrap_or(0);
     let k = max_deg + 1;

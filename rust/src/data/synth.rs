@@ -1,7 +1,7 @@
 //! Synthetic dataset construction.
 
 use super::splits::{train_val_test_split, Splits};
-use crate::graph::{planted_partition, CsrGraph, GraphStats, PlantedPartitionConfig};
+use crate::graph::{planted_partition, GraphHandle, GraphStats, PlantedPartitionConfig};
 use crate::util::rng::Rng;
 
 /// Prediction task kind (paper: multi-class for arxiv/products, multi-
@@ -57,8 +57,10 @@ pub struct DatasetSpec {
 pub struct Dataset {
     /// The spec this dataset was generated from.
     pub spec: DatasetSpec,
-    /// The undirected graph.
-    pub graph: CsrGraph,
+    /// The undirected graph — in-memory or disk-backed (see
+    /// [`GraphHandle`]). Paths that need the resident CSR (full-batch
+    /// training, statics, artifact export) call `graph.mem()`.
+    pub graph: GraphHandle,
     /// Planted community of each node (ground truth, not visible to models).
     pub communities: Vec<u32>,
     /// MultiClass: `labels[i] ∈ [0, classes)`.
@@ -137,14 +139,16 @@ impl Dataset {
         };
         let val_frac = ((1.0 - spec.train_frac) / 2.0).min(0.2);
         let splits = train_val_test_split(spec.n, spec.train_frac, val_frac, spec.seed ^ 0x5114);
-        Dataset { spec: spec.clone(), graph, communities, labels, splits }
+        Dataset { spec: spec.clone(), graph: graph.into(), communities, labels, splits }
     }
 
     /// Graph statistics with label-homophily (Table II analog row).
+    ///
+    /// Needs the resident CSR (panics for disk-backed datasets).
     pub fn stats(&self) -> GraphStats {
         match self.spec.task {
-            TaskKind::MultiClass => GraphStats::compute(&self.graph, Some(&self.labels)),
-            TaskKind::MultiLabel => GraphStats::compute(&self.graph, Some(&self.communities)),
+            TaskKind::MultiClass => GraphStats::compute(self.graph.mem(), Some(&self.labels)),
+            TaskKind::MultiLabel => GraphStats::compute(self.graph.mem(), Some(&self.communities)),
         }
     }
 
@@ -230,7 +234,7 @@ mod tests {
             st.edge_homophily
         );
         // community homophily is the strong signal
-        let cst = crate::graph::GraphStats::compute(&ds.graph, Some(&ds.communities));
+        let cst = crate::graph::GraphStats::compute(ds.graph.mem(), Some(&ds.communities));
         assert!(cst.edge_homophily.unwrap() > 0.3);
     }
 }

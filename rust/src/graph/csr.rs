@@ -92,6 +92,16 @@ impl CsrGraph {
         &self.indices
     }
 
+    /// Raw edge-weight array aligned with `indices()`.
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    /// Raw per-node vertex-weight array (length `n`).
+    pub fn vertex_weights(&self) -> &[u32] {
+        &self.vwgts
+    }
+
     #[inline]
     fn range(&self, u: u32) -> (usize, usize) {
         (self.indptr[u as usize] as usize, self.indptr[u as usize + 1] as usize)

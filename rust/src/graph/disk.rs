@@ -1,0 +1,623 @@
+//! On-disk CSR graphs: a checksummed binary layout plus the
+//! [`DiskCsr`] backend that reads it without materializing the
+//! adjacency.
+//!
+//! ## Layout
+//!
+//! A graph directory holds four raw little-endian section files plus a
+//! JSON manifest, in the same section format as model artifacts and
+//! checkpoints ([`crate::util::sections`]):
+//!
+//! | section   | file          | dtype | shape        |
+//! |-----------|---------------|-------|--------------|
+//! | `indptr`  | `indptr.bin`  | u64   | `[n + 1]`    |
+//! | `indices` | `indices.bin` | u32   | `[2m]`       |
+//! | `weights` | `weights.bin` | f32   | `[2m]`       |
+//! | `vwgts`   | `vwgts.bin`   | u32   | `[n]`        |
+//!
+//! `manifest.json` ([`DiskGraphManifest`]) carries per-section FNV-1a
+//! checksums, byte lengths and shapes. Directories are published
+//! atomically (sections into a temp sibling, manifest last, then
+//! rename — see [`write_graph_dir`]), so a killed writer leaves either
+//! nothing or the previous intact directory, never a torn one.
+//!
+//! ## Reading
+//!
+//! [`DiskCsr::open`] verifies every section (length, checksum, shape,
+//! CSR invariants) before returning — every failure names the
+//! offending section. `indptr` and `vwgts` stay resident (12 bytes per
+//! node); `indices`/`weights` rows are answered with positioned reads
+//! (`pread(2)`) against file handles held open, so adjacency memory is
+//! O(row) regardless of graph size. The `memmap2` zero-copy path is
+//! not available in the offline dependency set; the pread reader sits
+//! behind the same [`GraphStore`] trait, so it is the single swap
+//! point once a mapping crate can be vendored.
+
+use super::csr::CsrGraph;
+use super::store::GraphStore;
+use crate::util::checksum::{tagged, Fnv1a64};
+use crate::util::fault;
+use crate::util::sections::{
+    dtype_width, publish_dir, read_section, temp_sibling, SectionData, SectionSpec,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use serde::{Deserialize, Serialize};
+use std::cell::RefCell;
+use std::fs::{self, File};
+use std::io::{Read, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+/// On-disk graph format version; bumped on any layout change.
+pub const DISK_GRAPH_VERSION: u32 = 1;
+/// Manifest `kind` tag distinguishing graph directories from model
+/// artifacts and checkpoints.
+const DISK_GRAPH_KIND: &str = "disk-csr";
+/// Manifest file name.
+const MANIFEST: &str = "manifest.json";
+/// Elements per write chunk in the streaming writer (bounds the
+/// writer's transient buffer to ~512 KiB regardless of graph size).
+const WRITE_CHUNK: usize = 1 << 16;
+/// Bytes per read chunk when verifying section checksums on open.
+const VERIFY_CHUNK: usize = 1 << 20;
+
+/// JSON manifest of an on-disk graph directory.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct DiskGraphManifest {
+    /// Layout version ([`DISK_GRAPH_VERSION`]).
+    pub format_version: u32,
+    /// Always `"disk-csr"` — a cheap guard against opening a model
+    /// artifact or checkpoint directory as a graph.
+    pub kind: String,
+    /// Number of nodes.
+    pub num_nodes: usize,
+    /// Number of directed adjacency entries (`2 * num_edges`).
+    pub num_adjacency_entries: usize,
+    /// Per-section specs (name, file, dtype, shape, bytes, checksum).
+    pub sections: Vec<SectionSpec>,
+}
+
+impl DiskGraphManifest {
+    fn section(&self, name: &str) -> Result<&SectionSpec> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("graph manifest has no section '{name}'"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// writing
+// ---------------------------------------------------------------------
+
+/// One section file written incrementally: bytes stream through an
+/// FNV-1a hasher and a running length, so the spec is produced without
+/// ever holding the encoded section in memory (unlike
+/// `sections::write_section`, which buffers the full little-endian
+/// image).
+struct StreamingSection {
+    name: String,
+    file: String,
+    f: File,
+    hash: Fnv1a64,
+    bytes: usize,
+    buf: Vec<u8>,
+}
+
+impl StreamingSection {
+    fn create(dir: &Path, name: &str) -> Result<Self> {
+        fault::hit("diskgraph.section").with_context(|| format!("writing section '{name}'"))?;
+        let file = format!("{name}.bin");
+        let path = dir.join(&file);
+        let f = File::create(&path)
+            .with_context(|| format!("creating section '{name}' ({})", path.display()))?;
+        Ok(StreamingSection {
+            name: name.to_string(),
+            file,
+            f,
+            hash: Fnv1a64::new(),
+            bytes: 0,
+            buf: Vec::with_capacity(WRITE_CHUNK * 8),
+        })
+    }
+
+    fn write_bytes(&mut self) -> Result<()> {
+        self.hash.update(&self.buf);
+        self.bytes += self.buf.len();
+        self.f
+            .write_all(&self.buf)
+            .with_context(|| format!("writing section '{}'", self.name))?;
+        self.buf.clear();
+        Ok(())
+    }
+
+    fn put_u64(&mut self, xs: &[u64]) -> Result<()> {
+        for chunk in xs.chunks(WRITE_CHUNK) {
+            for &x in chunk {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+            self.write_bytes()?;
+        }
+        Ok(())
+    }
+
+    fn put_u32(&mut self, xs: &[u32]) -> Result<()> {
+        for chunk in xs.chunks(WRITE_CHUNK) {
+            for &x in chunk {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+            self.write_bytes()?;
+        }
+        Ok(())
+    }
+
+    fn put_f32(&mut self, xs: &[f32]) -> Result<()> {
+        for chunk in xs.chunks(WRITE_CHUNK) {
+            for &x in chunk {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+            self.write_bytes()?;
+        }
+        Ok(())
+    }
+
+    fn finish(self, dtype: &str, shape: Vec<usize>) -> Result<SectionSpec> {
+        let elems: usize = shape.iter().product();
+        if elems * dtype_width(dtype)? != self.bytes {
+            bail!(
+                "section '{}' shape {:?} does not match its {} written bytes",
+                self.name,
+                shape,
+                self.bytes
+            );
+        }
+        self.f
+            .sync_all()
+            .with_context(|| format!("fsyncing section '{}'", self.name))?;
+        Ok(SectionSpec {
+            name: self.name,
+            file: self.file,
+            dtype: dtype.to_string(),
+            shape,
+            bytes: self.bytes,
+            checksum: tagged(self.hash.finish()),
+        })
+    }
+}
+
+/// Atomically write `g` as an on-disk graph directory at `dir`:
+/// sections stream into a temp sibling (fsynced), the manifest is
+/// written last, then the directory is published with a rename. A
+/// fault or crash at any point leaves either no directory or the
+/// previous intact one (`diskgraph.section` / `diskgraph.manifest` /
+/// `diskgraph.rename` fault sites, mirrored from model artifacts).
+pub fn write_graph_dir(dir: &Path, g: &CsrGraph) -> Result<()> {
+    if let Some(parent) = dir.parent() {
+        if parent != Path::new("") {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating graph parent {}", parent.display()))?;
+        }
+    }
+    let tmp = temp_sibling(dir);
+    fs::create_dir_all(&tmp)
+        .with_context(|| format!("creating graph temp dir {}", tmp.display()))?;
+    let res = write_graph_contents(&tmp, g).and_then(|()| publish_dir(&tmp, dir));
+    if res.is_err() {
+        let _ = fs::remove_dir_all(&tmp);
+    }
+    res
+}
+
+/// Write all four sections plus the manifest into `tmp` (not yet
+/// published).
+fn write_graph_contents(tmp: &Path, g: &CsrGraph) -> Result<()> {
+    let n = g.num_nodes();
+    let adj = g.num_adjacency_entries();
+    let mut sections = Vec::with_capacity(4);
+
+    let mut s = StreamingSection::create(tmp, "indptr")?;
+    s.put_u64(g.indptr())?;
+    sections.push(s.finish("u64", vec![n + 1])?);
+
+    let mut s = StreamingSection::create(tmp, "indices")?;
+    s.put_u32(g.indices())?;
+    sections.push(s.finish("u32", vec![adj])?);
+
+    let mut s = StreamingSection::create(tmp, "weights")?;
+    s.put_f32(g.weights())?;
+    sections.push(s.finish("f32", vec![adj])?);
+
+    let mut s = StreamingSection::create(tmp, "vwgts")?;
+    s.put_u32(g.vertex_weights())?;
+    sections.push(s.finish("u32", vec![n])?);
+
+    fault::hit("diskgraph.manifest").context("writing graph manifest")?;
+    let manifest = DiskGraphManifest {
+        format_version: DISK_GRAPH_VERSION,
+        kind: DISK_GRAPH_KIND.to_string(),
+        num_nodes: n,
+        num_adjacency_entries: adj,
+        sections,
+    };
+    let text = serde_json::to_string_pretty(&manifest).context("encoding graph manifest")?;
+    let path = tmp.join(MANIFEST);
+    let mut f = File::create(&path)
+        .with_context(|| format!("creating graph manifest {}", path.display()))?;
+    f.write_all(text.as_bytes()).context("writing graph manifest")?;
+    f.sync_all().context("fsyncing graph manifest")?;
+    fault::hit("diskgraph.rename").context("publishing graph directory")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// reading
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread row byte buffer for positioned reads — reused across
+    /// calls so steady-state sampling does not allocate per row.
+    static ROW_BUF: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The on-disk CSR backend: resident `indptr`/`vwgts`, pread-backed
+/// adjacency rows. See the module docs for the layout and the
+/// verification performed by [`DiskCsr::open`].
+#[derive(Debug)]
+pub struct DiskCsr {
+    dir: PathBuf,
+    indptr: Vec<u64>,
+    vwgts: Vec<u32>,
+    indices: File,
+    weights: File,
+    num_adj: usize,
+}
+
+impl DiskCsr {
+    /// Open and fully verify a graph directory. Every section's byte
+    /// length, checksum and shape are checked against the manifest
+    /// (the adjacency sections in streaming chunks, never resident),
+    /// then the CSR invariants are checked; every failure names the
+    /// offending section.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let mpath = dir.join(MANIFEST);
+        let text = fs::read_to_string(&mpath)
+            .with_context(|| format!("reading graph manifest {}", mpath.display()))?;
+        let manifest: DiskGraphManifest = serde_json::from_str(&text)
+            .with_context(|| format!("parsing graph manifest {}", mpath.display()))?;
+        if manifest.kind != DISK_GRAPH_KIND {
+            bail!("{} is a '{}' directory, not a disk-csr graph", dir.display(), manifest.kind);
+        }
+        if manifest.format_version != DISK_GRAPH_VERSION {
+            bail!(
+                "graph directory {} has format version {}, this build reads {}",
+                dir.display(),
+                manifest.format_version,
+                DISK_GRAPH_VERSION
+            );
+        }
+        let n = manifest.num_nodes;
+        let adj = manifest.num_adjacency_entries;
+
+        // resident sections: read_section verifies length, checksum and
+        // shape, naming the section in every failure
+        let ip_spec = manifest.section("indptr")?;
+        check_shape(ip_spec, &[n + 1])?;
+        let indptr = match read_section(dir, ip_spec)? {
+            SectionData::U64(v) => v,
+            other => bail!("section 'indptr' decoded as {}, expected u64", other.dtype()),
+        };
+        let vw_spec = manifest.section("vwgts")?;
+        check_shape(vw_spec, &[n])?;
+        let vwgts = match read_section(dir, vw_spec)? {
+            SectionData::U32(v) => v,
+            other => bail!("section 'vwgts' decoded as {}, expected u32", other.dtype()),
+        };
+
+        // CSR invariants (a stale manifest paired with the wrong
+        // section files fails here if the checksums happen to match)
+        if indptr[0] != 0 {
+            bail!("section 'indptr' is not a CSR row-pointer array (does not start at 0)");
+        }
+        if indptr.windows(2).any(|w| w[1] < w[0]) {
+            bail!("section 'indptr' is not a CSR row-pointer array (not monotone)");
+        }
+        if *indptr.last().unwrap() as usize != adj {
+            bail!(
+                "section 'indptr' ends at {} entries, manifest says {} adjacency entries",
+                indptr.last().unwrap(),
+                adj
+            );
+        }
+
+        // adjacency sections: verify in streaming chunks, keep handles
+        let ix_spec = manifest.section("indices")?;
+        check_shape(ix_spec, &[adj])?;
+        let indices = verify_and_open(dir, ix_spec)?;
+        let wt_spec = manifest.section("weights")?;
+        check_shape(wt_spec, &[adj])?;
+        let weights = verify_and_open(dir, wt_spec)?;
+
+        Ok(DiskCsr { dir: dir.to_path_buf(), indptr, vwgts, indices, weights, num_adj: adj })
+    }
+
+    /// The directory this graph was opened from.
+    pub fn path(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load the whole graph into an in-memory [`CsrGraph`] — for tools
+    /// and tests that want resident arrays; training paths never call
+    /// this.
+    pub fn to_mem(&self) -> Result<CsrGraph> {
+        let mut indices = vec![0u8; self.num_adj * 4];
+        self.indices.read_exact_at(&mut indices, 0).context("reading section 'indices'")?;
+        let mut weights = vec![0u8; self.num_adj * 4];
+        self.weights.read_exact_at(&mut weights, 0).context("reading section 'weights'")?;
+        Ok(CsrGraph::from_parts(
+            self.indptr.clone(),
+            indices
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+            weights
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+            self.vwgts.clone(),
+        ))
+    }
+
+    #[inline]
+    fn range(&self, u: u32) -> (u64, usize) {
+        let s = self.indptr[u as usize];
+        let e = self.indptr[u as usize + 1];
+        (s, (e - s) as usize)
+    }
+
+    /// One u32 element of `indices` at global element position `pos`.
+    /// Post-open reads go to a verified, held-open file: a failure here
+    /// means the file vanished or the device died mid-run, which is
+    /// not recoverable — panic with the section name.
+    #[inline]
+    fn index_at(&self, pos: u64) -> u32 {
+        let mut b = [0u8; 4];
+        self.indices
+            .read_exact_at(&mut b, pos * 4)
+            .expect("positioned read of section 'indices' failed after open");
+        u32::from_le_bytes(b)
+    }
+}
+
+/// Shape guard against a stale manifest (e.g. a manifest copied from a
+/// differently-sized graph over matching-by-accident checksums).
+fn check_shape(spec: &SectionSpec, expect: &[usize]) -> Result<()> {
+    if spec.shape != expect {
+        bail!(
+            "section '{}' ({}) has manifest shape {:?}, graph metadata implies {:?} \
+             (stale or mismatched manifest)",
+            spec.name,
+            spec.file,
+            spec.shape,
+            expect
+        );
+    }
+    Ok(())
+}
+
+/// Verify one section's byte length and checksum by streaming chunked
+/// reads (the section is never resident), then return the handle
+/// positioned-read access will use. Error messages mirror
+/// `sections::read_section` so diagnosis is uniform.
+fn verify_and_open(dir: &Path, spec: &SectionSpec) -> Result<File> {
+    let path = dir.join(&spec.file);
+    let mut f = File::open(&path)
+        .with_context(|| format!("reading section '{}' ({})", spec.name, path.display()))?;
+    let len = f
+        .metadata()
+        .with_context(|| format!("reading section '{}' ({})", spec.name, path.display()))?
+        .len() as usize;
+    if len != spec.bytes {
+        bail!(
+            "section '{}' ({}) is {} bytes on disk, manifest says {}",
+            spec.name,
+            spec.file,
+            len,
+            spec.bytes
+        );
+    }
+    let elems: usize = spec.shape.iter().product();
+    if elems * dtype_width(&spec.dtype)? != len {
+        bail!("section '{}' shape {:?} does not match its byte length", spec.name, spec.shape);
+    }
+    let mut hash = Fnv1a64::new();
+    let mut buf = vec![0u8; VERIFY_CHUNK.min(len.max(1))];
+    let mut remaining = len;
+    while remaining > 0 {
+        let take = remaining.min(buf.len());
+        f.read_exact(&mut buf[..take])
+            .with_context(|| format!("reading section '{}' ({})", spec.name, spec.file))?;
+        hash.update(&buf[..take]);
+        remaining -= take;
+    }
+    let got = tagged(hash.finish());
+    if got != spec.checksum {
+        bail!(
+            "checksum mismatch in section '{}' ({}): manifest {}, file {}",
+            spec.name,
+            spec.file,
+            spec.checksum,
+            got
+        );
+    }
+    Ok(f)
+}
+
+impl GraphStore for DiskCsr {
+    fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    fn num_adjacency_entries(&self) -> usize {
+        self.num_adj
+    }
+
+    fn indptr(&self) -> &[u64] {
+        &self.indptr
+    }
+
+    fn vertex_weight(&self, u: u32) -> u32 {
+        self.vwgts[u as usize]
+    }
+
+    fn total_vertex_weight(&self) -> u64 {
+        self.vwgts.iter().map(|&w| w as u64).sum()
+    }
+
+    fn neighbors_into(&self, u: u32, out: &mut Vec<u32>) {
+        out.clear();
+        let (start, len) = self.range(u);
+        if len == 0 {
+            return;
+        }
+        ROW_BUF.with(|b| {
+            let mut buf = b.borrow_mut();
+            buf.resize(len * 4, 0);
+            self.indices
+                .read_exact_at(&mut buf, start * 4)
+                .expect("positioned read of section 'indices' failed after open");
+            out.extend(
+                buf.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+        });
+    }
+
+    fn edges_into(&self, u: u32, nbrs: &mut Vec<u32>, wts: &mut Vec<f32>) {
+        self.neighbors_into(u, nbrs);
+        wts.clear();
+        let (start, len) = self.range(u);
+        if len == 0 {
+            return;
+        }
+        ROW_BUF.with(|b| {
+            let mut buf = b.borrow_mut();
+            buf.resize(len * 4, 0);
+            self.weights
+                .read_exact_at(&mut buf, start * 4)
+                .expect("positioned read of section 'weights' failed after open");
+            wts.extend(
+                buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+        });
+    }
+
+    fn has_edge(&self, u: u32, v: u32) -> bool {
+        // binary search over u's sorted on-disk row: log(deg) 4-byte
+        // positioned reads, allocation-free — same answer as the
+        // in-memory slice search by the row-ordering invariant
+        let (start, len) = self.range(u);
+        let (mut lo, mut hi) = (0u64, len as u64);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let x = self.index_at(start + mid);
+            match x.cmp(&v) {
+                std::cmp::Ordering::Equal => return true,
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat_streamed, GraphBuilder, RmatConfig};
+    use crate::util::tempdir::TempDir;
+
+    fn small_graph() -> CsrGraph {
+        let mut b = GraphBuilder::new(6);
+        for (u, v, w) in [(0, 1, 1.0), (1, 2, 2.0), (2, 3, 0.5), (3, 4, 1.0), (0, 5, 4.0)] {
+            b.add_edge(u, v, w);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn write_open_roundtrip_matches_memory() {
+        let t = TempDir::new("diskcsr-rt").unwrap();
+        let dir = t.path().join("g");
+        let g = small_graph();
+        write_graph_dir(&dir, &g).unwrap();
+        let d = DiskCsr::open(&dir).unwrap();
+        assert_eq!(GraphStore::num_nodes(&d), g.num_nodes());
+        assert_eq!(GraphStore::num_edges(&d), g.num_edges());
+        assert_eq!(GraphStore::indptr(&d), g.indptr());
+        let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
+        for u in 0..g.num_nodes() as u32 {
+            assert_eq!(GraphStore::degree(&d, u), g.degree(u));
+            assert_eq!(d.vertex_weight(u), g.vertex_weight(u));
+            d.edges_into(u, &mut nbrs, &mut wts);
+            assert_eq!(nbrs, g.neighbors(u), "row {u}");
+            assert_eq!(wts, g.edge_weights(u), "row {u}");
+            for v in 0..g.num_nodes() as u32 {
+                assert_eq!(d.has_edge(u, v), g.neighbors(u).contains(&v), "({u},{v})");
+            }
+        }
+        let back = d.to_mem().unwrap();
+        assert_eq!(back.indptr(), g.indptr());
+        assert_eq!(back.indices(), g.indices());
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_roundtrip_bit_identical() {
+        let t = TempDir::new("diskcsr-rmat").unwrap();
+        let dir = t.path().join("g");
+        let g = rmat_streamed(&RmatConfig {
+            scale: 7,
+            edge_factor: 6,
+            seed: 11,
+            ..Default::default()
+        });
+        write_graph_dir(&dir, &g).unwrap();
+        let d = DiskCsr::open(&dir).unwrap();
+        let back = d.to_mem().unwrap();
+        assert_eq!(back.indptr(), g.indptr());
+        assert_eq!(back.indices(), g.indices());
+        for u in 0..g.num_nodes() as u32 {
+            assert_eq!(back.edge_weights(u), g.edge_weights(u));
+        }
+    }
+
+    #[test]
+    fn republish_replaces_previous_directory() {
+        let t = TempDir::new("diskcsr-republish").unwrap();
+        let dir = t.path().join("g");
+        let g1 = small_graph();
+        write_graph_dir(&dir, &g1).unwrap();
+        let g2 = rmat_streamed(&RmatConfig {
+            scale: 5,
+            edge_factor: 4,
+            seed: 2,
+            ..Default::default()
+        });
+        write_graph_dir(&dir, &g2).unwrap();
+        let d = DiskCsr::open(&dir).unwrap();
+        assert_eq!(GraphStore::num_nodes(&d), g2.num_nodes());
+        // exactly the published directory remains — no temp siblings
+        let entries = fs::read_dir(t.path()).unwrap().count();
+        assert_eq!(entries, 1);
+    }
+
+    #[test]
+    fn open_rejects_wrong_kind() {
+        let t = TempDir::new("diskcsr-kind").unwrap();
+        let dir = t.path().join("g");
+        write_graph_dir(&dir, &small_graph()).unwrap();
+        let text = fs::read_to_string(dir.join(MANIFEST)).unwrap();
+        fs::write(dir.join(MANIFEST), text.replace("disk-csr", "model")).unwrap();
+        let err = DiskCsr::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("not a disk-csr graph"), "{err:#}");
+    }
+}

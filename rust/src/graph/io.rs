@@ -4,51 +4,135 @@
 //! lines skipped. Used by `poshashemb partition --graph <file>` and the
 //! partition-explorer example so users can feed their own graphs.
 
-use super::csr::{CsrGraph, GraphBuilder};
-use anyhow::{anyhow, Context, Result};
+use super::csr::CsrGraph;
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
+/// Parse one edge-list line into `(u, v, w)`. Comments and blank lines
+/// yield `None`; a missing weight defaults to 1.
+fn parse_edge_line(line: &str, lineno: usize) -> Result<Option<(u32, u32, f32)>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut it = line.split_whitespace();
+    let u: u32 = it
+        .next()
+        .ok_or_else(|| anyhow!("line {}: missing src", lineno + 1))?
+        .parse()
+        .with_context(|| format!("line {}: bad src", lineno + 1))?;
+    let v: u32 = it
+        .next()
+        .ok_or_else(|| anyhow!("line {}: missing dst", lineno + 1))?
+        .parse()
+        .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+    let w: f32 = match it.next() {
+        Some(tok) => tok.parse().with_context(|| format!("line {}: bad weight", lineno + 1))?,
+        None => 1.0,
+    };
+    Ok(Some((u, v, w)))
+}
+
 /// Read an undirected edge list. Node count is `max id + 1` unless
 /// `num_nodes` forces a larger graph (for isolated-tail nodes).
+///
+/// Streams the file in two passes — a counting pass (per-node slot
+/// upper bounds, max id, per-line validation) and a scatter pass that
+/// fills preallocated CSR arrays — so peak memory is the CSR output
+/// itself, never an intermediate edge-list `Vec` (the old reader
+/// buffered every parsed edge *and* the builder's pending copy; pinned
+/// by `streaming_reader_matches_builder_semantics`). Duplicate edges
+/// merge by summing weights and self loops drop, exactly as
+/// `GraphBuilder` does.
 pub fn read_edge_list(path: &Path, num_nodes: Option<usize>) -> Result<CsrGraph> {
+    // ---- pass 1 (counting): validate lines, bound per-node degrees ----
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let reader = BufReader::new(f);
-    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
     let mut max_id = 0u32;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut it = line.split_whitespace();
-        let u: u32 = it
-            .next()
-            .ok_or_else(|| anyhow!("line {}: missing src", lineno + 1))?
-            .parse()
-            .with_context(|| format!("line {}: bad src", lineno + 1))?;
-        let v: u32 = it
-            .next()
-            .ok_or_else(|| anyhow!("line {}: missing dst", lineno + 1))?
-            .parse()
-            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
-        let w: f32 = match it.next() {
-            Some(tok) => tok.parse().with_context(|| format!("line {}: bad weight", lineno + 1))?,
-            None => 1.0,
-        };
+    let mut kept = 0u64;
+    let mut deg: Vec<u64> = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let Some((u, v, _)) = parse_edge_line(&line?, lineno)? else { continue };
         max_id = max_id.max(u).max(v);
-        edges.push((u, v, w));
+        if u == v {
+            continue; // self loops drop, as in GraphBuilder::add_edge
+        }
+        let hi = u.max(v) as usize;
+        if deg.len() <= hi {
+            deg.resize(hi + 1, 0);
+        }
+        deg[u as usize] += 1;
+        deg[v as usize] += 1;
+        kept += 1;
     }
     let n = num_nodes.unwrap_or(max_id as usize + 1);
     if n <= max_id as usize {
         return Err(anyhow!("num_nodes {} <= max node id {}", n, max_id));
     }
-    let mut b = GraphBuilder::new(n);
-    for (u, v, w) in edges {
-        b.add_edge(u, v, w);
+    deg.resize(n, 0);
+    let mut indptr = vec![0u64; n + 1];
+    for i in 0..n {
+        indptr[i + 1] = indptr[i] + deg[i];
     }
-    Ok(b.build())
+    let total = indptr[n] as usize;
+    let mut indices = vec![0u32; total];
+    let mut weights = vec![0f32; total];
+    let mut cursor: Vec<u64> = indptr[..n].to_vec();
+
+    // ---- pass 2 (scatter): both directions of each edge, file order ----
+    let f = std::fs::File::open(path).with_context(|| format!("re-open {}", path.display()))?;
+    let mut seen = 0u64;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let Some((u, v, w)) = parse_edge_line(&line?, lineno)? else { continue };
+        if u == v {
+            continue;
+        }
+        seen += 1;
+        if seen > kept || u.max(v) as usize >= n {
+            bail!("{} changed between read passes", path.display());
+        }
+        for (a, b) in [(u, v), (v, u)] {
+            let c = cursor[a as usize] as usize;
+            indices[c] = b;
+            weights[c] = w;
+            cursor[a as usize] += 1;
+        }
+    }
+    if seen != kept {
+        bail!("{} changed between read passes", path.display());
+    }
+
+    // ---- finalize: per-row sort, merge duplicates, compact in place ----
+    // The sort is STABLE so duplicate runs keep file order in both
+    // endpoint rows — their weights sum in the same order on each side
+    // and the result stays weight-symmetric. The compaction cursor only
+    // trails the row starts, so rewriting `indices`/`weights` in place
+    // is safe.
+    let mut out_indptr = vec![0u64; n + 1];
+    let mut write = 0usize;
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    for u in 0..n {
+        let (s, e) = (indptr[u] as usize, indptr[u + 1] as usize);
+        row.clear();
+        row.extend(indices[s..e].iter().copied().zip(weights[s..e].iter().copied()));
+        row.sort_by_key(|&(v, _)| v);
+        let mut i = 0usize;
+        while i < row.len() {
+            let (v0, mut wsum) = row[i];
+            i += 1;
+            while i < row.len() && row[i].0 == v0 {
+                wsum += row[i].1;
+                i += 1;
+            }
+            indices[write] = v0;
+            weights[write] = wsum;
+            write += 1;
+        }
+        out_indptr[u + 1] = write as u64;
+    }
+    indices.truncate(write);
+    weights.truncate(write);
+    Ok(CsrGraph::from_parts(out_indptr, indices, weights, vec![1; n]))
 }
 
 /// Write the graph as an undirected edge list (each edge once, u < v).
@@ -103,6 +187,33 @@ mod tests {
         assert_eq!(g.num_nodes(), 3);
         assert_eq!(g.num_edges(), 2);
         assert_eq!(g.edge_weights(2), &[2.5]);
+    }
+
+    /// Regression for the streaming rewrite: the two-pass reader must
+    /// reproduce [`GraphBuilder`]'s exact output — duplicate edges merge
+    /// by summing, self loops drop, rows sort ascending — on a file that
+    /// exercises all three plus reversed endpoint order.
+    #[test]
+    fn streaming_reader_matches_builder_semantics() {
+        use crate::graph::GraphBuilder;
+        let dir = crate::util::tempdir::TempDir::new("poshashemb").unwrap();
+        let path = dir.path().join("g.txt");
+        std::fs::write(&path, "# dup + loop + reversed\n0 1 0.5\n2 2 9.0\n1 2\n1 0 0.25\n\n3 0\n")
+            .unwrap();
+        let g = read_edge_list(&path, Some(5)).unwrap();
+        let mut b = GraphBuilder::new(5);
+        b.add_edge(0, 1, 0.5);
+        b.add_edge(2, 2, 9.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(1, 0, 0.25);
+        b.add_edge(3, 0, 1.0);
+        let want = b.build();
+        assert_eq!(g.indptr(), want.indptr());
+        assert_eq!(g.indices(), want.indices());
+        for u in 0..5u32 {
+            assert_eq!(g.edge_weights(u), want.edge_weights(u), "row {u}");
+        }
+        g.validate().unwrap();
     }
 
     #[test]

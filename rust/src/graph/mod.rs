@@ -7,11 +7,15 @@
 //! OGB's `to_bidirected` preprocessing noted under Table II of the paper.
 
 mod csr;
+mod disk;
 mod generate;
 mod io;
 mod stats;
+mod store;
 
 pub use csr::{CsrGraph, GraphBuilder};
+pub use disk::{write_graph_dir, DiskCsr, DiskGraphManifest, DISK_GRAPH_VERSION};
 pub use generate::{planted_partition, rmat, rmat_streamed, PlantedPartitionConfig, RmatConfig};
 pub use io::{read_edge_list, write_edge_list};
 pub use stats::GraphStats;
+pub use store::{GraphHandle, GraphStore};

@@ -1,0 +1,291 @@
+//! The graph storage-backend abstraction.
+//!
+//! [`GraphStore`] is the read interface every topology consumer
+//! (sampler, edge batcher, partitioner first-level pass, shard builder)
+//! goes through. Two backends implement it: the in-memory [`CsrGraph`]
+//! and the on-disk [`DiskCsr`](super::DiskCsr), which answers row reads
+//! with positioned reads against the section files instead of resident
+//! arrays. Because the trait hands out *values* (rows copied into
+//! caller scratch, membership answers) rather than borrowed slices,
+//! the two backends are interchangeable without forking call sites —
+//! and because every consumer keys its RNG streams by coordinates, not
+//! by access order, a disk-backed run is **bit-identical** to an
+//! in-memory run (pinned by `tests/disk_graph.rs`).
+//!
+//! [`GraphHandle`] is the owning enum datasets carry: `Mem` wraps a
+//! [`CsrGraph`], `Disk` wraps a shared [`DiskCsr`]. Paths that
+//! genuinely need resident arrays (full-batch oracle, PJRT statics,
+//! model-artifact save) call [`GraphHandle::mem`] and are unreachable
+//! from disk-backed datasets by construction.
+
+use super::csr::CsrGraph;
+use super::disk::DiskCsr;
+use std::sync::Arc;
+
+/// Read-only topology access, backend-agnostic.
+///
+/// `indptr` stays resident in every backend (8 bytes per node — the
+/// one array whose random access pattern makes positioned reads
+/// pathological); adjacency rows are copied out on demand. All row
+/// contents are per-row ascending neighbor ids, exactly as
+/// [`CsrGraph`] stores them, so backends can never disagree on the
+/// bytes a consumer sees.
+pub trait GraphStore: Sync {
+    /// Number of nodes.
+    fn num_nodes(&self) -> usize;
+
+    /// Number of directed adjacency entries (`2 * num_edges`).
+    fn num_adjacency_entries(&self) -> usize;
+
+    /// Number of *undirected* edges (each stored twice).
+    fn num_edges(&self) -> usize {
+        self.num_adjacency_entries() / 2
+    }
+
+    /// Resident CSR row-pointer array (length `n + 1`).
+    fn indptr(&self) -> &[u64];
+
+    /// Degree of `u`.
+    fn degree(&self, u: u32) -> usize {
+        let p = self.indptr();
+        (p[u as usize + 1] - p[u as usize]) as usize
+    }
+
+    /// Vertex weight of `u` (number of original nodes it represents).
+    fn vertex_weight(&self, u: u32) -> u32;
+
+    /// Total vertex weight of the graph.
+    fn total_vertex_weight(&self) -> u64 {
+        (0..self.num_nodes() as u32).map(|u| self.vertex_weight(u) as u64).sum()
+    }
+
+    /// Copy the neighbor row of `u` into `out` (cleared first;
+    /// ascending ids).
+    fn neighbors_into(&self, u: u32, out: &mut Vec<u32>);
+
+    /// Copy the neighbor row and aligned edge weights of `u` into
+    /// `nbrs`/`wts` (both cleared first).
+    fn edges_into(&self, u: u32, nbrs: &mut Vec<u32>, wts: &mut Vec<f32>);
+
+    /// Whether the undirected edge `(u, v)` exists. Binary search over
+    /// `u`'s (sorted) row — backends answer identically by the row
+    /// ordering invariant.
+    fn has_edge(&self, u: u32, v: u32) -> bool;
+}
+
+impl GraphStore for CsrGraph {
+    fn num_nodes(&self) -> usize {
+        CsrGraph::num_nodes(self)
+    }
+
+    fn num_adjacency_entries(&self) -> usize {
+        CsrGraph::num_adjacency_entries(self)
+    }
+
+    fn num_edges(&self) -> usize {
+        CsrGraph::num_edges(self)
+    }
+
+    fn indptr(&self) -> &[u64] {
+        CsrGraph::indptr(self)
+    }
+
+    fn degree(&self, u: u32) -> usize {
+        CsrGraph::degree(self, u)
+    }
+
+    fn vertex_weight(&self, u: u32) -> u32 {
+        CsrGraph::vertex_weight(self, u)
+    }
+
+    fn total_vertex_weight(&self) -> u64 {
+        CsrGraph::total_vertex_weight(self)
+    }
+
+    fn neighbors_into(&self, u: u32, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend_from_slice(self.neighbors(u));
+    }
+
+    fn edges_into(&self, u: u32, nbrs: &mut Vec<u32>, wts: &mut Vec<f32>) {
+        nbrs.clear();
+        wts.clear();
+        nbrs.extend_from_slice(self.neighbors(u));
+        wts.extend_from_slice(self.edge_weights(u));
+    }
+
+    fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+}
+
+/// The owning graph handle a [`crate::data::Dataset`] carries: either
+/// the classic in-memory CSR or a shared on-disk store. Cloning is
+/// cheap for the disk backend (`Arc`) and a full array copy for the
+/// in-memory one, matching the previous `Dataset.graph: CsrGraph`
+/// semantics.
+#[derive(Debug, Clone)]
+pub enum GraphHandle {
+    /// In-memory CSR (the historical default).
+    Mem(CsrGraph),
+    /// On-disk CSR opened from a `--to-disk` directory.
+    Disk(Arc<DiskCsr>),
+}
+
+impl GraphHandle {
+    /// This handle as a trait object — resolves the enum once so hot
+    /// loops pay one dynamic dispatch instead of a per-call match.
+    #[inline]
+    pub fn store(&self) -> &dyn GraphStore {
+        match self {
+            GraphHandle::Mem(g) => g,
+            GraphHandle::Disk(d) => d.as_ref(),
+        }
+    }
+
+    /// The in-memory graph, for the few paths that genuinely need
+    /// resident arrays (full-batch oracle, PJRT statics, model-artifact
+    /// save). Panics on a disk-backed handle — callers on those paths
+    /// gate disk-backed datasets out at the CLI layer.
+    #[inline]
+    pub fn mem(&self) -> &CsrGraph {
+        match self {
+            GraphHandle::Mem(g) => g,
+            GraphHandle::Disk(_) => {
+                panic!("this path needs the in-memory graph, but the dataset is disk-backed")
+            }
+        }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.store().num_nodes()
+    }
+
+    /// Number of *undirected* edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.store().num_edges()
+    }
+
+    /// Number of directed adjacency entries.
+    #[inline]
+    pub fn num_adjacency_entries(&self) -> usize {
+        self.store().num_adjacency_entries()
+    }
+
+    /// Degree of `u`.
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        self.store().degree(u)
+    }
+
+    /// Vertex weight of `u`.
+    #[inline]
+    pub fn vertex_weight(&self, u: u32) -> u32 {
+        self.store().vertex_weight(u)
+    }
+}
+
+impl From<CsrGraph> for GraphHandle {
+    fn from(g: CsrGraph) -> Self {
+        GraphHandle::Mem(g)
+    }
+}
+
+impl From<DiskCsr> for GraphHandle {
+    fn from(d: DiskCsr) -> Self {
+        GraphHandle::Disk(Arc::new(d))
+    }
+}
+
+impl GraphStore for GraphHandle {
+    fn num_nodes(&self) -> usize {
+        self.store().num_nodes()
+    }
+
+    fn num_adjacency_entries(&self) -> usize {
+        self.store().num_adjacency_entries()
+    }
+
+    fn num_edges(&self) -> usize {
+        self.store().num_edges()
+    }
+
+    fn indptr(&self) -> &[u64] {
+        self.store().indptr()
+    }
+
+    fn degree(&self, u: u32) -> usize {
+        self.store().degree(u)
+    }
+
+    fn vertex_weight(&self, u: u32) -> u32 {
+        self.store().vertex_weight(u)
+    }
+
+    fn total_vertex_weight(&self) -> u64 {
+        self.store().total_vertex_weight()
+    }
+
+    fn neighbors_into(&self, u: u32, out: &mut Vec<u32>) {
+        self.store().neighbors_into(u, out)
+    }
+
+    fn edges_into(&self, u: u32, nbrs: &mut Vec<u32>, wts: &mut Vec<f32>) {
+        self.store().edges_into(u, nbrs, wts)
+    }
+
+    fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.store().has_edge(u, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path4() -> CsrGraph {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 2.0);
+        b.add_edge(2, 3, 3.0);
+        b.build()
+    }
+
+    #[test]
+    fn trait_view_matches_inherent_api() {
+        let g = path4();
+        let s: &dyn GraphStore = &g;
+        assert_eq!(s.num_nodes(), 4);
+        assert_eq!(s.num_edges(), 3);
+        assert_eq!(s.num_adjacency_entries(), 6);
+        assert_eq!(s.indptr(), g.indptr());
+        assert_eq!(s.total_vertex_weight(), 4);
+        let mut nbrs = Vec::new();
+        let mut wts = Vec::new();
+        for u in 0..4u32 {
+            assert_eq!(s.degree(u), g.degree(u));
+            s.neighbors_into(u, &mut nbrs);
+            assert_eq!(nbrs, g.neighbors(u));
+            s.edges_into(u, &mut nbrs, &mut wts);
+            assert_eq!(nbrs, g.neighbors(u));
+            assert_eq!(wts, g.edge_weights(u));
+        }
+        assert!(s.has_edge(1, 2) && s.has_edge(2, 1));
+        assert!(!s.has_edge(0, 3) && !s.has_edge(0, 0));
+    }
+
+    #[test]
+    fn handle_delegates_and_coerces() {
+        let h: GraphHandle = path4().into();
+        assert_eq!(h.num_nodes(), 4);
+        assert_eq!(h.degree(1), 2);
+        assert_eq!(h.mem().neighbors(1), &[0, 2]);
+        // &GraphHandle coerces to &dyn GraphStore at call sites
+        let s: &dyn GraphStore = &h;
+        assert_eq!(s.num_edges(), 3);
+    }
+}

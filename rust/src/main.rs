@@ -49,6 +49,13 @@
 //!   state is ever materialized. `--parity-check` instead proves the
 //!   k = 1 sharded trainer reproduces the single-shard minibatch
 //!   trainer's loss trajectory bit for bit (serial AND pipelined).
+//! * `gen-graph --to-disk DIR [--scale S] [--edge-factor E] [--seed S]`
+//!   — generate the R-MAT graph once and publish it as an on-disk CSR
+//!   directory (manifest + checksummed section files, atomically).
+//!   `--graph-dir DIR` on `train-minibatch`, `train-sharded` and
+//!   `partition-bench` then runs straight off that directory through
+//!   the out-of-core `DiskCsr` backend — bit-identical results to the
+//!   in-memory run, without ever materializing the global graph.
 //! * `partition-bench [--dataset D] [--k K] [--levels L] [--json]` —
 //!   benchmark the partitioner pipeline; defaults to the acceptance
 //!   SBM (n = 50k, 32 communities).
@@ -86,7 +93,8 @@ use poshashemb::data::{
 };
 use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan, MethodSpec};
 use poshashemb::graph::{
-    planted_partition, rmat_streamed, CsrGraph, PlantedPartitionConfig, RmatConfig,
+    planted_partition, rmat_streamed, write_graph_dir, DiskCsr, GraphHandle,
+    PlantedPartitionConfig, RmatConfig,
 };
 use poshashemb::partition::{partition, Hierarchy, HierarchyConfig, PartitionConfig};
 use poshashemb::runtime::{Manifest, RuntimeClient};
@@ -197,6 +205,7 @@ static COMMANDS: &[CommandSpec] = &[
             flag("serial", None, "single-threaded oracle path (bit-identical losses)"),
             flag("prefetch", Some("DEPTH"), "sampled blocks prefetched ahead of the trainer"),
             flag("save-model", Some("DIR"), "write a versioned model artifact after training"),
+            flag("graph-dir", Some("DIR"), "train on an on-disk CSR graph (from `gen-graph`)"),
             flag("nodes", Some("N"), "override the synthetic dataset's node count"),
             flag("dim", Some("D"), "override the embedding dimension"),
             flag("checkpoint-dir", Some("DIR"), "enable crash-safe checkpointing under DIR"),
@@ -255,6 +264,7 @@ static COMMANDS: &[CommandSpec] = &[
         flags: &[
             flag("scale", Some("S"), "log2 of the R-MAT node count (default 13)"),
             flag("edge-factor", Some("E"), "sampled edges per node before dedup (default 8)"),
+            flag("graph-dir", Some("DIR"), "train on an on-disk CSR graph (from `gen-graph`)"),
             flag("shards", Some("K"), "number of graph shards to train in parallel (default 4)"),
             flag("method", Some("TAG"), "per-shard method tag, e.g. intra, posemb (default intra)"),
             flag("dim", Some("D"), "embedding dimension, multiple of 4 (default 32)"),
@@ -297,10 +307,22 @@ static COMMANDS: &[CommandSpec] = &[
         about: "benchmark the partitioner pipeline",
         flags: &[
             flag("dataset", Some("D"), "dataset name (default: acceptance SBM, n=50k)"),
+            flag("graph-dir", Some("DIR"), "bench an on-disk CSR graph (from `gen-graph`)"),
             flag("k", Some("K"), "partitions per level (default 32)"),
             flag("levels", Some("L"), "hierarchy levels (default 3)"),
             flag("seed", Some("S"), "random seed (default 1)"),
             flag("json", None, "emit bench records as JSON"),
+        ],
+    },
+    CommandSpec {
+        name: "gen-graph",
+        positional: None,
+        about: "generate an R-MAT graph and publish it as an on-disk CSR directory",
+        flags: &[
+            flag("scale", Some("S"), "log2 of the R-MAT node count (default 13)"),
+            flag("edge-factor", Some("E"), "sampled edges per node before dedup (default 8)"),
+            flag("seed", Some("S"), "generation seed (default 0)"),
+            flag("to-disk", Some("DIR"), "output directory for the on-disk CSR (required)"),
         ],
     },
     CommandSpec {
@@ -471,6 +493,7 @@ fn run() -> Result<()> {
         "experiment" => cmd_experiment(&parsed),
         "compose" => cmd_compose(&parsed),
         "partition-bench" => cmd_partition_bench(&parsed),
+        "gen-graph" => cmd_gen_graph(&parsed),
         "serve-bench" => cmd_serve_bench(&parsed),
         other => bail!("unknown subcommand '{other}' (see `poshashemb help`)"),
     }
@@ -666,6 +689,18 @@ fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
     if exp_flag.is_some() && (args.has("nodes") || args.has("dim")) {
         bail!("--experiment already fixes the dataset size; drop --nodes/--dim");
     }
+    let graph_dir = args.get("graph-dir");
+    if graph_dir.is_some() {
+        if exp_flag.is_some() || args.has("dataset") || args.has("nodes") {
+            bail!("--graph-dir loads a pre-generated graph; drop --experiment/--dataset/--nodes");
+        }
+        if args.has("save-model") {
+            bail!(
+                "--save-model embeds the resident graph in the artifact, which a \
+                 disk-backed run never materializes; drop --graph-dir or --save-model"
+            );
+        }
+    }
     let (label, dsname, ds, plan, mut cfg, mut opts) = if let Some(name) = exp_flag {
         let e = full_grid()
             .into_iter()
@@ -675,6 +710,27 @@ fn cmd_train_minibatch(args: &CliArgs) -> Result<()> {
         let opts =
             MinibatchOptions { epochs: e.epochs, lr: e.lr as f32, seed, ..Default::default() };
         (e.name.clone(), e.dataset.to_string(), ds, plan, e.sampling, opts)
+    } else if let Some(dir) = graph_dir {
+        let d: usize = args.parse_as("dim")?.unwrap_or(32);
+        if d == 0 {
+            bail!("--dim must be >= 1");
+        }
+        let tag = args.get("method").unwrap_or("intra");
+        eprintln!("minibatch train: opening on-disk graph at {dir}");
+        let graph: GraphHandle = DiskCsr::open(Path::new(dir))?.into();
+        let n = graph.num_nodes();
+        let resolved = MethodSpec::parse(tag)?.resolve(n)?;
+        let ds = powerlaw_dataset(graph, d, seed);
+        let hier = if resolved.method.needs_hierarchy() {
+            let levels = resolved.method.levels().max(1);
+            Some(Hierarchy::build(&ds.graph, &HierarchyConfig::new(resolved.k, levels)))
+        } else {
+            None
+        };
+        let plan = EmbeddingPlan::build(n, d, &resolved.method, hier.as_ref(), seed);
+        let opts = MinibatchOptions { seed, ..Default::default() };
+        let label = format!("disk:{dir}");
+        (label, "rmat-powerlaw".to_string(), ds, plan, SamplerConfig::default(), opts)
     } else {
         let dsname = args.get("dataset").unwrap_or("synth-arxiv");
         let tag = args.get("method").unwrap_or("intra");
@@ -1017,8 +1073,10 @@ fn cmd_showdown(args: &CliArgs) -> Result<()> {
 /// at 8 classes) — learnable from graph structure alone, so loss
 /// actually falls — and the communities mirror them so budget math
 /// stays well-defined. Splits come from the shared 80/10/10
-/// `train_val_test_split`.
-fn powerlaw_dataset(graph: CsrGraph, d: usize, seed: u64) -> Dataset {
+/// `train_val_test_split`. The handle may be disk-backed: degrees come
+/// from the resident indptr, so labels (and everything derived from
+/// them) are bit-identical across backends.
+fn powerlaw_dataset(graph: GraphHandle, d: usize, seed: u64) -> Dataset {
     let n = graph.num_nodes();
     let labels: Vec<u32> =
         (0..n as u32).map(|u| (graph.degree(u) as u64 + 1).ilog2().min(7)).collect();
@@ -1104,6 +1162,10 @@ fn sharded_parity_check(
 /// exchange, and emit one `sharded/v1` record. `--parity-check` instead
 /// runs the k=1 bit-parity harness on the same graph.
 fn cmd_train_sharded(args: &CliArgs) -> Result<()> {
+    let graph_dir = args.get("graph-dir");
+    if graph_dir.is_some() && (args.has("scale") || args.has("edge-factor")) {
+        bail!("--graph-dir loads a pre-generated graph; drop --scale/--edge-factor");
+    }
     let scale: u32 = args.parse_as("scale")?.unwrap_or(13);
     if !(1..=30).contains(&scale) {
         bail!("--scale must be in 1..=30");
@@ -1123,12 +1185,21 @@ fn cmd_train_sharded(args: &CliArgs) -> Result<()> {
     }
     let sync_every: usize = args.parse_as("sync-every")?.unwrap_or(1);
     let seed: u64 = args.parse_as("seed")?.unwrap_or(0);
-    let n = 1usize << scale;
-    eprintln!(
-        "train-sharded: generating R-MAT graph (scale={scale}, n={n}, ~{} sampled edges)",
-        n * edge_factor
-    );
-    let graph = rmat_streamed(&RmatConfig { scale, edge_factor, seed, ..Default::default() });
+    let graph: GraphHandle = match graph_dir {
+        Some(dir) => {
+            eprintln!("train-sharded: opening on-disk graph at {dir}");
+            DiskCsr::open(Path::new(dir))?.into()
+        }
+        None => {
+            let n = 1usize << scale;
+            eprintln!(
+                "train-sharded: generating R-MAT graph (scale={scale}, n={n}, ~{} sampled edges)",
+                n * edge_factor
+            );
+            rmat_streamed(&RmatConfig { scale, edge_factor, seed, ..Default::default() }).into()
+        }
+    };
+    let n = graph.num_nodes();
     let edges = graph.num_edges() as u64;
     let ds = powerlaw_dataset(graph, d, seed);
     let resolved = MethodSpec::parse(tag)?.resolve(n)?;
@@ -1224,12 +1295,15 @@ fn cmd_partition_bench(args: &CliArgs) -> Result<()> {
     let k: usize = args.parse_as("k")?.unwrap_or(32);
     let levels: usize = args.parse_as("levels")?.unwrap_or(3);
     let seed: u64 = args.parse_as("seed")?.unwrap_or(1);
-    let (graph, label) = match args.get("dataset") {
-        Some(dsname) => {
+    let (graph, label): (GraphHandle, String) = match (args.get("graph-dir"), args.get("dataset"))
+    {
+        (Some(_), Some(_)) => bail!("--graph-dir and --dataset are mutually exclusive"),
+        (Some(dir), None) => (DiskCsr::open(Path::new(dir))?.into(), format!("disk:{dir}")),
+        (None, Some(dsname)) => {
             let sp = spec(dsname).ok_or_else(|| anyhow!("unknown dataset {dsname}"))?;
             (Dataset::generate(&sp).graph, dsname.to_string())
         }
-        None => {
+        (None, None) => {
             let (g, _) = planted_partition(&PlantedPartitionConfig {
                 n: 50_000,
                 communities: 32,
@@ -1238,7 +1312,7 @@ fn cmd_partition_bench(args: &CliArgs) -> Result<()> {
                 seed: 3,
                 ..Default::default()
             });
-            (g, "sbm-50k".to_string())
+            (g.into(), "sbm-50k".to_string())
         }
     };
     eprintln!(
@@ -1254,6 +1328,37 @@ fn cmd_partition_bench(args: &CliArgs) -> Result<()> {
             println!("{}", r.row());
         }
     }
+    Ok(())
+}
+
+/// Generate a deterministic R-MAT graph and publish it as an on-disk
+/// CSR directory (`graph::write_graph_dir`): a manifest plus raw
+/// little-endian section files with per-section checksums, written to a
+/// temp sibling and atomically renamed into place. The directory feeds
+/// `train-minibatch`, `train-sharded` and `partition-bench` via
+/// `--graph-dir`, whose results are bit-identical to the corresponding
+/// in-memory runs.
+fn cmd_gen_graph(args: &CliArgs) -> Result<()> {
+    let scale: u32 = args.parse_as("scale")?.unwrap_or(13);
+    if !(1..=30).contains(&scale) {
+        bail!("--scale must be in 1..=30");
+    }
+    let edge_factor: usize = args.parse_as("edge-factor")?.unwrap_or(8);
+    if edge_factor == 0 {
+        bail!("--edge-factor must be >= 1");
+    }
+    let seed: u64 = args.parse_as("seed")?.unwrap_or(0);
+    let dir = args.get("to-disk").ok_or_else(|| anyhow!("--to-disk DIR required"))?;
+    let n = 1usize << scale;
+    eprintln!("gen-graph: R-MAT scale={scale} (n={n}, ~{} sampled edges)", n * edge_factor);
+    let graph = rmat_streamed(&RmatConfig { scale, edge_factor, seed, ..Default::default() });
+    write_graph_dir(Path::new(dir), &graph)?;
+    println!(
+        "wrote disk-csr graph to {dir}: n={} edges={} ({} adjacency entries)",
+        graph.num_nodes(),
+        graph.num_edges(),
+        graph.num_adjacency_entries()
+    );
     Ok(())
 }
 

@@ -17,7 +17,7 @@
 //!   the oracle the kernel is validated against (identical structure;
 //!   weights agree up to float summation order).
 
-use crate::graph::{CsrGraph, GraphBuilder};
+use crate::graph::{CsrGraph, GraphBuilder, GraphStore};
 use rayon::prelude::*;
 
 /// Split `buf` into consecutive variable-length rows per `offsets`
@@ -35,8 +35,10 @@ fn split_rows<'a, T>(mut buf: &'a mut [T], offsets: &[u64]) -> Vec<&'a mut [T]> 
 }
 
 /// Contract `g` along `matching` (an involution, `matching[u] ∈ {u, v}`).
-/// Returns the coarse graph and the fine→coarse node map.
-pub fn coarsen(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
+/// Returns the coarse graph and the fine→coarse node map. Reads `g`
+/// through [`GraphStore`], so the fine graph may be disk-backed; the
+/// coarse output is always in-memory.
+pub fn coarsen<G: GraphStore + ?Sized>(g: &G, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
     let n = g.num_nodes();
     assert_eq!(matching.len(), n);
     // Coarse numbering in first-seen fine order — identical to the
@@ -86,38 +88,42 @@ pub fn coarsen(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
     let lens: Vec<usize> = split_rows(&mut entries, &offsets)
         .into_par_iter()
         .enumerate()
-        .map(|(c, row)| {
-            let u = rep[c];
-            let v = matching[u as usize];
-            let mut len = 0usize;
-            for m in [u, v] {
-                for (nb, w) in g.edges(m) {
-                    let cnb = map[nb as usize];
-                    if cnb != c as u32 {
-                        row[len] = (cnb, w);
-                        len += 1;
+        .map_init(
+            || (Vec::new(), Vec::new()),
+            |(nbrs, wts), (c, row)| {
+                let u = rep[c];
+                let v = matching[u as usize];
+                let mut len = 0usize;
+                for m in [u, v] {
+                    g.edges_into(m, nbrs, wts);
+                    for (&nb, &w) in nbrs.iter().zip(wts.iter()) {
+                        let cnb = map[nb as usize];
+                        if cnb != c as u32 {
+                            row[len] = (cnb, w);
+                            len += 1;
+                        }
+                    }
+                    if v == u {
+                        break;
                     }
                 }
-                if v == u {
-                    break;
-                }
-            }
-            let filled = &mut row[..len];
-            filled.sort_unstable_by_key(|e| e.0);
-            let mut out = 0usize;
-            let mut i = 0usize;
-            while i < len {
-                let (c0, mut wsum) = filled[i];
-                i += 1;
-                while i < len && filled[i].0 == c0 {
-                    wsum += filled[i].1;
+                let filled = &mut row[..len];
+                filled.sort_unstable_by_key(|e| e.0);
+                let mut out = 0usize;
+                let mut i = 0usize;
+                while i < len {
+                    let (c0, mut wsum) = filled[i];
                     i += 1;
+                    while i < len && filled[i].0 == c0 {
+                        wsum += filled[i].1;
+                        i += 1;
+                    }
+                    filled[out] = (c0, wsum);
+                    out += 1;
                 }
-                filled[out] = (c0, wsum);
-                out += 1;
-            }
-            out
-        })
+                out
+            },
+        )
         .collect();
 
     // Compact the merged row prefixes into the final CSR arrays.
@@ -142,7 +148,7 @@ pub fn coarsen(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
 }
 
 /// Scalar `GraphBuilder` contraction — the oracle for [`coarsen`].
-pub fn coarsen_reference(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
+pub fn coarsen_reference<G: GraphStore + ?Sized>(g: &G, matching: &[u32]) -> (CsrGraph, Vec<u32>) {
     let n = g.num_nodes();
     assert_eq!(matching.len(), n);
     let mut map = vec![u32::MAX; n];
@@ -163,8 +169,10 @@ pub fn coarsen_reference(g: &CsrGraph, matching: &[u32]) -> (CsrGraph, Vec<u32>)
         vwgts[map[u] as usize] += g.vertex_weight(u as u32);
     }
     let mut b = GraphBuilder::new(coarse_n as usize).with_vertex_weights(vwgts);
+    let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
     for u in 0..n as u32 {
-        for (v, w) in g.edges(u) {
+        g.edges_into(u, &mut nbrs, &mut wts);
+        for (&v, &w) in nbrs.iter().zip(&wts) {
             if u < v {
                 let (cu, cv) = (map[u as usize], map[v as usize]);
                 if cu != cv {

@@ -8,7 +8,7 @@
 //! node's path through the hierarchy is recoverable from any level's id.
 
 use super::{partition, PartitionConfig};
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, GraphStore};
 use rayon::prelude::*;
 
 /// Configuration for hierarchy construction.
@@ -49,8 +49,10 @@ pub struct Hierarchy {
 }
 
 impl Hierarchy {
-    /// Build an L-level hierarchy over `g`.
-    pub fn build(g: &CsrGraph, cfg: &HierarchyConfig) -> Self {
+    /// Build an L-level hierarchy over `g` — generic over the storage
+    /// backend. Only level 0 and the level-1 subgraph extraction read
+    /// `g`; every deeper level partitions in-memory induced subgraphs.
+    pub fn build<G: GraphStore + ?Sized>(g: &G, cfg: &HierarchyConfig) -> Self {
         assert!(cfg.levels >= 1, "need at least one level");
         assert!(cfg.k >= 2, "k must be >= 2");
         let n = g.num_nodes();
@@ -163,7 +165,7 @@ impl Hierarchy {
 /// is undirected-symmetric (pinned by
 /// `induced_subgraph_is_undirected_symmetric`) — `validate()` holds on
 /// the result whenever it holds on `g`.
-pub fn induced_subgraph(g: &CsrGraph, nodes: &[u32]) -> (CsrGraph, Vec<u32>) {
+pub fn induced_subgraph<G: GraphStore + ?Sized>(g: &G, nodes: &[u32]) -> (CsrGraph, Vec<u32>) {
     let mut scratch = vec![u32::MAX; g.num_nodes()];
     (induced_subgraph_with_scratch(g, nodes, &mut scratch), nodes.to_vec())
 }
@@ -173,12 +175,13 @@ pub fn induced_subgraph(g: &CsrGraph, nodes: &[u32]) -> (CsrGraph, Vec<u32>) {
 /// `u32::MAX` on entry; restored on exit). One buffer serves many
 /// sibling extractions without O(n) re-clearing or per-call hashing —
 /// the hot path of [`Hierarchy::build`].
-pub fn induced_subgraph_with_scratch(
-    g: &CsrGraph,
+pub fn induced_subgraph_with_scratch<G: GraphStore + ?Sized>(
+    g: &G,
     nodes: &[u32],
     global_to_local: &mut [u32],
 ) -> CsrGraph {
     let ln = nodes.len();
+    let (mut row_nbrs, mut row_wts) = (Vec::new(), Vec::new());
     for (local, &u) in nodes.iter().enumerate() {
         // unconditional: a dirty scratch or duplicate node would yield a
         // silently corrupt subgraph, and the check is O(1) per node
@@ -189,7 +192,8 @@ pub fn induced_subgraph_with_scratch(
     let mut indptr = vec![0u64; ln + 1];
     for (local, &u) in nodes.iter().enumerate() {
         let mut deg = 0u64;
-        for &v in g.neighbors(u) {
+        g.neighbors_into(u, &mut row_nbrs);
+        for &v in &row_nbrs {
             if global_to_local[v as usize] != u32::MAX {
                 deg += 1;
             }
@@ -204,7 +208,8 @@ pub fn induced_subgraph_with_scratch(
     let mut weights = vec![0f32; indptr[ln] as usize];
     let mut cursor = 0usize;
     for &u in nodes {
-        for (v, w) in g.edges(u) {
+        g.edges_into(u, &mut row_nbrs, &mut row_wts);
+        for (&v, &w) in row_nbrs.iter().zip(&row_wts) {
             let lv = global_to_local[v as usize];
             if lv != u32::MAX {
                 indices[cursor] = lv;

@@ -4,12 +4,17 @@
 //! Leftover nodes (disconnected pockets) are assigned to the lightest
 //! part.
 
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 use crate::util::rng::Rng;
 use std::collections::BinaryHeap;
 
 /// Grow a balanced k-way partition on (small) graph `g`.
-pub fn greedy_growing(g: &CsrGraph, k: usize, epsilon: f64, rng: &mut Rng) -> Vec<u32> {
+pub fn greedy_growing<G: GraphStore + ?Sized>(
+    g: &G,
+    k: usize,
+    epsilon: f64,
+    rng: &mut Rng,
+) -> Vec<u32> {
     let n = g.num_nodes();
     const FREE: u32 = u32::MAX;
     let mut part = vec![FREE; n];
@@ -18,6 +23,7 @@ pub fn greedy_growing(g: &CsrGraph, k: usize, epsilon: f64, rng: &mut Rng) -> Ve
     let target_w = (total_w / k as f64).ceil() as u64;
 
     let mut part_w = vec![0u64; k];
+    let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
     for p in 0..k {
         // pick an unassigned seed (random probes, then linear scan)
         let mut seed = None;
@@ -49,7 +55,8 @@ pub fn greedy_growing(g: &CsrGraph, k: usize, epsilon: f64, rng: &mut Rng) -> Ve
             if part_w[p] >= target_w {
                 break;
             }
-            for (v, w) in g.edges(u) {
+            g.edges_into(u, &mut nbrs, &mut wts);
+            for (&v, &w) in nbrs.iter().zip(&wts) {
                 if part[v as usize] == FREE {
                     heap.push((ordered::F64(w as f64), v));
                 }

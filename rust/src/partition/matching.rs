@@ -18,7 +18,7 @@
 //!   for a fixed seed at any thread count — only the seeded tie-break
 //!   priorities distinguish two runs, never the schedule.
 
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 use crate::util::rng::Rng;
 use rayon::prelude::*;
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -32,17 +32,19 @@ const MATCH_CHUNK: usize = 4096;
 
 /// `matching[u] == v` means u and v are collapsed together (v may equal u).
 /// Always an involution: `matching[matching[u]] == u`.
-pub fn heavy_edge_matching(g: &CsrGraph, rng: &mut Rng) -> Vec<u32> {
+pub fn heavy_edge_matching<G: GraphStore + ?Sized>(g: &G, rng: &mut Rng) -> Vec<u32> {
     let n = g.num_nodes();
     let mut matching = vec![UNMATCHED; n];
     let mut order: Vec<u32> = (0..n as u32).collect();
     rng.shuffle(&mut order);
+    let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
     for &u in &order {
         if matching[u as usize] != UNMATCHED {
             continue;
         }
         let mut best: Option<(u32, f32)> = None;
-        for (v, w) in g.edges(u) {
+        g.edges_into(u, &mut nbrs, &mut wts);
+        for (&v, &w) in nbrs.iter().zip(&wts) {
             if matching[v as usize] != UNMATCHED || v == u {
                 continue;
             }
@@ -96,7 +98,7 @@ fn mix64(x: u64) -> u64 {
 /// non-decreasing along the chain and the priority tie-break rules out
 /// longer cycles, so the chain ends in a 2-cycle), so every round makes
 /// progress and the loop terminates.
-pub fn parallel_heavy_edge_matching(g: &CsrGraph, seed: u64) -> Vec<u32> {
+pub fn parallel_heavy_edge_matching<G: GraphStore + ?Sized>(g: &G, seed: u64) -> Vec<u32> {
     let n = g.num_nodes();
     if n == 0 {
         return Vec::new();
@@ -107,11 +109,14 @@ pub fn parallel_heavy_edge_matching(g: &CsrGraph, seed: u64) -> Vec<u32> {
     let mut active: Vec<u32> = (0..n as u32).collect();
     while !active.is_empty() {
         // Phase 1: propose. Writes land in disjoint slots (one per active
-        // node); reads see only round-start matched state.
+        // node); reads see only round-start matched state. Each chunk
+        // carries its own adjacency copy-out scratch.
         active.par_chunks(MATCH_CHUNK).for_each(|chunk| {
+            let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
             for &u in chunk {
                 let mut best: Option<(f32, u64, u32)> = None;
-                for (v, w) in g.edges(u) {
+                g.edges_into(u, &mut nbrs, &mut wts);
+                for (&v, &w) in nbrs.iter().zip(&wts) {
                     if v == u || matching[v as usize].load(Ordering::Relaxed) != UNMATCHED {
                         continue;
                     }

@@ -34,7 +34,7 @@ pub use matching::{heavy_edge_matching, parallel_heavy_edge_matching};
 pub use random::random_partition;
 pub use shard::{GraphShards, Shard};
 
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, GraphStore};
 use crate::util::rng::Rng;
 
 /// Partitioner configuration.
@@ -105,10 +105,12 @@ impl Partitioning {
 }
 
 /// Compute the weighted edge cut of an assignment.
-pub fn edge_cut(g: &CsrGraph, part: &[u32]) -> f64 {
+pub fn edge_cut<G: GraphStore + ?Sized>(g: &G, part: &[u32]) -> f64 {
     let mut cut = 0f64;
+    let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
     for u in 0..g.num_nodes() as u32 {
-        for (v, w) in g.edges(u) {
+        g.edges_into(u, &mut nbrs, &mut wts);
+        for (&v, &w) in nbrs.iter().zip(&wts) {
             if part[u as usize] != part[v as usize] {
                 cut += w as f64;
             }
@@ -118,7 +120,7 @@ pub fn edge_cut(g: &CsrGraph, part: &[u32]) -> f64 {
 }
 
 /// Compute imbalance: `max_part_weight / (W / k)`.
-pub fn imbalance(g: &CsrGraph, part: &[u32], k: usize) -> f64 {
+pub fn imbalance<G: GraphStore + ?Sized>(g: &G, part: &[u32], k: usize) -> f64 {
     let mut wts = vec![0u64; k];
     for u in 0..g.num_nodes() {
         wts[part[u] as usize] += g.vertex_weight(u as u32) as u64;
@@ -128,7 +130,14 @@ pub fn imbalance(g: &CsrGraph, part: &[u32], k: usize) -> f64 {
 }
 
 /// Multilevel k-way partitioning — the main entry point.
-pub fn partition(g: &CsrGraph, cfg: &PartitionConfig) -> Partitioning {
+///
+/// Generic over the storage backend: the first-level pass (matching,
+/// contraction, the final refinement sweep and the cut/imbalance
+/// metrics) reads `g` through [`GraphStore`], so a disk-backed graph is
+/// partitioned without ever materializing it — only the (much smaller)
+/// coarse graphs are built in memory. Every RNG draw happens in the
+/// same order regardless of backend, so the partition is bit-identical.
+pub fn partition<G: GraphStore + ?Sized>(g: &G, cfg: &PartitionConfig) -> Partitioning {
     assert!(cfg.k >= 1, "k must be >= 1");
     let n = g.num_nodes();
     if cfg.k == 1 || n <= cfg.k {
@@ -140,20 +149,37 @@ pub fn partition(g: &CsrGraph, cfg: &PartitionConfig) -> Partitioning {
         return Partitioning { part, k: cfg.k, edge_cut: cut, imbalance: imb };
     }
     let mut rng = Rng::seed_from_u64(cfg.seed);
+    let target = (cfg.coarsen_until * cfg.k).max(2 * cfg.k);
 
     // ---- coarsening phase ----
-    // levels[i] = (graph, map-to-coarser) ; last graph has no map yet
-    let mut graphs: Vec<CsrGraph> = vec![g.clone()];
+    // `coarse[i]` is the level-(i+1) graph; `maps[i]` maps the previous
+    // level (the store itself for i == 0, else `coarse[i-1]`) onto it.
+    // `parallel: false` is the full scalar pipeline (oracle matching
+    // AND oracle contraction), so benches comparing the two paths
+    // measure the pre-parallelization baseline, not a hybrid.
+    let mut coarse_graphs: Vec<CsrGraph> = Vec::new();
     let mut maps: Vec<Vec<u32>> = Vec::new();
-    let target = (cfg.coarsen_until * cfg.k).max(2 * cfg.k);
-    loop {
-        let cur = graphs.last().unwrap();
+    // level 0 contracts straight off the store — the one level whose
+    // graph may not fit in memory
+    if n > target {
+        let (coarse, map) = if cfg.parallel {
+            let matching = parallel_heavy_edge_matching(g, rng.next_u64());
+            coarsen(g, &matching)
+        } else {
+            let matching = heavy_edge_matching(g, &mut rng);
+            coarsen_reference(g, &matching)
+        };
+        // stall guard: coarsening must shrink by ≥5% or we stop
+        if (coarse.num_nodes() as f64) <= n as f64 * 0.95 {
+            maps.push(map);
+            coarse_graphs.push(coarse);
+        }
+    }
+    // deeper levels are all in-memory
+    while let Some(cur) = coarse_graphs.last() {
         if cur.num_nodes() <= target {
             break;
         }
-        // `parallel: false` is the full scalar pipeline (oracle matching
-        // AND oracle contraction), so benches comparing the two paths
-        // measure the pre-parallelization baseline, not a hybrid.
         let (coarse, map) = if cfg.parallel {
             let matching = parallel_heavy_edge_matching(cur, rng.next_u64());
             coarsen(cur, &matching)
@@ -161,28 +187,47 @@ pub fn partition(g: &CsrGraph, cfg: &PartitionConfig) -> Partitioning {
             let matching = heavy_edge_matching(cur, &mut rng);
             coarsen_reference(cur, &matching)
         };
-        // stall guard: coarsening must shrink by ≥5% or we stop
         if coarse.num_nodes() as f64 > cur.num_nodes() as f64 * 0.95 {
             break;
         }
         maps.push(map);
-        graphs.push(coarse);
+        coarse_graphs.push(coarse);
     }
 
     // ---- initial partitioning on the coarsest graph ----
-    let coarsest = graphs.last().unwrap();
-    let mut part = initial::greedy_growing(coarsest, cfg.k, cfg.epsilon, &mut rng);
-    refine::refine(coarsest, &mut part, cfg.k, cfg.epsilon, cfg.refine_passes);
+    let mut part = match coarse_graphs.last() {
+        Some(coarsest) => {
+            let mut p = initial::greedy_growing(coarsest, cfg.k, cfg.epsilon, &mut rng);
+            refine::refine(coarsest, &mut p, cfg.k, cfg.epsilon, cfg.refine_passes);
+            p
+        }
+        // no coarsening happened (small graph or immediate stall):
+        // partition the store directly
+        None => {
+            let mut p = initial::greedy_growing(g, cfg.k, cfg.epsilon, &mut rng);
+            refine::refine(g, &mut p, cfg.k, cfg.epsilon, cfg.refine_passes);
+            p
+        }
+    };
 
     // ---- uncoarsening + refinement ----
     for lvl in (0..maps.len()).rev() {
-        let fine = &graphs[lvl];
         let map = &maps[lvl];
-        let mut fine_part = vec![0u32; fine.num_nodes()];
+        let mut fine_part = vec![0u32; map.len()];
         for (u, &cu) in map.iter().enumerate() {
             fine_part[u] = part[cu as usize];
         }
-        refine::refine(fine, &mut fine_part, cfg.k, cfg.epsilon, cfg.refine_passes);
+        if lvl == 0 {
+            refine::refine(g, &mut fine_part, cfg.k, cfg.epsilon, cfg.refine_passes);
+        } else {
+            refine::refine(
+                &coarse_graphs[lvl - 1],
+                &mut fine_part,
+                cfg.k,
+                cfg.epsilon,
+                cfg.refine_passes,
+            );
+        }
         part = fine_part;
     }
 

@@ -7,10 +7,16 @@
 //! uses for k-way partitions (full FM with hill-climbing buys a few
 //! percent at much higher complexity; see EXPERIMENTS.md ablation).
 
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 
 /// Refine `part` in place.
-pub fn refine(g: &CsrGraph, part: &mut [u32], k: usize, epsilon: f64, passes: usize) {
+pub fn refine<G: GraphStore + ?Sized>(
+    g: &G,
+    part: &mut [u32],
+    k: usize,
+    epsilon: f64,
+    passes: usize,
+) {
     if k <= 1 {
         return;
     }
@@ -27,6 +33,7 @@ pub fn refine(g: &CsrGraph, part: &mut [u32], k: usize, epsilon: f64, passes: us
     // connectivity[p] reused per node: weight of u's edges into part p
     let mut conn = vec![0f32; k];
     let mut touched: Vec<u32> = Vec::with_capacity(16);
+    let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
 
     for _pass in 0..passes {
         let mut moved = 0usize;
@@ -36,7 +43,8 @@ pub fn refine(g: &CsrGraph, part: &mut [u32], k: usize, epsilon: f64, passes: us
             // compute connectivity to adjacent parts
             touched.clear();
             let mut is_boundary = false;
-            for (v, w) in g.edges(u) {
+            g.edges_into(u, &mut nbrs, &mut wts);
+            for (&v, &w) in nbrs.iter().zip(&wts) {
                 let pv = part[v as usize] as usize;
                 if conn[pv] == 0.0 {
                     touched.push(pv as u32);

@@ -17,7 +17,7 @@
 //! which is what the sharded trainer's k = 1 parity pin stands on.
 
 use super::{edge_cut, induced_subgraph_with_scratch, Hierarchy, HierarchyConfig, PartitionConfig};
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, GraphStore};
 
 /// One shard: an owned node set, its one-hop halo, and the induced
 /// local subgraph over both.
@@ -69,7 +69,11 @@ impl GraphShards {
     /// `k = 1` skips the partitioner entirely: one shard owning every
     /// node in ascending order, no halo, and a local graph bit-identical
     /// to `g`.
-    pub fn build(g: &CsrGraph, k: usize, seed: u64) -> Self {
+    ///
+    /// Generic over [`GraphStore`]: a disk-backed graph is read row by
+    /// row here and never materialized globally — only the (smaller)
+    /// per-shard induced subgraphs live in memory afterwards.
+    pub fn build<G: GraphStore + ?Sized>(g: &G, k: usize, seed: u64) -> Self {
         assert!(k >= 1, "need at least one shard");
         let n = g.num_nodes();
         let assignment: Vec<u32> = if k == 1 {
@@ -91,15 +95,16 @@ impl GraphShards {
             owned[p as usize].push(i as u32);
         }
         let mut scratch = vec![u32::MAX; n];
+        let mut row = Vec::new();
         let shards: Vec<Shard> = owned
             .into_iter()
             .enumerate()
             .map(|(id, owned)| {
-                let mut halo: Vec<u32> = owned
-                    .iter()
-                    .flat_map(|&u| g.neighbors(u).iter().copied())
-                    .filter(|&v| assignment[v as usize] != id as u32)
-                    .collect();
+                let mut halo: Vec<u32> = Vec::new();
+                for &u in &owned {
+                    g.neighbors_into(u, &mut row);
+                    halo.extend(row.iter().filter(|&&v| assignment[v as usize] != id as u32));
+                }
                 halo.sort_unstable();
                 halo.dedup();
                 // ascending merge of two disjoint sorted lists

@@ -26,7 +26,7 @@
 //! whenever the anchor has any non-neighbor at all.
 
 use super::{mix_seed, SeedBatcher};
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 
@@ -60,12 +60,21 @@ impl EdgeSplit {
     /// Partition `graph`'s undirected edges into train/val/test by a
     /// Fisher–Yates shuffle keyed by `seed` (val takes the first
     /// `val_frac` of the shuffled order, test the next `test_frac`,
-    /// train the rest). Pure in `(graph, fractions, seed)`.
-    pub fn build(graph: &CsrGraph, val_frac: f64, test_frac: f64, seed: u64) -> Self {
+    /// train the rest). Pure in `(graph, fractions, seed)` — and the
+    /// CSR row order is identical across storage backends, so so is
+    /// the split.
+    pub fn build<G: GraphStore + ?Sized>(
+        graph: &G,
+        val_frac: f64,
+        test_frac: f64,
+        seed: u64,
+    ) -> Self {
         assert!(val_frac >= 0.0 && test_frac >= 0.0 && val_frac + test_frac < 1.0);
         let mut edges: Vec<(u32, u32)> = Vec::with_capacity(graph.num_edges());
+        let mut adj = Vec::new();
         for u in 0..graph.num_nodes() as u32 {
-            for &v in graph.neighbors(u) {
+            graph.neighbors_into(u, &mut adj);
+            for &v in &adj {
                 if u < v {
                     edges.push((u, v));
                 }
@@ -139,21 +148,28 @@ impl EdgeBatch {
 /// terminates whenever the anchor has any non-neighbor.
 ///
 /// The returned pair is normalized `min ≤ max`; by construction it is
-/// never an edge of `graph`.
-pub fn sample_negative(graph: &CsrGraph, rng: &mut Rng, (u, v): (u32, u32)) -> (u32, u32) {
+/// never an edge of `graph`. Membership tests go through
+/// [`GraphStore::has_edge`] — a binary search over the anchor's sorted
+/// row in every backend — and the RNG stream consumes one draw per
+/// rejection either way, so the draw sequence (hence the negative) is
+/// backend-independent.
+pub fn sample_negative<G: GraphStore + ?Sized>(
+    graph: &G,
+    rng: &mut Rng,
+    (u, v): (u32, u32),
+) -> (u32, u32) {
     let n = graph.num_nodes() as u32;
     for anchor in [u, v] {
-        let adj = graph.neighbors(anchor);
         for _ in 0..NEG_REJECTION_TRIES {
             let w = rng.gen_range(n as usize) as u32;
-            if w != anchor && adj.binary_search(&w).is_err() {
+            if w != anchor && !graph.has_edge(anchor, w) {
                 return (anchor.min(w), anchor.max(w));
             }
         }
         let start = rng.gen_range(n as usize) as u32;
         for off in 0..n {
             let w = (start + off) % n;
-            if w != anchor && adj.binary_search(&w).is_err() {
+            if w != anchor && !graph.has_edge(anchor, w) {
                 return (anchor.min(w), anchor.max(w));
             }
         }
@@ -224,7 +240,7 @@ impl EdgeBatcher {
     /// Materialize batch `(epoch, bi)`: its positives, its negatives
     /// (one RNG stream per `(seed, epoch, batch, edge index)` draw,
     /// rejected against `graph`) and the localized seed set.
-    pub fn batch(&self, graph: &CsrGraph, epoch: usize, bi: usize) -> EdgeBatch {
+    pub fn batch<G: GraphStore + ?Sized>(&self, graph: &G, epoch: usize, bi: usize) -> EdgeBatch {
         let ordered = self.epoch_order(epoch);
         let lo = bi * self.batch_size;
         let hi = (lo + self.batch_size).min(ordered.len());
@@ -250,7 +266,11 @@ impl EdgeBatcher {
     /// The seed lists of one epoch's batches — what the prefetch thread
     /// hands the neighbor sampler (bit-identical to the seed sets the
     /// trainer recomputes via [`batch`](EdgeBatcher::batch)).
-    pub fn epoch_seed_batches(&self, graph: &CsrGraph, epoch: usize) -> Vec<Vec<u32>> {
+    pub fn epoch_seed_batches<G: GraphStore + ?Sized>(
+        &self,
+        graph: &G,
+        epoch: usize,
+    ) -> Vec<Vec<u32>> {
         (0..self.num_batches()).map(|bi| self.batch(graph, epoch, bi).seeds).collect()
     }
 }
@@ -289,7 +309,7 @@ impl SeedSource {
     /// One epoch's per-batch seed lists (each list holds distinct node
     /// ids, as the neighbor sampler requires). The graph is only
     /// consulted by the edge source (negative-draw rejection).
-    pub fn epoch_batches(&self, graph: &CsrGraph, epoch: usize) -> Vec<Vec<u32>> {
+    pub fn epoch_batches<G: GraphStore + ?Sized>(&self, graph: &G, epoch: usize) -> Vec<Vec<u32>> {
         match self {
             SeedSource::Nodes(b) => b.epoch_batches(epoch),
             SeedSource::Edges(b) => b.epoch_seed_batches(graph, epoch),
@@ -300,7 +320,7 @@ impl SeedSource {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::GraphBuilder;
+    use crate::graph::{CsrGraph, GraphBuilder};
 
     fn ring(n: usize) -> CsrGraph {
         let mut b = GraphBuilder::new(n);

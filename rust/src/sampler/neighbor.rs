@@ -3,7 +3,7 @@
 //! [`MultiHopBlock`]s for deep SAGE heads.
 
 use super::{mix_seed, Fanout, Fanouts};
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 use crate::util::rng::Rng;
 
 /// Stream-seed domain tag for hops beyond the first: hop `l > 0` draws
@@ -101,8 +101,8 @@ impl MultiHopBlock {
     }
 }
 
-/// Uniform neighbor sampler over a [`CsrGraph`], bounded per hop by a
-/// [`Fanout`].
+/// Uniform neighbor sampler over any [`GraphStore`] backend (in-memory
+/// CSR or on-disk), bounded per hop by a [`Fanout`].
 ///
 /// Seeds with degree ≤ fanout keep their whole neighborhood (in
 /// adjacency order); larger neighborhoods are sampled without
@@ -114,26 +114,31 @@ impl MultiHopBlock {
 /// same (multi-hop) block.
 ///
 /// The sampler owns a `global → local` scratch array (`u32::MAX` =
-/// absent, restored after every call), shared across hops, so block
-/// construction does no hashing and allocates only the block itself.
+/// absent, restored after every call), shared across hops, plus an
+/// adjacency-row scratch the backend copies each seed's neighbor row
+/// into, so block construction does no hashing and allocates only the
+/// block itself. Because every draw is keyed by coordinates — never by
+/// access order — the blocks are bit-identical across backends.
 pub struct NeighborSampler<'g> {
-    graph: &'g CsrGraph,
+    graph: &'g dyn GraphStore,
     /// Per-hop (fanout, stream seed).
     hops: Vec<(Fanout, u64)>,
     node_to_local: Vec<u32>,
     pick: Vec<u32>,
+    /// Current seed's neighbor row (backend copy-out scratch).
+    adj: Vec<u32>,
 }
 
 impl<'g> NeighborSampler<'g> {
     /// Single-hop sampler over `graph`; `seed` keys all draws.
-    pub fn new(graph: &'g CsrGraph, fanout: Fanout, seed: u64) -> Self {
+    pub fn new(graph: &'g dyn GraphStore, fanout: Fanout, seed: u64) -> Self {
         Self::multi_hop(graph, &Fanouts::single(fanout), seed)
     }
 
     /// Multi-hop sampler: one chained hop per [`Fanouts`] entry. Hop 0
     /// draws from `seed`'s stream exactly as a single-hop sampler
     /// would; hop `l > 0` draws from an independent re-keyed stream.
-    pub fn multi_hop(graph: &'g CsrGraph, fanouts: &Fanouts, seed: u64) -> Self {
+    pub fn multi_hop(graph: &'g dyn GraphStore, fanouts: &Fanouts, seed: u64) -> Self {
         let hops = fanouts
             .as_slice()
             .iter()
@@ -148,6 +153,7 @@ impl<'g> NeighborSampler<'g> {
             hops,
             node_to_local: vec![u32::MAX; graph.num_nodes()],
             pick: Vec::new(),
+            adj: Vec::new(),
         }
     }
 
@@ -235,14 +241,17 @@ impl<'g> NeighborSampler<'g> {
         block: &mut SampledBlock,
     ) {
         let (fanout, stream) = self.hops[hop];
-        let n = self.graph.num_nodes() as u32;
+        // destructure for disjoint borrows: the backend copy-out fills
+        // `adj` while `node_to_local`/`pick` stay mutably borrowed
+        let NeighborSampler { graph, node_to_local, pick, adj, .. } = self;
+        let n = graph.num_nodes() as u32;
         let nodes = &mut block.nodes;
         nodes.clear();
         nodes.reserve(seeds.len() * 2);
         for (local, &s) in seeds.iter().enumerate() {
             assert!(s < n, "seed {s} out of range (n = {n})");
-            assert_eq!(self.node_to_local[s as usize], u32::MAX, "duplicate seed {s}");
-            self.node_to_local[s as usize] = local as u32;
+            assert_eq!(node_to_local[s as usize], u32::MAX, "duplicate seed {s}");
+            node_to_local[s as usize] = local as u32;
             nodes.push(s);
         }
         let neigh_ptr = &mut block.neigh_ptr;
@@ -252,7 +261,7 @@ impl<'g> NeighborSampler<'g> {
         let neigh_idx = &mut block.neigh_idx;
         neigh_idx.clear();
         for &s in seeds {
-            let adj = self.graph.neighbors(s);
+            graph.neighbors_into(s, adj);
             // `sampled` selects the indirection: the common no-sampling
             // path (degree ≤ fanout, or Fanout::All) walks `adj`
             // directly and never touches the `pick` scratch
@@ -268,22 +277,22 @@ impl<'g> NeighborSampler<'g> {
                         batch as u64,
                         s as u64,
                     ]));
-                    self.pick.clear();
-                    self.pick.extend(0..adj.len() as u32);
+                    pick.clear();
+                    pick.extend(0..adj.len() as u32);
                     for t in 0..f {
                         let j = t + rng.gen_range(adj.len() - t);
-                        self.pick.swap(t, j);
+                        pick.swap(t, j);
                     }
                     (f, true)
                 }
                 _ => (adj.len(), false),
             };
             for t in 0..take {
-                let v = if sampled { adj[self.pick[t] as usize] } else { adj[t] };
-                let local = self.node_to_local[v as usize];
+                let v = if sampled { adj[pick[t] as usize] } else { adj[t] };
+                let local = node_to_local[v as usize];
                 let local = if local == u32::MAX {
                     let l = nodes.len() as u32;
-                    self.node_to_local[v as usize] = l;
+                    node_to_local[v as usize] = l;
                     nodes.push(v);
                     l
                 } else {
@@ -294,7 +303,7 @@ impl<'g> NeighborSampler<'g> {
             neigh_ptr.push(neigh_idx.len() as u32);
         }
         for &u in nodes.iter() {
-            self.node_to_local[u as usize] = u32::MAX;
+            node_to_local[u as usize] = u32::MAX;
         }
         block.num_seeds = seeds.len();
     }
@@ -303,7 +312,7 @@ impl<'g> NeighborSampler<'g> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::GraphBuilder;
+    use crate::graph::{CsrGraph, GraphBuilder};
 
     fn path_graph(n: usize) -> CsrGraph {
         let mut b = GraphBuilder::new(n);

@@ -30,7 +30,7 @@
 //! [`recv`]: BlockPrefetcher::recv
 
 use super::{Fanouts, MultiHopBlock, NeighborSampler, SeedSource};
-use crate::graph::CsrGraph;
+use crate::graph::GraphStore;
 use crate::util::fault;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
@@ -106,7 +106,7 @@ impl BlockPrefetcher {
     #[allow(clippy::too_many_arguments)]
     pub fn spawn<'scope, 'env>(
         scope: &'scope Scope<'scope, 'env>,
-        graph: &'env CsrGraph,
+        graph: &'env dyn GraphStore,
         source: SeedSource,
         fanouts: Fanouts,
         stream_seed: u64,
@@ -175,7 +175,7 @@ impl BlockPrefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::GraphBuilder;
+    use crate::graph::{CsrGraph, GraphBuilder};
     use crate::sampler::{Fanout, SeedBatcher};
 
     fn ring(n: usize) -> CsrGraph {

@@ -167,7 +167,7 @@ pub fn save_artifact(
             vec![plan.n, node.h],
         ));
     }
-    let g = &ds.graph;
+    let g = ds.graph.mem();
     let vwgts: Vec<u32> = (0..g.num_nodes() as u32).map(|u| g.vertex_weight(u)).collect();
     raw.push((
         "graph_indptr".into(),

@@ -13,17 +13,57 @@ const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
 /// FNV-1a/64 over `bytes`.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = FNV_OFFSET;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
+    let mut h = Fnv1a64::new();
+    h.update(bytes);
+    h.finish()
 }
 
 /// Tagged checksum string stored in artifact manifests.
 pub fn checksum_string(bytes: &[u8]) -> String {
-    format!("fnv1a64:{:016x}", fnv1a64(bytes))
+    tagged(fnv1a64(bytes))
+}
+
+/// The tagged string form of an already-computed FNV-1a/64 hash.
+pub fn tagged(hash: u64) -> String {
+    format!("fnv1a64:{hash:016x}")
+}
+
+/// Incremental FNV-1a/64 — FNV is byte-sequential, so feeding a file in
+/// chunks produces exactly the hash of the concatenated bytes. Used by
+/// the streaming on-disk graph writer and the chunked section verifier
+/// ([`crate::graph::DiskCsr`]), which never hold a whole section in
+/// memory.
+#[derive(Debug, Clone)]
+pub struct Fnv1a64 {
+    state: u64,
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a64 {
+    /// A fresh hasher at the FNV offset basis.
+    pub fn new() -> Self {
+        Fnv1a64 { state: FNV_OFFSET }
+    }
+
+    /// Absorb `bytes`.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+
+    /// The hash of everything absorbed so far.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
 }
 
 #[cfg(test)]
@@ -54,5 +94,18 @@ mod tests {
         let s = checksum_string(b"abc");
         assert!(s.starts_with("fnv1a64:"));
         assert_eq!(s.len(), "fnv1a64:".len() + 16);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot_at_any_split() {
+        let data: Vec<u8> = (0..1024u32).map(|i| (i * 31 % 251) as u8).collect();
+        let whole = fnv1a64(&data);
+        for split in [0, 1, 7, 512, 1023, 1024] {
+            let mut h = Fnv1a64::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), whole, "split at {split}");
+        }
+        assert_eq!(tagged(whole), checksum_string(&data));
     }
 }

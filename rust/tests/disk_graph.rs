@@ -1,0 +1,260 @@
+//! Out-of-core acceptance: the disk-backed [`DiskCsr`] store must be
+//! indistinguishable — bit for bit — from the in-memory CSR everywhere
+//! a graph is consumed. Random R-MAT roundtrips pin the raw arrays and
+//! the positioned-read row accessors; node-classification,
+//! link-prediction and partition-sharded training pin the derived loss
+//! trajectories, metrics and halo traffic across backends (serial and
+//! pipelined, k ∈ {1, 4}); and corrupted directories — truncated
+//! section, flipped byte, stale manifest — must fail [`DiskCsr::open`]
+//! naming the offending section. Mid-write crash atomicity lives in
+//! `tests/disk_graph_atomicity.rs` (armed fault points are
+//! process-global, so it gets its own binary).
+
+use poshashemb::coordinator::{
+    EdgeDecoder, MinibatchOptions, MinibatchOutcome, MinibatchTrainer, Objective, OptimizerKind,
+    ShardedTrainer,
+};
+use poshashemb::data::{spec, Dataset};
+use poshashemb::embedding::{EmbeddingMethod, EmbeddingPlan};
+use poshashemb::graph::{rmat_streamed, write_graph_dir, DiskCsr, GraphStore, RmatConfig};
+use poshashemb::partition::{GraphShards, Hierarchy, HierarchyConfig};
+use poshashemb::sampler::{Fanout, SamplerConfig};
+use poshashemb::util::proptest::run_cases;
+use poshashemb::util::tempdir::TempDir;
+use std::path::Path;
+
+/// Shrunk synth-arxiv analog (same generator/splits as the seed tests).
+fn small_dataset(n: usize, d: usize) -> Dataset {
+    let mut s = spec("synth-arxiv").unwrap();
+    s.n = n;
+    s.communities = (n / 30).max(4);
+    s.d = d;
+    Dataset::generate(&s)
+}
+
+/// The same dataset with its graph swapped for a freshly written and
+/// reopened on-disk copy — labels, splits and spec are shared, so any
+/// divergence in a training run is the backend's fault.
+fn disk_twin(ds: &Dataset, dir: &Path) -> Dataset {
+    write_graph_dir(dir, ds.graph.mem()).unwrap();
+    let mut twin = ds.clone();
+    twin.graph = DiskCsr::open(dir).unwrap().into();
+    twin
+}
+
+fn assert_outcome_bits(a: &MinibatchOutcome, b: &MinibatchOutcome, what: &str) {
+    assert_eq!(a.losses.len(), b.losses.len(), "{what}: epoch counts differ");
+    for (e, (x, y)) in a.losses.iter().zip(&b.losses).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: epoch {e} loss diverged ({x} vs {y})");
+    }
+    assert_eq!(a.val_metric.to_bits(), b.val_metric.to_bits(), "{what}: val metric");
+    assert_eq!(a.test_metric.to_bits(), b.test_metric.to_bits(), "{what}: test metric");
+    assert_eq!(a.val_hits.map(f64::to_bits), b.val_hits.map(f64::to_bits), "{what}: val hits");
+    assert_eq!(a.test_hits.map(f64::to_bits), b.test_hits.map(f64::to_bits), "{what}: test hits");
+    assert_eq!(a.peak_compose_rows, b.peak_compose_rows, "{what}: peak compose rows");
+    assert_eq!(a.seeds_per_epoch, b.seeds_per_epoch, "{what}: seeds per epoch");
+    assert_eq!(a.batches_per_epoch, b.batches_per_epoch, "{what}: batches per epoch");
+}
+
+#[test]
+fn prop_random_rmat_roundtrips_bit_identical_through_disk() {
+    run_cases(8, 0xD15C, |rng| {
+        let g = rmat_streamed(&RmatConfig {
+            scale: 5 + rng.gen_range(3) as u32,
+            edge_factor: 2 + rng.gen_range(6),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let t = TempDir::new("diskgraph-prop").unwrap();
+        let dir = t.path().join("g");
+        write_graph_dir(&dir, &g).unwrap();
+        let d = DiskCsr::open(&dir).unwrap();
+        assert_eq!(GraphStore::num_nodes(&d), g.num_nodes());
+        assert_eq!(GraphStore::num_edges(&d), g.num_edges());
+        let back = d.to_mem().unwrap();
+        assert_eq!(back.indptr(), g.indptr());
+        assert_eq!(back.indices(), g.indices());
+        for u in 0..g.num_nodes() as u32 {
+            assert_eq!(back.edge_weights(u), g.edge_weights(u), "row {u} weights");
+        }
+        // positioned-read row accessors agree with the resident slices
+        let (mut nbrs, mut wts) = (Vec::new(), Vec::new());
+        for _ in 0..32 {
+            let u = rng.gen_range(g.num_nodes()) as u32;
+            d.edges_into(u, &mut nbrs, &mut wts);
+            assert_eq!(nbrs, g.neighbors(u), "row {u} neighbors");
+            assert_eq!(wts, g.edge_weights(u), "row {u} weights");
+            let v = rng.gen_range(g.num_nodes()) as u32;
+            assert_eq!(d.has_edge(u, v), g.neighbors(u).binary_search(&v).is_ok(), "({u},{v})");
+        }
+    });
+}
+
+#[test]
+fn corrupted_directories_fail_open_naming_the_section() {
+    let t = TempDir::new("diskgraph-corrupt").unwrap();
+    let g = rmat_streamed(&RmatConfig { scale: 6, edge_factor: 4, seed: 5, ..Default::default() });
+
+    // a truncated section is caught by the byte-length check
+    let dir = t.path().join("trunc");
+    write_graph_dir(&dir, &g).unwrap();
+    let path = dir.join("indices.bin");
+    let len = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(len - 4).unwrap();
+    drop(f);
+    let err = format!("{:#}", DiskCsr::open(&dir).unwrap_err());
+    assert!(err.contains("section 'indices'"), "truncation must name the section: {err}");
+    assert!(err.contains("bytes on disk"), "{err}");
+
+    // a single flipped byte is caught by the section checksum
+    let dir = t.path().join("flip");
+    write_graph_dir(&dir, &g).unwrap();
+    let path = dir.join("weights.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, bytes).unwrap();
+    let err = format!("{:#}", DiskCsr::open(&dir).unwrap_err());
+    assert!(err.contains("checksum mismatch in section 'weights'"), "{err}");
+
+    // graph A's sections under graph B's manifest: stale-manifest guard
+    let dir = t.path().join("stale");
+    write_graph_dir(&dir, &g).unwrap();
+    let other = t.path().join("other");
+    let g2 = rmat_streamed(&RmatConfig { scale: 5, edge_factor: 4, seed: 9, ..Default::default() });
+    write_graph_dir(&other, &g2).unwrap();
+    std::fs::copy(other.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let err = format!("{:#}", DiskCsr::open(&dir).unwrap_err());
+    assert!(err.contains("section '"), "a stale manifest must name a section: {err}");
+}
+
+#[test]
+fn node_classification_training_is_bit_identical_across_backends() {
+    let mem = small_dataset(450, 16);
+    let t = TempDir::new("diskgraph-nc").unwrap();
+    let disk = disk_twin(&mem, &t.path().join("g"));
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 2, compression: 5, h: 2 };
+    for parallel in [false, true] {
+        let run = |ds: &Dataset| {
+            // the hierarchy is built over the handle too, so the
+            // partition pipeline itself is part of the pinned surface
+            let hier = Hierarchy::build(&ds.graph, &HierarchyConfig::new(4, 2));
+            let plan = EmbeddingPlan::build(450, 16, &method, Some(&hier), 7);
+            let cfg =
+                SamplerConfig { batch_size: 64, fanouts: Fanout::Max(5).into(), shuffle: true };
+            let opts = MinibatchOptions {
+                epochs: 2,
+                seed: 7,
+                parallel,
+                prefetch: if parallel { 2 } else { 0 },
+                ..Default::default()
+            };
+            MinibatchTrainer::new(ds, &plan, cfg, opts).unwrap().train().unwrap()
+        };
+        let what = if parallel { "nodeclass pipelined" } else { "nodeclass serial" };
+        assert_outcome_bits(&run(&mem), &run(&disk), what);
+    }
+}
+
+#[test]
+fn link_prediction_training_is_bit_identical_across_backends() {
+    // link prediction leans hardest on the disk backend: negative
+    // sampling rejects candidates through `has_edge` (per-probe
+    // positioned reads), and the edge split walks every row
+    let mem = small_dataset(400, 16);
+    let t = TempDir::new("diskgraph-lp").unwrap();
+    let disk = disk_twin(&mem, &t.path().join("g"));
+    let plan =
+        EmbeddingPlan::build(400, 16, &EmbeddingMethod::HashEmb { buckets: 48, h: 2 }, None, 3);
+    for parallel in [false, true] {
+        let run = |ds: &Dataset| {
+            let cfg =
+                SamplerConfig { batch_size: 64, fanouts: Fanout::Max(5).into(), shuffle: true };
+            let opts = MinibatchOptions {
+                epochs: 2,
+                lr: 0.03,
+                optimizer: OptimizerKind::Adam,
+                seed: 7,
+                parallel,
+                prefetch: if parallel { 2 } else { 0 },
+                hidden: 16,
+                objective: Objective::LinkPrediction { decoder: EdgeDecoder::Dot, neg_per_pos: 2 },
+                ..Default::default()
+            };
+            MinibatchTrainer::new(ds, &plan, cfg, opts).unwrap().train().unwrap()
+        };
+        let what = if parallel { "linkpred pipelined" } else { "linkpred serial" };
+        assert_outcome_bits(&run(&mem), &run(&disk), what);
+    }
+}
+
+#[test]
+fn graph_shards_are_identical_across_backends() {
+    let mem = small_dataset(600, 8);
+    let t = TempDir::new("diskgraph-shards").unwrap();
+    let disk = disk_twin(&mem, &t.path().join("g"));
+    for k in [1usize, 4] {
+        let a = GraphShards::build(&mem.graph, k, 0x5EED);
+        let b = GraphShards::build(&disk.graph, k, 0x5EED);
+        assert_eq!(a.assignment, b.assignment, "k={k}: assignment");
+        assert_eq!(a.edge_cut.to_bits(), b.edge_cut.to_bits(), "k={k}: edge cut");
+        for (sa, sb) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(sa.owned, sb.owned, "k={k} shard {}: owned", sa.id);
+            assert_eq!(sa.halo, sb.halo, "k={k} shard {}: halo", sa.id);
+            assert_eq!(sa.locals, sb.locals, "k={k} shard {}: locals", sa.id);
+        }
+    }
+}
+
+#[test]
+fn sharded_training_is_bit_identical_across_backends() {
+    let mem = small_dataset(600, 16);
+    let t = TempDir::new("diskgraph-sharded").unwrap();
+    let disk = disk_twin(&mem, &t.path().join("g"));
+    let method = EmbeddingMethod::PosHashEmbIntra { levels: 2, compression: 5, h: 2 };
+    for k in [1usize, 4] {
+        for parallel in [false, true] {
+            let run = |ds: &Dataset| {
+                let cfg = SamplerConfig { batch_size: 64, ..Default::default() };
+                let opts = MinibatchOptions {
+                    epochs: 2,
+                    seed: 7,
+                    parallel,
+                    prefetch: if parallel { 2 } else { 0 },
+                    ..Default::default()
+                };
+                ShardedTrainer::new(ds, &method, 4, k, 1, cfg, opts).unwrap().train().unwrap()
+            };
+            let (a, b) = (run(&mem), run(&disk));
+            let what = format!("sharded k={k} {}", if parallel { "pipelined" } else { "serial" });
+            assert_eq!(a.edge_cut.to_bits(), b.edge_cut.to_bits(), "{what}: edge cut");
+            assert_eq!(a.halo_bytes_total, b.halo_bytes_total, "{what}: halo bytes");
+            assert_eq!(a.exchanges, b.exchanges, "{what}: exchanges");
+            assert_eq!(a.val_metric.to_bits(), b.val_metric.to_bits(), "{what}: val metric");
+            assert_eq!(a.test_metric.to_bits(), b.test_metric.to_bits(), "{what}: test metric");
+            assert_eq!(a.losses.len(), b.losses.len(), "{what}: epoch counts differ");
+            for (e, (x, y)) in a.losses.iter().zip(&b.losses).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: epoch {e} aggregate loss");
+            }
+            for (sa, sb) in a.shards.iter().zip(&b.shards) {
+                assert_eq!(
+                    sa.halo_bytes_per_exchange,
+                    sb.halo_bytes_per_exchange,
+                    "{what}: shard {} halo bytes per exchange",
+                    sa.shard
+                );
+                assert_eq!(sa.owned_nodes, sb.owned_nodes, "{what}: shard {}", sa.shard);
+                assert_eq!(sa.halo_nodes, sb.halo_nodes, "{what}: shard {}", sa.shard);
+                for (e, (x, y)) in sa.losses.iter().zip(&sb.losses).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{what}: shard {} epoch {e} loss",
+                        sa.shard
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Atomic graph-directory publication: a fault injected anywhere in
+//! `write_graph_dir`'s write path (section write, manifest write, final
+//! rename) must leave either no graph directory at all or the previous
+//! fully-intact directory — never a torn one. Lives in its own
+//! integration binary because armed fault points are process-global and
+//! `tests/disk_graph.rs` calls `write_graph_dir` concurrently.
+
+use poshashemb::graph::{rmat_streamed, write_graph_dir, DiskCsr, GraphStore, RmatConfig};
+use poshashemb::util::fault;
+use poshashemb::util::tempdir::TempDir;
+
+#[test]
+fn failed_graph_publish_leaves_no_trace_and_keeps_the_old_directory() {
+    let _g = fault::test_guard();
+    fault::reset();
+    let t = TempDir::new("diskgraph-atomic").unwrap();
+    let dir = t.path().join("graph");
+    let g1 = rmat_streamed(&RmatConfig { scale: 6, edge_factor: 4, seed: 1, ..Default::default() });
+
+    // a fault at any stage before publication leaves nothing behind —
+    // no graph directory and no orphaned temp sibling
+    for site in [
+        "diskgraph.section=1",
+        "diskgraph.section=3",
+        "diskgraph.manifest=1",
+        "diskgraph.rename=1",
+    ] {
+        fault::arm(site).unwrap();
+        let err = write_graph_dir(&dir, &g1).unwrap_err();
+        fault::reset();
+        assert!(format!("{err:#}").contains("injected fault"), "{site}: {err:#}");
+        assert!(!dir.exists(), "{site}: failed publish must not leave a directory");
+        let leftovers = std::fs::read_dir(t.path()).unwrap().count();
+        assert_eq!(leftovers, 0, "{site}: failed publish must clean up its temp dir");
+    }
+
+    // publish a good directory, then fail a re-publish over it: the old
+    // graph must remain fully intact, verified and bit-identical
+    write_graph_dir(&dir, &g1).unwrap();
+    let g2 = rmat_streamed(&RmatConfig { scale: 5, edge_factor: 4, seed: 2, ..Default::default() });
+    fault::arm("diskgraph.manifest=1").unwrap();
+    write_graph_dir(&dir, &g2).unwrap_err();
+    fault::reset();
+    let d = DiskCsr::open(&dir).unwrap();
+    assert_eq!(GraphStore::num_nodes(&d), g1.num_nodes());
+    let back = d.to_mem().unwrap();
+    assert_eq!(back.indptr(), g1.indptr());
+    assert_eq!(back.indices(), g1.indices());
+}

@@ -86,7 +86,7 @@ proptest! {
             for &(u, v) in &eb.neg {
                 prop_assert!(u < v, "negatives are normalized (min, max): ({u}, {v})");
                 prop_assert!(
-                    ds.graph.neighbors(u).binary_search(&v).is_err(),
+                    ds.graph.mem().neighbors(u).binary_search(&v).is_err(),
                     "sampled negative ({u}, {v}) is a true edge"
                 );
             }

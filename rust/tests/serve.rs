@@ -179,7 +179,7 @@ fn train_save_serve_end_to_end() {
     let k = 3;
     let top = engine.topk_neighbors(17, k).unwrap();
     assert!(top.len() <= k);
-    let nbrs = ds.graph.neighbors(17);
+    let nbrs = ds.graph.mem().neighbors(17);
     for (v, sim) in &top {
         assert!(nbrs.contains(v), "{v} is not a neighbor of 17");
         assert!(sim.is_finite() && *sim <= 1.0 + 1e-5);
